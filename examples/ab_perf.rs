@@ -1,0 +1,46 @@
+//! §Perf A/B scratchpad (kept as an example so the harness is reproducible).
+use sat::nm::NmPattern;
+use sat::util::timer::{bench, sink};
+use sat::util::Pcg32;
+
+fn encode_stackbool(w: &[f32], n: usize, m: usize) -> (Vec<f32>, Vec<u8>) {
+    let groups = w.len() / m;
+    let mut values = Vec::with_capacity(groups * n);
+    let mut indexes = Vec::with_capacity(groups * n);
+    let mut keep = [false; 32];
+    for group in w.chunks_exact(m) {
+        keep[..m].iter_mut().for_each(|b| *b = false);
+        for _ in 0..n {
+            let mut best = f32::NEG_INFINITY;
+            let mut best_i = usize::MAX;
+            for (i, &v) in group.iter().enumerate() {
+                if keep[i] { continue; }
+                let a = v.abs();
+                if a > best { best = a; best_i = i; }
+            }
+            keep[best_i] = true;
+        }
+        for i in 0..m {
+            if keep[i] {
+                indexes.push(i as u8);
+                values.push(group[i]);
+            }
+        }
+    }
+    (values, indexes)
+}
+
+fn main() {
+    let mut rng = Pcg32::new(1);
+    let w: Vec<f32> = rng.normals(1 << 20);
+    let a = bench("prune_mask_flat (current)", 3, 15, || {
+        sink(sat::nm::prune::prune_mask_flat(&w, NmPattern::P2_8))
+    });
+    let b = bench("encode (current)", 3, 15, || {
+        sink(sat::nm::CompactNm::encode(&w, 1024, 1024, NmPattern::P2_8))
+    });
+    let c = bench("encode stack-bool argmax", 3, 15, || {
+        sink(encode_stackbool(&w, 2, 8))
+    });
+    println!("{}\n{}\n{}", a.summary(), b.summary(), c.summary());
+}

@@ -1,0 +1,63 @@
+//! Quickstart: the whole stack in one page.
+//!
+//! 1. Load the AOT-compiled BDWP train step (Pallas kernel inside) and
+//!    run a few real training steps through PJRT.
+//! 2. Ask the RWG for the layer schedule SAT would use.
+//! 3. Simulate one ResNet18 training batch on SAT, dense vs 2:8 BDWP.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use sat::arch::SatConfig;
+use sat::models::zoo;
+use sat::nm::{Method, NmPattern};
+use sat::runtime::{Manifest, Runtime};
+use sat::sched::rwg_schedule;
+use sat::sim::engine::simulate_method;
+use sat::sim::memory::MemConfig;
+use sat::train::{run_training, TrainOptions};
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. real N:M sparse training through the AOT artifact ---------
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load("artifacts")?;
+    println!("PJRT platform: {}", rt.platform());
+    let opts = TrainOptions { steps: 40, ..Default::default() };
+    let curve = run_training(&rt, &manifest, "mlp_bdwp_pallas", &opts)?;
+    println!(
+        "mlp_bdwp_pallas (BDWP fwd via the Pallas nm_matmul kernel): \
+         loss {:.3} -> {:.3} over {} steps",
+        curve.losses[0],
+        curve.final_loss(),
+        curve.losses.len()
+    );
+
+    // --- 2. the offline schedule (RWG, Fig. 12) -----------------------
+    let cfg = SatConfig::paper_default();
+    let model = zoo::resnet18();
+    let schedule = rwg_schedule(&model, Method::Bdwp, NmPattern::P2_8, &cfg);
+    let l = &schedule.layers[2];
+    println!(
+        "\nRWG for ResNet18 {}: FF {}({}), BP {}({}), WU {}(dense), pre-gen={}",
+        l.name,
+        l.stages[0].dataflow.name(),
+        l.stages[0].sparse.map(|p| p.to_string()).unwrap_or("dense".into()),
+        l.stages[1].dataflow.name(),
+        l.stages[1].sparse.map(|p| p.to_string()).unwrap_or("dense".into()),
+        l.stages[2].dataflow.name(),
+        l.pregenerate
+    );
+
+    // --- 3. SAT cycle simulation: dense vs BDWP ------------------------
+    let mem = MemConfig::paper_default();
+    let dense = simulate_method(&model, Method::Dense, NmPattern::P2_8, &cfg, &mem);
+    let bdwp = simulate_method(&model, Method::Bdwp, NmPattern::P2_8, &cfg, &mem);
+    println!(
+        "\nSAT ResNet18 batch-512 training step:\n  dense: {:8.1} ms  ({:6.1} GOPS)\n  BDWP:  {:8.1} ms  ({:6.1} GOPS)  -> {:.2}x per-batch speedup",
+        dense.seconds(&cfg) * 1e3,
+        dense.runtime_gops(&cfg),
+        bdwp.seconds(&cfg) * 1e3,
+        bdwp.runtime_gops(&cfg),
+        dense.total_cycles as f64 / bdwp.total_cycles as f64
+    );
+    Ok(())
+}

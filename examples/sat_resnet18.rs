@@ -1,0 +1,58 @@
+//! Full SAT simulation of ResNet18 training (the paper's main hardware
+//! workload): layer-wise Fig. 16 breakdown, method comparison, and a
+//! bandwidth/array mini-sweep — all without touching PJRT.
+//!
+//! Run: `cargo run --release --example sat_resnet18`
+
+use sat::arch::{power, ChipResources, SatConfig};
+use sat::models::zoo;
+use sat::nm::{Method, NmPattern};
+use sat::report;
+use sat::sim::engine::simulate_method;
+use sat::sim::memory::MemConfig;
+use sat::util::table::Table;
+
+fn main() {
+    let cfg = SatConfig::paper_default();
+    let mem = MemConfig::paper_default();
+    let model = zoo::resnet18();
+
+    // Fig. 16 — layer-wise, overlap off (paper's presentation choice)
+    report::fig16_layerwise().print();
+
+    // Method comparison at 2:8
+    let mut t = Table::new("ResNet18 B=512 on SAT — per-batch by method (2:8)")
+        .header(&["method", "ms/batch", "GOPS", "speedup vs dense"]);
+    let dense_cycles = simulate_method(&model, Method::Dense, NmPattern::P2_8, &cfg, &mem)
+        .total_cycles;
+    for m in Method::ALL {
+        let r = simulate_method(&model, m, NmPattern::P2_8, &cfg, &mem);
+        t.row(&[
+            m.name().to_string(),
+            format!("{:.1}", r.seconds(&cfg) * 1e3),
+            format!("{:.1}", r.runtime_gops(&cfg)),
+            format!("{:.2}x", dense_cycles as f64 / r.total_cycles as f64),
+        ]);
+    }
+    t.print();
+
+    // Pattern sweep at fixed method
+    let mut t2 = Table::new("ResNet18 BDWP — pattern sweep on SAT")
+        .header(&["pattern", "ms/batch", "speedup", "power (W)", "fits?"]);
+    for p in [NmPattern::P2_4, NmPattern::P2_8, NmPattern::P2_16] {
+        let pc = SatConfig { pattern: p, ..cfg };
+        let chip = ChipResources::model(&pc);
+        let r = simulate_method(&model, Method::Bdwp, p, &pc, &mem);
+        t2.row(&[
+            p.to_string(),
+            format!("{:.1}", r.seconds(&pc) * 1e3),
+            format!("{:.2}x", dense_cycles as f64 / r.total_cycles as f64),
+            format!("{:.2}", power::power_avg_w(&chip, pc.freq_mhz)),
+            chip.fits().to_string(),
+        ]);
+    }
+    t2.print();
+
+    // Fig. 17 — scaling
+    report::fig17_scaling().print();
+}

@@ -1,0 +1,115 @@
+//! End-to-end validation driver (DESIGN.md §6, recorded in EXPERIMENTS.md).
+//!
+//! Trains all three model families on real synthetic workloads through
+//! the AOT train steps on PJRT — several hundred steps each — comparing
+//! dense vs BDWP (and all five methods for the MLP, reproducing the
+//! Fig. 4 protocol). It then combines the measured convergence with the
+//! SAT cycle simulator into the practical TTA speedup of Fig. 15.
+//!
+//! Run: `make artifacts && cargo run --release --example train_e2e`
+//! (~2-4 minutes on CPU; add `--quick` for a 1-minute version).
+
+use sat::arch::SatConfig;
+use sat::models::zoo;
+use sat::nm::{Method, NmPattern};
+use sat::runtime::{Manifest, Runtime};
+use sat::sim::engine::simulate_method;
+use sat::sim::memory::MemConfig;
+use sat::train::{compare_methods, run_training, TrainOptions};
+use sat::util::stats::ema;
+use sat::util::table::{ascii_chart, Table};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let steps = if quick { 120 } else { 400 };
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load("artifacts")?;
+    println!("platform {}, {} steps per run\n", rt.platform(), steps);
+
+    // ---- Fig. 4 protocol: five methods, identical data order ---------
+    let opts = TrainOptions {
+        steps,
+        eval_every: steps / 2,
+        use_chunk: true,
+        ..Default::default()
+    };
+    let names = ["mlp_dense", "mlp_srste", "mlp_sdgp", "mlp_sdwp", "mlp_bdwp"];
+    let t0 = std::time::Instant::now();
+    let curves = compare_methods(&rt, &manifest, &names, &opts)?;
+    let series: Vec<(String, Vec<f64>)> = curves
+        .iter()
+        .map(|c| {
+            (
+                c.method.clone(),
+                ema(&c.losses.iter().map(|&l| l as f64).collect::<Vec<_>>(), 0.1),
+            )
+        })
+        .collect();
+    let series_refs: Vec<(&str, &[f64])> =
+        series.iter().map(|(n, v)| (n.as_str(), v.as_slice())).collect();
+    print!("{}", ascii_chart("Fig. 4 (mlp family) — training loss, EMA 0.1",
+                             &series_refs, 76, 16));
+
+    let mut t = Table::new("convergence summary (mlp, identical data order)")
+        .header(&["method", "final loss", "eval acc", "steps to loss<1.0", "steps/s"]);
+    for c in &curves {
+        t.row(&[
+            c.method.clone(),
+            format!("{:.4}", c.final_loss()),
+            format!("{:.1}%", c.best_accuracy() * 100.0),
+            c.steps_to_loss(1.0)
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| "-".into()),
+            format!("{:.0}", c.losses.len() as f64 / c.wall_seconds),
+        ]);
+    }
+    t.print();
+
+    // ---- CNN and ViT families: dense vs BDWP --------------------------
+    let mut t2 = Table::new("cnn / vit families — dense vs BDWP (2:8)")
+        .header(&["artifact", "final loss", "eval acc", "wall s"]);
+    for name in ["cnn_dense", "cnn_bdwp", "vit_dense", "vit_bdwp"] {
+        let mut opts = opts.clone();
+        opts.lr = sat::train::default_lr(manifest.by_name(name)?.model.as_str());
+        let c = run_training(&rt, &manifest, name, &opts)?;
+        t2.row(&[
+            name.to_string(),
+            format!("{:.4}", c.final_loss()),
+            format!("{:.1}%", c.best_accuracy() * 100.0),
+            format!("{:.1}", c.wall_seconds),
+        ]);
+    }
+    t2.print();
+
+    // ---- practical TTA (Fig. 15): sim batch-time × measured steps ----
+    let cfg = SatConfig::paper_default();
+    let mem = MemConfig::paper_default();
+    let dense_curve = &curves[0];
+    let bdwp_curve = curves.iter().find(|c| c.method == "bdwp").unwrap();
+    let target = 1.0f32;
+    let (ds, bs) = (
+        dense_curve.steps_to_loss(target),
+        bdwp_curve.steps_to_loss(target),
+    );
+    let mut t3 = Table::new("practical TTA speedup (sim batch time × measured steps)")
+        .header(&["model (sim)", "per-batch speedup", "step ratio", "TTA speedup"]);
+    for name in zoo::PAPER_MODELS {
+        let m = zoo::model_by_name(name).unwrap();
+        let d = simulate_method(&m, Method::Dense, NmPattern::P2_8, &cfg, &mem);
+        let b = simulate_method(&m, Method::Bdwp, NmPattern::P2_8, &cfg, &mem);
+        let per_batch = d.total_cycles as f64 / b.total_cycles as f64;
+        let step_ratio = match (ds, bs) {
+            (Some(d0), Some(b0)) if b0 > 0 => d0 as f64 / b0 as f64,
+            _ => 1.0,
+        };
+        t3.row(&[
+            name.to_string(),
+            format!("{per_batch:.2}x"),
+            format!("{step_ratio:.2}"),
+            format!("{:.2}x", per_batch * step_ratio),
+        ]);
+    }
+    t3.print();
+    println!("total e2e wall time: {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

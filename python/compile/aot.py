@@ -1,0 +1,226 @@
+"""AOT pipeline: lower jitted train steps to HLO TEXT artifacts.
+
+HLO *text* (not `.serialize()`) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids, which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per artifact we emit:
+  <name>.hlo.txt      the lowered train step / chunk / kernel
+  <model>_init.bin    f32 LE initial parameters (concatenated, flat order)
+and once per run:
+  manifest.txt        key=value records the Rust runtime parses
+  golden_nm.txt       N:M prune/compact goldens for the Rust `nm` substrate
+  golden_step.txt     loss after 1 and 3 deterministic steps per artifact
+
+Deterministic golden inputs use a Knuth-hash pattern that the Rust side
+reproduces bit-exactly in integer arithmetic (rust/src/util/datagen.rs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ref
+
+# (artifact name, model, method, use_pallas)
+TRAIN_ARTIFACTS = [
+    ("mlp_dense", "mlp", "dense", False),
+    ("mlp_srste", "mlp", "srste", False),
+    ("mlp_sdgp", "mlp", "sdgp", False),
+    ("mlp_sdwp", "mlp", "sdwp", False),
+    ("mlp_bdwp", "mlp", "bdwp", False),
+    ("mlp_bdwp_pallas", "mlp", "bdwp", True),
+    ("cnn_dense", "cnn", "dense", False),
+    ("cnn_bdwp", "cnn", "bdwp", False),
+    ("vit_dense", "vit", "dense", False),
+    ("vit_bdwp", "vit", "bdwp", False),
+]
+
+# Default N:M for artifacts (the paper's chosen hardware pattern is 2:8).
+DEFAULT_N, DEFAULT_M = 2, 8
+CHUNK_STEPS = 8  # lax.scan steps per dispatch for *_chunk artifacts
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def hash_pattern(count: int, offset: int) -> np.ndarray:
+    """Deterministic pseudo-data reproduced bit-exactly by the Rust side.
+
+    u = (i + offset) * 2654435761 mod 2^32;  x = u / 2^32 - 0.5  (as f32).
+    """
+    i = np.arange(count, dtype=np.uint64) + np.uint64(offset)
+    u = (i * np.uint64(2654435761)) & np.uint64(0xFFFFFFFF)
+    return (u.astype(np.float64) / 2.0**32 - 0.5).astype(np.float32)
+
+
+def golden_batch(name: str, offset: int):
+    spec = M.MODELS[name]
+    x0, y0 = M.example_batch(name)
+    x = hash_pattern(x0.size, offset).reshape(x0.shape)
+    b, c = y0.shape
+    labels = np.arange(b) % c
+    y = np.zeros((b, c), np.float32)
+    y[np.arange(b), labels] = 1.0
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def shape_str(a) -> str:
+    return "x".join(str(d) for d in a.shape) if a.ndim else "scalar"
+
+
+def emit_train_artifacts(outdir: str, manifest: List[str], goldens: List[str]):
+    lr = jnp.float32(0.05)
+    init_written = set()
+    for name, mdl, method, use_pallas in TRAIN_ARTIFACTS:
+        params = M.init_params(mdl, seed=0)
+        moms = [jnp.zeros_like(p) for p in params]
+        x, y = M.example_batch(mdl)
+
+        step = make_jit_step(mdl, method, use_pallas)
+        lowered = step.lower(params, moms, x, y, lr)
+        hlo = to_hlo_text(lowered)
+        with open(os.path.join(outdir, f"{name}.hlo.txt"), "w") as f:
+            f.write(hlo)
+
+        # chunk variant: CHUNK_STEPS scanned steps per dispatch (perf lever)
+        chunk = make_jit_chunk(mdl, method, use_pallas)
+        xs = jnp.zeros((CHUNK_STEPS,) + x.shape, x.dtype)
+        ys = jnp.zeros((CHUNK_STEPS,) + y.shape, y.dtype)
+        hlo_c = to_hlo_text(chunk.lower(params, moms, xs, ys, lr))
+        with open(os.path.join(outdir, f"{name}_chunk.hlo.txt"), "w") as f:
+            f.write(hlo_c)
+
+        # eval variant: (params, x, y) -> (loss, correct) with the
+        # method's inference forward (w̃_FF for srste/bdwp — Table II).
+        ev = make_jit_eval(mdl, method, use_pallas)
+        hlo_e = to_hlo_text(ev.lower(params, x, y))
+        with open(os.path.join(outdir, f"{name}_eval.hlo.txt"), "w") as f:
+            f.write(hlo_e)
+
+        if mdl not in init_written:
+            flat = np.concatenate([np.asarray(p).ravel() for p in params])
+            flat.astype("<f4").tofile(os.path.join(outdir, f"{mdl}_init.bin"))
+            init_written.add(mdl)
+
+        manifest.append("[artifact]")
+        manifest.append(f"name={name}")
+        manifest.append(f"hlo={name}.hlo.txt")
+        manifest.append(f"chunk_hlo={name}_chunk.hlo.txt")
+        manifest.append(f"chunk_steps={CHUNK_STEPS}")
+        manifest.append(f"eval_hlo={name}_eval.hlo.txt")
+        manifest.append(f"model={mdl}")
+        manifest.append(f"method={method}")
+        manifest.append(f"pattern={DEFAULT_N}:{DEFAULT_M}")
+        manifest.append(f"init={mdl}_init.bin")
+        manifest.append(f"nparams={len(params)}")
+        manifest.append(
+            "param_shapes=" + ",".join(shape_str(p) for p in params)
+        )
+        manifest.append(f"x_shape={shape_str(x)}")
+        manifest.append(f"y_shape={shape_str(y)}")
+        manifest.append("")
+
+        # Golden: loss after steps 1 and 3 with deterministic batches.
+        ps, ms = params, moms
+        losses = []
+        for s in range(3):
+            gx, gy = golden_batch(mdl, offset=1000 * s + 17)
+            ps, ms, loss = step(ps, ms, gx, gy, lr)
+            losses.append(float(loss))
+        goldens.append(
+            f"{name} loss1={losses[0]:.6f} loss3={losses[2]:.6f}"
+        )
+        print(f"  {name}: hlo={len(hlo)//1024}KiB loss1={losses[0]:.4f} "
+              f"loss3={losses[2]:.4f}")
+
+
+def make_jit_step(mdl: str, method: str, use_pallas: bool):
+    return jax.jit(
+        M.make_train_step(mdl, method, DEFAULT_N, DEFAULT_M, use_pallas)
+    )
+
+
+def make_jit_chunk(mdl: str, method: str, use_pallas: bool):
+    return jax.jit(
+        M.make_train_chunk(
+            mdl, method, DEFAULT_N, DEFAULT_M, CHUNK_STEPS, use_pallas
+        )
+    )
+
+
+def make_jit_eval(mdl: str, method: str, use_pallas: bool):
+    def ev(params, x, y):
+        logits = M.forward(mdl, method, DEFAULT_N, DEFAULT_M, params, x,
+                           use_pallas=use_pallas)
+        loss = M.cross_entropy(logits, y)
+        correct = jnp.sum(
+            (jnp.argmax(logits, -1) == jnp.argmax(y, -1)).astype(jnp.float32)
+        )
+        return loss, correct
+
+    return jax.jit(ev)
+
+
+def emit_nm_goldens(outdir: str):
+    """Prune/compact goldens for the Rust `nm` substrate (bit-exact ties)."""
+    lines = []
+    cases = [(1, 4), (2, 4), (2, 8), (4, 8), (2, 16), (1, 8)]
+    for ci, (n, m) in enumerate(cases):
+        rows, cols = 4, 2 * m
+        w = hash_pattern(rows * cols, offset=7000 + 131 * ci).reshape(rows, cols)
+        # inject exact ties to pin the tie-breaking rule
+        w[0, 0] = w[0, 1] = 0.25
+        w[1, m - 1] = -w[1, m - 2]
+        wj = jnp.asarray(w)
+        mask = np.asarray(ref.prune_mask(wj, n, m, axis=1)).astype(np.int32)
+        vals, idx = ref.nm_compact_ref(wj, n, m)
+        lines.append(f"case {n} {m} {rows} {cols}")
+        lines.append("w " + " ".join(repr(float(v)) for v in w.ravel()))
+        lines.append("mask " + " ".join(str(int(v)) for v in mask.ravel()))
+        lines.append(
+            "vals " + " ".join(repr(float(v)) for v in np.asarray(vals).ravel())
+        )
+        lines.append("idx " + " ".join(str(int(v)) for v in np.asarray(idx).ravel()))
+    with open(os.path.join(outdir, "golden_nm.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="emit a single artifact name")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest: List[str] = [f"default_pattern={DEFAULT_N}:{DEFAULT_M}", ""]
+    goldens: List[str] = []
+    global TRAIN_ARTIFACTS
+    if args.only:
+        TRAIN_ARTIFACTS = [a for a in TRAIN_ARTIFACTS if a[0] == args.only]
+    print(f"lowering {len(TRAIN_ARTIFACTS)} train artifacts -> {args.out}")
+    emit_train_artifacts(args.out, manifest, goldens)
+    emit_nm_goldens(args.out)
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest))
+    with open(os.path.join(args.out, "golden_step.txt"), "w") as f:
+        f.write("\n".join(goldens) + "\n")
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Layer-1 Pallas kernels + pure-jnp oracle for N:M sparse training.
+
+`ref` is the correctness oracle; `nm_prune` (SORE analogue) and
+`nm_matmul` (STCE analogue) are the Pallas kernels the L2 model calls.
+"""
+
+from . import ref  # noqa: F401
+from .nm_matmul import nm_matmul  # noqa: F401
+from .nm_prune import nm_prune, nm_prune_2d  # noqa: F401

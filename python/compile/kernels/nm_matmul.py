@@ -1,0 +1,121 @@
+"""Pallas kernel: dense-activation × N:M-sparse-weight MatMul (the STCE analogue).
+
+Hardware adaptation (DESIGN.md §2): the paper's STCE keeps the systolic
+array dense and feeds each USPE the N surviving values of a group serially
+(value-serial, N cycles/group).  The GPU-style equivalent would be an
+index-gather; the TPU/MXU-style equivalent implemented here is
+**mask-and-matmul over VMEM tiles**: the weight tile is masked on-tile
+(vector unit) and the MXU consumes a dense tile.  The BlockSpec grid
+(i, j, k) expresses the HBM↔VMEM schedule that SAT expresses with its
+W2E/N2S double buffers; the K-tile is M-aligned because a group must be
+resident in VMEM to be ranked — the same constraint that sizes SAT's W2E
+banking (Table III: 128 banks = 4× N2S for the 2:8 pattern).
+
+interpret=True (CPU PJRT cannot run Mosaic custom-calls); correctness vs
+`ref.nm_matmul_ref`, TPU perf estimated structurally (`matmul_vmem_bytes`,
+`mxu_utilization_estimate`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import topn_group_mask
+
+__all__ = ["nm_matmul", "matmul_vmem_bytes", "mxu_utilization_estimate"]
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, *, n: int, m: int):
+    """One (TB×TK)·(TK×TF) tile-product with on-tile N:M weight masking.
+
+    Groups run along the K axis of the weight tile (axis 0) — the paper's
+    forward-pass grouping across input channels / features (Fig. 5).
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = w_ref[...]
+    tk, tf = w.shape
+    g = w.reshape(tk // m, m, tf)
+    # Rank within each group of M **per output column**: move the group
+    # axis last so the shared top-N helper (and its tie-breaking) applies.
+    absg = jnp.moveaxis(jnp.abs(g), 1, -1)  # (tk//m, tf, m)
+    mask = jnp.moveaxis(topn_group_mask(absg, n), -1, 1)
+    wm = jnp.where(mask, g, jnp.zeros_like(g)).reshape(tk, tf)
+    o_ref[...] += jnp.dot(
+        x_ref[...], wm, preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5, 6))
+def nm_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    n: int,
+    m: int,
+    block_b: int = 64,
+    block_k: int = 128,
+    block_f: int = 64,
+) -> jnp.ndarray:
+    """x(B,K) @ w̃(K,F) with w N:M-pruned in groups along K.
+
+    Tile sizes shrink to exact divisors (small shapes in tests); block_k is
+    kept a multiple of M so no group straddles two tiles.
+    """
+    b, k = x.shape
+    k2, f = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    if k % m != 0:
+        raise ValueError(f"K={k} not divisible by M={m}")
+
+    def fit(block: int, size: int, quantum: int = 1) -> int:
+        blk = min(block, size)
+        blk -= blk % quantum
+        blk = max(blk, quantum)
+        while size % blk != 0:
+            blk -= quantum
+        return blk
+
+    tb = fit(block_b, b)
+    tk = fit(block_k, k, quantum=m)
+    tf = fit(block_f, f)
+    grid = (b // tb, f // tf, k // tk)
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, n=n, m=m),
+        out_shape=jax.ShapeDtypeStruct((b, f), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tf), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tb, tf), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(x, w)
+
+
+def matmul_vmem_bytes(tb: int, tk: int, tf: int, itemsize: int = 4) -> int:
+    """Structural VMEM footprint of one grid step (x-tile + w-tile + acc)."""
+    return (tb * tk + 2 * tk * tf + tb * tf) * itemsize
+
+
+def mxu_utilization_estimate(
+    b: int, k: int, f: int, n: int, m: int, tb: int = 64, tk: int = 128, tf: int = 64
+) -> float:
+    """Estimated MXU utilization of the masked-matmul schedule.
+
+    The MXU sees dense (tb,tk)x(tk,tf) tiles; utilization is the fraction
+    of fed MACs that are algorithmically useful (n/m of weight entries are
+    nonzero) times the tile-edge efficiency.  This mirrors how the paper
+    reports STCE 'computational efficiency' — useful ops / peak ops.
+    """
+    edge = (
+        (b / (-(-b // tb) * tb))
+        * (k / (-(-k // tk) * tk))
+        * (f / (-(-f // tf) * tf))
+    )
+    return edge * (n / m)

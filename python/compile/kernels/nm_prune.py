@@ -1,0 +1,85 @@
+"""Pallas kernel: on-chip N:M sparsification (the SORE analogue).
+
+The paper's SORE engine turns a dense stream into compact N:M groups
+online, inside the WU stage, so FF/BP never wait for sparsification.  On a
+TPU-style target the same role is played by a VMEM-resident masking kernel:
+each BlockSpec tile is loaded HBM→VMEM once, the top-N-per-group selection
+runs on-tile (vector unit), and the masked tile is written back — exactly
+the "pre-generation" dataflow of Fig. 11(c), with the BlockSpec grid taking
+the place of the W2E buffer banking.
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute; correctness is validated on the interpret
+path and TPU-perf is estimated structurally (see DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import topn_group_mask
+
+__all__ = ["nm_prune", "nm_prune_2d", "prune_vmem_bytes"]
+
+
+def _prune_kernel(w_ref, o_ref, *, n: int, m: int):
+    """Mask one (rows, cols) tile; groups of `m` run along the last axis."""
+    w = w_ref[...]
+    rows, cols = w.shape
+    g = w.reshape(rows, cols // m, m)
+    mask = topn_group_mask(jnp.abs(g), n)
+    o_ref[...] = jnp.where(mask, g, jnp.zeros_like(g)).reshape(rows, cols)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+def nm_prune_2d(
+    w: jnp.ndarray, n: int, m: int, block_rows: int = 64
+) -> jnp.ndarray:
+    """N:M-prune a 2-D tensor along its LAST axis, tiled over rows.
+
+    Row tiles keep the VMEM footprint bounded (block_rows × cols × 4 B);
+    the group axis is never split because a group must be resident to rank
+    it — the same reason SAT's top-K sorter buffers a whole group of M.
+    """
+    r, c = w.shape
+    if c % m != 0:
+        raise ValueError(f"last axis {c} not divisible by M={m}")
+    br = min(block_rows, r)
+    while r % br != 0:  # shrink to a divisor so the grid tiles exactly
+        br -= 1
+    grid = (r // br,)
+    return pl.pallas_call(
+        functools.partial(_prune_kernel, n=n, m=m),
+        out_shape=jax.ShapeDtypeStruct((r, c), w.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        interpret=True,
+    )(w)
+
+
+def nm_prune(w: jnp.ndarray, n: int, m: int, axis: int) -> jnp.ndarray:
+    """N:M-prune `w` along `axis` (any rank): the Pallas w̃ generator.
+
+    Folds every other axis into rows, runs the 2-D kernel, restores shape.
+    """
+    axis = axis % w.ndim
+    moved = jnp.moveaxis(w, axis, -1)
+    shape = moved.shape
+    flat = moved.reshape(-1, shape[-1])
+    out = nm_prune_2d(flat, n, m)
+    return jnp.moveaxis(out.reshape(shape), -1, axis)
+
+
+def prune_vmem_bytes(block_rows: int, cols: int, itemsize: int = 4) -> int:
+    """Structural VMEM estimate for one tile (input + output + mask work).
+
+    Used by the perf pass to size block_rows against the ~16 MiB VMEM
+    budget; interpret-mode wallclock is NOT a TPU proxy.
+    """
+    tile = block_rows * cols * itemsize
+    return 2 * tile + block_rows * cols  # in + out + bool mask

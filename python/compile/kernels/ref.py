@@ -1,0 +1,105 @@
+"""Pure-jnp oracle for the N:M sparsity kernels.
+
+This module is the CORRECTNESS REFERENCE for the whole stack:
+
+* the Pallas kernels (`nm_prune.py`, `nm_matmul.py`) are pytest-compared
+  against it over a hypothesis sweep of shapes / patterns / dtypes;
+* the Rust `nm` substrate is compared against goldens emitted from it
+  (`aot.py`), so tie-breaking is bit-identical in all three
+  implementations.
+
+Tie-breaking rule (shared everywhere): within a group of M elements the N
+kept elements are those with the largest |w|; on equal |w| the LOWEST index
+wins.  This matches `jnp.argmax` (first occurrence) and the paper's SORE
+top-K sorter, which emits earlier-arriving elements first.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "topn_group_mask",
+    "prune_mask",
+    "prune_nm",
+    "nm_matmul_ref",
+    "nm_compact_ref",
+]
+
+
+def topn_group_mask(absg: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Boolean keep-mask of the top-`n` entries along the last axis.
+
+    `absg` has shape (..., M).  Ties resolve to the lowest index, because
+    `jnp.argmax` returns the first occurrence of the maximum.  `n` is a
+    static Python int (the loop is unrolled at trace time), mirroring the
+    paper's top-K sorter which runs a fixed K passes.
+    """
+    m = absg.shape[-1]
+    if n >= m:
+        return jnp.ones(absg.shape, dtype=bool)
+    mask = jnp.zeros(absg.shape, dtype=bool)
+    work = absg
+    neg_inf = jnp.array(-jnp.inf, dtype=absg.dtype)
+    for _ in range(n):
+        idx = jnp.argmax(work, axis=-1)
+        onehot = jax.nn.one_hot(idx, m, dtype=bool)
+        mask = mask | onehot
+        work = jnp.where(onehot, neg_inf, work)
+    return mask
+
+
+def prune_mask(w: jnp.ndarray, n: int, m: int, axis: int) -> jnp.ndarray:
+    """N:M keep-mask for `w`, grouping M consecutive elements along `axis`.
+
+    Requires w.shape[axis] % m == 0 (the paper excludes layers where this
+    fails — e.g. the first conv layer).
+    """
+    axis = axis % w.ndim
+    if w.shape[axis] % m != 0:
+        raise ValueError(f"axis {axis} of shape {w.shape} not divisible by M={m}")
+    moved = jnp.moveaxis(w, axis, -1)
+    shape = moved.shape
+    grouped = moved.reshape(shape[:-1] + (shape[-1] // m, m))
+    mask = topn_group_mask(jnp.abs(grouped), n)
+    mask = mask.reshape(shape)
+    return jnp.moveaxis(mask, -1, axis)
+
+
+def prune_nm(w: jnp.ndarray, n: int, m: int, axis: int) -> jnp.ndarray:
+    """Dense tensor with the pruned elements zeroed (the w̃ of the paper)."""
+    return jnp.where(prune_mask(w, n, m, axis), w, jnp.zeros_like(w))
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def nm_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, n: int, m: int) -> jnp.ndarray:
+    """Forward-pass sparse MatMul oracle: x @ w̃_FF.
+
+    x: (B, K), w: (K, F); the N:M groups run along K (input features /
+    input channels — Fig. 5(a)(c) of the paper).
+    """
+    return x @ prune_nm(w, n, m, axis=0)
+
+
+def nm_compact_ref(w: jnp.ndarray, n: int, m: int):
+    """SORE oracle: compact (values, indexes) encoding of an N:M tensor.
+
+    `w` is 2-D: shape (R, C) grouped along the LAST axis.  Returns
+    (values, idx) of shapes (R, C//m, n): per group, the kept values in
+    ascending index order and their intra-group indexes (uint8, 0..m-1) —
+    the layout SAT's W2E buffer stores.
+    """
+    r, c = w.shape
+    if c % m != 0:
+        raise ValueError(f"last axis {c} not divisible by M={m}")
+    g = w.reshape(r, c // m, m)
+    mask = topn_group_mask(jnp.abs(g), n)
+    # Stable selection of kept positions in ascending index order: sort by
+    # (pruned, index); the first n entries per group are the kept ones.
+    key = jnp.where(mask, 0, 1) * m + jnp.arange(m, dtype=jnp.int32)
+    order = jnp.argsort(key, axis=-1)[..., :n]
+    values = jnp.take_along_axis(g, order, axis=-1)
+    return values, order.astype(jnp.uint8)

@@ -1,0 +1,357 @@
+"""Layer-2: JAX forward/backward train steps for N:M sparse DNN training.
+
+Implements the paper's Algorithm 1 (BDWP) plus every method it compares
+against, as `jax.custom_vjp`-wrapped MatMuls so that each training stage
+(FF / BP / WU) gets exactly the sparsity the paper's Fig. 3 assigns:
+
+  method   FF weights        BP weights / grads          WU
+  -------  ----------------  --------------------------  -----------------
+  dense    w                 dy @ wᵀ                     xᵀ @ dy
+  srste    w̃_FF (in-group)   dy @ wᵀ (dense)             xᵀ@dy + λ(1-mask)w
+  sdgp     w                 prune(dy) @ wᵀ              xᵀ @ dy
+  sdwp     w                 dy @ w̃_BPᵀ (out-group)      xᵀ @ dy
+  bdwp     w̃_FF (in-group)   dy @ w̃_BPᵀ (out-group)      xᵀ @ dy
+
+Grouping (Fig. 5): forward groups run across input channels/features
+(axis 0 of the (K,F) weight matrix); backward groups run across output
+channels/features (axis 1).  Convolutions are lowered through an explicit
+im2col whose K layout keeps input channels innermost, so M-element groups
+(M ≤ C_i) always fall within input channels — exactly the paper's pattern.
+
+Everything here is build-time only: `aot.py` lowers the jitted train steps
+to HLO text once; the Rust coordinator replays them through PJRT.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.nm_matmul import nm_matmul
+
+METHODS = ("dense", "srste", "sdgp", "sdwp", "bdwp")
+
+# SR-STE's sparse-refined regularization strength (λ_w in [32]).
+SRSTE_LAMBDA = 2e-4
+
+
+# --------------------------------------------------------------------------
+# Method-aware MatMul (the heart of Algorithm 1)
+# --------------------------------------------------------------------------
+
+
+def method_matmul(method: str, n: int, m: int, use_pallas: bool = False):
+    """Return mm(x, w) -> x(B,K) @ w(K,F) with method-specific FF/BP/WU.
+
+    `use_pallas` routes the forward product through the L1 Pallas kernel
+    (nm_matmul) so the lowered HLO contains the kernel's tiling; the
+    backward rules are unchanged (they express the paper's Fig. 3, not
+    autodiff of the kernel).
+    """
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}")
+
+    def ff_weights(w):
+        if method in ("srste", "bdwp"):
+            return ref.prune_nm(w, n, m, axis=0)
+        return w
+
+    @jax.custom_vjp
+    def mm(x, w):
+        if method in ("srste", "bdwp") and use_pallas:
+            return nm_matmul(x, w, n, m)
+        return x @ ff_weights(w)
+
+    def mm_fwd(x, w):
+        return mm(x, w), (x, w)
+
+    def mm_bwd(res, dy):
+        x, w = res
+        # --- BP stage: activation gradient ---
+        if method in ("sdwp", "bdwp"):
+            w_bp = ref.prune_nm(w, n, m, axis=1)  # groups across outputs
+            dx = dy @ w_bp.T
+        elif method == "sdgp":
+            dy_bp = ref.prune_nm(dy, n, m, axis=1)  # prune output grads
+            dx = dy_bp @ w.T
+        else:  # dense, srste: BP is dense (Fig. 3(a)(b))
+            dx = dy @ w.T
+        # --- WU stage: weight gradient (dense for every method) ---
+        dw = x.T @ dy
+        if method == "srste":
+            mask = ref.prune_mask(w, n, m, axis=0)
+            dw = dw + SRSTE_LAMBDA * jnp.where(mask, 0.0, 1.0) * w
+        return dx, dw
+
+    mm.defvjp(mm_fwd, mm_bwd)
+    return mm
+
+
+# --------------------------------------------------------------------------
+# Layers
+# --------------------------------------------------------------------------
+
+
+def linear(mm, x, w, b):
+    """Dense/sparse linear over the last axis; x: (..., K) -> (..., F)."""
+    lead = x.shape[:-1]
+    y = mm(x.reshape(-1, x.shape[-1]), w) + b
+    return y.reshape(*lead, w.shape[1])
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int, stride: int, pad: int):
+    """(B,H,W,C) -> (B,Ho,Wo, kh*kw*C) with C innermost per tap.
+
+    The K-axis layout is (tap-major, channel-minor): groups of M ≤ C
+    consecutive K entries always lie within the input channels of a single
+    kernel tap — the paper's forward grouping (Fig. 5(a)).
+    """
+    b, h, w_, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w_ + 2 * pad - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(
+                xp[:, i : i + ho * stride : stride, j : j + wo * stride : stride, :]
+            )
+    return jnp.concatenate(cols, axis=-1), ho, wo
+
+
+def conv2d(mm, x, w, b, stride: int = 1, pad: int = 1):
+    """Convolution as im2col + method MatMul (the paper's unification, Fig. 1).
+
+    w: (kh, kw, Ci, Co) HWIO; reshaped to (kh*kw*Ci, Co) matching im2col's
+    K layout, so FF groups run across Ci and BP groups across Co.
+    """
+    kh, kw, ci, co = w.shape
+    cols, ho, wo = im2col(x, kh, kw, stride, pad)
+    wmat = w.reshape(kh * kw * ci, co)
+    y = mm(cols.reshape(-1, kh * kw * ci), wmat) + b
+    return y.reshape(x.shape[0], ho, wo, co)
+
+
+def layer_norm(x, g, b, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def attention(mm, x, wqkv, bqkv, wproj, bproj, heads: int):
+    """Multi-head self-attention; qkv/proj linears carry the N:M method."""
+    b, t, d = x.shape
+    qkv = linear(mm, x, wqkv, bqkv)  # (b, t, 3d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    hd = d // heads
+
+    def split(z):
+        return z.reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split(q), split(k), split(v)
+    att = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.sqrt(float(hd))
+    att = jax.nn.softmax(att, axis=-1)
+    y = jnp.einsum("bhts,bhsd->bhtd", att, v)
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return linear(mm, y, wproj, bproj)
+
+
+# --------------------------------------------------------------------------
+# Model zoo (small-scale stand-ins for the paper's five benchmarks)
+# --------------------------------------------------------------------------
+
+ModelSpec = Dict[str, Any]
+
+MODELS: Dict[str, ModelSpec] = {
+    # MLP on 32-D synthetic clusters — convergence stand-in for ResNet9/CIFAR-10.
+    "mlp": dict(kind="mlp", in_dim=32, hidden=(256, 256), classes=8, batch=64),
+    # CNN on 8x8x8 synthetic "images" — stand-in for ResNet18/VGG19.  The
+    # first conv is excluded from N:M sparsity (paper §VI-A).
+    "cnn": dict(
+        kind="cnn",
+        img=(8, 8, 8),
+        convs=((8, 32), (32, 64), (64, 64)),
+        classes=8,
+        batch=32,
+    ),
+    # One-block ViT on 16 tokens x 64 dims — stand-in for ViT/CIFAR-100.
+    "vit": dict(
+        kind="vit", tokens=16, dim=64, heads=4, mlp_dim=128, classes=8, batch=32
+    ),
+}
+
+
+def _uniform(key, shape, scale):
+    return jax.random.uniform(key, shape, jnp.float32, -scale, scale)
+
+
+def init_params(name: str, seed: int = 0) -> List[jnp.ndarray]:
+    """He-style init; returns the flat parameter list (fixed order)."""
+    spec = MODELS[name]
+    key = jax.random.PRNGKey(seed)
+    params: List[jnp.ndarray] = []
+    if spec["kind"] == "mlp":
+        dims = (spec["in_dim"], *spec["hidden"], spec["classes"])
+        for i in range(len(dims) - 1):
+            key, k1 = jax.random.split(key)
+            scale = (6.0 / dims[i]) ** 0.5
+            params += [_uniform(k1, (dims[i], dims[i + 1]), scale),
+                       jnp.zeros((dims[i + 1],), jnp.float32)]
+    elif spec["kind"] == "cnn":
+        for ci, co in spec["convs"]:
+            key, k1 = jax.random.split(key)
+            scale = (6.0 / (9 * ci)) ** 0.5
+            params += [_uniform(k1, (3, 3, ci, co), scale),
+                       jnp.zeros((co,), jnp.float32)]
+        c_last = spec["convs"][-1][1]
+        key, k1 = jax.random.split(key)
+        params += [_uniform(k1, (c_last, spec["classes"]), (6.0 / c_last) ** 0.5),
+                   jnp.zeros((spec["classes"],), jnp.float32)]
+    elif spec["kind"] == "vit":
+        d, mdim = spec["dim"], spec["mlp_dim"]
+        key, *ks = jax.random.split(key, 7)
+        s = (6.0 / d) ** 0.5
+        params += [
+            jnp.ones((d,), jnp.float32), jnp.zeros((d,), jnp.float32),  # ln1
+            _uniform(ks[0], (d, 3 * d), s), jnp.zeros((3 * d,), jnp.float32),
+            _uniform(ks[1], (d, d), s), jnp.zeros((d,), jnp.float32),
+            jnp.ones((d,), jnp.float32), jnp.zeros((d,), jnp.float32),  # ln2
+            _uniform(ks[2], (d, mdim), s), jnp.zeros((mdim,), jnp.float32),
+            _uniform(ks[3], (mdim, d), (6.0 / mdim) ** 0.5),
+            jnp.zeros((d,), jnp.float32),
+            _uniform(ks[4], (d, spec["classes"]), s),
+            jnp.zeros((spec["classes"],), jnp.float32),
+        ]
+    else:
+        raise ValueError(spec["kind"])
+    return params
+
+
+def forward(name: str, method: str, n: int, m: int, params, x,
+            use_pallas: bool = False) -> jnp.ndarray:
+    """Logits for model `name` under the given sparse-training method."""
+    spec = MODELS[name]
+    mm = method_matmul(method, n, m, use_pallas=use_pallas)
+    mm_dense = method_matmul("dense", n, m)
+    if spec["kind"] == "mlp":
+        h = x
+        nlay = len(spec["hidden"]) + 1
+        for i in range(nlay):
+            w, b = params[2 * i], params[2 * i + 1]
+            h = linear(mm, h, w, b)
+            if i < nlay - 1:
+                h = jax.nn.relu(h)
+        return h
+    if spec["kind"] == "cnn":
+        h = x
+        for i, _ in enumerate(spec["convs"]):
+            w, b = params[2 * i], params[2 * i + 1]
+            # First conv dense: its C_i (< M for large M) is accuracy-critical
+            # and the paper excludes it from N:M sparsity.
+            this_mm = mm_dense if i == 0 else mm
+            h = jax.nn.relu(conv2d(this_mm, h, w, b, stride=1, pad=1))
+            if i < len(spec["convs"]) - 1:
+                h = jax.lax.reduce_window(
+                    h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+                )
+        h = jnp.mean(h, axis=(1, 2))  # global average pool
+        wl, bl = params[-2], params[-1]
+        return linear(mm, h, wl, bl)
+    if spec["kind"] == "vit":
+        (g1, b1, wqkv, bqkv, wproj, bproj, g2, b2,
+         wm1, bm1, wm2, bm2, wh, bh) = params
+        h = x
+        a = attention(mm, layer_norm(h, g1, b1), wqkv, bqkv, wproj, bproj,
+                      spec["heads"])
+        h = h + a
+        z = layer_norm(h, g2, b2)
+        z = linear(mm, z, wm1, bm1)
+        z = jax.nn.gelu(z)
+        z = linear(mm, z, wm2, bm2)
+        h = h + z
+        pooled = jnp.mean(h, axis=1)
+        return linear(mm, pooled, wh, bh)
+    raise ValueError(spec["kind"])
+
+
+# --------------------------------------------------------------------------
+# Loss + momentum-SGD train step (WUVE semantics)
+# --------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jnp.ndarray, y_onehot: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+MOMENTUM = 0.9
+WEIGHT_DECAY = 5e-4
+
+
+def make_train_step(name: str, method: str, n: int, m: int,
+                    use_pallas: bool = False):
+    """(params, moms, x, y, lr) -> (params', moms', loss).
+
+    Mirrors WUVE: momentum-SGD with decoupled-from-graph weight decay, all
+    master state in FP32 (AMP keeps FP32 masters; the FP16 cast affects
+    bandwidth, modelled in the simulator, not small-scale convergence).
+    """
+
+    def loss_fn(params, x, y):
+        return cross_entropy(
+            forward(name, method, n, m, params, x, use_pallas=use_pallas), y
+        )
+
+    def step(params, moms, x, y, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        new_params, new_moms = [], []
+        for p, mom, g in zip(params, moms, grads):
+            g = g + WEIGHT_DECAY * p
+            mom = MOMENTUM * mom + g
+            new_params.append(p - lr * mom)
+            new_moms.append(mom)
+        return new_params, new_moms, loss
+
+    return step
+
+
+def make_train_chunk(name: str, method: str, n: int, m: int, steps: int,
+                     use_pallas: bool = False):
+    """K steps per PJRT dispatch via lax.scan over stacked batches.
+
+    (params, moms, xs(K,B,..), ys(K,B,C), lr) -> (params', moms', losses(K)).
+    This is the L2 perf lever: one compiled dispatch amortizes the host
+    round-trip K times (EXPERIMENTS.md §Perf).
+    """
+    step = make_train_step(name, method, n, m, use_pallas=use_pallas)
+
+    def chunk(params, moms, xs, ys, lr):
+        def body(carry, xy):
+            ps, ms = carry
+            x, y = xy
+            ps, ms, loss = step(ps, ms, x, y, lr)
+            return (ps, ms), loss
+
+        (params, moms), losses = jax.lax.scan(body, (params, moms), (xs, ys))
+        return params, moms, losses
+
+    return chunk
+
+
+def example_batch(name: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Zero example (x, y) with the artifact's batch shapes."""
+    spec = MODELS[name]
+    b = spec["batch"]
+    if spec["kind"] == "mlp":
+        x = jnp.zeros((b, spec["in_dim"]), jnp.float32)
+    elif spec["kind"] == "cnn":
+        h, w_, c = spec["img"]
+        x = jnp.zeros((b, h, w_, c), jnp.float32)
+    else:
+        x = jnp.zeros((b, spec["tokens"], spec["dim"]), jnp.float32)
+    y = jnp.zeros((b, spec["classes"]), jnp.float32)
+    return x, y

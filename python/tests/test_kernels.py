@@ -1,0 +1,216 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes / N:M patterns / dtypes; explicit cases pin the
+tie-breaking rule shared with the Rust `nm` substrate.
+"""
+
+import os
+import sys
+
+# Make `compile.*` importable regardless of the pytest invocation dir.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.nm_matmul import (
+    matmul_vmem_bytes,
+    mxu_utilization_estimate,
+    nm_matmul,
+)
+from compile.kernels.nm_prune import nm_prune, nm_prune_2d, prune_vmem_bytes
+
+PATTERNS = [(1, 4), (2, 4), (2, 8), (4, 8), (2, 16), (1, 8), (8, 16)]
+
+
+def rand(shape, seed, dtype=np.float32):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Oracle invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,m", PATTERNS)
+def test_mask_keeps_exactly_n_per_group(n, m):
+    w = rand((6, 4 * m), seed=n * 100 + m)
+    mask = ref.prune_mask(w, n, m, axis=1)
+    g = np.asarray(mask).reshape(6, 4, m)
+    assert (g.sum(axis=-1) == n).all()
+
+
+@pytest.mark.parametrize("n,m", PATTERNS)
+def test_mask_keeps_largest_magnitudes(n, m):
+    w = rand((3, 2 * m), seed=7)
+    mask = np.asarray(ref.prune_mask(w, n, m, axis=1))
+    aw = np.abs(np.asarray(w)).reshape(3, 2, m)
+    mk = mask.reshape(3, 2, m)
+    for r in range(3):
+        for g in range(2):
+            kept = np.sort(aw[r, g][mk[r, g]])
+            dropped = aw[r, g][~mk[r, g]]
+            if dropped.size:
+                assert kept.min() >= dropped.max() - 1e-7
+
+
+def test_tie_breaking_lowest_index_wins():
+    # group [0.5, 0.5, 0.5, 0.5] with 2:4 -> keep indexes 0, 1
+    w = jnp.asarray(np.array([[0.5, 0.5, 0.5, 0.5]], np.float32))
+    mask = np.asarray(ref.prune_mask(w, 2, 4, axis=1))[0]
+    assert mask.tolist() == [True, True, False, False]
+    # sign must not matter (magnitude ties): [-.5, .5, .5, -.5]
+    w2 = jnp.asarray(np.array([[-0.5, 0.5, 0.5, -0.5]], np.float32))
+    mask2 = np.asarray(ref.prune_mask(w2, 2, 4, axis=1))[0]
+    assert mask2.tolist() == [True, True, False, False]
+
+
+def test_prune_axis_moves():
+    w = rand((8, 6), seed=3)
+    a0 = ref.prune_nm(w, 2, 4, axis=0)
+    a0t = ref.prune_nm(w.T, 2, 4, axis=1).T
+    np.testing.assert_array_equal(np.asarray(a0), np.asarray(a0t))
+
+
+def test_prune_rejects_indivisible():
+    with pytest.raises(ValueError):
+        ref.prune_mask(rand((3, 6), seed=0), 2, 4, axis=1)
+
+
+def test_compact_roundtrip():
+    w = rand((5, 16), seed=11)
+    vals, idx = ref.nm_compact_ref(w, 2, 8)
+    dense = np.zeros((5, 16), np.float32)
+    v, i = np.asarray(vals), np.asarray(idx)
+    for r in range(5):
+        for g in range(2):
+            for kk in range(2):
+                dense[r, g * 8 + i[r, g, kk]] = v[r, g, kk]
+    np.testing.assert_allclose(
+        dense, np.asarray(ref.prune_nm(w, 2, 8, axis=1)), atol=0
+    )
+
+
+def test_compact_indexes_ascending():
+    w = rand((4, 32), seed=13)
+    _, idx = ref.nm_compact_ref(w, 4, 8)
+    i = np.asarray(idx)
+    assert (np.diff(i, axis=-1) > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Pallas prune kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,m", PATTERNS)
+def test_prune_kernel_matches_ref(n, m):
+    w = rand((16, 4 * m), seed=n + m)
+    got = np.asarray(nm_prune_2d(w, n, m))
+    want = np.asarray(ref.prune_nm(w, n, m, axis=1))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 33),
+    groups=st.integers(1, 5),
+    pat=st.sampled_from(PATTERNS),
+    seed=st.integers(0, 2**16),
+    block_rows=st.sampled_from([1, 3, 8, 64]),
+)
+def test_prune_kernel_hypothesis(rows, groups, pat, seed, block_rows):
+    n, m = pat
+    w = rand((rows, groups * m), seed=seed)
+    got = np.asarray(nm_prune_2d(w, n, m, block_rows=block_rows))
+    want = np.asarray(ref.prune_nm(w, n, m, axis=1))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    pat=st.sampled_from([(2, 4), (2, 8)]),
+    seed=st.integers(0, 1000),
+    dtype=st.sampled_from([np.float32, jnp.bfloat16]),
+)
+def test_prune_kernel_dtypes(pat, seed, dtype):
+    n, m = pat
+    w = rand((8, 4 * m), seed=seed).astype(dtype)
+    got = np.asarray(nm_prune_2d(w, n, m).astype(jnp.float32))
+    want = np.asarray(ref.prune_nm(w, n, m, axis=1).astype(jnp.float32))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_prune_nd_wrapper():
+    w = rand((3, 3, 8, 16), seed=21)  # HWIO conv weight
+    got = np.asarray(nm_prune(w, 2, 8, axis=2))
+    want = np.asarray(ref.prune_nm(w, 2, 8, axis=2))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Pallas matmul kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,m", PATTERNS)
+def test_matmul_kernel_matches_ref(n, m):
+    x = rand((8, 4 * m), seed=1)
+    w = rand((4 * m, 16), seed=2)
+    got = np.asarray(nm_matmul(x, w, n, m))
+    want = np.asarray(ref.nm_matmul_ref(x, w, n, m))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 48),
+    kg=st.integers(1, 6),
+    f=st.integers(1, 40),
+    pat=st.sampled_from(PATTERNS),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_kernel_hypothesis(b, kg, f, pat, seed):
+    n, m = pat
+    x = rand((b, kg * m), seed=seed)
+    w = rand((kg * m, f), seed=seed + 1)
+    got = np.asarray(nm_matmul(x, w, n, m))
+    want = np.asarray(ref.nm_matmul_ref(x, w, n, m))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_tiling_boundaries():
+    # K split across several M-aligned tiles must not change results.
+    x = rand((4, 256), seed=5)
+    w = rand((256, 8), seed=6)
+    full = np.asarray(nm_matmul(x, w, 2, 8, block_k=256))
+    tiled = np.asarray(nm_matmul(x, w, 2, 8, block_k=32))
+    np.testing.assert_allclose(full, tiled, rtol=1e-5, atol=1e-6)
+
+
+def test_matmul_rejects_bad_k():
+    with pytest.raises(ValueError):
+        nm_matmul(rand((2, 6), 0), rand((6, 4), 1), 2, 4)
+
+
+# ---------------------------------------------------------------------------
+# Structural perf estimates (used by the §Perf pass)
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_estimates_monotone():
+    assert prune_vmem_bytes(64, 512) < prune_vmem_bytes(128, 512)
+    assert matmul_vmem_bytes(64, 128, 64) < matmul_vmem_bytes(64, 256, 64)
+    # default tiles stay far below a 16 MiB VMEM budget
+    assert matmul_vmem_bytes(64, 128, 64) < 16 * 2**20
+
+
+def test_mxu_utilization_estimate():
+    # exact-tiling case: utilization is exactly n/m
+    assert mxu_utilization_estimate(64, 128, 64, 2, 8) == pytest.approx(0.25)
+    # ragged case strictly lower
+    assert mxu_utilization_estimate(65, 129, 65, 2, 8) < 0.25

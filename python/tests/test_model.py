@@ -1,0 +1,226 @@
+"""L2 correctness: method semantics of the custom_vjp MatMuls, im2col,
+layers, and train-step behaviour (Fig. 3 / Fig. 5 / Algorithm 1)."""
+
+import os
+import sys
+
+# Make `compile.*` importable regardless of the pytest invocation dir.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import ref
+
+
+def rand(shape, seed):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape).astype(np.float32))
+
+
+N, Mm = 2, 8
+B, K, F = 4, 16, 24
+
+
+def grads_of(method, use_pallas=False):
+    mm = M.method_matmul(method, N, Mm, use_pallas=use_pallas)
+    x, w = rand((B, K), 1), rand((K, F), 2)
+    dy = rand((B, F), 3)
+    y, vjp = jax.vjp(mm, x, w)
+    dx, dw = vjp(dy)
+    return x, w, dy, np.asarray(y), np.asarray(dx), np.asarray(dw)
+
+
+# ---------------------------------------------------------------------------
+# Forward-pass semantics (FF row of the method table)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["dense", "sdgp", "sdwp"])
+def test_forward_dense_methods(method):
+    x, w, _, y, _, _ = grads_of(method)
+    np.testing.assert_allclose(y, np.asarray(x @ w), rtol=1e-6)
+
+
+@pytest.mark.parametrize("method", ["srste", "bdwp"])
+def test_forward_pruned_methods(method):
+    x, w, _, y, _, _ = grads_of(method)
+    want = np.asarray(x @ ref.prune_nm(w, N, Mm, axis=0))
+    np.testing.assert_allclose(y, want, rtol=1e-6)
+
+
+def test_forward_pallas_matches_jnp():
+    _, _, _, y_jnp, dx1, dw1 = grads_of("bdwp", use_pallas=False)
+    _, _, _, y_pl, dx2, dw2 = grads_of("bdwp", use_pallas=True)
+    np.testing.assert_allclose(y_pl, y_jnp, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(dx2, dx1, rtol=1e-6)
+    np.testing.assert_allclose(dw2, dw1, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Backward-pass semantics (BP / WU rows)
+# ---------------------------------------------------------------------------
+
+
+def test_dense_backward():
+    x, w, dy, _, dx, dw = grads_of("dense")
+    np.testing.assert_allclose(dx, np.asarray(dy @ w.T), rtol=1e-6)
+    np.testing.assert_allclose(dw, np.asarray(x.T @ dy), rtol=1e-6)
+
+
+def test_bdwp_backward_uses_output_grouped_weights():
+    x, w, dy, _, dx, dw = grads_of("bdwp")
+    w_bp = ref.prune_nm(w, N, Mm, axis=1)
+    np.testing.assert_allclose(dx, np.asarray(dy @ w_bp.T), rtol=1e-6)
+    # WU stays dense (Algorithm 1 line 9)
+    np.testing.assert_allclose(dw, np.asarray(x.T @ dy), rtol=1e-6)
+
+
+def test_sdwp_backward_matches_bdwp_bp():
+    _, w, dy, _, dx_sdwp, _ = grads_of("sdwp")
+    w_bp = ref.prune_nm(w, N, Mm, axis=1)
+    np.testing.assert_allclose(dx_sdwp, np.asarray(dy @ w_bp.T), rtol=1e-6)
+
+
+def test_sdgp_prunes_output_gradients():
+    x, w, dy, _, dx, dw = grads_of("sdgp")
+    dy_p = ref.prune_nm(dy, N, Mm, axis=1)
+    np.testing.assert_allclose(dx, np.asarray(dy_p @ w.T), rtol=1e-6)
+    np.testing.assert_allclose(dw, np.asarray(x.T @ dy), rtol=1e-6)
+
+
+def test_srste_regularizer():
+    x, w, dy, _, dx, dw = grads_of("srste")
+    np.testing.assert_allclose(dx, np.asarray(dy @ w.T), rtol=1e-6)  # dense BP
+    mask = np.asarray(ref.prune_mask(w, N, Mm, axis=0))
+    want = np.asarray(x.T @ dy) + M.SRSTE_LAMBDA * (~mask) * np.asarray(w)
+    np.testing.assert_allclose(dw, want, rtol=1e-6)
+
+
+def test_bp_grouping_differs_from_ff_grouping():
+    # The two masks must genuinely differ (bidirectionality is the point).
+    w = rand((K, F), 9)
+    m_ff = np.asarray(ref.prune_mask(w, N, Mm, axis=0))
+    m_bp = np.asarray(ref.prune_mask(w, N, Mm, axis=1))
+    assert (m_ff != m_bp).any()
+
+
+# ---------------------------------------------------------------------------
+# im2col / conv2d
+# ---------------------------------------------------------------------------
+
+
+def test_im2col_matches_lax_conv():
+    x = rand((2, 8, 8, 8), 4)
+    w = rand((3, 3, 8, 16), 5)
+    mm = M.method_matmul("dense", N, Mm)
+    got = np.asarray(M.conv2d(mm, x, w, jnp.zeros(16), stride=1, pad=1))
+    want = np.asarray(
+        jax.lax.conv_general_dilated(
+            x, w, (1, 1), ((1, 1), (1, 1)),
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(stride=st.sampled_from([1, 2]), pad=st.sampled_from([0, 1]),
+       hw=st.sampled_from([6, 8]))
+def test_im2col_strides_pads(stride, pad, hw):
+    x = rand((1, hw, hw, 4), 6)
+    w = rand((3, 3, 4, 8), 7)
+    mm = M.method_matmul("dense", N, Mm)
+    got = np.asarray(M.conv2d(mm, x, w, jnp.zeros(8), stride=stride, pad=pad))
+    want = np.asarray(
+        jax.lax.conv_general_dilated(
+            x, w, (stride, stride), ((pad, pad), (pad, pad)),
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_im2col_channel_innermost_grouping():
+    """Groups of M<=C along im2col's K axis stay within one kernel tap."""
+    C = 8
+    x = rand((1, 4, 4, C), 8)
+    cols, _, _ = M.im2col(x, 3, 3, 1, 1)
+    k = cols.shape[-1]
+    assert k == 3 * 3 * C
+    # tap boundary every C entries -> M=8 groups never straddle taps
+    assert C % Mm == 0
+
+
+# ---------------------------------------------------------------------------
+# Train step / Algorithm 1
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mdl", ["mlp", "cnn", "vit"])
+@pytest.mark.parametrize("method", ["dense", "bdwp"])
+def test_train_step_decreases_loss(mdl, method):
+    params = M.init_params(mdl)
+    moms = [jnp.zeros_like(p) for p in params]
+    x, y = M.example_batch(mdl)
+    x = rand(x.shape, 10)
+    lab = np.arange(y.shape[0]) % y.shape[1]
+    y = jnp.asarray(np.eye(y.shape[1], dtype=np.float32)[lab])
+    step = jax.jit(M.make_train_step(mdl, method, N, Mm))
+    ps, ms, first = step(params, moms, x, y, jnp.float32(0.05))
+    for _ in range(10):
+        ps, ms, loss = step(ps, ms, x, y, jnp.float32(0.05))
+    assert float(loss) < float(first)
+
+
+def test_train_chunk_equals_unrolled_steps():
+    params = M.init_params("mlp")
+    moms = [jnp.zeros_like(p) for p in params]
+    ksteps = 4
+    xs = rand((ksteps, 64, 32), 11)
+    labs = np.arange(64) % 8
+    y1 = jnp.asarray(np.eye(8, dtype=np.float32)[labs])
+    ys = jnp.stack([y1] * ksteps)
+    chunk = jax.jit(M.make_train_chunk("mlp", "bdwp", N, Mm, ksteps))
+    pc, mc, losses = chunk(params, moms, xs, ys, jnp.float32(0.05))
+    step = jax.jit(M.make_train_step("mlp", "bdwp", N, Mm))
+    ps, ms = params, moms
+    ls = []
+    for i in range(ksteps):
+        ps, ms, l = step(ps, ms, xs[i], ys[i], jnp.float32(0.05))
+        ls.append(float(l))
+    np.testing.assert_allclose(np.asarray(losses), np.asarray(ls), rtol=1e-5)
+    for a, b in zip(pc, ps):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_first_conv_stays_dense_in_cnn():
+    """BDWP forward of the cnn must not prune conv1 (paper §VI-A)."""
+    params = M.init_params("cnn")
+    x, _ = M.example_batch("cnn")
+    x = rand(x.shape, 12)
+    logits_bdwp = M.forward("cnn", "bdwp", N, Mm, params, x)
+    # Zeroing a conv1 weight that BDWP would prune must still change output
+    # => conv1 is dense. Compare: prune conv1 manually and check outputs move.
+    p2 = list(params)
+    p2[0] = ref.prune_nm(params[0].reshape(9 * 8, 32), N, Mm, axis=0).reshape(
+        3, 3, 8, 32
+    )
+    logits_pruned = M.forward("cnn", "bdwp", N, Mm, p2, x)
+    assert not np.allclose(np.asarray(logits_bdwp), np.asarray(logits_pruned))
+
+
+def test_methods_registry():
+    assert set(M.METHODS) == {"dense", "srste", "sdgp", "sdwp", "bdwp"}
+    with pytest.raises(ValueError):
+        M.method_matmul("nope", 2, 8)
+
+
+def test_cross_entropy_uniform():
+    logits = jnp.zeros((4, 8))
+    y = jnp.asarray(np.eye(8, dtype=np.float32)[[0, 1, 2, 3]])
+    assert float(M.cross_entropy(logits, y)) == pytest.approx(np.log(8.0), rel=1e-5)

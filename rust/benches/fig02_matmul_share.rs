@@ -1,0 +1,9 @@
+//! Regenerates Fig. 2 — MatMul share of per-batch training time.
+use sat::util::timer;
+
+fn main() {
+    let m = timer::bench("fig02 generation", 1, 5, sat::report::fig02_matmul_share);
+    sat::report::fig02_matmul_share().print();
+    println!("paper: MatMul-unified ops are up to ~84% of batch time");
+    println!("{}", m.summary());
+}

@@ -1,0 +1,55 @@
+//! Regenerates Fig. 4 — from-scratch training loss under dense, SR-STE,
+//! SDGP, SDWP and BDWP, identical data order, REAL training through the
+//! AOT artifacts on PJRT (the heavyweight bench; ~1-2 minutes).
+//!
+//! The paper's observation to reproduce: SDGP's curve deviates from
+//! dense on the harder tasks, while SDWP/BDWP track dense closely.
+
+use sat::runtime::{Manifest, Runtime};
+use sat::train::{compare_methods, TrainOptions};
+use sat::util::stats::ema;
+use sat::util::table::{ascii_chart, Table};
+
+fn main() -> anyhow::Result<()> {
+    let steps = 250;
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load("artifacts")?;
+    let opts = TrainOptions { steps, use_chunk: true, ..Default::default() };
+    let names = ["mlp_dense", "mlp_srste", "mlp_sdgp", "mlp_sdwp", "mlp_bdwp"];
+    let t0 = std::time::Instant::now();
+    let curves = compare_methods(&rt, &manifest, &names, &opts)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let series: Vec<(String, Vec<f64>)> = curves
+        .iter()
+        .map(|c| {
+            (
+                c.method.clone(),
+                ema(&c.losses.iter().map(|&l| l as f64).collect::<Vec<_>>(), 0.08),
+            )
+        })
+        .collect();
+    let refs: Vec<(&str, &[f64])> =
+        series.iter().map(|(n, v)| (n.as_str(), v.as_slice())).collect();
+    print!("{}", ascii_chart("Fig. 4 — mlp-family loss curves (EMA)", &refs, 76, 16));
+
+    let mut t = Table::new("final losses (lower = closer to dense is better)")
+        .header(&["method", "loss@50", "loss@125", "final", "Δ vs dense"]);
+    let dense_final = curves[0].final_loss();
+    for c in &curves {
+        t.row(&[
+            c.method.clone(),
+            format!("{:.3}", c.losses[49.min(c.losses.len() - 1)]),
+            format!("{:.3}", c.losses[124.min(c.losses.len() - 1)]),
+            format!("{:.3}", c.final_loss()),
+            format!("{:+.3}", c.final_loss() - dense_final),
+        ]);
+    }
+    t.print();
+    println!(
+        "fig04 bench: 5 methods x {steps} steps in {wall:.1}s \
+         ({:.0} steps/s aggregate)",
+        5.0 * steps as f64 / wall
+    );
+    Ok(())
+}

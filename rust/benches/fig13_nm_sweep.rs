@@ -1,0 +1,12 @@
+//! Regenerates Fig. 13 (FLOP axis) — N:M ratio sweep under BDWP.
+use sat::util::timer;
+
+fn main() {
+    for model in ["resnet9", "vit", "resnet18"] {
+        sat::report::fig13_pattern_sweep(model).print();
+    }
+    let m = timer::bench("fig13 generation", 1, 5, || {
+        sat::report::fig13_pattern_sweep("resnet18")
+    });
+    println!("{}", m.summary());
+}

@@ -1,0 +1,20 @@
+//! Regenerates Fig. 14 — dense systolic arrays vs N:M STCE resources.
+use sat::arch::ArrayResources;
+use sat::nm::NmPattern;
+use sat::util::timer;
+
+fn main() {
+    sat::report::fig14_resources().print();
+    // paper's iso-throughput claim: 2:8 STCE vs dense 4x16
+    let stce = ArrayResources::stce(4, 4, NmPattern::P2_8);
+    let iso = ArrayResources::dense_array(4, 16);
+    println!(
+        "2:8 STCE vs iso-throughput dense 4x16: {:.1}x LUT, {:.1}x FF, {:.1}x DSP \
+         (paper: 3.4x / 2.0x / 4.0x)",
+        iso.lut as f64 / stce.lut as f64,
+        iso.ff as f64 / stce.ff as f64,
+        iso.dsp as f64 / stce.dsp as f64
+    );
+    let m = timer::bench("fig14 generation", 1, 10, sat::report::fig14_resources);
+    println!("{}", m.summary());
+}

@@ -1,0 +1,9 @@
+//! Regenerates Fig. 16 — ResNet18 2:8 BDWP layer-wise runtime (no overlap).
+use sat::util::timer;
+
+fn main() {
+    sat::report::fig16_layerwise().print();
+    let m = timer::bench("fig16 generation (full ResNet18 sim)", 1, 5,
+                         sat::report::fig16_layerwise);
+    println!("{}", m.summary());
+}

@@ -1,0 +1,10 @@
+//! Regenerates Fig. 17 — throughput scaling with array size × bandwidth.
+use sat::util::timer;
+
+fn main() {
+    sat::report::fig17_scaling().print();
+    println!("paper: at 409.6 GB/s and a scaled array, SAT reaches 3.9 TOPS \
+              runtime (vs 3.4 TOPS on the 2080 Ti)");
+    let m = timer::bench("fig17 generation (12 sims)", 1, 3, sat::report::fig17_scaling);
+    println!("{}", m.summary());
+}

@@ -1,0 +1,94 @@
+//! §Perf microbenchmarks: the L3 hot paths, measured individually.
+//! This is the harness behind the EXPERIMENTS.md §Perf iteration log.
+//!
+//! Sections: nm substrate, SORE functional, SAT engine (per-model sim),
+//! scheduler, and — when artifacts exist — the PJRT step/chunk paths.
+
+use sat::arch::SatConfig;
+use sat::models::zoo;
+use sat::nm::{CompactNm, NmPattern};
+use sat::runtime::{Manifest, Runtime};
+use sat::sched::rwg_schedule;
+use sat::sim::engine::{simulate_method, simulate_step};
+use sat::sim::memory::MemConfig;
+use sat::util::timer::{bench, sink};
+use sat::util::Pcg32;
+
+fn main() {
+    let mut results = Vec::new();
+    let cfg = SatConfig::paper_default();
+    let mem = MemConfig::paper_default();
+
+    // --- nm substrate -------------------------------------------------
+    let mut rng = Pcg32::new(1);
+    let w: Vec<f32> = rng.normals(1 << 20);
+    results.push(bench("nm::prune_mask_flat 1M f32 2:8", 2, 10, || {
+        sink(sat::nm::prune::prune_mask_flat(&w, NmPattern::P2_8))
+    }));
+    results.push(bench("nm::CompactNm::encode 1M f32 2:8", 2, 10, || {
+        sink(CompactNm::encode(&w, 1024, 1024, NmPattern::P2_8))
+    }));
+    let enc = CompactNm::encode(&w, 1024, 1024, NmPattern::P2_8);
+    results.push(bench("nm::CompactNm::decode 1M", 2, 10, || sink(enc.decode())));
+    results.push(bench("sore::reduce_functional 1M 2:8", 2, 10, || {
+        sink(sat::sim::sore::reduce_functional(&w, 1024, 1024, NmPattern::P2_8))
+    }));
+
+    // --- scheduler + engine --------------------------------------------
+    for name in ["resnet18", "resnet50", "vgg19", "vit"] {
+        let model = zoo::model_by_name(name).unwrap();
+        results.push(bench(&format!("rwg_schedule {name}"), 2, 20, || {
+            sink(rwg_schedule(&model, sat::nm::Method::Bdwp, NmPattern::P2_8, &cfg))
+        }));
+        let schedule = rwg_schedule(&model, sat::nm::Method::Bdwp, NmPattern::P2_8, &cfg);
+        results.push(bench(&format!("engine::simulate_step {name}"), 2, 20, || {
+            sink(simulate_step(&model, &schedule, &cfg, &mem))
+        }));
+        results.push(bench(&format!("schedule+simulate {name}"), 2, 20, || {
+            sink(simulate_method(&model, sat::nm::Method::Bdwp, NmPattern::P2_8, &cfg, &mem))
+        }));
+    }
+
+    // --- USPE explicit stepper (validation-path cost) -------------------
+    results.push(bench("uspe::OsStepper 3x256 interleaved", 2, 10, || {
+        sink(sat::sim::uspe::OsStepper::new(3, 256, true).run())
+    }));
+
+    // --- PJRT paths (need artifacts) ------------------------------------
+    if let Ok(manifest) = Manifest::load("artifacts") {
+        let rt = Runtime::cpu().expect("pjrt cpu");
+        let artifact = manifest.by_name("mlp_bdwp").unwrap();
+        let init = manifest.load_init(artifact).unwrap();
+        let mut ts =
+            sat::runtime::TrainState::create(&rt, artifact, &init, true, false)
+                .unwrap();
+        let ds = sat::train::dataset_for("mlp", 2048, 3);
+        let (x, y) = ds.batch(0, artifact.batch());
+        results.push(bench("pjrt step (mlp_bdwp)", 3, 30, || {
+            sink(ts.step(&x, &y, 0.05).unwrap())
+        }));
+        let k = artifact.chunk_steps;
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..k {
+            let (a, b) = ds.batch(i * artifact.batch(), artifact.batch());
+            xs.extend_from_slice(&a);
+            ys.extend_from_slice(&b);
+        }
+        let m = bench("pjrt chunk of 8 steps (mlp_bdwp)", 2, 15, || {
+            sink(ts.step_chunk(&xs, &ys, 0.05).unwrap())
+        });
+        println!(
+            "  chunk amortization: {:.2}x faster per step than single-step path",
+            results.last().unwrap().mean_s / (m.mean_s / k as f64)
+        );
+        results.push(m);
+    } else {
+        eprintln!("(artifacts missing — skipping PJRT microbenches)");
+    }
+
+    println!("\n=== microbench results ===");
+    for r in &results {
+        println!("{}", r.summary());
+    }
+}

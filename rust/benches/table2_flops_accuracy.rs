@@ -1,0 +1,15 @@
+//! Regenerates Table II — train/infer FLOPs per method × N:M pattern.
+//! (Accuracy columns are measured by `fig04_loss_curves` / train_e2e.)
+use sat::util::timer;
+
+fn main() {
+    let m = timer::bench("table2 generation", 1, 5, sat::report::table2_flops);
+    sat::report::table2_flops().print();
+    println!(
+        "headlines: BDWP 2:8 train reduction {:.2}x (paper 1.93x), \
+         inference reduction {:.2}x (paper 3.54x)",
+        sat::report::bdwp_2_8_reduction(),
+        sat::report::inference_reduction_2_8()
+    );
+    println!("{}", m.summary());
+}

@@ -1,0 +1,12 @@
+//! Regenerates Table III — SAT resource breakdown on the XCVU9P.
+use sat::arch::SatConfig;
+use sat::util::timer;
+
+fn main() {
+    let cfg = SatConfig::paper_default();
+    sat::report::table3_breakdown(&cfg).print();
+    let m = timer::bench("table3 generation", 1, 10, || {
+        sat::report::table3_breakdown(&cfg)
+    });
+    println!("{}", m.summary());
+}

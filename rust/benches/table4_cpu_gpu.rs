@@ -1,0 +1,8 @@
+//! Regenerates Table IV — SAT vs CPU / Jetson Nano / RTX 2080 Ti.
+use sat::util::timer;
+
+fn main() {
+    sat::report::table4_cpu_gpu().print();
+    let m = timer::bench("table4 generation", 1, 5, sat::report::table4_cpu_gpu);
+    println!("{}", m.summary());
+}

@@ -1,0 +1,8 @@
+//! Regenerates Table V — comparison with prior FPGA training accelerators.
+use sat::util::timer;
+
+fn main() {
+    sat::report::table5_fpga().print();
+    let m = timer::bench("table5 generation", 1, 5, sat::report::table5_fpga);
+    println!("{}", m.summary());
+}

@@ -1,0 +1,13 @@
+//! FPGA resource & power model of SAT on the XCVU9P (Table III, Fig. 14).
+//!
+//! The paper reports Vivado post-implementation numbers; we encode the
+//! per-component analytical model that reproduces them: LUT/FF counts per
+//! USPE grow with the N:M register/decoder overhead (Fig. 8 discussion),
+//! DSP counts follow the FP16×FP16+FP32 MAC mapping, and power scales
+//! with utilized resources at 200 MHz.
+
+pub mod power;
+pub mod resources;
+
+pub use power::power_w;
+pub use resources::{ArrayResources, ChipResources, SatConfig};

@@ -1,0 +1,331 @@
+//! Analytical LUT/FF/DSP/BRAM model of SAT, calibrated against the
+//! paper's published numbers (Table III breakdown, Fig. 14 overheads).
+//!
+//! Calibration anchors:
+//! * Table III — full 2:8 SAT, 32×32 STCE on XCVU9P: STCE 389K LUT /
+//!   589K FF / 1024 DSP; WUVE 40K/20K/192; SORE 3K/5K/0; W2E 128 banks,
+//!   N2S 2×38, optimizer 64; totals 689K (58%), 972K (41%), 711 (23%),
+//!   1228 (18%).
+//! * Fig. 14 — vs a dense 4×4 array, 2:4/2:8/2:16 STCEs cost 1.1/1.2/1.3×
+//!   LUT and 1.7/2.2/3.3× FF; a 2:8 STCE beats the iso-throughput 4×16
+//!   dense array by 3.4×/2.0×/4.0×/3.1× (LUT/FF/DSP/power).
+
+use crate::nm::NmPattern;
+
+/// XCVU9P capacities (back-derived from Table III utilization rows and
+/// matching the public device table).
+pub const XCVU9P_LUT: u64 = 1_182_000;
+pub const XCVU9P_FF: u64 = 2_364_000;
+pub const XCVU9P_BRAM: u64 = 3_091; // "memory blocks" as counted in Table III
+pub const XCVU9P_DSP: u64 = 6_840;
+
+/// Per-USPE dense-baseline costs (derived in module docs).
+const LUT_PER_DENSE_PE: f64 = 317.0;
+const FF_PER_DENSE_PE: f64 = 261.0;
+const DSP_PER_PE: u64 = 1;
+
+/// A SAT instance configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SatConfig {
+    /// Systolic array height (rows of USPEs).
+    pub rows: usize,
+    /// Systolic array width (columns of USPEs).
+    pub cols: usize,
+    /// The N:M pattern the STCE is built for (fixed at bitstream time —
+    /// §IV-D: changing M requires reconfiguring the FPGA).
+    pub pattern: NmPattern,
+    /// WUVE/SORE lane count.
+    pub lanes: usize,
+    /// Clock frequency in MHz.
+    pub freq_mhz: f64,
+}
+
+impl SatConfig {
+    /// The paper's deployed configuration (2:8, 32×32, 32 lanes, 200 MHz).
+    pub fn paper_default() -> SatConfig {
+        SatConfig {
+            rows: 32,
+            cols: 32,
+            pattern: NmPattern::P2_8,
+            lanes: 32,
+            freq_mhz: 200.0,
+        }
+    }
+
+    pub fn uspes(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Dense-mode peak throughput in GOPS (MAC = 2 ops). Each USPE
+    /// completes a 2:2 dense dot-product per 2 cycles → 1 MAC/cycle.
+    pub fn peak_dense_gops(&self) -> f64 {
+        self.uspes() as f64 * 2.0 * self.freq_mhz / 1e3
+    }
+
+    /// Sparse-mode *effective* peak GOPS: an N:M group (M MACs of dense
+    /// work) completes in N cycles → M/N MACs-equivalent per cycle.
+    pub fn peak_sparse_gops(&self) -> f64 {
+        self.peak_dense_gops() / self.pattern.density()
+    }
+}
+
+/// LUT-factor of an N:M USPE over the dense PE (Fig. 14 calibration:
+/// 1 + 0.1·log2(M/2); decoder logic grows with index width).
+fn lut_factor(p: NmPattern) -> f64 {
+    if p.is_dense() {
+        1.0
+    } else {
+        1.0 + 0.1 * (p.m as f64 / 2.0).log2()
+    }
+}
+
+/// FF-factor (Fig. 14 anchors {4: 1.7, 8: 2.2, 16: 3.3}, piecewise-linear
+/// in M between anchors; the west-input register file holds M entries vs
+/// the dense PE's 2 — §IV-D).
+fn ff_factor(p: NmPattern) -> f64 {
+    if p.is_dense() {
+        return 1.0;
+    }
+    let anchors: [(f64, f64); 4] = [(2.0, 1.0), (4.0, 1.7), (8.0, 2.2), (16.0, 3.3)];
+    let m = p.m as f64;
+    if m >= 16.0 {
+        // extrapolate on the 8→16 slope
+        return 3.3 + (m - 16.0) * (3.3 - 2.2) / 8.0;
+    }
+    for w in anchors.windows(2) {
+        let (m0, f0) = w[0];
+        let (m1, f1) = w[1];
+        if m <= m1 {
+            return f0 + (f1 - f0) * (m - m0) / (m1 - m0);
+        }
+    }
+    unreachable!()
+}
+
+/// Resource tally of one systolic array (dense baseline or STCE).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ArrayResources {
+    pub lut: u64,
+    pub ff: u64,
+    pub dsp: u64,
+}
+
+impl ArrayResources {
+    /// A dense rows×cols systolic array.
+    pub fn dense_array(rows: usize, cols: usize) -> ArrayResources {
+        let pes = (rows * cols) as f64;
+        ArrayResources {
+            lut: (pes * LUT_PER_DENSE_PE) as u64,
+            ff: (pes * FF_PER_DENSE_PE) as u64,
+            dsp: rows as u64 * cols as u64 * DSP_PER_PE,
+        }
+    }
+
+    /// An N:M STCE of the same geometry.
+    pub fn stce(rows: usize, cols: usize, p: NmPattern) -> ArrayResources {
+        let pes = (rows * cols) as f64;
+        ArrayResources {
+            lut: (pes * LUT_PER_DENSE_PE * lut_factor(p)) as u64,
+            ff: (pes * FF_PER_DENSE_PE * ff_factor(p)) as u64,
+            dsp: rows as u64 * cols as u64 * DSP_PER_PE,
+        }
+    }
+}
+
+/// Full-chip resource breakdown (Table III rows).
+#[derive(Clone, Debug, Default)]
+pub struct ChipResources {
+    pub stce: ArrayResources,
+    pub wuve_lut: u64,
+    pub wuve_ff: u64,
+    pub wuve_dsp: u64,
+    pub sore_lut: u64,
+    pub sore_ff: u64,
+    pub w2e_banks: u64,
+    pub n2s_in_banks: u64,
+    pub n2s_out_banks: u64,
+    pub optimizer_banks: u64,
+    pub other_lut: u64,
+    pub other_ff: u64,
+    pub other_bram: u64,
+    pub other_dsp: u64,
+}
+
+impl ChipResources {
+    /// Model the paper's SAT instance for an arbitrary config.
+    pub fn model(cfg: &SatConfig) -> ChipResources {
+        let p = cfg.pattern;
+        // WUVE lane: 3 FP32 mult + 2 FP32 add ≈ 6 DSP, 1250 LUT, 625 FF.
+        let wuve_dsp = cfg.lanes as u64 * 6;
+        let wuve_lut = cfg.lanes as u64 * 1250;
+        let wuve_ff = cfg.lanes as u64 * 625;
+        // SORE lane: top-K sorter + data provider; grows mildly with N, M.
+        let sore_lut =
+            cfg.lanes as u64 * (40 + 20 * p.n as u64 + 2 * p.m as u64);
+        let sore_ff = cfg.lanes as u64
+            * (46 + p.n as u64 * (16 + p.index_bits() as u64) + 8 * p.m as u64);
+        // Buffers (Table III): W2E banking must feed M/2× the dense input
+        // bandwidth; N2S carries data + packed indexes.
+        let w2e_banks = (cfg.rows * p.m / 2) as u64;
+        let idx_banks =
+            ((cfg.cols as u64 * p.index_bits() as u64) + 15) / 16;
+        let n2s = cfg.cols as u64 + idx_banks;
+        ChipResources {
+            stce: ArrayResources::stce(cfg.rows, cfg.cols, p),
+            wuve_lut,
+            wuve_ff,
+            wuve_dsp,
+            sore_lut,
+            sore_ff,
+            w2e_banks,
+            n2s_in_banks: n2s,
+            n2s_out_banks: n2s,
+            optimizer_banks: cfg.lanes as u64 * 2,
+            // Shell (DDR4 controller, PCIe DMA, interconnect): fixed.
+            other_lut: 257_000,
+            other_ff: 358_000,
+            other_bram: 443,
+            other_dsp: 12,
+        }
+    }
+
+    pub fn total_lut(&self) -> u64 {
+        self.stce.lut + self.wuve_lut + self.sore_lut + self.other_lut
+    }
+
+    pub fn total_ff(&self) -> u64 {
+        self.stce.ff + self.wuve_ff + self.sore_ff + self.other_ff
+    }
+
+    pub fn total_bram(&self) -> u64 {
+        self.w2e_banks
+            + self.n2s_in_banks
+            + self.n2s_out_banks
+            + self.optimizer_banks
+            + self.other_bram
+    }
+
+    pub fn total_dsp(&self) -> u64 {
+        self.stce.dsp + self.wuve_dsp + self.other_dsp
+    }
+
+    /// Utilization fractions on the XCVU9P.
+    pub fn utilization(&self) -> (f64, f64, f64, f64) {
+        (
+            self.total_lut() as f64 / XCVU9P_LUT as f64,
+            self.total_ff() as f64 / XCVU9P_FF as f64,
+            self.total_bram() as f64 / XCVU9P_BRAM as f64,
+            self.total_dsp() as f64 / XCVU9P_DSP as f64,
+        )
+    }
+
+    /// Does this configuration fit the device?
+    pub fn fits(&self) -> bool {
+        let (l, f, b, d) = self.utilization();
+        l <= 1.0 && f <= 1.0 && b <= 1.0 && d <= 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_chip() -> ChipResources {
+        ChipResources::model(&SatConfig::paper_default())
+    }
+
+    fn within(got: u64, want: u64, tol: f64) -> bool {
+        (got as f64 - want as f64).abs() <= want as f64 * tol
+    }
+
+    #[test]
+    fn table3_stce_row() {
+        let c = paper_chip();
+        assert!(within(c.stce.lut, 389_000, 0.10), "lut {}", c.stce.lut);
+        assert!(within(c.stce.ff, 589_000, 0.10), "ff {}", c.stce.ff);
+        assert_eq!(c.stce.dsp, 1024);
+    }
+
+    #[test]
+    fn table3_wuve_row() {
+        let c = paper_chip();
+        assert!(within(c.wuve_lut, 40_000, 0.05));
+        assert!(within(c.wuve_ff, 20_000, 0.05));
+        assert_eq!(c.wuve_dsp, 192);
+    }
+
+    #[test]
+    fn table3_sore_row_under_1pct_of_stce() {
+        let c = paper_chip();
+        assert!(within(c.sore_lut, 3_000, 0.20), "{}", c.sore_lut);
+        assert!(within(c.sore_ff, 5_000, 0.20), "{}", c.sore_ff);
+        // the paper's headline: SORE consumes <1% of STCE resources
+        assert!((c.sore_lut as f64) < 0.01 * c.stce.lut as f64);
+        assert!((c.sore_ff as f64) < 0.01 * c.stce.ff as f64);
+    }
+
+    #[test]
+    fn table3_buffer_banks() {
+        let c = paper_chip();
+        assert_eq!(c.w2e_banks, 128);
+        assert_eq!(c.n2s_in_banks, 38);
+        assert_eq!(c.n2s_out_banks, 38);
+        assert_eq!(c.optimizer_banks, 64);
+    }
+
+    #[test]
+    fn table3_totals_and_utilization() {
+        let c = paper_chip();
+        assert!(within(c.total_lut(), 689_000, 0.10), "{}", c.total_lut());
+        assert!(within(c.total_ff(), 972_000, 0.10), "{}", c.total_ff());
+        assert!(within(c.total_bram(), 711, 0.05), "{}", c.total_bram());
+        assert!(within(c.total_dsp(), 1228, 0.05), "{}", c.total_dsp());
+        let (l, f, b, d) = c.utilization();
+        assert!((l - 0.58).abs() < 0.06, "lut util {l}");
+        assert!((f - 0.41).abs() < 0.05, "ff util {f}");
+        assert!((b - 0.23).abs() < 0.03, "bram util {b}");
+        assert!((d - 0.18).abs() < 0.02, "dsp util {d}");
+        assert!(c.fits());
+    }
+
+    #[test]
+    fn fig14_overhead_factors() {
+        let dense = ArrayResources::dense_array(4, 4);
+        for (m, lutf, fff) in [(4usize, 1.1, 1.7), (8, 1.2, 2.2), (16, 1.3, 3.3)] {
+            let s = ArrayResources::stce(4, 4, NmPattern::new(2, m));
+            let lr = s.lut as f64 / dense.lut as f64;
+            let fr = s.ff as f64 / dense.ff as f64;
+            assert!((lr - lutf).abs() < 0.02, "2:{m} lut ratio {lr}");
+            assert!((fr - fff).abs() < 0.02, "2:{m} ff ratio {fr}");
+            assert_eq!(s.dsp, dense.dsp); // DSPs don't grow with M
+        }
+    }
+
+    #[test]
+    fn fig14_iso_throughput_comparison() {
+        // 2:8 4×4 STCE ≡ 4×16 dense array in throughput; paper claims the
+        // STCE is 3.4×/2.0×/4.0× cheaper in LUT/FF/DSP.
+        let stce = ArrayResources::stce(4, 4, NmPattern::P2_8);
+        let dense_iso = ArrayResources::dense_array(4, 16);
+        let lut_adv = dense_iso.lut as f64 / stce.lut as f64;
+        let ff_adv = dense_iso.ff as f64 / stce.ff as f64;
+        let dsp_adv = dense_iso.dsp as f64 / stce.dsp as f64;
+        assert!((3.0..3.8).contains(&lut_adv), "lut {lut_adv}");
+        assert!((1.6..2.2).contains(&ff_adv), "ff {ff_adv}");
+        assert_eq!(dsp_adv, 4.0);
+    }
+
+    #[test]
+    fn peak_throughput_table4() {
+        // Table IV: 409.6 GOPS dense, 1638.4 GOPS 2:8 sparse.
+        let cfg = SatConfig::paper_default();
+        assert!((cfg.peak_dense_gops() - 409.6).abs() < 1e-6);
+        assert!((cfg.peak_sparse_gops() - 1638.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scaling_eventually_exceeds_device() {
+        let cfg = SatConfig { rows: 128, cols: 128, ..SatConfig::paper_default() };
+        assert!(!ChipResources::model(&cfg).fits());
+    }
+}

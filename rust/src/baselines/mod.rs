@@ -1,0 +1,8 @@
+//! Comparison baselines: CPU/GPU roofline models (Table IV) and the
+//! published prior FPGA training accelerators (Table V).
+
+pub mod fpga;
+pub mod roofline;
+
+pub use fpga::{prior_accelerators, FpgaAccelerator};
+pub use roofline::{Device, DeviceEstimate};

@@ -1,0 +1,152 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `sat <subcommand> [--flag value]... [--switch]...`
+//! Flags may repeat; the last value wins. Unknown flags are errors so
+//! typos fail loudly.
+
+use std::collections::HashMap;
+use std::fmt;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+/// Parse failure with a message suitable for printing with usage.
+#[derive(Debug)]
+pub struct ParseError(pub String);
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl Args {
+    /// Parse argv-style input. `known_flags` take a value; `known_switches`
+    /// are boolean.
+    pub fn parse(
+        argv: &[String],
+        known_flags: &[&str],
+        known_switches: &[&str],
+    ) -> Result<Args, ParseError> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        match it.next() {
+            Some(sc) if !sc.starts_with('-') => out.subcommand = sc.clone(),
+            Some(sc) => return Err(ParseError(format!("expected subcommand, got {sc:?}"))),
+            None => return Err(ParseError("missing subcommand".into())),
+        }
+        while let Some(tok) = it.next() {
+            let Some(name) = tok.strip_prefix("--") else {
+                return Err(ParseError(format!("unexpected positional arg {tok:?}")));
+            };
+            if known_switches.contains(&name) {
+                out.switches.push(name.to_string());
+            } else if known_flags.contains(&name) {
+                let val = it
+                    .next()
+                    .ok_or_else(|| ParseError(format!("--{name} needs a value")))?;
+                out.flags.insert(name.to_string(), val.clone());
+            } else {
+                return Err(ParseError(format!("unknown flag --{name}")));
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+    ) -> Result<T, ParseError>
+    where
+        T::Err: fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| ParseError(format!("--{name} {v:?}: {e}"))),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = Args::parse(
+            &sv(&["sim", "--model", "resnet18", "--verbose"]),
+            &["model"],
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand, "sim");
+        assert_eq!(a.get("model"), Some("resnet18"));
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        let e = Args::parse(&sv(&["sim", "--nope", "x"]), &["model"], &[]);
+        assert!(e.is_err());
+        assert!(e.unwrap_err().0.contains("--nope"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let e = Args::parse(&sv(&["sim", "--model"]), &["model"], &[]);
+        assert!(e.unwrap_err().0.contains("needs a value"));
+    }
+
+    #[test]
+    fn get_parse_with_defaults() {
+        let a = Args::parse(&sv(&["x", "--steps", "42"]), &["steps"], &[]).unwrap();
+        assert_eq!(a.get_parse::<usize>("steps", 7).unwrap(), 42);
+        assert_eq!(a.get_parse::<usize>("other", 7).unwrap(), 7);
+        let bad = Args::parse(&sv(&["x", "--steps", "nan"]), &["steps"], &[]).unwrap();
+        assert!(bad.get_parse::<usize>("steps", 7).is_err());
+    }
+
+    #[test]
+    fn last_flag_wins() {
+        let a = Args::parse(
+            &sv(&["x", "--m", "a", "--m", "b"]),
+            &["m"],
+            &[],
+        )
+        .unwrap();
+        assert_eq!(a.get("m"), Some("b"));
+    }
+
+    #[test]
+    fn no_subcommand_is_error() {
+        assert!(Args::parse(&sv(&[]), &[], &[]).is_err());
+        assert!(Args::parse(&sv(&["--x"]), &[], &[]).is_err());
+    }
+}

@@ -1,0 +1,191 @@
+//! Run configuration: file (key=value) + CLI overrides → resolved config.
+//!
+//! Precedence: built-in defaults < config file (`--config path`) < CLI
+//! flags. The file format is flat `key = value` lines with `#` comments —
+//! enough for experiment configs without a TOML dependency.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context};
+
+use crate::arch::SatConfig;
+use crate::coordinator::cli::Args;
+use crate::nm::{Method, NmPattern};
+use crate::sim::memory::MemConfig;
+
+/// Fully-resolved configuration for a simulate/train run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: String,
+    pub method: Method,
+    pub pattern: NmPattern,
+    pub sat: SatConfig,
+    pub mem: MemConfig,
+    pub artifacts_dir: String,
+    pub steps: usize,
+    pub lr: f32,
+    pub eval_every: usize,
+    pub use_chunk: bool,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "resnet18".into(),
+            method: Method::Bdwp,
+            pattern: NmPattern::P2_8,
+            sat: SatConfig::paper_default(),
+            mem: MemConfig::paper_default(),
+            artifacts_dir: "artifacts".into(),
+            steps: 200,
+            lr: 0.05,
+            eval_every: 0,
+            use_chunk: false,
+            seed: 1,
+        }
+    }
+}
+
+/// Parse a flat key=value config file.
+pub fn parse_file(text: &str) -> anyhow::Result<HashMap<String, String>> {
+    let mut map = HashMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+        map.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    Ok(map)
+}
+
+impl RunConfig {
+    /// Resolve from optional config file + CLI args.
+    pub fn resolve(args: &Args) -> anyhow::Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        let mut file_map = HashMap::new();
+        if let Some(path) = args.get("config") {
+            let text = std::fs::read_to_string(Path::new(path))
+                .with_context(|| format!("reading config {path:?}"))?;
+            file_map = parse_file(&text)?;
+        }
+        let pick = |key: &str| -> Option<String> {
+            args.get(key)
+                .map(|s| s.to_string())
+                .or_else(|| file_map.get(key).cloned())
+        };
+        if let Some(v) = pick("model") {
+            cfg.model = v;
+        }
+        if let Some(v) = pick("method") {
+            cfg.method = v.parse().map_err(|e| anyhow!("{e}"))?;
+        }
+        if let Some(v) = pick("pattern") {
+            cfg.pattern = v.parse().map_err(|e| anyhow!("{e}"))?;
+        }
+        if let Some(v) = pick("rows") {
+            cfg.sat.rows = v.parse().context("rows")?;
+        }
+        if let Some(v) = pick("cols") {
+            cfg.sat.cols = v.parse().context("cols")?;
+        }
+        if let Some(v) = pick("freq-mhz") {
+            cfg.sat.freq_mhz = v.parse().context("freq-mhz")?;
+        }
+        if let Some(v) = pick("bandwidth") {
+            cfg.mem.bandwidth_gbs = v.parse().context("bandwidth")?;
+        }
+        if let Some(v) = pick("no-overlap") {
+            cfg.mem.overlap = v != "true"; // file form: no-overlap = true
+        }
+        if args.has("no-overlap") {
+            cfg.mem.overlap = false;
+        }
+        if let Some(v) = pick("artifacts") {
+            cfg.artifacts_dir = v;
+        }
+        if let Some(v) = pick("steps") {
+            cfg.steps = v.parse().context("steps")?;
+        }
+        if let Some(v) = pick("lr") {
+            cfg.lr = v.parse().context("lr")?;
+        }
+        if let Some(v) = pick("eval-every") {
+            cfg.eval_every = v.parse().context("eval-every")?;
+        }
+        if args.has("chunk") || file_map.get("chunk").map(|s| s as &str) == Some("true") {
+            cfg.use_chunk = true;
+        }
+        if let Some(v) = pick("seed") {
+            cfg.seed = v.parse().context("seed")?;
+        }
+        // The STCE's pattern is a bitstream-time property: keep it in sync
+        // with the requested training pattern (§IV-D).
+        cfg.sat.pattern = cfg.pattern;
+        Ok(cfg)
+    }
+}
+
+/// Flags shared by the subcommands that accept a RunConfig.
+pub const CONFIG_FLAGS: &[&str] = &[
+    "config", "model", "method", "pattern", "rows", "cols", "freq-mhz",
+    "bandwidth", "artifacts", "steps", "lr", "eval-every", "seed",
+];
+
+/// Switches shared likewise.
+pub const CONFIG_SWITCHES: &[&str] = &["no-overlap", "chunk"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(xs: &[&str]) -> Args {
+        let argv: Vec<String> = xs.iter().map(|s| s.to_string()).collect();
+        Args::parse(&argv, CONFIG_FLAGS, CONFIG_SWITCHES).unwrap()
+    }
+
+    #[test]
+    fn defaults_resolve() {
+        let c = RunConfig::resolve(&args(&["sim"])).unwrap();
+        assert_eq!(c.model, "resnet18");
+        assert_eq!(c.method, Method::Bdwp);
+        assert_eq!(c.pattern, NmPattern::P2_8);
+        assert!(c.mem.overlap);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let c = RunConfig::resolve(&args(&[
+            "sim", "--model", "vgg19", "--method", "sdgp", "--pattern", "2:4",
+            "--rows", "16", "--bandwidth", "102.4", "--no-overlap",
+        ]))
+        .unwrap();
+        assert_eq!(c.model, "vgg19");
+        assert_eq!(c.method, Method::Sdgp);
+        assert_eq!(c.pattern, NmPattern::P2_4);
+        assert_eq!(c.sat.rows, 16);
+        assert_eq!(c.sat.pattern, NmPattern::P2_4); // kept in sync
+        assert_eq!(c.mem.bandwidth_gbs, 102.4);
+        assert!(!c.mem.overlap);
+    }
+
+    #[test]
+    fn file_parsing_with_comments() {
+        let m = parse_file("# comment\nmodel = vit\n\nsteps = 50 # inline\n").unwrap();
+        assert_eq!(m.get("model").unwrap(), "vit");
+        assert_eq!(m.get("steps").unwrap(), "50");
+        assert!(parse_file("oops\n").is_err());
+    }
+
+    #[test]
+    fn bad_values_error() {
+        assert!(RunConfig::resolve(&args(&["sim", "--method", "zzz"])).is_err());
+        assert!(RunConfig::resolve(&args(&["sim", "--pattern", "9"])).is_err());
+        assert!(RunConfig::resolve(&args(&["sim", "--rows", "x"])).is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! Parallel sweep runner: fan simulation jobs across OS threads.
+//!
+//! Exhibits like Fig. 17 sweep dozens of (array, bandwidth, method)
+//! points; each simulation is independent, so the coordinator runs them
+//! on `std::thread` workers (tokio is not in the vendored set — and the
+//! jobs are CPU-bound anyway).
+
+use std::sync::mpsc;
+use std::thread;
+
+/// Run `jobs` across up to `workers` threads, preserving input order in
+/// the output. Each job must be `Send`; results are collected on the
+/// caller thread.
+pub fn run_parallel<T, F>(jobs: Vec<F>, workers: usize) -> Vec<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    // Simple static partition: job i goes to worker i % workers.
+    let mut buckets: Vec<Vec<(usize, F)>> = (0..workers).map(|_| Vec::new()).collect();
+    for (i, job) in jobs.into_iter().enumerate() {
+        buckets[i % workers].push((i, job));
+    }
+    let mut handles = Vec::with_capacity(workers);
+    for bucket in buckets {
+        let tx = tx.clone();
+        handles.push(thread::spawn(move || {
+            for (i, job) in bucket {
+                // A panicking job poisons only its own slot; the channel
+                // send is skipped and collection reports the gap.
+                let out = job();
+                let _ = tx.send((i, out));
+            }
+        }));
+    }
+    drop(tx);
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    while let Ok((i, v)) = rx.recv() {
+        slots[i] = Some(v);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| s.unwrap_or_else(|| panic!("job {i} panicked")))
+        .collect()
+}
+
+/// Reasonable default worker count.
+pub fn default_workers() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..50)
+            .map(|i: usize| Box::new(move || i * i) as Box<dyn FnOnce() -> usize + Send>)
+            .collect();
+        let out = run_parallel(jobs, 8);
+        assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_and_empty() {
+        let out = run_parallel(
+            vec![Box::new(|| 7usize) as Box<dyn FnOnce() -> usize + Send>],
+            1,
+        );
+        assert_eq!(out, vec![7]);
+        let empty: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![];
+        assert!(run_parallel(empty, 4).is_empty());
+    }
+
+    #[test]
+    fn parallel_sim_sweep_matches_serial() {
+        use crate::arch::SatConfig;
+        use crate::models::zoo;
+        use crate::nm::{Method, NmPattern};
+        use crate::sim::engine::simulate_method;
+        use crate::sim::memory::MemConfig;
+        let sizes = [16usize, 24, 32, 48];
+        let serial: Vec<u64> = sizes
+            .iter()
+            .map(|&s| {
+                let cfg = SatConfig { rows: s, cols: s, ..SatConfig::paper_default() };
+                simulate_method(
+                    &zoo::resnet9(), Method::Bdwp, NmPattern::P2_8, &cfg,
+                    &MemConfig::paper_default(),
+                )
+                .total_cycles
+            })
+            .collect();
+        let jobs: Vec<Box<dyn FnOnce() -> u64 + Send>> = sizes
+            .iter()
+            .map(|&s| {
+                Box::new(move || {
+                    let cfg = SatConfig { rows: s, cols: s, ..SatConfig::paper_default() };
+                    simulate_method(
+                        &zoo::resnet9(), Method::Bdwp, NmPattern::P2_8, &cfg,
+                        &MemConfig::paper_default(),
+                    )
+                    .total_cycles
+                }) as Box<dyn FnOnce() -> u64 + Send>
+            })
+            .collect();
+        let parallel = run_parallel(jobs, 4);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn default_workers_positive() {
+        assert!(default_workers() >= 1);
+    }
+}

@@ -1,0 +1,257 @@
+//! Subcommand dispatch: maps the CLI onto the library.
+
+use anyhow::anyhow;
+
+use crate::arch::{power, ChipResources};
+use crate::coordinator::cli::Args;
+use crate::coordinator::config::{RunConfig, CONFIG_FLAGS, CONFIG_SWITCHES};
+use crate::models::zoo;
+use crate::nm::Method;
+use crate::report;
+use crate::runtime::{Manifest, Runtime};
+use crate::sched::{rwg_schedule, words};
+use crate::sim::engine::simulate_method;
+use crate::train::{self, TrainOptions};
+use crate::util::table::{ascii_chart, Table};
+
+pub const USAGE: &str = "\
+sat — N:M sparse DNN training co-design (TCAD'23 reproduction)
+
+USAGE: sat <subcommand> [flags]
+
+SUBCOMMANDS
+  exhibits   print every paper table/figure from the analytical models
+  sim        simulate one training step on SAT
+             [--model M --method X --pattern N:M --rows R --cols C
+              --bandwidth GB/s --no-overlap]
+  schedule   dump the RWG schedule + config words for a model
+             [--model M --method X --pattern N:M]
+  resources  print the Table III resource breakdown for a config
+             [--rows R --cols C --pattern N:M]
+  train      run a training artifact through PJRT
+             [--artifact NAME --steps N --lr F --eval-every K --chunk]
+  compare    train several methods on identical data (Fig. 4 protocol)
+             [--model mlp|cnn|vit --steps N]
+  verify     check runtime numerics against the Python goldens
+  help       this text
+";
+
+/// Entry point used by `main.rs`; returns the process exit code.
+pub fn run(argv: &[String]) -> i32 {
+    let mut flags: Vec<&str> = CONFIG_FLAGS.to_vec();
+    flags.extend_from_slice(&["artifact", "id"]);
+    let args = match Args::parse(argv, &flags, CONFIG_SWITCHES) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            return 2;
+        }
+    };
+    let result = match args.subcommand.as_str() {
+        "exhibits" => cmd_exhibits(&args),
+        "sim" => cmd_sim(&args),
+        "schedule" => cmd_schedule(&args),
+        "resources" => cmd_resources(&args),
+        "train" => cmd_train(&args),
+        "compare" => cmd_compare(&args),
+        "verify" => cmd_verify(&args),
+        "help" | "" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(anyhow!("unknown subcommand {other:?}\n\n{USAGE}")),
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_exhibits(args: &Args) -> anyhow::Result<()> {
+    let only = args.get("id");
+    let mut printed = false;
+    let mut emit = |id: &str, t: Table| {
+        if only.map_or(true, |o| o == id) {
+            println!("[{id}]");
+            t.print();
+            printed = true;
+        }
+    };
+    emit("fig02", report::fig02_matmul_share());
+    emit("table2", report::table2_flops());
+    emit("fig13", report::fig13_pattern_sweep("resnet18"));
+    emit("fig14", report::fig14_resources());
+    emit("table3", report::table3_breakdown(&RunConfig::default().sat));
+    emit("fig15", report::fig15_batch_times());
+    emit("fig16", report::fig16_layerwise());
+    emit("table4", report::table4_cpu_gpu());
+    emit("fig17", report::fig17_scaling());
+    emit("table5", report::table5_fpga());
+    if only.map_or(true, |o| o == "headlines") {
+        println!(
+            "[headlines] BDWP 2:8 train-FLOP reduction {:.2}x; \
+             inference reduction {:.2}x",
+            report::bdwp_2_8_reduction(),
+            report::inference_reduction_2_8()
+        );
+        printed = true;
+    }
+    if !printed {
+        return Err(anyhow!("unknown exhibit id {:?}", only.unwrap_or("")));
+    }
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> anyhow::Result<()> {
+    let cfg = RunConfig::resolve(args)?;
+    let model = zoo::model_by_name(&cfg.model)
+        .ok_or_else(|| anyhow!("unknown model {:?}", cfg.model))?;
+    let r = simulate_method(&model, cfg.method, cfg.pattern, &cfg.sat, &cfg.mem);
+    let mut t = Table::new(&format!(
+        "SAT simulation — {} {} {} ({}x{} @ {} MHz, {} GB/s, overlap={})",
+        cfg.model, cfg.method, cfg.pattern, cfg.sat.rows, cfg.sat.cols,
+        cfg.sat.freq_mhz, cfg.mem.bandwidth_gbs, cfg.mem.overlap,
+    ))
+    .header(&["metric", "value"]);
+    let (ff, bp, wu, other) = r.stage_totals();
+    t.row(&["total cycles".into(), r.total_cycles.to_string()]);
+    t.row(&["batch time".into(), format!("{:.2} ms", r.seconds(&cfg.sat) * 1e3)]);
+    t.row(&["FF cycles".into(), ff.to_string()]);
+    t.row(&["BP cycles".into(), bp.to_string()]);
+    t.row(&["WU+WUVE+SORE cycles".into(), wu.to_string()]);
+    t.row(&["other cycles".into(), other.to_string()]);
+    t.row(&["runtime GOPS (dense-equiv)".into(),
+            format!("{:.1}", r.runtime_gops(&cfg.sat))]);
+    t.row(&["useful/dense MACs".into(),
+            format!("{:.3}", r.useful_macs as f64 / r.dense_macs as f64)]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> anyhow::Result<()> {
+    let cfg = RunConfig::resolve(args)?;
+    let model = zoo::model_by_name(&cfg.model)
+        .ok_or_else(|| anyhow!("unknown model {:?}", cfg.model))?;
+    let s = rwg_schedule(&model, cfg.method, cfg.pattern, &cfg.sat);
+    let mut t = Table::new(&format!(
+        "RWG schedule — {} {} {}", cfg.model, cfg.method, cfg.pattern
+    ))
+    .header(&["layer", "stage", "sparse", "dataflow", "SORE", "pred. cycles", "word"]);
+    for l in &s.layers {
+        for sc in &l.stages {
+            t.row(&[
+                l.name.clone(),
+                sc.stage.name().to_string(),
+                sc.sparse.map(|p| p.to_string()).unwrap_or_else(|| "dense".into()),
+                sc.dataflow.name().to_string(),
+                if sc.sore_inline {
+                    "inline".into()
+                } else if l.pregenerate && sc.stage == crate::models::Stage::WU {
+                    "pre-gen".into()
+                } else {
+                    "-".into()
+                },
+                sc.predicted_cycles.to_string(),
+                format!("{:#010x}", words::encode_word(l.layer_index, sc, l.pregenerate)),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_resources(args: &Args) -> anyhow::Result<()> {
+    let cfg = RunConfig::resolve(args)?;
+    report::table3_breakdown(&cfg.sat).print();
+    let chip = ChipResources::model(&cfg.sat);
+    println!(
+        "power: dense {:.2} W, sparse {:.2} W, avg {:.2} W; fits device: {}",
+        power::power_w(&chip, power::Mode::Dense, cfg.sat.freq_mhz),
+        power::power_w(&chip, power::Mode::Sparse, cfg.sat.freq_mhz),
+        power::power_avg_w(&chip, cfg.sat.freq_mhz),
+        chip.fits(),
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = RunConfig::resolve(args)?;
+    let name = args.get("artifact").unwrap_or("mlp_bdwp");
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let opts = TrainOptions {
+        steps: cfg.steps,
+        lr: cfg.lr,
+        eval_every: cfg.eval_every,
+        use_chunk: cfg.use_chunk,
+        seed: cfg.seed,
+    };
+    println!("training {name} for {} steps (platform {})", opts.steps, rt.platform());
+    let curve = train::run_training(&rt, &manifest, name, &opts)?;
+    let losses: Vec<f64> = curve.losses.iter().map(|&l| l as f64).collect();
+    print!("{}", ascii_chart(&format!("{name} loss"), &[("loss", &losses)], 72, 14));
+    println!(
+        "final loss {:.4} after {} steps in {:.1}s ({:.1} steps/s)",
+        curve.final_loss(),
+        curve.losses.len(),
+        curve.wall_seconds,
+        curve.losses.len() as f64 / curve.wall_seconds,
+    );
+    for (step, l, a) in &curve.evals {
+        println!("  eval @ {step}: loss {l:.4} acc {:.1}%", a * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> anyhow::Result<()> {
+    let cfg = RunConfig::resolve(args)?;
+    let family = args.get("model").unwrap_or("mlp");
+    let names: Vec<String> = match family {
+        "mlp" => Method::ALL.iter().map(|m| format!("mlp_{}", m.name())).collect(),
+        "cnn" => vec!["cnn_dense".into(), "cnn_bdwp".into()],
+        "vit" => vec!["vit_dense".into(), "vit_bdwp".into()],
+        other => return Err(anyhow!("unknown family {other:?} (mlp|cnn|vit)")),
+    };
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let opts = TrainOptions {
+        steps: cfg.steps,
+        lr: cfg.lr,
+        eval_every: 0,
+        use_chunk: cfg.use_chunk,
+        seed: cfg.seed,
+    };
+    let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    let curves = train::compare_methods(&rt, &manifest, &refs, &opts)?;
+    let series: Vec<(&str, Vec<f64>)> = curves
+        .iter()
+        .map(|c| {
+            (
+                c.method.as_str(),
+                crate::util::stats::ema(
+                    &c.losses.iter().map(|&l| l as f64).collect::<Vec<_>>(),
+                    0.15,
+                ),
+            )
+        })
+        .collect();
+    let series_refs: Vec<(&str, &[f64])> =
+        series.iter().map(|(n, v)| (*n, v.as_slice())).collect();
+    print!("{}", ascii_chart(
+        &format!("Fig. 4 — {family} loss curves (EMA)"), &series_refs, 72, 16,
+    ));
+    for c in &curves {
+        println!("  {:<8} final loss {:.4}", c.method, c.final_loss());
+    }
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> anyhow::Result<()> {
+    let cfg = RunConfig::resolve(args)?;
+    let n = crate::train::golden::verify_all(&cfg.artifacts_dir)?;
+    println!("verify OK: {n} golden checks passed");
+    Ok(())
+}

@@ -1,0 +1,12 @@
+//! System glue: configuration, CLI parsing, and the launcher that maps
+//! subcommands onto the library (the thin-L3-driver role — the paper's
+//! coordination contribution lives in [`crate::sched`] and [`crate::sim`];
+//! this module is process lifecycle, config resolution, and dispatch).
+
+pub mod cli;
+pub mod jobs;
+pub mod config;
+pub mod launcher;
+
+pub use cli::{Args, ParseError};
+pub use config::RunConfig;

@@ -1,0 +1,48 @@
+//! # SAT: N:M Sparse DNN Training — algorithm/architecture/dataflow co-design
+//!
+//! Reproduction of Fang et al., *"Efficient N:M Sparse DNN Training Using
+//! Algorithm, Architecture, and Dataflow Co-Design"* (IEEE TCAD 2023).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the N:M
+//!   sparsify (SORE analogue) and sparse-MatMul (STCE analogue) hot spots.
+//! * **L2** — JAX train steps (`python/compile/model.py`): BDWP and the
+//!   baseline methods (dense, SR-STE, SDGP, SDWP) as `custom_vjp` MatMuls,
+//!   AOT-lowered to HLO text by `python/compile/aot.py`.
+//! * **L3** — this crate: the SAT accelerator simulator ([`sim`]), the RWG
+//!   offline scheduler ([`sched`]), the FPGA resource/power model
+//!   ([`arch`]), CPU/GPU/FPGA baselines ([`baselines`]), the PJRT runtime
+//!   that replays the AOT artifacts ([`runtime`]), and the training
+//!   orchestrator ([`train`]).
+//!
+//! Python never runs on a measured path: `make artifacts` lowers once and
+//! the `sat` binary is self-contained afterwards.
+//!
+//! ## Quick map to the paper
+//!
+//! | Paper | Here |
+//! |---|---|
+//! | BDWP (Algorithm 1) | `python/compile/model.py::method_matmul` + [`nm`] |
+//! | STCE / USPE (Figs. 6–8) | [`sim::stce`], [`sim::uspe`] |
+//! | SORE (Fig. 9) | [`sim::sore`] |
+//! | WUVE | [`sim::wuve`] |
+//! | Interleave mapping (Fig. 10) | [`sim::uspe`] |
+//! | Pre-generation (Fig. 11) | [`sched`] SORE placement |
+//! | RWG / offline scheduling (Fig. 12) | [`sched`] |
+//! | Tables II–V, Figs. 2,4,13–17 | `rust/benches/` (one per exhibit) |
+
+pub mod arch;
+pub mod baselines;
+pub mod coordinator;
+pub mod models;
+pub mod nm;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type (anyhow is the only error dependency).
+pub type Result<T> = anyhow::Result<T>;

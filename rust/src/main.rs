@@ -1,0 +1,11 @@
+//! `sat` — leader binary of the N:M sparse training co-design stack.
+//!
+//! See `sat help` (or `sat::coordinator::launcher::USAGE`) for the
+//! subcommand surface. Python never runs behind this binary: the AOT
+//! artifacts under `artifacts/` are produced once by `make artifacts`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let argv = if argv.is_empty() { vec!["help".to_string()] } else { argv };
+    std::process::exit(sat::coordinator::launcher::run(&argv));
+}

@@ -1,0 +1,228 @@
+//! Layer IR and the im2col MatMul transformation (paper Fig. 1).
+
+/// One of the three training stages of a layer (Fig. 1(a)).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Stage {
+    /// Feed-forward: `y = x · w̃_FF`.
+    FF,
+    /// Backward propagation of activation gradients: `dx = dy · w̃_BPᵀ`.
+    BP,
+    /// Weight update (gradient): `dw = xᵀ · dy` (dense in BDWP).
+    WU,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 3] = [Stage::FF, Stage::BP, Stage::WU];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::FF => "FF",
+            Stage::BP => "BP",
+            Stage::WU => "WU",
+        }
+    }
+}
+
+/// An `(m × k) · (k × n)` MatMul, the universal currency of the stack.
+///
+/// `weight_k` tells which operand holds the (pruneable) weights: for FF
+/// and BP the weight matrix is the `k × n` right operand, for WU neither
+/// operand is a weight (both are data), so sparsity never applies.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct MatMulShape {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// True when the right operand is the (N:M-pruneable) weight tensor.
+    pub weight_is_rhs: bool,
+}
+
+impl MatMulShape {
+    /// Multiply–accumulate count (FLOPs = 2 × MACs).
+    pub fn macs(&self) -> u64 {
+        self.m as u64 * self.k as u64 * self.n as u64
+    }
+
+    pub fn flops(&self) -> u64 {
+        2 * self.macs()
+    }
+}
+
+/// Layer kinds; only Conv and Linear carry MatMuls (the ≥84% of Fig. 2).
+#[derive(Clone, Copy, PartialEq, Debug)]
+pub enum LayerKind {
+    /// 2-D convolution, NHWC × HWIO, square kernel/stride/pad.
+    Conv { kh: usize, kw: usize, ci: usize, co: usize, stride: usize, pad: usize },
+    /// Fully connected `fi → fo`; `tokens` multiplies the batch (ViT).
+    Linear { fi: usize, fo: usize, tokens: usize },
+    /// Non-MatMul memory-bound ops, charged by element count.
+    Pool { factor: usize },
+    Norm,
+    Act,
+    /// Residual add (elementwise).
+    Add,
+}
+
+/// One layer instance with its input spatial geometry resolved.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Input height/width for convs (1 for linears).
+    pub h: usize,
+    pub w: usize,
+    /// Whether N:M sparsity may be applied (paper excludes the first conv).
+    pub sparse_ok: bool,
+}
+
+impl Layer {
+    /// Output spatial size for convs.
+    pub fn out_hw(&self) -> (usize, usize) {
+        match self.kind {
+            LayerKind::Conv { kh, kw, stride, pad, .. } => (
+                (self.h + 2 * pad - kh) / stride + 1,
+                (self.w + 2 * pad - kw) / stride + 1,
+            ),
+            LayerKind::Pool { factor } => (self.h / factor, self.w / factor),
+            _ => (self.h, self.w),
+        }
+    }
+
+    /// The layer's MatMul for a given stage and batch size (im2col form,
+    /// Fig. 1(c)–(e)), or `None` for non-MatMul layers.
+    pub fn matmul(&self, stage: Stage, batch: usize) -> Option<MatMulShape> {
+        match self.kind {
+            LayerKind::Conv { kh, kw, ci, co, .. } => {
+                let (ho, wo) = self.out_hw();
+                let rows = batch * ho * wo; // im2col rows
+                let k = kh * kw * ci;
+                Some(match stage {
+                    // (B·Ho·Wo × khkwCi) · (khkwCi × Co)
+                    Stage::FF => MatMulShape { m: rows, k, n: co, weight_is_rhs: true },
+                    // (B·Ho·Wo × Co) · (Co × khkwCi)
+                    Stage::BP => MatMulShape { m: rows, k: co, n: k, weight_is_rhs: true },
+                    // (khkwCi × B·Ho·Wo) · (B·Ho·Wo × Co)
+                    Stage::WU => MatMulShape { m: k, k: rows, n: co, weight_is_rhs: false },
+                })
+            }
+            LayerKind::Linear { fi, fo, tokens } => {
+                let rows = batch * tokens;
+                Some(match stage {
+                    Stage::FF => MatMulShape { m: rows, k: fi, n: fo, weight_is_rhs: true },
+                    Stage::BP => MatMulShape { m: rows, k: fo, n: fi, weight_is_rhs: true },
+                    Stage::WU => MatMulShape { m: fi, k: rows, n: fo, weight_is_rhs: false },
+                })
+            }
+            _ => None,
+        }
+    }
+
+    /// Weight-element count (0 for parameter-free layers).
+    pub fn weight_elems(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { kh, kw, ci, co, .. } => kh * kw * ci * co,
+            LayerKind::Linear { fi, fo, .. } => fi * fo,
+            _ => 0,
+        }
+    }
+
+    /// Activation elements flowing out of this layer per batch item
+    /// (used for the memory model and the non-MatMul op costs).
+    pub fn out_elems_per_item(&self) -> usize {
+        let (ho, wo) = self.out_hw();
+        match self.kind {
+            LayerKind::Conv { co, .. } => ho * wo * co,
+            LayerKind::Linear { fo, tokens, .. } => fo * tokens,
+            LayerKind::Pool { .. } | LayerKind::Norm | LayerKind::Act
+            | LayerKind::Add => ho * wo, // caller scales by channels
+        }
+    }
+
+    /// M-group divisibility check along the FF grouping axis (input
+    /// channels / features). Layers failing it must run dense.
+    pub fn divisible_by(&self, m: usize) -> bool {
+        match self.kind {
+            LayerKind::Conv { ci, co, .. } => ci % m == 0 && co % m == 0,
+            LayerKind::Linear { fi, fo, .. } => fi % m == 0 && fo % m == 0,
+            _ => true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(ci: usize, co: usize, hw: usize, stride: usize) -> Layer {
+        Layer {
+            name: "c".into(),
+            kind: LayerKind::Conv { kh: 3, kw: 3, ci, co, stride, pad: 1 },
+            h: hw,
+            w: hw,
+            sparse_ok: true,
+        }
+    }
+
+    #[test]
+    fn conv_out_geometry() {
+        assert_eq!(conv(8, 16, 32, 1).out_hw(), (32, 32));
+        assert_eq!(conv(8, 16, 32, 2).out_hw(), (16, 16));
+    }
+
+    #[test]
+    fn conv_matmul_shapes_match_im2col() {
+        let l = conv(64, 128, 16, 1);
+        let ff = l.matmul(Stage::FF, 512).unwrap();
+        assert_eq!((ff.m, ff.k, ff.n), (512 * 16 * 16, 9 * 64, 128));
+        assert!(ff.weight_is_rhs);
+        let bp = l.matmul(Stage::BP, 512).unwrap();
+        assert_eq!((bp.m, bp.k, bp.n), (512 * 16 * 16, 128, 9 * 64));
+        let wu = l.matmul(Stage::WU, 512).unwrap();
+        assert_eq!((wu.m, wu.k, wu.n), (9 * 64, 512 * 16 * 16, 128));
+        assert!(!wu.weight_is_rhs);
+    }
+
+    #[test]
+    fn all_three_stages_have_equal_macs() {
+        // FF/BP/WU of one layer move the same MAC volume (Fig. 1)
+        let l = conv(32, 64, 8, 1);
+        let macs: Vec<u64> = Stage::ALL
+            .iter()
+            .map(|&s| l.matmul(s, 64).unwrap().macs())
+            .collect();
+        assert_eq!(macs[0], macs[1]);
+        assert_eq!(macs[1], macs[2]);
+    }
+
+    #[test]
+    fn linear_tokens_multiply_rows() {
+        let l = Layer {
+            name: "qkv".into(),
+            kind: LayerKind::Linear { fi: 64, fo: 192, tokens: 16 },
+            h: 1,
+            w: 1,
+            sparse_ok: true,
+        };
+        let ff = l.matmul(Stage::FF, 32).unwrap();
+        assert_eq!(ff.m, 32 * 16);
+    }
+
+    #[test]
+    fn divisibility_gates_sparsity() {
+        assert!(conv(64, 64, 8, 1).divisible_by(8));
+        assert!(!conv(3, 64, 8, 1).divisible_by(8)); // first conv: Ci=3
+    }
+
+    #[test]
+    fn pool_has_no_matmul() {
+        let l = Layer {
+            name: "p".into(),
+            kind: LayerKind::Pool { factor: 2 },
+            h: 8,
+            w: 8,
+            sparse_ok: false,
+        };
+        assert!(l.matmul(Stage::FF, 4).is_none());
+        assert_eq!(l.out_hw(), (4, 4));
+    }
+}

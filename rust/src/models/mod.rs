@@ -1,0 +1,13 @@
+//! Model zoo IR: layer graphs of the paper's five benchmarks and the
+//! im2col transformation that unifies FF/BP/WU into MatMuls (Fig. 1).
+//!
+//! The simulator, the scheduler, and the FLOP accounting all consume the
+//! [`MatMulShape`]s produced here — exactly the "transform the DNN model
+//! into the MatMul format" step of the paper's offline scheduling
+//! (Fig. 12).
+
+pub mod layer;
+pub mod zoo;
+
+pub use layer::{Layer, LayerKind, MatMulShape, Stage};
+pub use zoo::{model_by_name, Model, PAPER_MODELS};

@@ -1,0 +1,441 @@
+//! The paper's five benchmark networks (Table I) as layer graphs, plus
+//! the small-scale convergence stand-ins matching `python/compile/model.py`.
+//!
+//! Geometry follows the standard torchvision definitions at the paper's
+//! input sizes: CIFAR 32×32 (ResNet9, VGG19, ViT), Tiny ImageNet 64×64
+//! (ResNet18), ImageNet 224×224 (ResNet50).
+
+use crate::models::layer::{Layer, LayerKind, Stage};
+
+/// A named layer graph with its training batch size (Table I).
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub name: String,
+    pub dataset: String,
+    pub batch: usize,
+    pub layers: Vec<Layer>,
+    /// Paper Table I epochs (used by the TTA model).
+    pub epochs: usize,
+    /// Dataset size (images) for steps-per-epoch accounting.
+    pub dataset_size: usize,
+}
+
+impl Model {
+    /// Total weight elements.
+    pub fn weight_elems(&self) -> usize {
+        self.layers.iter().map(|l| l.weight_elems()).sum()
+    }
+
+    /// All (layer index, stage, matmul) triples at this model's batch.
+    pub fn matmuls(&self, batch: usize) -> Vec<(usize, Stage, crate::models::MatMulShape)> {
+        let mut out = Vec::new();
+        for (i, l) in self.layers.iter().enumerate() {
+            for &s in &Stage::ALL {
+                if let Some(mm) = l.matmul(s, batch) {
+                    out.push((i, s, mm));
+                }
+            }
+        }
+        out
+    }
+
+    /// Layers that carry weights (conv/linear).
+    pub fn weight_layers(&self) -> Vec<&Layer> {
+        self.layers.iter().filter(|l| l.weight_elems() > 0).collect()
+    }
+}
+
+fn conv(name: &str, hw: usize, ci: usize, co: usize, stride: usize, sparse: bool) -> Layer {
+    Layer {
+        name: name.into(),
+        kind: LayerKind::Conv { kh: 3, kw: 3, ci, co, stride, pad: 1 },
+        h: hw,
+        w: hw,
+        sparse_ok: sparse,
+    }
+}
+
+fn conv1x1(name: &str, hw: usize, ci: usize, co: usize, stride: usize) -> Layer {
+    Layer {
+        name: name.into(),
+        kind: LayerKind::Conv { kh: 1, kw: 1, ci, co, stride, pad: 0 },
+        h: hw,
+        w: hw,
+        sparse_ok: true,
+    }
+}
+
+fn conv7x7(name: &str, hw: usize, ci: usize, co: usize, stride: usize) -> Layer {
+    Layer {
+        name: name.into(),
+        kind: LayerKind::Conv { kh: 7, kw: 7, ci, co, stride, pad: 3 },
+        h: hw,
+        w: hw,
+        sparse_ok: false, // first layer: excluded from N:M (paper §VI-A)
+    }
+}
+
+fn linear(name: &str, fi: usize, fo: usize, tokens: usize, sparse: bool) -> Layer {
+    Layer {
+        name: name.into(),
+        kind: LayerKind::Linear { fi, fo, tokens },
+        h: 1,
+        w: 1,
+        sparse_ok: sparse,
+    }
+}
+
+/// ResNet9 (the popular DAWNBench CIFAR-10 variant).
+pub fn resnet9() -> Model {
+    let mut layers = vec![
+        conv("conv1", 32, 3, 64, 1, false), // first conv dense
+        conv("conv2", 32, 64, 128, 1, true),
+        Layer { name: "pool1".into(), kind: LayerKind::Pool { factor: 2 }, h: 32, w: 32, sparse_ok: false },
+        conv("res1a", 16, 128, 128, 1, true),
+        conv("res1b", 16, 128, 128, 1, true),
+        conv("conv3", 16, 128, 256, 1, true),
+        Layer { name: "pool2".into(), kind: LayerKind::Pool { factor: 2 }, h: 16, w: 16, sparse_ok: false },
+        conv("conv4", 8, 256, 512, 1, true),
+        Layer { name: "pool3".into(), kind: LayerKind::Pool { factor: 2 }, h: 8, w: 8, sparse_ok: false },
+        conv("res2a", 4, 512, 512, 1, true),
+        conv("res2b", 4, 512, 512, 1, true),
+        Layer { name: "pool4".into(), kind: LayerKind::Pool { factor: 4 }, h: 4, w: 4, sparse_ok: false },
+    ];
+    layers.push(linear("fc", 512, 10, 1, true));
+    Model {
+        name: "resnet9".into(),
+        dataset: "cifar10".into(),
+        batch: 512,
+        layers,
+        epochs: 150,
+        dataset_size: 50_000,
+    }
+}
+
+/// VGG19 on CIFAR-100 (3×3 convs, 2× pools, classifier head).
+pub fn vgg19() -> Model {
+    let cfg: &[(usize, usize, usize)] = &[
+        // (hw, ci, co) per conv; pools drop hw between blocks
+        (32, 3, 64), (32, 64, 64),
+        (16, 64, 128), (16, 128, 128),
+        (8, 128, 256), (8, 256, 256), (8, 256, 256), (8, 256, 256),
+        (4, 256, 512), (4, 512, 512), (4, 512, 512), (4, 512, 512),
+        (2, 512, 512), (2, 512, 512), (2, 512, 512), (2, 512, 512),
+    ];
+    let mut layers = Vec::new();
+    for (i, &(hw, ci, co)) in cfg.iter().enumerate() {
+        layers.push(conv(&format!("conv{}", i + 1), hw, ci, co, 1, i != 0));
+        // pool after each resolution block
+        let last_of_block = cfg.get(i + 1).map(|n| n.0 != hw).unwrap_or(true);
+        if last_of_block {
+            layers.push(Layer {
+                name: format!("pool{hw}"),
+                kind: LayerKind::Pool { factor: 2 },
+                h: hw,
+                w: hw,
+                sparse_ok: false,
+            });
+        }
+    }
+    layers.push(linear("fc", 512, 100, 1, true));
+    Model {
+        name: "vgg19".into(),
+        dataset: "cifar100".into(),
+        batch: 512,
+        layers,
+        epochs: 150,
+        dataset_size: 50_000,
+    }
+}
+
+/// ViT-Small-ish on CIFAR-100: patch 4, dim 384, depth 7, heads 6, mlp 4×
+/// (a common CIFAR ViT configuration).
+pub fn vit() -> Model {
+    let dim = 384;
+    let tokens = (32 / 4) * (32 / 4) + 1; // 65 with class token
+    let mut layers = vec![linear("patch_embed", 4 * 4 * 3, dim, tokens - 1, false)];
+    for b in 0..7 {
+        layers.push(Layer {
+            name: format!("blk{b}.norm1"),
+            kind: LayerKind::Norm,
+            h: 1, w: 1, sparse_ok: false,
+        });
+        layers.push(linear(&format!("blk{b}.qkv"), dim, 3 * dim, tokens, true));
+        // attention score/context matmuls are data×data: dense by nature,
+        // modelled as two Linear-like data matmuls via tokens scaling
+        layers.push(linear(&format!("blk{b}.proj"), dim, dim, tokens, true));
+        layers.push(Layer {
+            name: format!("blk{b}.norm2"),
+            kind: LayerKind::Norm,
+            h: 1, w: 1, sparse_ok: false,
+        });
+        layers.push(linear(&format!("blk{b}.mlp1"), dim, 4 * dim, tokens, true));
+        layers.push(linear(&format!("blk{b}.mlp2"), 4 * dim, dim, tokens, true));
+    }
+    layers.push(linear("head", dim, 100, 1, true));
+    Model {
+        name: "vit".into(),
+        dataset: "cifar100".into(),
+        batch: 512,
+        layers,
+        epochs: 150,
+        dataset_size: 50_000,
+    }
+}
+
+/// Basic-block ResNet18 on Tiny ImageNet (64×64 input), with the usual
+/// small-input adaptation: 3×3 stride-1 stem, no maxpool. This matches
+/// the paper's Table II scale (dense inference ≈ 1.83e9 MACs).
+pub fn resnet18() -> Model {
+    let mut layers = vec![conv("conv1", 64, 3, 64, 1, false)];
+    // (hw_in, ci, co, stride of first block conv)
+    let stages: &[(usize, usize, usize, usize)] = &[
+        (64, 64, 64, 1),
+        (64, 64, 128, 2),
+        (32, 128, 256, 2),
+        (16, 256, 512, 2),
+    ];
+    for (si, &(hw, ci, co, stride)) in stages.iter().enumerate() {
+        // two basic blocks of two 3x3 convs each
+        layers.push(conv(&format!("l{si}.b0.c0"), hw, ci, co, stride, true));
+        let hw2 = hw / stride;
+        layers.push(conv(&format!("l{si}.b0.c1"), hw2, co, co, 1, true));
+        if stride != 1 || ci != co {
+            layers.push(conv1x1(&format!("l{si}.b0.down"), hw, ci, co, stride));
+        }
+        layers.push(conv(&format!("l{si}.b1.c0"), hw2, co, co, 1, true));
+        layers.push(conv(&format!("l{si}.b1.c1"), hw2, co, co, 1, true));
+    }
+    layers.push(Layer {
+        name: "avgpool".into(),
+        kind: LayerKind::Pool { factor: 8 },
+        h: 8, w: 8, sparse_ok: false,
+    });
+    layers.push(linear("fc", 512, 200, 1, true));
+    Model {
+        name: "resnet18".into(),
+        dataset: "tinyimagenet".into(),
+        batch: 512,
+        layers,
+        epochs: 88,
+        dataset_size: 100_000,
+    }
+}
+
+/// Bottleneck ResNet50 on ImageNet (224×224 input).
+pub fn resnet50() -> Model {
+    let mut layers = vec![conv7x7("conv1", 224, 3, 64, 2)];
+    layers.push(Layer {
+        name: "maxpool".into(),
+        kind: LayerKind::Pool { factor: 2 },
+        h: 112, w: 112, sparse_ok: false,
+    });
+    // (hw_in, blocks, c_in, c_mid, stride)
+    let stages: &[(usize, usize, usize, usize, usize)] = &[
+        (56, 3, 64, 64, 1),
+        (56, 4, 256, 128, 2),
+        (28, 6, 512, 256, 2),
+        (14, 3, 1024, 512, 2),
+    ];
+    for (si, &(hw, blocks, c_in, c_mid, stride)) in stages.iter().enumerate() {
+        let c_out = 4 * c_mid;
+        let mut ci = c_in;
+        let mut h = hw;
+        for b in 0..blocks {
+            let s = if b == 0 { stride } else { 1 };
+            layers.push(conv1x1(&format!("l{si}.b{b}.c0"), h, ci, c_mid, 1));
+            layers.push(conv(&format!("l{si}.b{b}.c1"), h, c_mid, c_mid, s, true));
+            let h2 = h / s;
+            layers.push(conv1x1(&format!("l{si}.b{b}.c2"), h2, c_mid, c_out, 1));
+            if b == 0 {
+                layers.push(conv1x1(&format!("l{si}.b{b}.down"), h, ci, c_out, s));
+            }
+            ci = c_out;
+            h = h2;
+        }
+    }
+    layers.push(Layer {
+        name: "avgpool".into(),
+        kind: LayerKind::Pool { factor: 7 },
+        h: 7, w: 7, sparse_ok: false,
+    });
+    layers.push(linear("fc", 2048, 1000, 1, true));
+    Model {
+        name: "resnet50".into(),
+        dataset: "imagenet".into(),
+        batch: 256,
+        layers,
+        epochs: 120,
+        dataset_size: 1_281_167,
+    }
+}
+
+/// The small-scale convergence stand-ins lowered by `aot.py` (same dims).
+pub fn tiny_mlp() -> Model {
+    Model {
+        name: "tiny_mlp".into(),
+        dataset: "clusters".into(),
+        batch: 64,
+        layers: vec![
+            linear("fc1", 32, 256, 1, true),
+            linear("fc2", 256, 256, 1, true),
+            linear("fc3", 256, 8, 1, true),
+        ],
+        epochs: 1,
+        dataset_size: 4096,
+    }
+}
+
+pub fn tiny_cnn() -> Model {
+    Model {
+        name: "tiny_cnn".into(),
+        dataset: "stripes".into(),
+        batch: 32,
+        layers: vec![
+            conv("conv1", 8, 8, 32, 1, false),
+            conv("conv2", 8, 32, 64, 1, true),
+            Layer { name: "pool1".into(), kind: LayerKind::Pool { factor: 2 }, h: 8, w: 8, sparse_ok: false },
+            conv("conv3", 4, 64, 64, 1, true),
+            Layer { name: "pool2".into(), kind: LayerKind::Pool { factor: 2 }, h: 4, w: 4, sparse_ok: false },
+            linear("fc", 64, 8, 1, true),
+        ],
+        epochs: 1,
+        dataset_size: 4096,
+    }
+}
+
+pub fn tiny_vit() -> Model {
+    let dim = 64;
+    Model {
+        name: "tiny_vit".into(),
+        dataset: "clusters".into(),
+        batch: 32,
+        layers: vec![
+            linear("qkv", dim, 3 * dim, 16, true),
+            linear("proj", dim, dim, 16, true),
+            linear("mlp1", dim, 128, 16, true),
+            linear("mlp2", 128, dim, 16, true),
+            linear("head", dim, 8, 1, true),
+        ],
+        epochs: 1,
+        dataset_size: 4096,
+    }
+}
+
+/// The five paper benchmarks (Table I order).
+pub const PAPER_MODELS: [&str; 5] = ["resnet9", "vit", "vgg19", "resnet18", "resnet50"];
+
+/// Look up any model by name.
+pub fn model_by_name(name: &str) -> Option<Model> {
+    Some(match name {
+        "resnet9" => resnet9(),
+        "vgg19" => vgg19(),
+        "vit" => vit(),
+        "resnet18" => resnet18(),
+        "resnet50" => resnet50(),
+        "tiny_mlp" => tiny_mlp(),
+        "tiny_cnn" => tiny_cnn(),
+        "tiny_vit" => tiny_vit(),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::Stage;
+
+    #[test]
+    fn all_paper_models_build() {
+        for name in PAPER_MODELS {
+            let m = model_by_name(name).unwrap();
+            assert!(!m.layers.is_empty(), "{name}");
+            assert!(m.weight_elems() > 0);
+        }
+    }
+
+    #[test]
+    fn resnet18_param_count_plausible() {
+        // torchvision resnet18 has ~11.7M params; ours omits BN/bias.
+        let m = resnet18();
+        let params = m.weight_elems();
+        assert!((10_000_000..12_500_000).contains(&params), "{params}");
+    }
+
+    #[test]
+    fn resnet50_param_count_plausible() {
+        // torchvision resnet50: ~25.6M params (conv+fc ≈ 25.0M).
+        let m = resnet50();
+        let params = m.weight_elems();
+        assert!((22_000_000..27_000_000).contains(&params), "{params}");
+    }
+
+    #[test]
+    fn vgg19_param_count_plausible() {
+        // VGG19 conv trunk ≈ 20M params (CIFAR head is small).
+        let params = vgg19().weight_elems();
+        assert!((19_000_000..22_000_000).contains(&params), "{params}");
+    }
+
+    #[test]
+    fn resnet50_inference_macs_plausible() {
+        // Paper Table II: ResNet50 dense inference = 4.14e9 "FLOPS";
+        // the paper (like torchvision convention) counts MACs.
+        let m = resnet50();
+        let macs: u64 = m
+            .layers
+            .iter()
+            .filter_map(|l| l.matmul(Stage::FF, 1))
+            .map(|mm| mm.macs())
+            .sum();
+        let g = macs as f64 / 1e9;
+        assert!((3.6..4.6).contains(&g), "got {g} GMACs");
+    }
+
+    #[test]
+    fn vit_inference_macs_plausible() {
+        // Paper: ViT on CIFAR-100 dense inference = 6.43e8 (MAC count).
+        let macs: u64 = vit()
+            .layers
+            .iter()
+            .filter_map(|l| l.matmul(Stage::FF, 1))
+            .map(|mm| mm.macs())
+            .sum();
+        let e8 = macs as f64 / 1e8;
+        assert!((4.0..9.5).contains(&e8), "got {e8}e8 MACs");
+    }
+
+    #[test]
+    fn first_layers_are_dense() {
+        for name in PAPER_MODELS {
+            let m = model_by_name(name).unwrap();
+            let first_weighted = m
+                .layers
+                .iter()
+                .find(|l| l.weight_elems() > 0)
+                .unwrap();
+            assert!(
+                !first_weighted.sparse_ok,
+                "{name}: first weighted layer must be dense"
+            );
+        }
+    }
+
+    #[test]
+    fn tiny_models_match_python_dims() {
+        let mlp = tiny_mlp();
+        assert_eq!(mlp.batch, 64);
+        let dims: Vec<usize> = mlp.layers.iter().map(|l| l.weight_elems()).collect();
+        assert_eq!(dims, vec![32 * 256, 256 * 256, 256 * 8]);
+        assert_eq!(tiny_cnn().batch, 32);
+        assert_eq!(tiny_vit().batch, 32);
+    }
+
+    #[test]
+    fn matmuls_cover_all_weight_layers() {
+        let m = resnet9();
+        let mms = m.matmuls(m.batch);
+        let weighted = m.layers.iter().filter(|l| l.weight_elems() > 0).count();
+        assert_eq!(mms.len(), 3 * weighted);
+    }
+}

@@ -1,0 +1,153 @@
+//! Compact N:M storage format (values + intra-group indexes).
+//!
+//! This is the wire format of the paper's Fig. 8(a)/Fig. 9: per M-group,
+//! the N kept values in ascending index order plus their ⌈log2 M⌉-bit
+//! indexes. SAT's SORE produces it online; the W2E buffer stores it; the
+//! STCE decoder consumes it. Matches `ref.py::nm_compact_ref`.
+
+use crate::nm::{prune::prune_mask_flat, NmPattern};
+use crate::util::f16;
+
+/// Compact encoding of a (rows × cols) row-major matrix whose N:M groups
+/// run along the contiguous (column) axis.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompactNm {
+    pub pattern: NmPattern,
+    pub rows: usize,
+    /// Dense column count (groups * M).
+    pub cols: usize,
+    /// Kept values, `rows * cols/M * N`, ascending index order per group.
+    pub values: Vec<f32>,
+    /// Intra-group indexes (0..M), same layout as `values`.
+    pub indexes: Vec<u8>,
+}
+
+impl CompactNm {
+    /// Encode by pruning `w` (rows × cols, groups along cols).
+    ///
+    /// Single fused pass per group (§Perf iteration 2): the top-N chain
+    /// emits ascending indexes directly — no intermediate mask vector.
+    /// Falls back to the mask path for exotic M > 32.
+    pub fn encode(w: &[f32], rows: usize, cols: usize, p: NmPattern) -> CompactNm {
+        assert_eq!(w.len(), rows * cols);
+        assert!(cols % p.m == 0, "cols {cols} not divisible by M={}", p.m);
+        let groups = rows * cols / p.m;
+        let mut values = Vec::with_capacity(groups * p.n);
+        let mut indexes = Vec::with_capacity(groups * p.n);
+        if p.m <= 32 {
+            for group in w.chunks_exact(p.m) {
+                // bit order of the keep-mask IS ascending index order
+                let mut sel = crate::nm::prune::topn_bits(group, p.n);
+                while sel != 0 {
+                    let i = sel.trailing_zeros() as usize;
+                    indexes.push(i as u8);
+                    values.push(group[i]);
+                    sel &= sel - 1;
+                }
+            }
+        } else {
+            let mask = prune_mask_flat(w, p);
+            for (g, group) in w.chunks_exact(p.m).enumerate() {
+                for (i, &v) in group.iter().enumerate() {
+                    if mask[g * p.m + i] {
+                        values.push(v);
+                        indexes.push(i as u8);
+                    }
+                }
+            }
+        }
+        CompactNm { pattern: p, rows, cols, values, indexes }
+    }
+
+    /// Decode back to a dense (rows × cols) matrix with zeros.
+    pub fn decode(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        let gp = self.pattern.n;
+        for (g, chunk) in self.values.chunks_exact(gp).enumerate() {
+            let idx = &self.indexes[g * gp..(g + 1) * gp];
+            let base = g * self.pattern.m;
+            for (v, &i) in chunk.iter().zip(idx) {
+                out[base + i as usize] = *v;
+            }
+        }
+        out
+    }
+
+    /// Number of kept values.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Storage footprint in bytes with FP16 values and packed indexes —
+    /// what the paper's §V-B bandwidth argument counts.
+    pub fn storage_bytes(&self) -> usize {
+        self.pattern.compact_bytes(self.rows * self.cols)
+    }
+
+    /// The FP16 quantization the values suffer crossing SAT's datapath.
+    pub fn quantize_fp16(&mut self) {
+        for v in &mut self.values {
+            *v = f16::quantize(*v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{check, Gen};
+
+    #[test]
+    fn encode_decode_roundtrip_equals_pruned_dense() {
+        check("compact roundtrip", 50, |g| {
+            let (n, m) = g.nm_pattern();
+            let p = NmPattern::new(n, m);
+            let rows = g.usize_in(1, 5);
+            let groups = g.usize_in(1, 4);
+            let cols = groups * m;
+            let w = g.vec_normal(rows * cols);
+            let enc = CompactNm::encode(&w, rows, cols, p);
+            let dec = enc.decode();
+            let pruned = crate::nm::prune_values(
+                &w, rows, cols, p, crate::nm::PruneAxis::Cols,
+            );
+            assert_eq!(dec, pruned);
+            assert_eq!(enc.nnz(), rows * groups * n);
+        });
+    }
+
+    #[test]
+    fn indexes_ascend_within_groups() {
+        let mut g = Gen::new(3);
+        let p = NmPattern::new(4, 8);
+        let w = g.vec_normal(2 * 16);
+        let enc = CompactNm::encode(&w, 2, 16, p);
+        for grp in enc.indexes.chunks_exact(p.n) {
+            for pair in grp.windows(2) {
+                assert!(pair[0] < pair[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn storage_saves_bandwidth_above_half_sparsity() {
+        let mut g = Gen::new(4);
+        let w = g.vec_normal(64 * 64);
+        let dense_fp16 = 64 * 64 * 2;
+        let enc8 = CompactNm::encode(&w, 64, 64, NmPattern::P2_8);
+        assert!(enc8.storage_bytes() < dense_fp16 / 2);
+        let enc4 = CompactNm::encode(&w, 64, 64, NmPattern::P2_4);
+        assert!(enc4.storage_bytes() > dense_fp16 / 2); // 2:4 pays indexes
+    }
+
+    #[test]
+    fn fp16_quantization_is_idempotent() {
+        let mut g = Gen::new(5);
+        let w = g.vec_normal(32);
+        let mut enc = CompactNm::encode(&w, 1, 32, NmPattern::P2_8);
+        enc.quantize_fp16();
+        let once = enc.values.clone();
+        enc.quantize_fp16();
+        assert_eq!(once, enc.values);
+    }
+}

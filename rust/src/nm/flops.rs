@@ -1,0 +1,257 @@
+//! Training/inference FLOP accounting (the substrate behind Table II and
+//! the "48% fewer training operations" headline).
+//!
+//! Each sparse-training method assigns an N:M pattern to a subset of the
+//! three stages of every layer (Fig. 3); this module turns a model's
+//! MatMul inventory into method-resolved FLOP totals.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::models::{Model, Stage};
+use crate::nm::NmPattern;
+
+/// The sparse-training methods the paper compares (Fig. 3 + Table II).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Method {
+    /// Conventional dense training.
+    Dense,
+    /// SR-STE [32]: w̃_FF in the forward pass only.
+    SrSte,
+    /// SDGP [3]: output gradients pruned in BP only.
+    Sdgp,
+    /// The paper's unidirectional ablation: w̃_BP in BP only.
+    Sdwp,
+    /// The paper's contribution: w̃_FF in FF and w̃_BP in BP.
+    Bdwp,
+}
+
+impl Method {
+    pub const ALL: [Method; 5] =
+        [Method::Dense, Method::SrSte, Method::Sdgp, Method::Sdwp, Method::Bdwp];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Dense => "dense",
+            Method::SrSte => "srste",
+            Method::Sdgp => "sdgp",
+            Method::Sdwp => "sdwp",
+            Method::Bdwp => "bdwp",
+        }
+    }
+
+    /// Whether a given training stage runs N:M-sparse under this method
+    /// (the "N:M sparse mode" row the RWG assigns per stage — Fig. 12).
+    pub fn stage_sparse(&self, stage: Stage) -> bool {
+        match (self, stage) {
+            (Method::SrSte, Stage::FF) => true,
+            (Method::Sdgp, Stage::BP) => true,
+            (Method::Sdwp, Stage::BP) => true,
+            (Method::Bdwp, Stage::FF) | (Method::Bdwp, Stage::BP) => true,
+            // WU is dense for every method (Algorithm 1 line 9).
+            _ => false,
+        }
+    }
+
+    /// Whether inference (FF only) is sparse — drives Table II "Infer.
+    /// FLOPS" and the 3.54× average inference reduction claim.
+    pub fn inference_sparse(&self) -> bool {
+        self.stage_sparse(Stage::FF)
+    }
+
+    /// Where SORE must run (Fig. 12 RWG allocation): methods pruning
+    /// *weights* can pre-generate in WU; SDGP prunes *gradients*, which
+    /// only exist during BP.
+    pub fn can_pregenerate(&self) -> bool {
+        !matches!(self, Method::Sdgp)
+    }
+}
+
+impl fmt::Display for Method {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for Method {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Method, String> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "dense" => Method::Dense,
+            "srste" | "sr-ste" => Method::SrSte,
+            "sdgp" => Method::Sdgp,
+            "sdwp" => Method::Sdwp,
+            "bdwp" => Method::Bdwp,
+            other => return Err(format!("unknown method {other:?}")),
+        })
+    }
+}
+
+/// FLOP totals for one training iteration of a model.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TrainFlops {
+    pub ff: u64,
+    pub bp: u64,
+    pub wu: u64,
+}
+
+impl TrainFlops {
+    pub fn total(&self) -> u64 {
+        self.ff + self.bp + self.wu
+    }
+}
+
+/// Per-iteration training FLOPs of `model` at batch `batch` under
+/// `method`/`pattern`. Layers not divisible by M (or flagged dense, e.g.
+/// the first conv) run dense in every stage.
+pub fn train_flops(
+    model: &Model,
+    batch: usize,
+    method: Method,
+    pattern: NmPattern,
+) -> TrainFlops {
+    let mut out = TrainFlops::default();
+    for layer in &model.layers {
+        let layer_sparse = layer.sparse_ok && layer.divisible_by(pattern.m);
+        for &stage in &Stage::ALL {
+            let Some(mm) = layer.matmul(stage, batch) else { continue };
+            let sparse = layer_sparse && method.stage_sparse(stage);
+            let flops = if sparse {
+                (mm.flops() as f64 * pattern.density()) as u64
+            } else {
+                mm.flops()
+            };
+            match stage {
+                Stage::FF => out.ff += flops,
+                Stage::BP => out.bp += flops,
+                Stage::WU => out.wu += flops,
+            }
+        }
+    }
+    out
+}
+
+/// Inference (FF-only) FLOPs for one sample.
+pub fn inference_flops(model: &Model, method: Method, pattern: NmPattern) -> u64 {
+    let mut total = 0u64;
+    for layer in &model.layers {
+        let Some(mm) = layer.matmul(Stage::FF, 1) else { continue };
+        let sparse = layer.sparse_ok
+            && layer.divisible_by(pattern.m)
+            && method.inference_sparse();
+        total += if sparse {
+            (mm.flops() as f64 * pattern.density()) as u64
+        } else {
+            mm.flops()
+        };
+    }
+    total
+}
+
+/// Whole-training-run FLOPs (Table II "Train. FLOPS" column):
+/// iterations = epochs × ⌈dataset/batch⌉.
+pub fn full_train_flops(model: &Model, method: Method, pattern: NmPattern) -> u64 {
+    let per_iter = train_flops(model, model.batch, method, pattern).total();
+    let iters =
+        model.epochs as u64 * ((model.dataset_size + model.batch - 1) / model.batch) as u64;
+    per_iter * iters
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    const P28: NmPattern = NmPattern::new(2, 8);
+    const P24: NmPattern = NmPattern::new(2, 4);
+
+    #[test]
+    fn stage_table_matches_fig3() {
+        use Stage::*;
+        assert!(!Method::Dense.stage_sparse(FF));
+        assert!(Method::SrSte.stage_sparse(FF) && !Method::SrSte.stage_sparse(BP));
+        assert!(!Method::Sdgp.stage_sparse(FF) && Method::Sdgp.stage_sparse(BP));
+        assert!(!Method::Sdwp.stage_sparse(FF) && Method::Sdwp.stage_sparse(BP));
+        assert!(Method::Bdwp.stage_sparse(FF) && Method::Bdwp.stage_sparse(BP));
+        for m in Method::ALL {
+            assert!(!m.stage_sparse(WU), "{m}: WU must stay dense");
+        }
+    }
+
+    #[test]
+    fn bdwp_saves_two_stage_fractions() {
+        // For an all-sparse-able model, BDWP at density d costs
+        // (d + d + 1)/3 of dense; uni-directional methods (1 + d + 1)/3.
+        let m = zoo::tiny_mlp(); // every layer sparse_ok and divisible by 8
+        let dense = train_flops(&m, 64, Method::Dense, P28).total() as f64;
+        let bdwp = train_flops(&m, 64, Method::Bdwp, P28).total() as f64;
+        let srste = train_flops(&m, 64, Method::SrSte, P28).total() as f64;
+        let d = P28.density();
+        assert!((bdwp / dense - (1.0 + 2.0 * d) / 3.0).abs() < 1e-3);
+        assert!((srste / dense - (2.0 + d) / 3.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn paper_headline_2_8_reduction() {
+        // Paper: BDWP 2:8 averages 1.93× theoretical reduction across the
+        // five benchmarks (48% fewer ops). Our models aren't bit-identical
+        // to theirs (BN/attention score ops omitted) — check the band.
+        let mut ratios = Vec::new();
+        for name in zoo::PAPER_MODELS {
+            let m = zoo::model_by_name(name).unwrap();
+            let dense = full_train_flops(&m, Method::Dense, P28) as f64;
+            let bdwp = full_train_flops(&m, Method::Bdwp, P28) as f64;
+            ratios.push(dense / bdwp);
+        }
+        let avg = crate::util::stats::geomean(&ratios);
+        assert!((1.6..2.1).contains(&avg), "avg reduction {avg}");
+    }
+
+    #[test]
+    fn table2_resnet50_dense_train_flops_band() {
+        // Paper Table II: ResNet50 dense training = 1.91e18 (MAC count —
+        // our flops() is 2×MACs, so the band is doubled).
+        let m = zoo::resnet50();
+        let total = full_train_flops(&m, Method::Dense, P28) as f64 / 2.0;
+        assert!((1.2e18..2.4e18).contains(&total), "got {total:e} MACs");
+    }
+
+    #[test]
+    fn inference_sparse_only_for_ff_methods() {
+        let m = zoo::tiny_mlp();
+        let dense = inference_flops(&m, Method::Dense, P24);
+        let sdgp = inference_flops(&m, Method::Sdgp, P24);
+        let bdwp = inference_flops(&m, Method::Bdwp, P24);
+        assert_eq!(dense, sdgp); // SDGP leaves inference dense (Table II)
+        assert!(bdwp < dense / 2 + 1);
+    }
+
+    #[test]
+    fn indivisible_layers_fall_back_to_dense() {
+        // A model whose channels aren't M-divisible must cost dense FLOPs.
+        let mut m = zoo::tiny_mlp();
+        // pattern M=13 never divides 32/256 dims
+        let p = NmPattern::new(2, 13);
+        let dense = train_flops(&m, 64, Method::Dense, p).total();
+        let bdwp = train_flops(&m, 64, Method::Bdwp, p).total();
+        assert_eq!(dense, bdwp);
+        m.layers.clear();
+        assert_eq!(train_flops(&m, 64, Method::Bdwp, p).total(), 0);
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(m.name().parse::<Method>().unwrap(), m);
+        }
+        assert!("foo".parse::<Method>().is_err());
+    }
+
+    #[test]
+    fn sore_pregeneration_rule() {
+        assert!(Method::Bdwp.can_pregenerate());
+        assert!(Method::SrSte.can_pregenerate());
+        assert!(!Method::Sdgp.can_pregenerate());
+    }
+}

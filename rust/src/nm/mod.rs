@@ -1,0 +1,17 @@
+//! N:M fine-grained structured sparsity substrate.
+//!
+//! The shared vocabulary of the whole repo: the [`NmPattern`] type, the
+//! top-N-per-group selection with the tie-breaking rule pinned across
+//! Python/Pallas/Rust (largest |w| wins; equal |w| → lowest index), the
+//! compact (values + 4-bit index) storage format SAT's buffers hold, and
+//! the training/inference FLOP accounting behind Table II.
+
+pub mod compact;
+pub mod flops;
+pub mod pattern;
+pub mod prune;
+
+pub use compact::CompactNm;
+pub use flops::Method;
+pub use pattern::NmPattern;
+pub use prune::{prune_mask, prune_values, PruneAxis};

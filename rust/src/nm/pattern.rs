@@ -1,0 +1,145 @@
+//! The N:M sparsity pattern type.
+
+use std::fmt;
+use std::str::FromStr;
+
+/// An N:M pattern — at most N nonzeros per group of M consecutive values.
+///
+/// `Dense` is represented by the degenerate pattern N == M (the paper's
+/// USPEs execute dense MatMul as 2:2 groups).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct NmPattern {
+    pub n: usize,
+    pub m: usize,
+}
+
+impl NmPattern {
+    pub const fn new(n: usize, m: usize) -> NmPattern {
+        assert!(n >= 1 && n <= m, "need 1 <= N <= M");
+        NmPattern { n, m }
+    }
+
+    /// The dense "pattern" as SAT executes it: 2:2 groups (Fig. 7(d)).
+    pub const DENSE: NmPattern = NmPattern { n: 2, m: 2 };
+
+    /// The paper's headline hardware configuration.
+    pub const P2_8: NmPattern = NmPattern { n: 2, m: 8 };
+    pub const P2_4: NmPattern = NmPattern { n: 2, m: 4 };
+    pub const P2_16: NmPattern = NmPattern { n: 2, m: 16 };
+    pub const P1_4: NmPattern = NmPattern { n: 1, m: 4 };
+
+    /// All patterns evaluated in the paper (Table II + Fig. 13 sweep).
+    pub fn paper_sweep() -> Vec<NmPattern> {
+        vec![
+            NmPattern::new(2, 4),
+            NmPattern::new(1, 4),
+            NmPattern::new(2, 8),
+            NmPattern::new(4, 8),
+            NmPattern::new(1, 8),
+            NmPattern::new(2, 16),
+            NmPattern::new(4, 16),
+            NmPattern::new(8, 16),
+        ]
+    }
+
+    pub fn is_dense(&self) -> bool {
+        self.n == self.m
+    }
+
+    /// Fraction of weights kept (N/M).
+    pub fn density(&self) -> f64 {
+        self.n as f64 / self.m as f64
+    }
+
+    /// Sparsity ratio as the paper quotes it (e.g. 2:8 → 75%).
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.density()
+    }
+
+    /// Bits needed to store one intra-group index (⌈log2 M⌉).
+    pub fn index_bits(&self) -> u32 {
+        (self.m as u32).next_power_of_two().trailing_zeros().max(1)
+    }
+
+    /// Storage bytes for `elems` weights in compact FP16 form
+    /// (values + indexes), vs `2*elems` dense FP16 bytes.
+    pub fn compact_bytes(&self, elems: usize) -> usize {
+        let groups = elems / self.m;
+        let kept = groups * self.n;
+        let value_bytes = kept * 2; // FP16
+        let index_bytes = (kept * self.index_bits() as usize + 7) / 8;
+        value_bytes + index_bytes
+    }
+}
+
+impl fmt::Display for NmPattern {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.n, self.m)
+    }
+}
+
+impl FromStr for NmPattern {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<NmPattern, String> {
+        let (n, m) = s
+            .split_once(':')
+            .ok_or_else(|| format!("bad N:M pattern {s:?} (want e.g. 2:8)"))?;
+        let n: usize = n.trim().parse().map_err(|e| format!("bad N: {e}"))?;
+        let m: usize = m.trim().parse().map_err(|e| format!("bad M: {e}"))?;
+        if n < 1 || n > m {
+            return Err(format!("need 1 <= N <= M, got {n}:{m}"));
+        }
+        Ok(NmPattern { n, m })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn density_and_sparsity() {
+        let p = NmPattern::P2_8;
+        assert_eq!(p.density(), 0.25);
+        assert_eq!(p.sparsity(), 0.75);
+        assert!(NmPattern::DENSE.is_dense());
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["2:4", "2:8", "2:16", "1:4", "8:16"] {
+            let p: NmPattern = s.parse().unwrap();
+            assert_eq!(p.to_string(), s);
+        }
+        assert!("3".parse::<NmPattern>().is_err());
+        assert!("5:4".parse::<NmPattern>().is_err());
+        assert!("0:4".parse::<NmPattern>().is_err());
+    }
+
+    #[test]
+    fn index_bits() {
+        assert_eq!(NmPattern::P2_4.index_bits(), 2);
+        assert_eq!(NmPattern::P2_8.index_bits(), 3);
+        assert_eq!(NmPattern::P2_16.index_bits(), 4);
+    }
+
+    #[test]
+    fn compact_bytes_beats_dense_above_half_sparsity() {
+        // paper §V-B: storing N:M weights saves bandwidth when sparsity > 50%
+        let elems = 1024;
+        let dense_fp16 = elems * 2;
+        assert!(NmPattern::P2_8.compact_bytes(elems) < dense_fp16);
+        assert!(NmPattern::P2_16.compact_bytes(elems) < dense_fp16);
+        // 2:4 (50%) pays the index overhead and does NOT save
+        assert!(NmPattern::P2_4.compact_bytes(elems) > dense_fp16 / 2);
+    }
+
+    #[test]
+    fn paper_sweep_is_sane() {
+        for p in NmPattern::paper_sweep() {
+            assert!(p.n <= p.m);
+            assert!(p.m <= 16);
+        }
+    }
+}

@@ -1,0 +1,411 @@
+//! Exhibit generators: one function per paper table/figure, producing the
+//! same rows/series the paper reports. Benches and the CLI both call
+//! these, so `cargo bench` output and `sat exhibits` agree by
+//! construction. Everything here runs off the simulator/analytical
+//! models only — no PJRT — except the loss-curve exhibits, which take
+//! pre-computed curves from the training orchestrator.
+
+use crate::arch::{power, ChipResources, SatConfig};
+use crate::baselines::{fpga, roofline};
+use crate::models::{zoo, Stage};
+use crate::nm::{flops, Method, NmPattern};
+use crate::sim::engine::simulate_method;
+use crate::sim::memory::MemConfig;
+use crate::util::table::Table;
+
+fn fmt_e(v: f64) -> String {
+    format!("{v:.3e}")
+}
+
+/// Fig. 2 — MatMul share of per-batch training time.
+pub fn fig02_matmul_share() -> Table {
+    let cfg = SatConfig::paper_default();
+    let mem = MemConfig::paper_default();
+    let mut t = Table::new("Fig. 2 — execution-time profile (share of batch time)")
+        .header(&["model", "FF mm", "BP mm", "WU mm+opt", "other", "MatMul %"]);
+    for name in ["resnet18", "vgg19", "vit"] {
+        let m = zoo::model_by_name(name).unwrap();
+        let r = simulate_method(&m, Method::Dense, NmPattern::P2_8, &cfg, &mem);
+        let (ff, bp, wu, other) = r.stage_totals();
+        let total = (ff + bp + wu + other) as f64;
+        let mm_frac = (ff + bp + wu) as f64 / total * 100.0;
+        t.row(&[
+            name.to_string(),
+            format!("{:.1}%", ff as f64 / total * 100.0),
+            format!("{:.1}%", bp as f64 / total * 100.0),
+            format!("{:.1}%", wu as f64 / total * 100.0),
+            format!("{:.1}%", other as f64 / total * 100.0),
+            format!("{mm_frac:.1}%"),
+        ]);
+    }
+    t
+}
+
+/// Table II — training/inference FLOPs (paper counts MACs) per method ×
+/// pattern; accuracy columns come from the measured synthetic runs and
+/// are reported by the fig04/fig13 exhibits instead.
+pub fn table2_flops() -> Table {
+    let mut t = Table::new(
+        "Table II — FLOPs (MAC convention) under N:M sparse training schemes",
+    )
+    .header(&["model", "method", "pattern", "train MACs", "infer MACs", "vs dense"]);
+    for name in zoo::PAPER_MODELS {
+        let m = zoo::model_by_name(name).unwrap();
+        let dense = flops::full_train_flops(&m, Method::Dense, NmPattern::P2_8) / 2;
+        for pat in [NmPattern::P2_4, NmPattern::P2_8, NmPattern::P2_16] {
+            for method in [Method::SrSte, Method::Sdgp, Method::Bdwp] {
+                let train = flops::full_train_flops(&m, method, pat) / 2;
+                let infer = flops::inference_flops(&m, method, pat) / 2;
+                t.row(&[
+                    name.to_string(),
+                    method.name().to_string(),
+                    pat.to_string(),
+                    fmt_e(train as f64),
+                    fmt_e(infer as f64),
+                    format!("{:.2}x", dense as f64 / train as f64),
+                ]);
+            }
+        }
+        t.row(&[
+            name.to_string(),
+            "dense".into(),
+            "-".into(),
+            fmt_e(dense as f64),
+            fmt_e((flops::inference_flops(&m, Method::Dense, NmPattern::P2_8) / 2) as f64),
+            "1.00x".into(),
+        ]);
+    }
+    t
+}
+
+/// Headline scalar: average theoretical train-FLOP reduction of BDWP 2:8.
+pub fn bdwp_2_8_reduction() -> f64 {
+    let ratios: Vec<f64> = zoo::PAPER_MODELS
+        .iter()
+        .map(|name| {
+            let m = zoo::model_by_name(name).unwrap();
+            flops::full_train_flops(&m, Method::Dense, NmPattern::P2_8) as f64
+                / flops::full_train_flops(&m, Method::Bdwp, NmPattern::P2_8) as f64
+        })
+        .collect();
+    crate::util::stats::geomean(&ratios)
+}
+
+/// Fig. 13 — FLOP side of the N:M ratio sweep (accuracy from training).
+pub fn fig13_pattern_sweep(model: &str) -> Table {
+    let m = zoo::model_by_name(model).unwrap();
+    let dense = flops::full_train_flops(&m, Method::Dense, NmPattern::P2_8) as f64;
+    let mut t = Table::new(&format!(
+        "Fig. 13 — N:M sweep for {model} (BDWP; accuracy via `sat train`)"
+    ))
+    .header(&["pattern", "sparsity", "train MACs", "reduction"]);
+    for p in NmPattern::paper_sweep() {
+        let f = flops::full_train_flops(&m, Method::Bdwp, p) as f64;
+        t.row(&[
+            p.to_string(),
+            format!("{:.1}%", p.sparsity() * 100.0),
+            fmt_e(f / 2.0),
+            format!("{:.2}x", dense / f),
+        ]);
+    }
+    t
+}
+
+/// Fig. 14 — dense arrays vs STCE resources.
+pub fn fig14_resources() -> Table {
+    use crate::arch::ArrayResources;
+    let mut t = Table::new("Fig. 14 — 4x4 arrays: dense baseline vs N:M STCE")
+        .header(&["array", "LUT", "FF", "DSP", "power (W)"]);
+    let mut push = |label: &str, r: ArrayResources| {
+        // standalone-array power: dynamic only, sparse-mode activity
+        let w = r.lut as f64 * 8.0e-6 + r.ff as f64 * 4.0e-6
+            + r.dsp as f64 * 2.5e-3;
+        t.row(&[
+            label.to_string(),
+            r.lut.to_string(),
+            r.ff.to_string(),
+            r.dsp.to_string(),
+            format!("{w:.3}"),
+        ]);
+    };
+    push("dense 4x4", ArrayResources::dense_array(4, 4));
+    for m in [4usize, 8, 16] {
+        push(
+            &format!("2:{m} STCE 4x4"),
+            ArrayResources::stce(4, 4, NmPattern::new(2, m)),
+        );
+    }
+    push("dense 4x8 (iso-thr 2:4)", ArrayResources::dense_array(4, 8));
+    push("dense 4x16 (iso-thr 2:8)", ArrayResources::dense_array(4, 16));
+    push("dense 4x32 (iso-thr 2:16)", ArrayResources::dense_array(4, 32));
+    t
+}
+
+/// Table III — SAT resource breakdown.
+pub fn table3_breakdown(cfg: &SatConfig) -> Table {
+    let c = ChipResources::model(cfg);
+    let mut t = Table::new("Table III — SAT resource breakdown (XCVU9P)")
+        .header(&["component", "logic", "registers", "mem blocks", "DSP"]);
+    let row = |t: &mut Table, n: &str, l: u64, f: u64, b: u64, d: u64| {
+        t.row(&[n.to_string(), l.to_string(), f.to_string(), b.to_string(), d.to_string()]);
+    };
+    row(&mut t, "STCE", c.stce.lut, c.stce.ff, 0, c.stce.dsp);
+    row(&mut t, "WUVE", c.wuve_lut, c.wuve_ff, 0, c.wuve_dsp);
+    row(&mut t, "SORE", c.sore_lut, c.sore_ff, 0, 0);
+    row(&mut t, "Input Buffer (W2E)", 0, 0, c.w2e_banks, 0);
+    row(&mut t, "Input Buffer (N2S)", 0, 0, c.n2s_in_banks, 0);
+    row(&mut t, "Output Buffer (N2S)", 0, 0, c.n2s_out_banks, 0);
+    row(&mut t, "Optimizer Buffer", 0, 0, c.optimizer_banks, 0);
+    row(&mut t, "Others", c.other_lut, c.other_ff, c.other_bram, c.other_dsp);
+    let (ul, uf, ub, ud) = c.utilization();
+    t.row(&[
+        "Total".into(),
+        format!("{} ({:.0}%)", c.total_lut(), ul * 100.0),
+        format!("{} ({:.0}%)", c.total_ff(), uf * 100.0),
+        format!("{} ({:.0}%)", c.total_bram(), ub * 100.0),
+        format!("{} ({:.0}%)", c.total_dsp(), ud * 100.0),
+    ]);
+    t
+}
+
+/// Fig. 15 upper — per-batch training time by method, per model.
+pub fn fig15_batch_times() -> Table {
+    let cfg = SatConfig::paper_default();
+    let mem = MemConfig::paper_default();
+    let mut t = Table::new(
+        "Fig. 15 — per-batch time on SAT (ms) and speedup vs dense (2:8)",
+    )
+    .header(&["model", "dense", "srste", "sdgp", "sdwp", "bdwp", "bdwp speedup"]);
+    let mut speedups = Vec::new();
+    for name in zoo::PAPER_MODELS {
+        let m = zoo::model_by_name(name).unwrap();
+        let ms = |method| {
+            simulate_method(&m, method, NmPattern::P2_8, &cfg, &mem).seconds(&cfg)
+                * 1e3
+        };
+        let dense = ms(Method::Dense);
+        let bdwp = ms(Method::Bdwp);
+        speedups.push(dense / bdwp);
+        t.row(&[
+            name.to_string(),
+            format!("{dense:.1}"),
+            format!("{:.1}", ms(Method::SrSte)),
+            format!("{:.1}", ms(Method::Sdgp)),
+            format!("{:.1}", ms(Method::Sdwp)),
+            format!("{bdwp:.1}"),
+            format!("{:.2}x", dense / bdwp),
+        ]);
+    }
+    t.row(&[
+        "avg".into(), "".into(), "".into(), "".into(), "".into(), "".into(),
+        format!("{:.2}x", crate::util::stats::geomean(&speedups)),
+    ]);
+    t
+}
+
+/// Fig. 16 — layer-wise per-batch runtime of ResNet18 2:8 BDWP (overlap
+/// disabled, as the paper notes for this figure).
+pub fn fig16_layerwise() -> Table {
+    let cfg = SatConfig::paper_default();
+    let mem = MemConfig { bandwidth_gbs: 25.6, overlap: false };
+    let model = zoo::resnet18();
+    let r = simulate_method(&model, Method::Bdwp, NmPattern::P2_8, &cfg, &mem);
+    let mut t = Table::new(
+        "Fig. 16 — ResNet18 2:8 BDWP layer-wise time per batch (ms, no overlap)",
+    )
+    .header(&["layer", "FF", "BP", "WU", "WUVE", "SORE", "total"]);
+    let to_ms = |c: u64| c as f64 / (cfg.freq_mhz * 1e3);
+    for l in r.layers.iter().filter(|l| l.ff + l.bp + l.wu > 0) {
+        t.row(&[
+            l.name.clone(),
+            format!("{:.2}", to_ms(l.ff)),
+            format!("{:.2}", to_ms(l.bp)),
+            format!("{:.2}", to_ms(l.wu)),
+            format!("{:.3}", to_ms(l.wuve)),
+            format!("{:.3}", to_ms(l.sore)),
+            format!("{:.2}", to_ms(l.total())),
+        ]);
+    }
+    t
+}
+
+/// Table IV — SAT vs CPU/GPU.
+pub fn table4_cpu_gpu() -> Table {
+    let cfg = SatConfig::paper_default();
+    let mem = MemConfig::paper_default();
+    let chip = ChipResources::model(&cfg);
+    let model = zoo::resnet18();
+    let mut t = Table::new("Table IV — SAT vs CPU and GPUs (ResNet18, B=512)")
+        .header(&[
+            "platform", "latency (s)", "power (W)", "runtime GFLOPS",
+            "energy eff (GFLOPS/W)",
+        ]);
+    for dev in roofline::devices() {
+        let ee = dev.measured_gflops / dev.power_w;
+        t.row(&[
+            dev.name.to_string(),
+            format!("{:.2}", dev.measured_latency_s),
+            format!("{:.2}", dev.power_w),
+            format!("{:.2}", dev.measured_gflops),
+            format!("{ee:.2}"),
+        ]);
+    }
+    let dense = simulate_method(&model, Method::Dense, NmPattern::P2_8, &cfg, &mem);
+    let bdwp = simulate_method(&model, Method::Bdwp, NmPattern::P2_8, &cfg, &mem);
+    let steps_per_epoch = 1; // single batch latency, as the paper reports
+    let _ = steps_per_epoch;
+    let d_g = dense.runtime_gops(&cfg);
+    let s_g = bdwp.runtime_gops(&cfg);
+    let pw_d = power::power_w(&chip, power::Mode::Dense, cfg.freq_mhz);
+    let pw_s = power::power_w(&chip, power::Mode::Sparse, cfg.freq_mhz);
+    t.row(&[
+        "SAT (dense)".into(),
+        format!("{:.2}", dense.seconds(&cfg)),
+        format!("{pw_d:.2}"),
+        format!("{d_g:.2}"),
+        format!("{:.2}", d_g / pw_d),
+    ]);
+    t.row(&[
+        "SAT (2:8 BDWP)".into(),
+        format!("{:.2}", bdwp.seconds(&cfg)),
+        format!("{pw_s:.2}"),
+        format!("{s_g:.2}"),
+        format!("{:.2}", s_g / pw_s),
+    ]);
+    t.row(&[
+        "SAT (avg)".into(),
+        format!("{:.2}", 0.5 * (dense.seconds(&cfg) + bdwp.seconds(&cfg))),
+        format!("{:.2}", power::power_avg_w(&chip, cfg.freq_mhz)),
+        format!("{:.2}", 0.5 * (d_g + s_g)),
+        format!("{:.2}", 0.5 * (d_g + s_g) / power::power_avg_w(&chip, cfg.freq_mhz)),
+    ]);
+    t
+}
+
+/// Fig. 17 — throughput scaling with array size × off-chip bandwidth.
+pub fn fig17_scaling() -> Table {
+    let mut t = Table::new(
+        "Fig. 17 — ResNet18 2:8 BDWP runtime throughput (GOPS) vs array size and BW",
+    )
+    .header(&["array", "25.6 GB/s", "102.4 GB/s", "409.6 GB/s"]);
+    let model = zoo::resnet18();
+    for size in [16usize, 32, 48, 64] {
+        let cfg = SatConfig { rows: size, cols: size, ..SatConfig::paper_default() };
+        let mut cells = vec![format!("{size}x{size}")];
+        for bw in [25.6, 102.4, 409.6] {
+            let mem = MemConfig { bandwidth_gbs: bw, overlap: true };
+            let r = simulate_method(&model, Method::Bdwp, NmPattern::P2_8, &cfg, &mem);
+            cells.push(format!("{:.0}", r.runtime_gops(&cfg)));
+        }
+        t.row(&cells);
+    }
+    t
+}
+
+/// Table V — SAT vs prior FPGA training accelerators.
+pub fn table5_fpga() -> Table {
+    let cfg = SatConfig::paper_default();
+    let mem = MemConfig::paper_default();
+    let chip = ChipResources::model(&cfg);
+    let model = zoo::resnet18();
+    let dense = simulate_method(&model, Method::Dense, NmPattern::P2_8, &cfg, &mem);
+    let bdwp = simulate_method(&model, Method::Bdwp, NmPattern::P2_8, &cfg, &mem);
+    let sat_gops = 0.5 * (dense.runtime_gops(&cfg) + bdwp.runtime_gops(&cfg));
+    let sat_w = power::power_avg_w(&chip, cfg.freq_mhz);
+    let sat_ee = sat_gops / sat_w;
+    let mut t = Table::new("Table V — prior FPGA training accelerators")
+        .header(&[
+            "accelerator", "platform", "precision", "DSP", "power (W)",
+            "GOPS", "GOPS/DSP", "GOPS/W",
+        ]);
+    t.row(&[
+        "SAT (this work)".into(), "XCVU9P".into(), "FP16+FP32".into(),
+        format!("{}", chip.total_dsp()),
+        format!("{sat_w:.2}"),
+        format!("{sat_gops:.2}"),
+        format!("{:.2}", sat_gops / chip.total_dsp() as f64),
+        format!("{sat_ee:.2}"),
+    ]);
+    for a in fpga::prior_accelerators() {
+        t.row(&[
+            a.label.to_string(),
+            a.platform.to_string(),
+            a.precision.to_string(),
+            a.dsp.to_string(),
+            a.power_w.map(|p| format!("{p:.2}")).unwrap_or_else(|| "N/A".into()),
+            format!("{:.2}", a.throughput_gops),
+            format!("{:.2}", a.throughput_gops / a.dsp as f64),
+            a.energy_eff_gops_w
+                .map(|e| format!("{e:.2}"))
+                .unwrap_or_else(|| "N/A".into()),
+        ]);
+    }
+    let (tlo, thi, elo, ehi) = fpga::sat_ratios(sat_gops, sat_ee);
+    t.row(&[
+        format!("SAT vs FP16+ group: throughput {tlo:.2}-{thi:.2}x"),
+        format!("energy {elo:.2}-{ehi:.2}x"),
+        "".into(), "".into(), "".into(), "".into(), "".into(), "".into(),
+    ]);
+    t
+}
+
+/// Inference-FLOP reduction headline (3.54× average at 2:8).
+pub fn inference_reduction_2_8() -> f64 {
+    let ratios: Vec<f64> = zoo::PAPER_MODELS
+        .iter()
+        .map(|name| {
+            let m = zoo::model_by_name(name).unwrap();
+            flops::inference_flops(&m, Method::Dense, NmPattern::P2_8) as f64
+                / flops::inference_flops(&m, Method::Bdwp, NmPattern::P2_8) as f64
+        })
+        .collect();
+    crate::util::stats::geomean(&ratios)
+}
+
+/// Per-model MatMul inventory (debugging / `sat schedule` output).
+pub fn matmul_inventory(model: &str) -> Option<Table> {
+    let m = zoo::model_by_name(model)?;
+    let mut t = Table::new(&format!("MatMul inventory — {model} (batch {})", m.batch))
+        .header(&["layer", "stage", "m", "k", "n", "GMACs"]);
+    for (i, s, mm) in m.matmuls(m.batch) {
+        t.row(&[
+            m.layers[i].name.clone(),
+            s.name().to_string(),
+            mm.m.to_string(),
+            mm.k.to_string(),
+            mm.n.to_string(),
+            format!("{:.2}", mm.macs() as f64 / 1e9),
+        ]);
+    }
+    let _ = Stage::ALL;
+    Some(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_static_exhibits_render() {
+        assert!(fig02_matmul_share().render().contains("resnet18"));
+        assert!(table2_flops().n_rows() > 40);
+        assert!(fig13_pattern_sweep("resnet18").n_rows() >= 8);
+        assert!(fig14_resources().n_rows() == 7);
+        assert!(table3_breakdown(&SatConfig::paper_default()).n_rows() == 9);
+        assert!(fig15_batch_times().n_rows() == 6);
+        assert!(fig16_layerwise().n_rows() > 10);
+        assert!(table4_cpu_gpu().n_rows() == 6);
+        assert!(fig17_scaling().n_rows() == 4);
+        assert!(table5_fpga().n_rows() == 13);
+        assert!(matmul_inventory("vit").is_some());
+        assert!(matmul_inventory("nope").is_none());
+    }
+
+    #[test]
+    fn headline_reductions_in_band() {
+        let train = bdwp_2_8_reduction();
+        assert!((1.6..2.1).contains(&train), "train reduction {train}");
+        let infer = inference_reduction_2_8();
+        assert!((3.0..4.1).contains(&infer), "infer reduction {infer}");
+    }
+}

@@ -1,0 +1,260 @@
+//! Artifact manifest parsing (`artifacts/manifest.txt`).
+//!
+//! The manifest is a simple sectioned key=value stream written by
+//! `python/compile/aot.py`; this parser is deliberately strict so schema
+//! drift between the Python emitter and the Rust loader fails loudly.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::nm::NmPattern;
+
+/// One lowered train-step artifact with its companions.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub hlo: PathBuf,
+    pub chunk_hlo: PathBuf,
+    pub chunk_steps: usize,
+    pub eval_hlo: Option<PathBuf>,
+    pub model: String,
+    pub method: String,
+    pub pattern: NmPattern,
+    pub init: PathBuf,
+    /// Parameter tensor shapes in flat argument order.
+    pub param_shapes: Vec<Vec<usize>>,
+    pub x_shape: Vec<usize>,
+    pub y_shape: Vec<usize>,
+}
+
+impl Artifact {
+    pub fn nparams(&self) -> usize {
+        self.param_shapes.len()
+    }
+
+    pub fn param_elems(&self) -> usize {
+        self.param_shapes.iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+
+    pub fn batch(&self) -> usize {
+        self.x_shape[0]
+    }
+
+    pub fn classes(&self) -> usize {
+        *self.y_shape.last().unwrap()
+    }
+
+    pub fn x_elems(&self) -> usize {
+        self.x_shape.iter().product()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub default_pattern: Option<NmPattern>,
+    pub artifacts: Vec<Artifact>,
+}
+
+fn parse_shape(s: &str) -> anyhow::Result<Vec<usize>> {
+    if s == "scalar" {
+        return Ok(vec![]);
+    }
+    s.split('x')
+        .map(|d| d.parse::<usize>().map_err(|e| anyhow!("bad dim {d:?}: {e}")))
+        .collect()
+}
+
+impl Manifest {
+    /// Load and parse `dir/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (separated out for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> anyhow::Result<Manifest> {
+        let mut m = Manifest { dir: dir.clone(), ..Default::default() };
+        let mut cur: Option<HashMap<String, String>> = None;
+        let flush = |cur: &mut Option<HashMap<String, String>>,
+                         out: &mut Vec<Artifact>|
+         -> anyhow::Result<()> {
+            if let Some(map) = cur.take() {
+                out.push(artifact_from_map(&map, &dir)?);
+            }
+            Ok(())
+        };
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line == "[artifact]" {
+                flush(&mut cur, &mut m.artifacts)?;
+                cur = Some(HashMap::new());
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("malformed manifest line {line:?}"))?;
+            match &mut cur {
+                Some(map) => {
+                    map.insert(k.to_string(), v.to_string());
+                }
+                None => {
+                    if k == "default_pattern" {
+                        m.default_pattern =
+                            Some(v.parse().map_err(|e| anyhow!("{e}"))?);
+                    }
+                }
+            }
+        }
+        flush(&mut cur, &mut m.artifacts)?;
+        if m.artifacts.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        Ok(m)
+    }
+
+    pub fn by_name(&self, name: &str) -> anyhow::Result<&Artifact> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact {name:?}; available: {}",
+                    self.artifacts
+                        .iter()
+                        .map(|a| a.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    /// Load a model's initial parameters (flat f32 LE) split per tensor.
+    pub fn load_init(&self, a: &Artifact) -> anyhow::Result<Vec<Vec<f32>>> {
+        let bytes = std::fs::read(&a.init)
+            .with_context(|| format!("reading {:?}", a.init))?;
+        if bytes.len() != a.param_elems() * 4 {
+            bail!(
+                "init size {} != expected {} for {}",
+                bytes.len(),
+                a.param_elems() * 4,
+                a.name
+            );
+        }
+        let flat: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let mut out = Vec::with_capacity(a.nparams());
+        let mut off = 0;
+        for shape in &a.param_shapes {
+            let n: usize = shape.iter().product();
+            out.push(flat[off..off + n].to_vec());
+            off += n;
+        }
+        Ok(out)
+    }
+}
+
+fn artifact_from_map(
+    map: &HashMap<String, String>,
+    dir: &Path,
+) -> anyhow::Result<Artifact> {
+    let get = |k: &str| -> anyhow::Result<&String> {
+        map.get(k).ok_or_else(|| anyhow!("manifest artifact missing key {k:?}"))
+    };
+    let param_shapes = get("param_shapes")?
+        .split(',')
+        .map(parse_shape)
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    Ok(Artifact {
+        name: get("name")?.clone(),
+        hlo: dir.join(get("hlo")?),
+        chunk_hlo: dir.join(get("chunk_hlo")?),
+        chunk_steps: get("chunk_steps")?.parse()?,
+        eval_hlo: map.get("eval_hlo").map(|v| dir.join(v)),
+        model: get("model")?.clone(),
+        method: get("method")?.clone(),
+        pattern: get("pattern")?.parse().map_err(|e| anyhow!("{e}"))?,
+        init: dir.join(get("init")?),
+        param_shapes,
+        x_shape: parse_shape(get("x_shape")?)?,
+        y_shape: parse_shape(get("y_shape")?)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+default_pattern=2:8
+
+[artifact]
+name=mlp_bdwp
+hlo=mlp_bdwp.hlo.txt
+chunk_hlo=mlp_bdwp_chunk.hlo.txt
+chunk_steps=8
+eval_hlo=mlp_bdwp_eval.hlo.txt
+model=mlp
+method=bdwp
+pattern=2:8
+init=mlp_init.bin
+nparams=6
+param_shapes=32x256,256,256x256,256,256x8,8
+x_shape=64x32
+y_shape=64x8
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/art")).unwrap();
+        assert_eq!(m.default_pattern, Some(NmPattern::P2_8));
+        let a = m.by_name("mlp_bdwp").unwrap();
+        assert_eq!(a.nparams(), 6);
+        assert_eq!(a.param_shapes[0], vec![32, 256]);
+        assert_eq!(a.param_shapes[1], vec![256]);
+        assert_eq!(a.batch(), 64);
+        assert_eq!(a.classes(), 8);
+        assert_eq!(
+            a.param_elems(),
+            32 * 256 + 256 + 256 * 256 + 256 + 256 * 8 + 8
+        );
+        assert_eq!(a.hlo, PathBuf::from("/art/mlp_bdwp.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_key_fails_loudly() {
+        let broken = SAMPLE.replace("model=mlp\n", "");
+        let err = Manifest::parse(&broken, PathBuf::from("/")).unwrap_err();
+        assert!(err.to_string().contains("model"));
+    }
+
+    #[test]
+    fn unknown_artifact_lists_available() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/")).unwrap();
+        let err = m.by_name("nope").unwrap_err();
+        assert!(err.to_string().contains("mlp_bdwp"));
+    }
+
+    #[test]
+    fn scalar_shape_parses() {
+        assert_eq!(parse_shape("scalar").unwrap(), Vec::<usize>::new());
+        assert_eq!(parse_shape("3x4x5").unwrap(), vec![3, 4, 5]);
+        assert!(parse_shape("3xz").is_err());
+    }
+
+    #[test]
+    fn empty_manifest_rejected() {
+        assert!(Manifest::parse("default_pattern=2:8\n", PathBuf::new()).is_err());
+    }
+}

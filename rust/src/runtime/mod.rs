@@ -1,0 +1,14 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! The interchange format is HLO *text*, not serialized HloModuleProto:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! Nothing here imports Python: after `make artifacts`, the `sat` binary
+//! is self-contained on the request path.
+
+pub mod artifact;
+pub mod exec;
+
+pub use artifact::{Artifact, Manifest};
+pub use exec::{Runtime, TrainState};

@@ -1,0 +1,17 @@
+//! Offline dataflow scheduling — the RWG of Fig. 12.
+//!
+//! Before training starts, the reconfiguration word generator walks the
+//! model's MatMul inventory and, per layer and per training stage,
+//! decides: (1) whether the stage runs N:M sparse (method × layer
+//! divisibility), (2) where SORE runs (pre-generation in WU when the
+//! method prunes weights — Fig. 11(c) — else inline in the pruning
+//! stage), and (3) which systolic dataflow (WS/OS) the STCE uses, by
+//! predicted utilization from the [`crate::sim::stce`] cycle model.
+//! The decisions serialize to per-layer configuration words the SAT
+//! controller fetches at each stage boundary.
+
+pub mod rwg;
+pub mod words;
+
+pub use rwg::{rwg_schedule, LayerSchedule, ModelSchedule, StageConfig};
+pub use words::{decode_word, encode_word, ConfigWord};

@@ -1,0 +1,227 @@
+//! The reconfiguration word generator: per-layer, per-stage decisions.
+
+use crate::arch::SatConfig;
+use crate::models::{Model, Stage};
+use crate::nm::{Method, NmPattern};
+use crate::sim::stce::{best_dataflow, Dataflow};
+
+/// Resolved configuration of one training stage of one layer.
+#[derive(Clone, Copy, Debug)]
+pub struct StageConfig {
+    pub stage: Stage,
+    /// `Some(p)` → the stage's MatMul runs N:M sparse.
+    pub sparse: Option<NmPattern>,
+    /// Systolic dataflow chosen by predicted cycles.
+    pub dataflow: Dataflow,
+    /// SORE runs inline in this stage (blocking the MatMul — Fig. 11(b))
+    /// rather than pre-generated in WU.
+    pub sore_inline: bool,
+    /// Predicted STCE cycles (the RWG's utilization estimate).
+    pub predicted_cycles: u64,
+}
+
+/// Schedule of one weighted layer.
+#[derive(Clone, Debug)]
+pub struct LayerSchedule {
+    pub layer_index: usize,
+    pub name: String,
+    /// FF, BP, WU in order.
+    pub stages: [StageConfig; 3],
+    /// N:M sparse weights are produced in the WU stage, pipelined behind
+    /// WUVE (Fig. 11(c)) — free on the FF/BP critical path.
+    pub pregenerate: bool,
+}
+
+/// Whole-model schedule.
+#[derive(Clone, Debug)]
+pub struct ModelSchedule {
+    pub model: String,
+    pub method: Method,
+    pub pattern: NmPattern,
+    pub batch: usize,
+    pub layers: Vec<LayerSchedule>,
+}
+
+impl ModelSchedule {
+    /// The schedule of a layer by its index in the model's layer list.
+    pub fn for_layer(&self, layer_index: usize) -> Option<&LayerSchedule> {
+        self.layers.iter().find(|l| l.layer_index == layer_index)
+    }
+}
+
+/// Run the RWG over a model (Fig. 12 flow).
+pub fn rwg_schedule(
+    model: &Model,
+    method: Method,
+    pattern: NmPattern,
+    cfg: &SatConfig,
+) -> ModelSchedule {
+    let mut layers = Vec::new();
+    for (idx, layer) in model.layers.iter().enumerate() {
+        if layer.weight_elems() == 0 {
+            continue;
+        }
+        let layer_sparse = layer.sparse_ok && layer.divisible_by(pattern.m);
+        // Pre-generation stores BOTH compact copies (w̃_FF and w̃_BP);
+        // §V-B: that only beats the dense FP16 compute copy when the
+        // sparse ratio exceeds 50%. Below that the RWG keeps inline
+        // generation (SORE is cheap; the bandwidth is not).
+        let elems = layer.weight_elems();
+        let pregen_pays = 2 * pattern.compact_bytes(elems) < elems * 2;
+        let pregenerate = layer_sparse
+            && method.can_pregenerate()
+            && pregen_pays
+            && (method.stage_sparse(Stage::FF) || method.stage_sparse(Stage::BP));
+        let mut stages = Vec::with_capacity(3);
+        for &stage in &Stage::ALL {
+            let mm = layer
+                .matmul(stage, model.batch)
+                .expect("weighted layers always have matmuls");
+            let sparse = if layer_sparse && method.stage_sparse(stage) {
+                Some(pattern)
+            } else {
+                None
+            };
+            let (dataflow, timing) = best_dataflow(&mm, sparse, cfg);
+            // SDGP prunes *gradients*: they only exist during BP, so SORE
+            // must run inline there (Fig. 12's SDGP row).
+            let sore_inline = sparse.is_some() && !pregenerate;
+            stages.push(StageConfig {
+                stage,
+                sparse,
+                dataflow,
+                sore_inline,
+                predicted_cycles: timing.cycles,
+            });
+        }
+        layers.push(LayerSchedule {
+            layer_index: idx,
+            name: layer.name.clone(),
+            stages: [stages[0], stages[1], stages[2]],
+            pregenerate,
+        });
+    }
+    ModelSchedule {
+        model: model.name.clone(),
+        method,
+        pattern,
+        batch: model.batch,
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    fn sched(method: Method) -> ModelSchedule {
+        rwg_schedule(
+            &zoo::resnet18(),
+            method,
+            NmPattern::P2_8,
+            &SatConfig::paper_default(),
+        )
+    }
+
+    #[test]
+    fn bdwp_sparse_ff_bp_dense_wu() {
+        let s = sched(Method::Bdwp);
+        for l in &s.layers {
+            let sparse_able = !l.name.contains("conv1"); // first conv dense
+            assert_eq!(l.stages[0].sparse.is_some(), sparse_able, "{}", l.name);
+            assert_eq!(l.stages[1].sparse.is_some(), sparse_able, "{}", l.name);
+            assert!(l.stages[2].sparse.is_none(), "{}: WU must be dense", l.name);
+        }
+    }
+
+    #[test]
+    fn srste_sparse_ff_only() {
+        let s = sched(Method::SrSte);
+        let l = &s.layers[3];
+        assert!(l.stages[0].sparse.is_some());
+        assert!(l.stages[1].sparse.is_none());
+        assert!(l.stages[2].sparse.is_none());
+    }
+
+    #[test]
+    fn sdgp_inline_sore_in_bp() {
+        let s = sched(Method::Sdgp);
+        for l in &s.layers {
+            assert!(!l.pregenerate, "{}: SDGP cannot pregenerate", l.name);
+            if l.stages[1].sparse.is_some() {
+                assert!(l.stages[1].sore_inline, "{}", l.name);
+            }
+            assert!(!l.stages[0].sore_inline);
+        }
+    }
+
+    #[test]
+    fn weight_pruning_methods_pregenerate() {
+        for m in [Method::Bdwp, Method::SrSte, Method::Sdwp] {
+            let s = sched(m);
+            let sparse_layers = s
+                .layers
+                .iter()
+                .filter(|l| l.stages.iter().any(|st| st.sparse.is_some()));
+            for l in sparse_layers {
+                assert!(l.pregenerate, "{m}: {} should pregenerate", l.name);
+                assert!(l.stages.iter().all(|st| !st.sore_inline));
+            }
+        }
+    }
+
+    #[test]
+    fn dense_method_schedules_nothing_sparse() {
+        let s = sched(Method::Dense);
+        for l in &s.layers {
+            assert!(l.stages.iter().all(|st| st.sparse.is_none()));
+            assert!(!l.pregenerate);
+        }
+    }
+
+    #[test]
+    fn dataflow_choice_varies_across_stages() {
+        // The whole point of the flexible interconnect (Fig. 8): some
+        // stage/layer combinations prefer WS, others OS.
+        let s = sched(Method::Bdwp);
+        let mut seen_ws = false;
+        let mut seen_os = false;
+        for l in &s.layers {
+            for st in &l.stages {
+                match st.dataflow {
+                    Dataflow::WS => seen_ws = true,
+                    Dataflow::OS => seen_os = true,
+                }
+            }
+        }
+        assert!(seen_ws && seen_os, "ws={seen_ws} os={seen_os}");
+    }
+
+    #[test]
+    fn predicted_cycles_is_the_minimum_of_both_dataflows() {
+        use crate::sim::stce::matmul_cycles;
+        let model = zoo::resnet18();
+        let cfg = SatConfig::paper_default();
+        let s = sched(Method::Bdwp);
+        let l = &s.layers[5];
+        let layer = &model.layers[l.layer_index];
+        let mm = layer.matmul(Stage::FF, model.batch).unwrap();
+        let ws = matmul_cycles(&mm, l.stages[0].sparse, Dataflow::WS, &cfg, true);
+        let os = matmul_cycles(&mm, l.stages[0].sparse, Dataflow::OS, &cfg, true);
+        assert_eq!(l.stages[0].predicted_cycles, ws.cycles.min(os.cycles));
+    }
+
+    #[test]
+    fn covers_exactly_the_weighted_layers() {
+        let model = zoo::vgg19();
+        let s = rwg_schedule(
+            &model,
+            Method::Bdwp,
+            NmPattern::P2_8,
+            &SatConfig::paper_default(),
+        );
+        let weighted = model.layers.iter().filter(|l| l.weight_elems() > 0).count();
+        assert_eq!(s.layers.len(), weighted);
+    }
+}

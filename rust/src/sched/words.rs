@@ -1,0 +1,208 @@
+//! Per-layer configuration words (the RWG's output artifact — Fig. 12).
+//!
+//! The SAT controller fetches one 32-bit word per (layer, stage) at each
+//! stage boundary. Encoding:
+//!
+//! ```text
+//!  31..24   layer index (8 bits)
+//!  23..22   stage (0=FF, 1=BP, 2=WU)
+//!  21       sparse enable
+//!  20..16   N (5 bits)
+//!  15..11   M (5 bits)
+//!  10       dataflow (0=WS, 1=OS)
+//!   9       SORE inline in this stage
+//!   8       pre-generated weights available
+//!  7..0     reserved
+//! ```
+
+use crate::models::Stage;
+use crate::nm::NmPattern;
+use crate::sched::rwg::{ModelSchedule, StageConfig};
+use crate::sim::Dataflow;
+
+/// Decoded form of one configuration word.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct ConfigWord {
+    pub layer_index: u8,
+    pub stage: Stage,
+    pub sparse: Option<NmPattern>,
+    pub dataflow: Dataflow,
+    pub sore_inline: bool,
+    pub pregenerated: bool,
+}
+
+fn stage_bits(s: Stage) -> u32 {
+    match s {
+        Stage::FF => 0,
+        Stage::BP => 1,
+        Stage::WU => 2,
+    }
+}
+
+fn stage_from_bits(b: u32) -> Option<Stage> {
+    Some(match b {
+        0 => Stage::FF,
+        1 => Stage::BP,
+        2 => Stage::WU,
+        _ => return None,
+    })
+}
+
+/// Encode one stage configuration.
+pub fn encode_word(layer_index: usize, sc: &StageConfig, pregenerated: bool) -> u32 {
+    let mut w = 0u32;
+    w |= (layer_index as u32 & 0xFF) << 24;
+    w |= stage_bits(sc.stage) << 22;
+    if let Some(p) = sc.sparse {
+        w |= 1 << 21;
+        w |= (p.n as u32 & 0x1F) << 16;
+        w |= (p.m as u32 & 0x1F) << 11;
+    }
+    if sc.dataflow == Dataflow::OS {
+        w |= 1 << 10;
+    }
+    if sc.sore_inline {
+        w |= 1 << 9;
+    }
+    if pregenerated {
+        w |= 1 << 8;
+    }
+    w
+}
+
+/// Decode a configuration word (None on malformed stage/pattern bits).
+pub fn decode_word(w: u32) -> Option<ConfigWord> {
+    let stage = stage_from_bits((w >> 22) & 0x3)?;
+    let sparse = if (w >> 21) & 1 == 1 {
+        let n = ((w >> 16) & 0x1F) as usize;
+        let m = ((w >> 11) & 0x1F) as usize;
+        if n == 0 || n > m {
+            return None;
+        }
+        Some(NmPattern::new(n, m))
+    } else {
+        None
+    };
+    Some(ConfigWord {
+        layer_index: (w >> 24) as u8,
+        stage,
+        sparse,
+        dataflow: if (w >> 10) & 1 == 1 { Dataflow::OS } else { Dataflow::WS },
+        sore_inline: (w >> 9) & 1 == 1,
+        pregenerated: (w >> 8) & 1 == 1,
+    })
+}
+
+/// Serialize a whole model schedule to its word stream (what the SAT
+/// controller's instruction buffer holds for one training iteration).
+pub fn encode_schedule(s: &ModelSchedule) -> Vec<u32> {
+    let mut words = Vec::with_capacity(s.layers.len() * 3);
+    for l in &s.layers {
+        for sc in &l.stages {
+            words.push(encode_word(l.layer_index, sc, l.pregenerate));
+        }
+    }
+    words
+}
+
+/// Decode and sanity-check a word stream against its source schedule.
+pub fn verify_roundtrip(s: &ModelSchedule) -> bool {
+    let words = encode_schedule(s);
+    let mut it = words.iter();
+    for l in &s.layers {
+        for sc in &l.stages {
+            let Some(cw) = it.next().copied().and_then(decode_word) else {
+                return false;
+            };
+            if cw.layer_index as usize != (l.layer_index & 0xFF)
+                || cw.stage != sc.stage
+                || cw.sparse != sc.sparse
+                || cw.dataflow != sc.dataflow
+                || cw.sore_inline != sc.sore_inline
+                || cw.pregenerated != l.pregenerate
+            {
+                return false;
+            }
+        }
+    }
+    it.next().is_none()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::SatConfig;
+    use crate::models::zoo;
+    use crate::nm::Method;
+    use crate::sched::rwg_schedule;
+
+    #[test]
+    fn word_roundtrip_all_fields() {
+        let sc = StageConfig {
+            stage: Stage::BP,
+            sparse: Some(NmPattern::P2_16),
+            dataflow: Dataflow::OS,
+            sore_inline: true,
+            predicted_cycles: 0,
+        };
+        let w = encode_word(7, &sc, false);
+        let cw = decode_word(w).unwrap();
+        assert_eq!(cw.layer_index, 7);
+        assert_eq!(cw.stage, Stage::BP);
+        assert_eq!(cw.sparse, Some(NmPattern::P2_16));
+        assert_eq!(cw.dataflow, Dataflow::OS);
+        assert!(cw.sore_inline);
+        assert!(!cw.pregenerated);
+    }
+
+    #[test]
+    fn dense_word_has_no_pattern() {
+        let sc = StageConfig {
+            stage: Stage::WU,
+            sparse: None,
+            dataflow: Dataflow::WS,
+            sore_inline: false,
+            predicted_cycles: 0,
+        };
+        let cw = decode_word(encode_word(0, &sc, true)).unwrap();
+        assert_eq!(cw.sparse, None);
+        assert!(cw.pregenerated);
+    }
+
+    #[test]
+    fn malformed_words_rejected() {
+        // stage bits 3 is invalid
+        assert!(decode_word(0b11 << 22).is_none());
+        // sparse enable with N=0
+        assert!(decode_word((1 << 21) | (4 << 11)).is_none());
+        // sparse with N > M
+        assert!(decode_word((1 << 21) | (8 << 16) | (4 << 11)).is_none());
+    }
+
+    #[test]
+    fn full_schedules_roundtrip() {
+        let cfg = SatConfig::paper_default();
+        for m in Method::ALL {
+            for model in ["resnet9", "resnet18", "vit"] {
+                let s = rwg_schedule(
+                    &zoo::model_by_name(model).unwrap(),
+                    m,
+                    NmPattern::P2_8,
+                    &cfg,
+                );
+                assert!(verify_roundtrip(&s), "{m} {model}");
+            }
+        }
+    }
+
+    #[test]
+    fn word_stream_is_three_words_per_layer() {
+        let s = rwg_schedule(
+            &zoo::resnet9(),
+            Method::Bdwp,
+            NmPattern::P2_8,
+            &SatConfig::paper_default(),
+        );
+        assert_eq!(encode_schedule(&s).len(), s.layers.len() * 3);
+    }
+}

@@ -1,0 +1,124 @@
+//! On-chip buffer capacity model (Table III banking) and the tile-size
+//! feasibility checks the offline scheduler must respect.
+//!
+//! SAT's buffers (all BRAM, all double-buffered — §IV-A):
+//! * **W2E** — west-to-east activation/weight stream; banked `rows × M/2`
+//!   wide at pattern M (the sparse mode consumes M dense values per
+//!   group while the array ingests one value per lane per cycle).
+//! * **N2S in/out** — north-to-south operand and result streams, one
+//!   bank per column plus packed-index banks.
+//! * **Optimizer** — FP32 master + momentum working set for WUVE.
+//!
+//! A bank is one BRAM36: 36 Kb ≈ 2048 FP16 words (we model the usable
+//! 32 Kb data width). Double buffering halves the usable capacity per
+//! direction.
+
+use crate::arch::SatConfig;
+
+/// FP16 words per BRAM bank (32 Kb data / 16 bit), halved by double
+/// buffering.
+pub const WORDS_PER_BANK: usize = 2048;
+
+/// Capacity summary for a SAT configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BufferModel {
+    pub w2e_banks: usize,
+    pub n2s_banks: usize,
+    pub optimizer_banks: usize,
+}
+
+impl BufferModel {
+    pub fn for_config(cfg: &SatConfig) -> BufferModel {
+        let idx_banks = ((cfg.cols * cfg.pattern.index_bits() as usize) + 15) / 16;
+        BufferModel {
+            w2e_banks: cfg.rows * cfg.pattern.m / 2,
+            n2s_banks: cfg.cols + idx_banks,
+            optimizer_banks: cfg.lanes * 2,
+        }
+    }
+
+    /// FP16 words one W2E phase may hold (double-buffered half).
+    pub fn w2e_capacity_words(&self) -> usize {
+        self.w2e_banks * WORDS_PER_BANK / 2
+    }
+
+    pub fn n2s_capacity_words(&self) -> usize {
+        self.n2s_banks * WORDS_PER_BANK / 2
+    }
+
+    /// Does a WS weight tile (k_tile × n_tile dense elements, compact at
+    /// density N/M when sparse) fit the W2E buffer?
+    pub fn ws_tile_fits(
+        &self,
+        k_tile: usize,
+        n_tile: usize,
+        cfg: &SatConfig,
+        sparse: bool,
+    ) -> bool {
+        let elems = k_tile * n_tile;
+        let words = if sparse {
+            elems * cfg.pattern.n / cfg.pattern.m
+        } else {
+            elems
+        };
+        words <= self.w2e_capacity_words()
+    }
+
+    /// Largest activation-row block an OS pass can stage in N2S.
+    pub fn max_os_rows(&self, k: usize) -> usize {
+        (self.n2s_capacity_words() / k.max(1)).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nm::NmPattern;
+
+    fn cfg() -> SatConfig {
+        SatConfig::paper_default()
+    }
+
+    #[test]
+    fn matches_table3_banking() {
+        let b = BufferModel::for_config(&cfg());
+        assert_eq!(b.w2e_banks, 128);
+        assert_eq!(b.n2s_banks, 38);
+        assert_eq!(b.optimizer_banks, 64);
+    }
+
+    #[test]
+    fn default_ws_tile_fits_the_paper_config() {
+        // The canonical WS tile: rows*M x cols = 256 x 32 dense elements,
+        // compact (2:8) = 2048 words — comfortably inside W2E.
+        let b = BufferModel::for_config(&cfg());
+        let k_tile = cfg().rows * cfg().pattern.m;
+        assert!(b.ws_tile_fits(k_tile, cfg().cols, &cfg(), true));
+        // the same tile held dense also fits (128 banks is sized for it)
+        assert!(b.ws_tile_fits(k_tile, cfg().cols, &cfg(), false));
+    }
+
+    #[test]
+    fn oversized_tiles_rejected() {
+        let b = BufferModel::for_config(&cfg());
+        assert!(!b.ws_tile_fits(1 << 16, 1 << 10, &cfg(), true));
+    }
+
+    #[test]
+    fn sparser_patterns_need_more_w2e_banks() {
+        let c4 = SatConfig { pattern: NmPattern::P2_4, ..cfg() };
+        let c16 = SatConfig { pattern: NmPattern::P2_16, ..cfg() };
+        let b4 = BufferModel::for_config(&c4);
+        let b16 = BufferModel::for_config(&c16);
+        assert!(b16.w2e_banks > b4.w2e_banks);
+        assert_eq!(b4.w2e_banks, 64);
+        assert_eq!(b16.w2e_banks, 256);
+    }
+
+    #[test]
+    fn os_row_budget_shrinks_with_k() {
+        let b = BufferModel::for_config(&cfg());
+        assert!(b.max_os_rows(64) > b.max_os_rows(4096));
+        assert!(b.max_os_rows(usize::MAX / 2) >= 1);
+    }
+}

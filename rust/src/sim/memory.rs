@@ -1,0 +1,160 @@
+//! External-memory model: DDR4 bandwidth, per-stage data volumes, and
+//! double-buffering overlap (§IV-A: "double-buffering is employed across
+//! all on-chip buffers to overlap the data transfer and computation").
+
+use crate::arch::SatConfig;
+use crate::models::{Layer, MatMulShape, Stage};
+use crate::nm::NmPattern;
+
+/// Bytes per element on the FP16 compute path.
+pub const FP16: usize = 2;
+/// Bytes per element of FP32 master state (weights + momentum).
+pub const FP32: usize = 4;
+
+/// Memory system configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct MemConfig {
+    /// Off-chip bandwidth in GB/s (paper board: 25.6; Fig. 17 sweeps it).
+    pub bandwidth_gbs: f64,
+    /// Double buffering on: transfer overlaps compute.
+    pub overlap: bool,
+}
+
+impl MemConfig {
+    pub fn paper_default() -> MemConfig {
+        MemConfig { bandwidth_gbs: 25.6, overlap: true }
+    }
+
+    /// Cycles (at the SAT clock) to move `bytes` over the DDR link.
+    pub fn transfer_cycles(&self, bytes: usize, cfg: &SatConfig) -> u64 {
+        let secs = bytes as f64 / (self.bandwidth_gbs * 1e9);
+        (secs * cfg.freq_mhz * 1e6).ceil() as u64
+    }
+
+    /// Combine compute and transfer for one phase: double buffering hides
+    /// the smaller of the two behind the larger; without it they serialize.
+    pub fn combine(&self, compute: u64, transfer: u64) -> u64 {
+        if self.overlap {
+            compute.max(transfer)
+        } else {
+            compute + transfer
+        }
+    }
+}
+
+/// Weight bytes moved for a stage MatMul: compact (FP16 values + packed
+/// indexes) when sparse, dense FP16 otherwise.
+pub fn weight_bytes(elems: usize, sparse: Option<NmPattern>) -> usize {
+    match sparse {
+        Some(p) => p.compact_bytes(elems),
+        None => elems * FP16,
+    }
+}
+
+/// Off-chip traffic of one stage of one weighted layer (FP16 activations
+/// and gradients; weights per `sparse`).
+///
+/// * FF: load x (m×k) + w̃_FF, store y (m×n)
+/// * BP: load dy (m×k) + w̃_BP, store dx (m×n)
+/// * WU: load x (k_mm×... both data operands), store dw; the optimizer
+///   traffic (FP32 masters + momentum read/write) is charged separately
+///   via [`optimizer_bytes`].
+pub fn stage_bytes(
+    mm: &MatMulShape,
+    weight_elems: usize,
+    sparse: Option<NmPattern>,
+    stage: Stage,
+) -> usize {
+    let lhs = mm.m * mm.k * FP16;
+    let out = mm.m * mm.n * FP16;
+    match stage {
+        Stage::FF | Stage::BP => lhs + weight_bytes(weight_elems, sparse) + out,
+        Stage::WU => {
+            // both operands are data tensors; output is the dw tensor
+            let rhs = mm.k * mm.n * FP16;
+            lhs + rhs + out.min(weight_elems * FP16)
+        }
+    }
+}
+
+/// WUVE optimizer traffic per layer: read+write FP32 master and momentum,
+/// write the FP16 compute copy (pre-generation stores the *compact* FF
+/// and BP copies instead — §V-B).
+pub fn optimizer_bytes(
+    weight_elems: usize,
+    pregenerate: Option<NmPattern>,
+) -> usize {
+    let master_rw = 2 * weight_elems * FP32 * 2; // master + momentum, r+w
+    let compute_copy = match pregenerate {
+        // w̃_FF and w̃_BP compact copies (both groupings stored)
+        Some(p) => 2 * p.compact_bytes(weight_elems),
+        None => weight_elems * FP16,
+    };
+    master_rw + compute_copy
+}
+
+/// Activation bytes of a non-MatMul layer pass (load + store).
+pub fn elementwise_bytes(layer: &Layer, channels: usize, batch: usize) -> usize {
+    let elems = layer.out_elems_per_item() * channels.max(1) * batch;
+    2 * elems * FP16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SatConfig {
+        SatConfig::paper_default()
+    }
+
+    #[test]
+    fn transfer_cycles_match_bandwidth() {
+        let mc = MemConfig::paper_default();
+        // 25.6 GB/s at 200 MHz = 128 bytes/cycle
+        assert_eq!(mc.transfer_cycles(128, &cfg()), 1);
+        assert_eq!(mc.transfer_cycles(128 * 1000, &cfg()), 1000);
+    }
+
+    #[test]
+    fn overlap_hides_the_smaller_side() {
+        let on = MemConfig { bandwidth_gbs: 25.6, overlap: true };
+        let off = MemConfig { bandwidth_gbs: 25.6, overlap: false };
+        assert_eq!(on.combine(1000, 400), 1000);
+        assert_eq!(on.combine(400, 1000), 1000);
+        assert_eq!(off.combine(1000, 400), 1400);
+    }
+
+    #[test]
+    fn sparse_weights_cut_traffic_above_half_sparsity() {
+        let elems = 1 << 20;
+        let dense = weight_bytes(elems, None);
+        let s28 = weight_bytes(elems, Some(NmPattern::P2_8));
+        let s216 = weight_bytes(elems, Some(NmPattern::P2_16));
+        assert!(s28 < dense / 2);
+        assert!(s216 < s28);
+    }
+
+    #[test]
+    fn stage_bytes_ff_counts_all_three_tensors() {
+        let mm = MatMulShape { m: 64, k: 128, n: 32, weight_is_rhs: true };
+        let b = stage_bytes(&mm, 128 * 32, None, Stage::FF);
+        assert_eq!(b, (64 * 128 + 128 * 32 + 64 * 32) * FP16);
+    }
+
+    #[test]
+    fn optimizer_traffic_dominated_by_fp32_masters() {
+        let b = optimizer_bytes(1 << 20, Some(NmPattern::P2_8));
+        let masters = 2 * (1 << 20) * FP32 * 2;
+        assert!(b > masters);
+        assert!(b < masters + (1 << 20) * FP16 * 2);
+    }
+
+    #[test]
+    fn pregeneration_saves_compute_copy_traffic_at_2_8() {
+        let elems = 1 << 20;
+        let pre = optimizer_bytes(elems, Some(NmPattern::P2_8));
+        let plain = optimizer_bytes(elems, None);
+        // storing both compact copies at 2:8 beats one dense FP16 copy
+        assert!(pre < plain, "pre {pre} plain {plain}");
+    }
+}

@@ -1,0 +1,26 @@
+//! Cycle-level simulator of the SAT accelerator (paper §IV).
+//!
+//! The paper validates speed with "a cycle-accurate performance model
+//! cross-validated with RTL simulation" (§VI-A); this module *is* that
+//! performance model. Two granularities coexist:
+//!
+//! * an explicit pipeline stepper for a single USPE ([`uspe`]), used to
+//!   *derive and unit-test* the timing constants (e.g. the 3× interleave
+//!   claim of Fig. 10);
+//! * closed-form tile/array models ([`stce`], [`sore`], [`wuve`],
+//!   [`memory`]) built on those constants, fast enough to sweep whole
+//!   training runs, cross-validated against the stepper in tests.
+//!
+//! [`engine`] composes everything into a per-training-step simulation
+//! with per-layer, per-stage breakdowns (Figs. 15–17, Table IV).
+
+pub mod engine;
+pub mod buffer;
+pub mod memory;
+pub mod sore;
+pub mod stce;
+pub mod uspe;
+pub mod wuve;
+
+pub use engine::{simulate_step, LayerTime, StepReport};
+pub use stce::{Dataflow, TileTiming};

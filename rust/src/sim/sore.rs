@@ -1,0 +1,166 @@
+//! SORE — the N:M sparse online reduction engine (Fig. 9).
+//!
+//! 32 parallel lanes; each lane is a top-K sorter plus a data provider.
+//! A lane ingests one dense value per cycle, so a group of M costs M
+//! cycles; the sorter/provider pair is pipelined, so a lane sustains one
+//! group per M cycles. Functionally a lane produces exactly the compact
+//! encoding of [`crate::nm::CompactNm`] (same tie-breaking), which the
+//! tests pin against the shared oracle goldens.
+
+use crate::arch::SatConfig;
+use crate::nm::{CompactNm, NmPattern};
+
+/// Cycle cost to reduce `groups` M-groups on `lanes` parallel lanes.
+///
+/// Pipelined: each lane emits one compact group every M cycles after a
+/// fill latency of M (sorter) + 1 (provider handoff).
+pub fn reduce_cycles(groups: usize, p: NmPattern, lanes: usize) -> u64 {
+    if groups == 0 {
+        return 0;
+    }
+    let rounds = (groups + lanes - 1) / lanes;
+    (rounds * p.m + p.m + 1) as u64
+}
+
+/// Cycle cost to sparsify a whole weight tensor of `elems` dense values.
+pub fn reduce_tensor_cycles(elems: usize, p: NmPattern, cfg: &SatConfig) -> u64 {
+    reduce_cycles(elems / p.m, p, cfg.lanes)
+}
+
+/// Functional model: run the lane datapath (streaming top-K insertion
+/// sort, exactly the hardware's comparator chain) over a tensor.
+///
+/// `w` is (rows × cols) row-major, groups along cols. Returns the compact
+/// encoding. The insertion network keeps earlier-arriving elements on
+/// ties — the shared tie-breaking rule.
+pub fn reduce_functional(w: &[f32], rows: usize, cols: usize, p: NmPattern) -> CompactNm {
+    assert!(cols % p.m == 0);
+    let mut values = Vec::with_capacity(w.len() / p.m * p.n);
+    let mut indexes = Vec::with_capacity(values.capacity());
+    // (|v|, idx) comparator chain kept sorted descending by |v|; stable
+    // on ties. Fixed-depth stack buffers (§Perf iteration 3: the Vec
+    // insert/truncate/sort version was 2.1× slower; a heap variant
+    // measured <5% and was reverted — the chain IS the hardware model).
+    assert!(p.n <= 32, "SORE chain depth capped at 32");
+    let mut abs_buf = [0f32; 32];
+    let mut idx_buf = [0u8; 32];
+    for group in w.chunks_exact(p.m) {
+        let mut len = 0usize;
+        for (i, &v) in group.iter().enumerate() {
+            let a = v.abs();
+            if len == p.n && abs_buf[len - 1] >= a {
+                continue; // falls off the chain tail
+            }
+            // insertion position: after all entries with |x| >= a
+            // (keeps the earlier element first on ties)
+            let mut pos = 0;
+            while pos < len && abs_buf[pos] >= a {
+                pos += 1;
+            }
+            let end = (len + 1).min(p.n);
+            let mut j = end - 1;
+            while j > pos {
+                abs_buf[j] = abs_buf[j - 1];
+                idx_buf[j] = idx_buf[j - 1];
+                j -= 1;
+            }
+            abs_buf[pos] = a;
+            idx_buf[pos] = i as u8;
+            len = end;
+        }
+        // data provider emits kept entries in ascending index order
+        idx_buf[..len].sort_unstable();
+        for &i in &idx_buf[..len] {
+            indexes.push(i);
+            values.push(group[i as usize]);
+        }
+    }
+    CompactNm { pattern: p, rows, cols, values, indexes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{check, Gen};
+
+    #[test]
+    fn fig9_example_timing() {
+        // A 2:4 SORE generates one sparse group per lane in 4 cycles
+        // (plus pipeline fill).
+        let p = NmPattern::P2_4;
+        assert_eq!(reduce_cycles(1, p, 1), 4 + 4 + 1);
+        // steady state: G groups on one lane ~ 4G cycles
+        let c = reduce_cycles(1000, p, 1);
+        assert!((c as f64 / 4000.0 - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn lanes_divide_the_work() {
+        let p = NmPattern::P2_8;
+        let one = reduce_cycles(4096, p, 1);
+        let thirtytwo = reduce_cycles(4096, p, 32);
+        let speedup = one as f64 / thirtytwo as f64;
+        assert!((28.0..=32.5).contains(&speedup), "{speedup}");
+    }
+
+    #[test]
+    fn functional_matches_compact_oracle() {
+        check("sore == CompactNm::encode", 40, |g: &mut Gen| {
+            let (n, m) = g.nm_pattern();
+            let p = NmPattern::new(n, m);
+            let rows = g.usize_in(1, 4);
+            let groups = g.usize_in(1, 5);
+            let cols = groups * m;
+            let w = g.vec_normal(rows * cols);
+            let hw = reduce_functional(&w, rows, cols, p);
+            let oracle = CompactNm::encode(&w, rows, cols, p);
+            assert_eq!(hw.values, oracle.values);
+            assert_eq!(hw.indexes, oracle.indexes);
+        });
+    }
+
+    #[test]
+    fn tie_breaking_matches_shared_rule() {
+        // all-equal group: the comparator chain must keep indexes 0..N
+        let w = [0.5f32, 0.5, 0.5, 0.5, -0.5, 0.5, 0.5, -0.5];
+        let c = reduce_functional(&w, 1, 8, NmPattern::P2_4);
+        assert_eq!(c.indexes, vec![0, 1, 0, 1]);
+        assert_eq!(c.values, vec![0.5, 0.5, -0.5, 0.5]);
+    }
+
+    #[test]
+    fn sore_time_is_negligible_vs_matmul() {
+        // Paper Fig. 16: SORE latency is a negligible fraction of a
+        // layer's MatMul time. Weight tensor of ResNet18's biggest layer:
+        use crate::models::Stage;
+        let layer = crate::models::zoo::resnet18();
+        let l = layer
+            .layers
+            .iter()
+            .max_by_key(|l| l.weight_elems())
+            .unwrap();
+        let cfg = crate::arch::SatConfig::paper_default();
+        let sore = reduce_tensor_cycles(l.weight_elems(), NmPattern::P2_8, &cfg);
+        let mm = l.matmul(Stage::FF, 512).unwrap();
+        let stce = crate::sim::stce::matmul_cycles(
+            &mm,
+            Some(NmPattern::P2_8),
+            crate::sim::Dataflow::WS,
+            &cfg,
+            true,
+        );
+        // Inline SORE stays a small fraction even for the worst layer
+        // (weight-heavy, small spatial); with pre-generation (Fig. 11(c),
+        // tested in engine.rs) it is hidden behind WUVE entirely.
+        assert!(
+            (sore as f64) < 0.10 * stce.cycles as f64,
+            "sore {sore} vs stce {}",
+            stce.cycles
+        );
+    }
+
+    #[test]
+    fn zero_groups_cost_nothing() {
+        assert_eq!(reduce_cycles(0, NmPattern::P2_8, 32), 0);
+    }
+}

@@ -1,0 +1,285 @@
+//! STCE — the 32×32 USPE systolic array, tile-level timing (Fig. 8).
+//!
+//! Closed-form cycle model for one MatMul mapped onto the array under
+//! either dataflow, with dense (2:2) or N:M sparse value-serial
+//! processing. The per-USPE constants come from [`crate::sim::uspe`],
+//! whose explicit stepper validates them.
+//!
+//! **WS mapping** (Fig. 8(a)): the (k × n) weight operand is stationary;
+//! array rows span the k direction (one M-group per USPE in sparse mode,
+//! one 2:2 pair in dense mode), columns span n. Activations stream
+//! west→east, partial sums flow north→south (no accumulation loop).
+//! Per k/n tile: preload + `m_rows × vals_per_pe` streaming + skew.
+//! Partial results across k-tiles accumulate in the N2S output buffer.
+//!
+//! **OS mapping** (Fig. 8(b)): the (m × n) output is stationary; each
+//! USPE owns `ilv` output elements (interleave mapping, Fig. 10(c)) and
+//! accumulates over the whole k extent. Per output pass:
+//! `max(ilv, ADD_STAGES) × vals` + fill/drain skew.
+
+use crate::arch::SatConfig;
+use crate::models::MatMulShape;
+use crate::nm::NmPattern;
+use crate::sim::uspe::{ADD_STAGES, MUL_STAGES};
+
+/// Systolic dataflow selection (the RWG's per-stage knob — Fig. 12).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Dataflow {
+    /// Weight-stationary.
+    WS,
+    /// Output-stationary.
+    OS,
+}
+
+impl Dataflow {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataflow::WS => "WS",
+            Dataflow::OS => "OS",
+        }
+    }
+}
+
+/// Timing result for one MatMul on the array.
+#[derive(Clone, Copy, Debug)]
+pub struct TileTiming {
+    pub cycles: u64,
+    /// MACs that are algorithmically useful (sparse MACs count once).
+    pub useful_macs: u64,
+    pub dataflow: Dataflow,
+    /// `None` = dense 2:2 execution.
+    pub sparse: Option<NmPattern>,
+}
+
+impl TileTiming {
+    /// Fraction of the array's MAC slots doing useful work
+    /// (1 MAC/cycle/USPE peak in dense terms; sparse counts kept MACs).
+    pub fn utilization(&self, cfg: &SatConfig) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.useful_macs as f64 / (self.cycles as f64 * cfg.uspes() as f64)
+    }
+}
+
+/// Values each USPE consumes per dot-product row: N per M-group when
+/// sparse, 2 per 2:2 pair when dense.
+fn vals_per_group(sparse: Option<NmPattern>) -> usize {
+    sparse.map(|p| p.n).unwrap_or(2)
+}
+
+/// Dense k-extent covered by one USPE row: M when sparse, 2 when dense.
+fn k_per_row(sparse: Option<NmPattern>) -> usize {
+    sparse.map(|p| p.m).unwrap_or(2)
+}
+
+/// Useful MACs of a MatMul under optional weight sparsity.
+pub fn useful_macs(mm: &MatMulShape, sparse: Option<NmPattern>) -> u64 {
+    match sparse {
+        Some(p) => (mm.macs() as f64 * p.density()).round() as u64,
+        None => mm.macs(),
+    }
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// WS-dataflow cycles for `mm` ((m×k)·(k×n)); sparse prunes the k axis.
+pub fn ws_cycles(mm: &MatMulShape, sparse: Option<NmPattern>, cfg: &SatConfig) -> u64 {
+    let kpr = k_per_row(sparse);
+    let vals = vals_per_group(sparse);
+    let k_tile = cfg.rows * kpr; // dense k covered per tile
+    let tiles = ceil_div(mm.k, k_tile) * ceil_div(mm.n, cfg.cols);
+    let preload = (cfg.rows * vals) as u64; // fill the stationary regs
+    let stream = (mm.m * vals) as u64; // one activation row per vals cycles
+    let skew = (cfg.rows + cfg.cols + MUL_STAGES + ADD_STAGES) as u64;
+    tiles as u64 * (preload + stream + skew)
+}
+
+/// OS-dataflow cycles; `interleave` enables the Fig. 10(c) mapping.
+pub fn os_cycles(
+    mm: &MatMulShape,
+    sparse: Option<NmPattern>,
+    cfg: &SatConfig,
+    interleave: bool,
+) -> u64 {
+    let vals_total = (mm.k / k_per_row(sparse)) * vals_per_group(sparse);
+    let ilv = if interleave { ADD_STAGES } else { 1 };
+    // Outputs per pass: rows × cols USPEs × ilv jobs each (jobs taken
+    // along the n direction; a ragged last pass still costs full rounds).
+    let passes = ceil_div(mm.m, cfg.rows) * ceil_div(mm.n, cfg.cols * ilv);
+    let per_round = ilv.max(ADD_STAGES) as u64;
+    let compute = vals_total as u64 * per_round;
+    let skew =
+        (cfg.rows + cfg.cols + MUL_STAGES + ADD_STAGES + cfg.rows) as u64; // fill + pop
+    passes as u64 * (compute + skew)
+}
+
+/// Time `mm` under one dataflow.
+pub fn matmul_cycles(
+    mm: &MatMulShape,
+    sparse: Option<NmPattern>,
+    df: Dataflow,
+    cfg: &SatConfig,
+    interleave: bool,
+) -> TileTiming {
+    let cycles = match df {
+        Dataflow::WS => ws_cycles(mm, sparse, cfg),
+        Dataflow::OS => os_cycles(mm, sparse, cfg, interleave),
+    };
+    TileTiming { cycles, useful_macs: useful_macs(mm, sparse), dataflow: df, sparse }
+}
+
+/// The better dataflow by predicted cycles (what RWG computes per layer
+/// and stage in Fig. 12), with the paper's interleave mapping on.
+pub fn best_dataflow(
+    mm: &MatMulShape,
+    sparse: Option<NmPattern>,
+    cfg: &SatConfig,
+) -> (Dataflow, TileTiming) {
+    let ws = matmul_cycles(mm, sparse, Dataflow::WS, cfg, true);
+    let os = matmul_cycles(mm, sparse, Dataflow::OS, cfg, true);
+    if ws.cycles <= os.cycles {
+        (Dataflow::WS, ws)
+    } else {
+        (Dataflow::OS, os)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SatConfig {
+        SatConfig::paper_default()
+    }
+
+    fn mm(m: usize, k: usize, n: usize) -> MatMulShape {
+        MatMulShape { m, k, n, weight_is_rhs: true }
+    }
+
+    #[test]
+    fn big_dense_os_utilization_near_one() {
+        let shape = mm(4096, 4096, 4096);
+        let t = matmul_cycles(&shape, None, Dataflow::OS, &cfg(), true);
+        let u = t.utilization(&cfg());
+        assert!(u > 0.90, "util {u}");
+        assert!(u <= 1.0);
+    }
+
+    #[test]
+    fn big_dense_ws_utilization_near_one() {
+        let shape = mm(65536, 2048, 1024);
+        let t = matmul_cycles(&shape, None, Dataflow::WS, &cfg(), true);
+        let u = t.utilization(&cfg());
+        assert!(u > 0.90, "util {u}");
+    }
+
+    #[test]
+    fn sparse_2_8_is_4x_faster_both_dataflows() {
+        let shape = mm(8192, 2048, 1024);
+        for df in [Dataflow::WS, Dataflow::OS] {
+            let dense = matmul_cycles(&shape, None, df, &cfg(), true);
+            let sparse = matmul_cycles(
+                &shape,
+                Some(NmPattern::P2_8),
+                df,
+                &cfg(),
+                true,
+            );
+            let speedup = dense.cycles as f64 / sparse.cycles as f64;
+            assert!(
+                (3.4..=4.2).contains(&speedup),
+                "{df:?} speedup {speedup}"
+            );
+        }
+    }
+
+    #[test]
+    fn interleave_mapping_triples_os_throughput() {
+        let shape = mm(8192, 2048, 1024);
+        let plain = matmul_cycles(&shape, None, Dataflow::OS, &cfg(), false);
+        let inter = matmul_cycles(&shape, None, Dataflow::OS, &cfg(), true);
+        let speedup = plain.cycles as f64 / inter.cycles as f64;
+        assert!((2.6..=3.1).contains(&speedup), "speedup {speedup}");
+    }
+
+    #[test]
+    fn dataflow_preference_depends_on_shape() {
+        // Tall m, moderate k: WS amortizes preload over many streamed
+        // rows and clearly beats OS's many output passes.
+        let tall = mm(100_000, 4096, 32);
+        let (df_tall, t_tall) = best_dataflow(&tall, None, &cfg());
+        assert_eq!(df_tall, Dataflow::WS);
+        // Small m×n output that fits one OS pass with a huge k: OS does
+        // one accumulation sweep while WS pays preload+skew per k-tile.
+        let deep = mm(32, 262_144, 32);
+        let ws = matmul_cycles(&deep, None, Dataflow::WS, &cfg(), true);
+        let os = matmul_cycles(&deep, None, Dataflow::OS, &cfg(), true);
+        assert!(os.cycles < ws.cycles, "os {} ws {}", os.cycles, ws.cycles);
+        // best_dataflow returns the argmin in both cases
+        let (_, t_best) = best_dataflow(&deep, None, &cfg());
+        assert_eq!(t_best.cycles, os.cycles.min(ws.cycles));
+        assert!(t_tall.cycles > 0);
+    }
+
+    #[test]
+    fn small_matmul_has_low_utilization() {
+        // A 16×16×16 MatMul can't fill a 32×32 array.
+        let t = matmul_cycles(&mm(16, 16, 16), None, Dataflow::OS, &cfg(), true);
+        assert!(t.utilization(&cfg()) < 0.10);
+    }
+
+    #[test]
+    fn cycles_monotone_in_every_dim() {
+        let base = mm(512, 512, 512);
+        for df in [Dataflow::WS, Dataflow::OS] {
+            let c0 = matmul_cycles(&base, None, df, &cfg(), true).cycles;
+            for bigger in
+                [mm(1024, 512, 512), mm(512, 1024, 512), mm(512, 512, 1024)]
+            {
+                let c1 = matmul_cycles(&bigger, None, df, &cfg(), true).cycles;
+                assert!(c1 >= c0, "{df:?} {bigger:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_peak_matches_table4_ratio() {
+        // Peak sparse throughput is M/N× dense (Table IV: 1638.4/409.6).
+        let shape = mm(16384, 4096, 4096);
+        let d = matmul_cycles(&shape, None, Dataflow::WS, &cfg(), true);
+        let s = matmul_cycles(&shape, Some(NmPattern::P2_8), Dataflow::WS, &cfg(), true);
+        // same useful MACs per cycle ratio: dense does macs in C cycles,
+        // sparse does macs*(density) useful in ~C*density cycles, i.e.
+        // dense-equivalent rate is 4x.
+        let dense_rate = d.useful_macs as f64 / d.cycles as f64;
+        let sparse_equiv_rate = (s.useful_macs as f64 / NmPattern::P2_8.density())
+            / s.cycles as f64;
+        let ratio = sparse_equiv_rate / dense_rate;
+        assert!((3.5..=4.3).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn utilization_never_exceeds_one() {
+        use crate::util::testkit::{check, Gen};
+        check("util <= 1", 60, |g: &mut Gen| {
+            let shape = mm(
+                g.usize_in(1, 5000),
+                g.usize_in(16, 4096) / 16 * 16,
+                g.usize_in(1, 2000),
+            );
+            let (n, m) = g.nm_pattern();
+            let sparse = if g.bool() && shape.k % m == 0 {
+                Some(NmPattern::new(n, m))
+            } else {
+                None
+            };
+            let df = if g.bool() { Dataflow::WS } else { Dataflow::OS };
+            let t = matmul_cycles(&shape, sparse, df, &cfg(), g.bool());
+            assert!(t.utilization(&cfg()) <= 1.0 + 1e-9);
+            assert!(t.cycles > 0);
+        });
+    }
+}

@@ -1,0 +1,258 @@
+//! Unified N:M Sparse Processing Element — cycle model (Fig. 7, Fig. 10).
+//!
+//! A USPE holds a 3-stage FP16 multiplier feeding a 3-stage FP32 adder
+//! through an FP16→FP32 switcher. It consumes one (activation, weight)
+//! value pair per cycle — an N:M group folds into N cycles (value-serial),
+//! and dense work is decomposed into 2:2 groups (2 cycles / 2 MACs).
+//!
+//! In **WS** mode partial sums flow through (no loop): the pipeline is
+//! always full and throughput is 1 value/cycle.
+//!
+//! In **OS** mode the adder output feeds back into its own input (the
+//! accumulation loop of Fig. 10(a)): a dependent add can only issue every
+//! `ADD_STAGES` cycles, so naive mapping runs at 1/3 throughput.
+//! **Interleave mapping** (Fig. 10(c)) time-multiplexes `ADD_STAGES`
+//! independent dot-products over the loop, restoring 1 value/cycle — the
+//! paper's 3× claim, reproduced by the explicit stepper below.
+
+pub const MUL_STAGES: usize = 3;
+pub const ADD_STAGES: usize = 3;
+
+/// Closed-form: cycles for one USPE to accumulate `values` sequential
+/// (dependent) products in OS mode, conventional mapping (Fig. 10(b)):
+/// each add waits for the previous to clear the adder pipeline.
+pub fn os_cycles_conventional(values: usize) -> u64 {
+    if values == 0 {
+        return 0;
+    }
+    // first product fills mul pipe; each accumulation then costs
+    // ADD_STAGES cycles serially; result drains the adder once more.
+    MUL_STAGES as u64 + values as u64 * ADD_STAGES as u64
+}
+
+/// Closed-form: cycles for one USPE to process `jobs` independent
+/// dot-products of `values` products each, interleave mapping
+/// (Fig. 10(c)). With `jobs >= ADD_STAGES` the loop is fully hidden.
+pub fn os_cycles_interleaved(jobs: usize, values: usize) -> u64 {
+    if jobs == 0 || values == 0 {
+        return 0;
+    }
+    let rounds = values as u64; // one value of each job per round
+    let per_round = jobs.max(ADD_STAGES) as u64; // stall if too few jobs
+    MUL_STAGES as u64 + rounds * per_round + ADD_STAGES as u64
+}
+
+/// Closed-form: WS mode, partials flow through — 1 value/cycle.
+pub fn ws_cycles(values: usize) -> u64 {
+    if values == 0 {
+        return 0;
+    }
+    (MUL_STAGES + ADD_STAGES) as u64 + values as u64
+}
+
+/// Value-count of a dot-product over `k` dense elements expressed in
+/// N:M groups: `k/M` groups × `N` values each.
+pub fn sparse_values(k: usize, n: usize, m: usize) -> usize {
+    (k / m) * n
+}
+
+// ---------------------------------------------------------------------------
+// Explicit pipeline stepper (validates the closed forms + Fig. 10 claim)
+// ---------------------------------------------------------------------------
+
+/// One in-flight operation inside the USPE pipeline.
+#[derive(Clone, Copy, Debug)]
+struct InFlight {
+    job: usize,
+    /// Remaining cycles in the current stage chain.
+    remaining: usize,
+}
+
+/// Explicit cycle stepper for the OS accumulation loop.
+///
+/// Models: per job, `values` multiplies must be accumulated into one
+/// register. A multiply for job j may issue any cycle; its product
+/// reaches the adder after `MUL_STAGES`. The adder for job j is busy for
+/// `ADD_STAGES` cycles per accumulation and accumulations of the same
+/// job are strictly serial (the loop dependency). Issue policy is
+/// round-robin over jobs (the interleave schedule) or all-of-job-0-first
+/// (the conventional schedule).
+pub struct OsStepper {
+    jobs: usize,
+    values: usize,
+    interleave: bool,
+}
+
+impl OsStepper {
+    pub fn new(jobs: usize, values: usize, interleave: bool) -> OsStepper {
+        OsStepper { jobs, values, interleave }
+    }
+
+    /// Run to completion; returns total cycles.
+    pub fn run(&self) -> u64 {
+        let jobs = self.jobs;
+        if jobs == 0 || self.values == 0 {
+            return 0;
+        }
+        let mut issued = vec![0usize; jobs]; // multiplies issued per job
+        let mut adds_done = vec![0usize; jobs];
+        let mut mul_pipe: Vec<InFlight> = Vec::new();
+        let mut add_ready: Vec<usize> = Vec::new(); // products awaiting adder, by job
+        let mut adder_busy: Vec<Option<InFlight>> = vec![None; jobs];
+        let mut cycle: u64 = 0;
+        let mut rr = 0usize; // round-robin cursor
+
+        loop {
+            if adds_done.iter().all(|&d| d == self.values) {
+                return cycle;
+            }
+            cycle += 1;
+
+            // 1. adder stage: retire / progress
+            for slot in adder_busy.iter_mut() {
+                if let Some(op) = slot {
+                    op.remaining -= 1;
+                    if op.remaining == 0 {
+                        adds_done[op.job] += 1;
+                        *slot = None;
+                    }
+                }
+            }
+            // 2. products leaving the multiplier join the add queue
+            let mut still = Vec::with_capacity(mul_pipe.len());
+            for mut op in mul_pipe.drain(..) {
+                op.remaining -= 1;
+                if op.remaining == 0 {
+                    add_ready.push(op.job);
+                } else {
+                    still.push(op);
+                }
+            }
+            mul_pipe = still;
+            // 3. start adds whose accumulator is free (serial per job)
+            let mut next_ready = Vec::with_capacity(add_ready.len());
+            for job in add_ready.drain(..) {
+                if adder_busy[job].is_none() {
+                    adder_busy[job] =
+                        Some(InFlight { job, remaining: ADD_STAGES });
+                } else {
+                    next_ready.push(job); // loop-carried dependency stalls it
+                }
+            }
+            add_ready = next_ready;
+            // 4. issue at most one multiply per cycle
+            let pick = if self.interleave {
+                // round-robin over jobs with work left
+                let mut chosen = None;
+                for off in 0..jobs {
+                    let j = (rr + off) % jobs;
+                    if issued[j] < self.values {
+                        chosen = Some(j);
+                        rr = (j + 1) % jobs;
+                        break;
+                    }
+                }
+                chosen
+            } else {
+                // conventional: finish job 0 before starting job 1, etc.
+                (0..jobs).find(|&j| issued[j] < self.values)
+            };
+            if let Some(j) = pick {
+                // conventional mapping stalls the *issue* too: a new
+                // multiply of the same job is pointless before its adder
+                // can accept (models the Fig. 10(b) bubble).
+                let can_issue = if self.interleave {
+                    true
+                } else {
+                    // issue only if the product won't queue behind the
+                    // busy accumulator when it arrives
+                    adder_busy[j].map_or(true, |op| op.remaining <= MUL_STAGES)
+                        && !add_ready.contains(&j)
+                };
+                if can_issue {
+                    issued[j] += 1;
+                    mul_pipe.push(InFlight { job: j, remaining: MUL_STAGES });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig10_interleave_gives_3x_throughput() {
+        // 3 independent dot-products of 32 values each: conventional runs
+        // them serially at 1 add / ADD_STAGES cycles; interleaved fills
+        // the pipeline.  The paper claims 3×.
+        let values = 32;
+        let conv: u64 = (0..3).map(|_| OsStepper::new(1, values, false).run()).sum();
+        let inter = OsStepper::new(3, values, true).run();
+        let speedup = conv as f64 / inter as f64;
+        assert!(
+            (2.5..=3.2).contains(&speedup),
+            "interleave speedup {speedup} (conv {conv}, inter {inter})"
+        );
+    }
+
+    #[test]
+    fn stepper_matches_closed_form_conventional() {
+        for values in [1usize, 2, 8, 33] {
+            let stepped = OsStepper::new(1, values, false).run();
+            let closed = os_cycles_conventional(values);
+            let diff = stepped.abs_diff(closed);
+            assert!(diff <= 1, "values={values}: stepped {stepped} vs closed {closed}");
+        }
+    }
+
+    #[test]
+    fn stepper_matches_closed_form_interleaved() {
+        for (jobs, values) in [(3usize, 8usize), (3, 32), (4, 16), (6, 5)] {
+            let stepped = OsStepper::new(jobs, values, true).run();
+            let closed = os_cycles_interleaved(jobs, values);
+            let ratio = stepped as f64 / closed as f64;
+            assert!(
+                (0.85..=1.15).contains(&ratio),
+                "jobs={jobs} values={values}: stepped {stepped} closed {closed}"
+            );
+        }
+    }
+
+    #[test]
+    fn interleave_with_too_few_jobs_still_stalls() {
+        // 2 jobs can't hide a 3-deep adder: per-round cost is ADD_STAGES.
+        let two = OsStepper::new(2, 32, true).run();
+        let three = OsStepper::new(3, 32, true).run();
+        // 3 jobs do 1.5x the work of 2 jobs in about the same time
+        assert!(three < two * 3 / 2, "three={three} two={two}");
+    }
+
+    #[test]
+    fn ws_streams_at_one_value_per_cycle() {
+        assert_eq!(ws_cycles(100), 106);
+        assert_eq!(ws_cycles(0), 0);
+        // asymptotically 1/cycle
+        let c = ws_cycles(10_000);
+        assert!((c as f64 / 10_000.0 - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn sparse_values_fold() {
+        // 2:4 over k=128 -> 64 values (2 cycles per 4-group)
+        assert_eq!(sparse_values(128, 2, 4), 64);
+        // 2:8 over k=128 -> 32 values (4x fewer than dense 2:2's 128)
+        assert_eq!(sparse_values(128, 2, 8), 32);
+        // dense as 2:2 groups -> k values
+        assert_eq!(sparse_values(128, 2, 2), 128);
+    }
+
+    #[test]
+    fn os_closed_forms_ordering() {
+        // conventional 1-job is ~3x slower per value than interleaved 3-job
+        let conv3 = 3 * os_cycles_conventional(100);
+        let int3 = os_cycles_interleaved(3, 100);
+        assert!(conv3 as f64 / int3 as f64 > 2.7);
+    }
+}

@@ -1,0 +1,141 @@
+//! WUVE — weight-update vector engine (mixed-precision momentum SGD).
+//!
+//! 32 parallel lanes; per element the lane raises the FP16 weight
+//! gradient to FP32, applies weight decay, updates the FP32 momentum and
+//! master weight, and emits both FP32 master and FP16 compute copies —
+//! NVIDIA-AMP semantics (§IV-E). One element per lane per cycle,
+//! pipelined (3 mult + 2 add stages ≈ 5-cycle fill).
+
+use crate::arch::SatConfig;
+use crate::util::f16;
+
+/// Pipeline fill of one lane (3 FP32 mult + 2 FP32 add stages).
+const LANE_FILL: u64 = 5;
+
+/// Cycles to update `params` weights on `lanes` lanes.
+pub fn update_cycles(params: usize, lanes: usize) -> u64 {
+    if params == 0 {
+        return 0;
+    }
+    ((params + lanes - 1) / lanes) as u64 + LANE_FILL
+}
+
+pub fn update_cycles_cfg(params: usize, cfg: &SatConfig) -> u64 {
+    update_cycles(params, cfg.lanes)
+}
+
+/// Functional single-lane datapath: one momentum-SGD step with AMP
+/// precision boundaries. `grad_fp16` arrives as FP16 bits (from the STCE
+/// output path); masters and momentum stay FP32; the returned compute
+/// weight is the FP16 round-trip of the new master.
+#[derive(Clone, Copy, Debug)]
+pub struct WuveParams {
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for WuveParams {
+    fn default() -> Self {
+        // Matches python/compile/model.py (MOMENTUM, WEIGHT_DECAY).
+        WuveParams { lr: 0.05, momentum: 0.9, weight_decay: 5e-4 }
+    }
+}
+
+/// One element update; returns (new_master, new_momentum, compute_fp16).
+pub fn lane_update(
+    master: f32,
+    mom: f32,
+    grad_fp16: f16,
+    p: &WuveParams,
+) -> (f32, f32, f16) {
+    let g = grad_fp16.to_f32() + p.weight_decay * master; // FP32 from here on
+    let new_mom = p.momentum * mom + g;
+    let new_master = master - p.lr * new_mom;
+    (new_master, new_mom, f16::from_f32(new_master))
+}
+
+/// Vectorized update over a parameter tensor (the whole-engine function).
+pub fn update_tensor(
+    masters: &mut [f32],
+    moms: &mut [f32],
+    grads: &[f16],
+    p: &WuveParams,
+) -> Vec<f16> {
+    assert_eq!(masters.len(), moms.len());
+    assert_eq!(masters.len(), grads.len());
+    let mut compute = Vec::with_capacity(masters.len());
+    for i in 0..masters.len() {
+        let (w, m, c) = lane_update(masters[i], moms[i], grads[i], p);
+        masters[i] = w;
+        moms[i] = m;
+        compute.push(c);
+    }
+    compute
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn timing_scales_with_lanes() {
+        assert_eq!(update_cycles(0, 32), 0);
+        assert_eq!(update_cycles(32, 32), 1 + LANE_FILL);
+        assert_eq!(update_cycles(33, 32), 2 + LANE_FILL);
+        let one = update_cycles(100_000, 1);
+        let many = update_cycles(100_000, 32);
+        assert!((one as f64 / many as f64) > 30.0);
+    }
+
+    #[test]
+    fn matches_scalar_momentum_sgd() {
+        // Against a plain FP32 reference with zero FP16 grad error.
+        let p = WuveParams { lr: 0.1, momentum: 0.9, weight_decay: 0.0 };
+        let g = 0.25f32; // exactly representable in FP16
+        let (w, m, _) = lane_update(1.0, 0.5, f16::from_f32(g), &p);
+        let want_m = 0.9 * 0.5 + 0.25;
+        assert!((m - want_m).abs() < 1e-7);
+        assert!((w - (1.0 - 0.1 * want_m)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn weight_decay_pulls_toward_zero() {
+        let p = WuveParams { lr: 0.1, momentum: 0.0, weight_decay: 0.1 };
+        let (w_pos, _, _) = lane_update(2.0, 0.0, f16::ZERO, &p);
+        assert!(w_pos < 2.0);
+        let (w_neg, _, _) = lane_update(-2.0, 0.0, f16::ZERO, &p);
+        assert!(w_neg > -2.0);
+    }
+
+    #[test]
+    fn masters_keep_precision_fp16_copy_quantizes() {
+        // Tiny update invisible in FP16 must still move the FP32 master.
+        let p = WuveParams { lr: 1e-4, momentum: 0.0, weight_decay: 0.0 };
+        let g = f16::from_f32(0.001);
+        let (w, _, c) = lane_update(1.0, 0.0, g, &p);
+        assert!(w < 1.0); // master moved
+        assert_eq!(c.to_f32(), 1.0); // FP16 copy could not represent it
+    }
+
+    #[test]
+    fn tensor_update_matches_lane_by_lane() {
+        let mut rng = Pcg32::new(11);
+        let n = 257;
+        let mut masters: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mut moms: Vec<f32> = (0..n).map(|_| rng.normal() * 0.1).collect();
+        let grads: Vec<f16> =
+            (0..n).map(|_| f16::from_f32(rng.normal() * 0.01)).collect();
+        let p = WuveParams::default();
+        let m0 = masters.clone();
+        let mo0 = moms.clone();
+        let compute = update_tensor(&mut masters, &mut moms, &grads, &p);
+        for i in [0usize, 100, 256] {
+            let (w, m, c) = lane_update(m0[i], mo0[i], grads[i], &p);
+            assert_eq!(masters[i], w);
+            assert_eq!(moms[i], m);
+            assert_eq!(compute[i], c);
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! Golden-file cross-validation against the Python reference.
+//!
+//! Two golden files emitted by `aot.py`:
+//! * `golden_nm.txt` — N:M prune masks and compact encodings; checked
+//!   against the Rust `nm` substrate bit-for-bit (tie-breaking parity).
+//! * `golden_step.txt` — losses after 1 and 3 deterministic train steps
+//!   per artifact; checked by replaying the steps through PJRT with the
+//!   same hash-pattern batches (Python↔Rust↔XLA numerical agreement).
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::nm::{CompactNm, NmPattern, PruneAxis};
+use crate::runtime::{Manifest, Runtime, TrainState};
+use crate::util::datagen;
+
+/// One parsed case from `golden_nm.txt`.
+#[derive(Debug)]
+struct NmCase {
+    pattern: NmPattern,
+    rows: usize,
+    cols: usize,
+    w: Vec<f32>,
+    mask: Vec<bool>,
+    vals: Vec<f32>,
+    idx: Vec<u8>,
+}
+
+fn parse_nm_goldens(text: &str) -> anyhow::Result<Vec<NmCase>> {
+    let mut cases: Vec<NmCase> = Vec::new();
+    for line in text.lines() {
+        let mut parts = line.split_whitespace();
+        let tag = match parts.next() {
+            Some(t) => t,
+            None => continue,
+        };
+        match tag {
+            "case" => {
+                let nums: Vec<usize> = parts
+                    .map(|p| p.parse().context("case header"))
+                    .collect::<anyhow::Result<_>>()?;
+                anyhow::ensure!(nums.len() == 4, "case needs n m rows cols");
+                cases.push(NmCase {
+                    pattern: NmPattern::new(nums[0], nums[1]),
+                    rows: nums[2],
+                    cols: nums[3],
+                    w: vec![],
+                    mask: vec![],
+                    vals: vec![],
+                    idx: vec![],
+                });
+            }
+            "w" | "vals" => {
+                let v: Vec<f32> = parts
+                    .map(|p| p.parse::<f32>().context("float"))
+                    .collect::<anyhow::Result<_>>()?;
+                let case = cases.last_mut().ok_or_else(|| anyhow!("data before case"))?;
+                if tag == "w" {
+                    case.w = v;
+                } else {
+                    case.vals = v;
+                }
+            }
+            "mask" => {
+                let case = cases.last_mut().ok_or_else(|| anyhow!("data before case"))?;
+                case.mask = parts
+                    .map(|p| Ok(p.parse::<i32>().context("mask")? != 0))
+                    .collect::<anyhow::Result<_>>()?;
+            }
+            "idx" => {
+                let case = cases.last_mut().ok_or_else(|| anyhow!("data before case"))?;
+                case.idx = parts
+                    .map(|p| p.parse::<u8>().context("idx"))
+                    .collect::<anyhow::Result<_>>()?;
+            }
+            other => bail!("unknown golden tag {other:?}"),
+        }
+    }
+    Ok(cases)
+}
+
+/// Check the Rust `nm` substrate against `golden_nm.txt`. Returns the
+/// number of cases checked.
+pub fn verify_nm(dir: &Path) -> anyhow::Result<usize> {
+    let text = std::fs::read_to_string(dir.join("golden_nm.txt"))
+        .context("reading golden_nm.txt (run `make artifacts`)")?;
+    let cases = parse_nm_goldens(&text)?;
+    anyhow::ensure!(!cases.is_empty(), "no golden cases");
+    for (i, c) in cases.iter().enumerate() {
+        let mask = crate::nm::prune_mask(&c.w, c.rows, c.cols, c.pattern, PruneAxis::Cols);
+        if mask != c.mask {
+            bail!("case {i} ({}): mask mismatch", c.pattern);
+        }
+        let enc = CompactNm::encode(&c.w, c.rows, c.cols, c.pattern);
+        if enc.values != c.vals || enc.indexes != c.idx {
+            bail!("case {i} ({}): compact mismatch", c.pattern);
+        }
+        // SORE's streaming datapath must agree too
+        let sore = crate::sim::sore::reduce_functional(&c.w, c.rows, c.cols, c.pattern);
+        if sore.values != c.vals || sore.indexes != c.idx {
+            bail!("case {i} ({}): SORE mismatch", c.pattern);
+        }
+    }
+    Ok(cases.len())
+}
+
+/// Replay `steps` deterministic golden steps of one artifact and return
+/// the losses.
+pub fn replay_golden_steps(
+    rt: &Runtime,
+    manifest: &Manifest,
+    name: &str,
+    steps: usize,
+) -> anyhow::Result<Vec<f32>> {
+    let artifact = manifest.by_name(name)?;
+    let init = manifest.load_init(artifact)?;
+    let mut ts = TrainState::create(rt, artifact, &init, false, false)?;
+    let mut losses = Vec::with_capacity(steps);
+    for s in 0..steps {
+        let (x, y) = datagen::golden_batch(
+            artifact.x_elems(),
+            artifact.batch(),
+            artifact.classes(),
+            s,
+        );
+        losses.push(ts.step(&x, &y, 0.05)?);
+    }
+    Ok(losses)
+}
+
+/// Parse `golden_step.txt` into (artifact, loss1, loss3) rows.
+pub fn parse_step_goldens(text: &str) -> anyhow::Result<Vec<(String, f32, f32)>> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let name = it.next().ok_or_else(|| anyhow!("empty golden line"))?;
+        let mut l1 = None;
+        let mut l3 = None;
+        for tok in it {
+            if let Some(v) = tok.strip_prefix("loss1=") {
+                l1 = Some(v.parse::<f32>()?);
+            } else if let Some(v) = tok.strip_prefix("loss3=") {
+                l3 = Some(v.parse::<f32>()?);
+            }
+        }
+        out.push((
+            name.to_string(),
+            l1.ok_or_else(|| anyhow!("{name}: missing loss1"))?,
+            l3.ok_or_else(|| anyhow!("{name}: missing loss3"))?,
+        ));
+    }
+    Ok(out)
+}
+
+/// Verify one artifact's golden losses through PJRT.
+pub fn verify_artifact_steps(
+    rt: &Runtime,
+    manifest: &Manifest,
+    name: &str,
+    want1: f32,
+    want3: f32,
+) -> anyhow::Result<()> {
+    let losses = replay_golden_steps(rt, manifest, name, 3)?;
+    let tol = 2e-4f32; // FP32 reassociation across XLA versions
+    anyhow::ensure!(
+        (losses[0] - want1).abs() < tol,
+        "{name}: loss1 {} vs golden {want1}",
+        losses[0]
+    );
+    anyhow::ensure!(
+        (losses[2] - want3).abs() < tol,
+        "{name}: loss3 {} vs golden {want3}",
+        losses[2]
+    );
+    Ok(())
+}
+
+/// Full verification: all nm cases + golden steps for a representative
+/// artifact subset (compiling all ten is slow; the subset covers every
+/// method and model family). Returns total checks passed.
+pub fn verify_all(artifacts_dir: &str) -> anyhow::Result<usize> {
+    let dir = Path::new(artifacts_dir);
+    let mut checks = verify_nm(dir)?;
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(dir)?;
+    let goldens = parse_step_goldens(
+        &std::fs::read_to_string(dir.join("golden_step.txt"))
+            .context("reading golden_step.txt")?,
+    )?;
+    let subset = [
+        "mlp_dense", "mlp_srste", "mlp_sdgp", "mlp_sdwp", "mlp_bdwp",
+        "cnn_bdwp", "vit_bdwp",
+    ];
+    for (name, l1, l3) in &goldens {
+        if subset.contains(&name.as_str()) {
+            verify_artifact_steps(&rt, &manifest, name, *l1, *l3)?;
+            checks += 1;
+        }
+    }
+    Ok(checks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_golden_parser() {
+        let rows = parse_step_goldens(
+            "mlp_bdwp loss1=2.113800 loss3=2.094900\nx loss1=1.0 loss3=0.5\n",
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].0, "mlp_bdwp");
+        assert!((rows[0].1 - 2.1138).abs() < 1e-6);
+        assert!(parse_step_goldens("bad line\n").is_err());
+    }
+
+    #[test]
+    fn nm_golden_parser_roundtrip() {
+        let text = "case 2 4 1 4\nw 0.5 0.25 -1.0 0.1\nmask 1 0 1 0\nvals 0.5 -1.0\nidx 0 2\n";
+        let cases = parse_nm_goldens(text).unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(cases[0].pattern, NmPattern::P2_4);
+        assert_eq!(cases[0].mask, vec![true, false, true, false]);
+        assert!(parse_nm_goldens("bogus 1 2\n").is_err());
+    }
+}

@@ -1,0 +1,157 @@
+//! Training orchestrator: drives the AOT train-step artifacts through the
+//! PJRT runtime over synthetic datasets, producing the convergence curves
+//! behind Fig. 4 / Fig. 13 / Table II (accuracy columns) and the
+//! convergence half of the TTA metric (Fig. 15).
+
+pub mod golden;
+pub mod tta;
+
+use anyhow::Context;
+
+use crate::runtime::{Manifest, Runtime, TrainState};
+use crate::util::datagen::Dataset;
+
+/// A finished training run.
+#[derive(Clone, Debug)]
+pub struct TrainCurve {
+    pub artifact: String,
+    pub method: String,
+    /// Per-step training loss.
+    pub losses: Vec<f32>,
+    /// (step, eval_loss, eval_accuracy) snapshots.
+    pub evals: Vec<(usize, f32, f32)>,
+    pub wall_seconds: f64,
+}
+
+impl TrainCurve {
+    pub fn final_loss(&self) -> f32 {
+        *self.losses.last().unwrap_or(&f32::NAN)
+    }
+
+    pub fn best_accuracy(&self) -> f32 {
+        self.evals.iter().map(|e| e.2).fold(0.0, f32::max)
+    }
+
+    /// First step at which the smoothed loss drops below `target`
+    /// (the convergence half of TTA); None if never reached.
+    pub fn steps_to_loss(&self, target: f32) -> Option<usize> {
+        let sm = crate::util::stats::ema(
+            &self.losses.iter().map(|&x| x as f64).collect::<Vec<_>>(),
+            0.1,
+        );
+        sm.iter().position(|&l| l < target as f64)
+    }
+}
+
+/// Options for one training run.
+#[derive(Clone, Debug)]
+pub struct TrainOptions {
+    pub steps: usize,
+    pub lr: f32,
+    /// Evaluate every `eval_every` steps (0 = never).
+    pub eval_every: usize,
+    /// Use the scanned K-steps-per-dispatch executable.
+    pub use_chunk: bool,
+    pub seed: u64,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions { steps: 200, lr: 0.05, eval_every: 0, use_chunk: false, seed: 1 }
+    }
+}
+
+/// The dataset a model family trains on (matches `aot.py` model specs).
+pub fn dataset_for(model: &str, samples: usize, seed: u64) -> Dataset {
+    // Noise levels tuned so the tasks are learnable but not instantly
+    // saturated — method differences (Fig. 4) need visible curves.
+    match model {
+        "mlp" => Dataset::clusters(samples, 32, 8, 1.1, seed),
+        "vit" => Dataset::clusters(samples, 16 * 64, 8, 2.2, seed),
+        "cnn" => Dataset::stripe_images(samples, 8, 8, 8, 8, 1.6, seed),
+        other => panic!("no dataset mapping for model {other:?}"),
+    }
+}
+
+/// Family-tuned learning rate (the conv stack diverges at the MLP's lr,
+/// mirroring the paper's per-model Table I hyperparameters).
+pub fn default_lr(model: &str) -> f32 {
+    match model {
+        "cnn" => 0.02,
+        _ => 0.05,
+    }
+}
+
+/// Train one artifact on its synthetic dataset.
+pub fn run_training(
+    rt: &Runtime,
+    manifest: &Manifest,
+    artifact_name: &str,
+    opts: &TrainOptions,
+) -> anyhow::Result<TrainCurve> {
+    let artifact = manifest.by_name(artifact_name)?;
+    let init = manifest.load_init(artifact)?;
+    let want_eval = opts.eval_every > 0 && artifact.eval_hlo.is_some();
+    let mut ts = TrainState::create(rt, artifact, &init, opts.use_chunk, want_eval)
+        .with_context(|| format!("compiling {artifact_name}"))?;
+
+    // One generative distribution, disjoint train/eval samples.
+    let (ds, eval_ds) =
+        dataset_for(&artifact.model, 4096 + 1024, opts.seed).split_at(4096);
+    let batch = artifact.batch();
+    let mut curve = TrainCurve {
+        artifact: artifact_name.to_string(),
+        method: artifact.method.clone(),
+        losses: Vec::with_capacity(opts.steps),
+        evals: Vec::new(),
+        wall_seconds: 0.0,
+    };
+    let t0 = std::time::Instant::now();
+    let mut step = 0usize;
+    while step < opts.steps {
+        if opts.use_chunk && opts.steps - step >= artifact.chunk_steps {
+            let k = artifact.chunk_steps;
+            let mut xs = Vec::with_capacity(k * artifact.x_elems());
+            let mut ys = Vec::with_capacity(k * batch * artifact.classes());
+            for i in 0..k {
+                let (x, y) = ds.batch((step + i) * batch, batch);
+                xs.extend_from_slice(&x);
+                ys.extend_from_slice(&y);
+            }
+            let losses = ts.step_chunk(&xs, &ys, opts.lr)?;
+            curve.losses.extend(losses);
+            step += k;
+        } else {
+            let (x, y) = ds.batch(step * batch, batch);
+            curve.losses.push(ts.step(&x, &y, opts.lr)?);
+            step += 1;
+        }
+        if want_eval && (step % opts.eval_every == 0 || step >= opts.steps) {
+            let (mut tl, mut ta) = (0.0f32, 0.0f32);
+            let nb = 4;
+            for b in 0..nb {
+                let (x, y) = eval_ds.batch(b * batch, batch);
+                let (l, a) = ts.eval(&x, &y)?;
+                tl += l;
+                ta += a;
+            }
+            curve.evals.push((step, tl / nb as f32, ta / nb as f32));
+        }
+    }
+    curve.wall_seconds = t0.elapsed().as_secs_f64();
+    Ok(curve)
+}
+
+/// Train several artifacts on the SAME data order (seeded identically) —
+/// the fair-comparison protocol of Fig. 4.
+pub fn compare_methods(
+    rt: &Runtime,
+    manifest: &Manifest,
+    artifact_names: &[&str],
+    opts: &TrainOptions,
+) -> anyhow::Result<Vec<TrainCurve>> {
+    artifact_names
+        .iter()
+        .map(|name| run_training(rt, manifest, name, opts))
+        .collect()
+}

@@ -1,0 +1,255 @@
+//! Deterministic data generation shared with the Python side.
+//!
+//! `hash_pattern` reproduces `python/compile/aot.py::hash_pattern`
+//! bit-exactly (integer Knuth hash, then one f64→f32 rounding), so golden
+//! losses computed in Python are reproducible from Rust through PJRT.
+//! Synthetic datasets for the e2e examples live here too.
+
+use crate::util::Pcg32;
+
+/// `x_i = ((i+offset) * 2654435761 mod 2^32) / 2^32 - 0.5`, as f32.
+pub fn hash_pattern(count: usize, offset: u64) -> Vec<f32> {
+    (0..count as u64)
+        .map(|i| {
+            let u = (i + offset).wrapping_mul(2_654_435_761) & 0xFFFF_FFFF;
+            (u as f64 / 4_294_967_296.0 - 0.5) as f32
+        })
+        .collect()
+}
+
+/// The deterministic golden batch of `aot.py::golden_batch`:
+/// x from `hash_pattern(_, 1000*step + 17)`, labels cycling `i % classes`.
+pub fn golden_batch(
+    x_elems: usize,
+    batch: usize,
+    classes: usize,
+    step: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let x = hash_pattern(x_elems, 1000 * step as u64 + 17);
+    let mut y = vec![0.0f32; batch * classes];
+    for b in 0..batch {
+        y[b * classes + b % classes] = 1.0;
+    }
+    (x, y)
+}
+
+/// A labelled synthetic classification dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Flattened features, `samples × feat_dim`.
+    pub x: Vec<f32>,
+    /// Labels in `0..classes`.
+    pub labels: Vec<u32>,
+    pub feat_dim: usize,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Gaussian clusters: class c centred at a random unit-ish vector,
+    /// isotropic noise. The MLP/ViT convergence workload (stand-in for
+    /// CIFAR-class separability at laptop scale — DESIGN.md §2).
+    pub fn clusters(
+        samples: usize,
+        feat_dim: usize,
+        classes: usize,
+        noise: f32,
+        seed: u64,
+    ) -> Dataset {
+        let mut rng = Pcg32::new(seed);
+        let centres: Vec<Vec<f32>> = (0..classes)
+            .map(|_| {
+                (0..feat_dim)
+                    .map(|_| rng.uniform(-1.0, 1.0))
+                    .collect()
+            })
+            .collect();
+        let mut x = Vec::with_capacity(samples * feat_dim);
+        let mut labels = Vec::with_capacity(samples);
+        for i in 0..samples {
+            let c = (i % classes) as u32;
+            labels.push(c);
+            let centre = &centres[c as usize];
+            for f in 0..feat_dim {
+                x.push(centre[f] + noise * rng.normal());
+            }
+        }
+        Dataset { x, labels, feat_dim, classes }
+    }
+
+    /// Class-dependent oriented stripe patterns + noise on a (h, w, c)
+    /// "image" grid — the CNN convergence workload: classes are only
+    /// separable through spatial structure, so the conv stack matters.
+    pub fn stripe_images(
+        samples: usize,
+        h: usize,
+        w: usize,
+        c: usize,
+        classes: usize,
+        noise: f32,
+        seed: u64,
+    ) -> Dataset {
+        let mut rng = Pcg32::new(seed);
+        let feat_dim = h * w * c;
+        let mut x = Vec::with_capacity(samples * feat_dim);
+        let mut labels = Vec::with_capacity(samples);
+        for i in 0..samples {
+            let class = (i % classes) as u32;
+            labels.push(class);
+            let angle =
+                std::f32::consts::PI * class as f32 / classes as f32;
+            let (si, co) = angle.sin_cos();
+            let phase = rng.uniform(0.0, std::f32::consts::TAU);
+            for yy in 0..h {
+                for xx in 0..w {
+                    let t = 1.3 * (co * xx as f32 + si * yy as f32) + phase;
+                    let signal = t.sin();
+                    for ch in 0..c {
+                        let chmod = 1.0 + 0.15 * ch as f32 / c as f32;
+                        x.push(signal * chmod + noise * rng.normal());
+                    }
+                }
+            }
+        }
+        Dataset { x, labels, feat_dim, classes }
+    }
+
+    /// Split into (train, eval) at sample `n` — same generative
+    /// distribution, disjoint samples.
+    pub fn split_at(self, n: usize) -> (Dataset, Dataset) {
+        assert!(n <= self.len());
+        let train = Dataset {
+            x: self.x[..n * self.feat_dim].to_vec(),
+            labels: self.labels[..n].to_vec(),
+            feat_dim: self.feat_dim,
+            classes: self.classes,
+        };
+        let eval = Dataset {
+            x: self.x[n * self.feat_dim..].to_vec(),
+            labels: self.labels[n..].to_vec(),
+            feat_dim: self.feat_dim,
+            classes: self.classes,
+        };
+        (train, eval)
+    }
+
+    /// Copy one mini-batch (wrapping) as (x, one-hot y).
+    pub fn batch(&self, start: usize, batch: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut x = Vec::with_capacity(batch * self.feat_dim);
+        let mut y = vec![0.0f32; batch * self.classes];
+        for b in 0..batch {
+            let i = (start + b) % self.len();
+            x.extend_from_slice(
+                &self.x[i * self.feat_dim..(i + 1) * self.feat_dim],
+            );
+            y[b * self.classes + self.labels[i] as usize] = 1.0;
+        }
+        (x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_pattern_matches_python_reference() {
+        // Pinned in python/tests/test_aot.py::test_hash_pattern_reference_values
+        let v = hash_pattern(4, 0);
+        let want: Vec<f32> = (0u64..4)
+            .map(|i| {
+                let u = (i * 2_654_435_761) % (1u64 << 32);
+                (u as f64 / 4_294_967_296.0 - 0.5) as f32
+            })
+            .collect();
+        assert_eq!(v, want);
+        assert_eq!(v[0], -0.5); // i=0 -> u=0 -> -0.5 exactly
+    }
+
+    #[test]
+    fn hash_pattern_offset_shifts() {
+        let a = hash_pattern(8, 3);
+        let b = hash_pattern(11, 0);
+        assert_eq!(a[..], b[3..]);
+    }
+
+    #[test]
+    fn golden_batch_shapes_and_labels() {
+        let (x, y) = golden_batch(64 * 32, 64, 8, 0);
+        assert_eq!(x.len(), 64 * 32);
+        assert_eq!(y.len(), 64 * 8);
+        for b in 0..64 {
+            let row = &y[b * 8..(b + 1) * 8];
+            assert_eq!(row.iter().sum::<f32>(), 1.0);
+            assert_eq!(row[b % 8], 1.0);
+        }
+    }
+
+    #[test]
+    fn clusters_are_separable() {
+        let ds = Dataset::clusters(400, 16, 4, 0.05, 1);
+        // nearest-centroid classification must be near-perfect at low noise
+        let mut centres = vec![vec![0.0f32; 16]; 4];
+        let mut counts = [0usize; 4];
+        for i in 0..ds.len() {
+            let c = ds.labels[i] as usize;
+            counts[c] += 1;
+            for f in 0..16 {
+                centres[c][f] += ds.x[i * 16 + f];
+            }
+        }
+        for (c, centre) in centres.iter_mut().enumerate() {
+            for v in centre.iter_mut() {
+                *v /= counts[c] as f32;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..ds.len() {
+            let mut best = (f32::INFINITY, 0);
+            for (c, centre) in centres.iter().enumerate() {
+                let d: f32 = (0..16)
+                    .map(|f| {
+                        let d = ds.x[i * 16 + f] - centre[f];
+                        d * d
+                    })
+                    .sum();
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            if best.1 as u32 == ds.labels[i] {
+                correct += 1;
+            }
+        }
+        assert!(correct as f32 / ds.len() as f32 > 0.99);
+    }
+
+    #[test]
+    fn stripes_have_spatial_structure() {
+        let ds = Dataset::stripe_images(64, 8, 8, 8, 8, 0.1, 2);
+        assert_eq!(ds.feat_dim, 8 * 8 * 8);
+        assert_eq!(ds.len(), 64);
+        // signal must not be constant across the image
+        let img = &ds.x[..ds.feat_dim];
+        let mean = img.iter().sum::<f32>() / img.len() as f32;
+        let var = img.iter().map(|v| (v - mean).powi(2)).sum::<f32>()
+            / img.len() as f32;
+        assert!(var > 0.1);
+    }
+
+    #[test]
+    fn batch_wraps_and_one_hots() {
+        let ds = Dataset::clusters(10, 4, 2, 0.1, 3);
+        let (x, y) = ds.batch(8, 4); // wraps past the end
+        assert_eq!(x.len(), 16);
+        assert_eq!(y.len(), 8);
+        assert_eq!(x[8..12], ds.x[0..4]); // sample 10 % 10 == 0
+    }
+}

@@ -1,0 +1,185 @@
+//! Software IEEE-754 binary16 (FP16).
+//!
+//! SAT computes in FP16 with FP32 accumulation (USPE: FP16 multiplier →
+//! FP16-to-FP32 switcher → FP32 adder) and WUVE keeps FP32 master weights
+//! (NVIDIA-AMP style). The simulator uses this type for data-volume
+//! accounting and to model the FP16 quantization SORE sees; convergence
+//! numerics run in FP32 through the AOT artifacts (see DESIGN.md §2).
+
+/// IEEE binary16 stored as its bit pattern.
+#[allow(non_camel_case_types)]
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct f16(pub u16);
+
+#[allow(non_camel_case_types)]
+impl f16 {
+    pub const ZERO: f16 = f16(0);
+    pub const ONE: f16 = f16(0x3C00);
+    pub const INFINITY: f16 = f16(0x7C00);
+    pub const NEG_INFINITY: f16 = f16(0xFC00);
+    /// Largest finite value (65504).
+    pub const MAX: f16 = f16(0x7BFF);
+
+    /// Round-to-nearest-even conversion from f32.
+    pub fn from_f32(x: f32) -> f16 {
+        let bits = x.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = ((bits >> 23) & 0xFF) as i32;
+        let mant = bits & 0x007F_FFFF;
+
+        if exp == 0xFF {
+            // Inf / NaN (preserve a quiet-NaN payload bit).
+            let nan = if mant != 0 { 0x0200 } else { 0 };
+            return f16(sign | 0x7C00 | nan);
+        }
+        // Re-bias 127 -> 15.
+        let unbiased = exp - 127;
+        if unbiased > 15 {
+            return f16(sign | 0x7C00); // overflow -> inf
+        }
+        if unbiased >= -14 {
+            // Normal half. Keep 10 mantissa bits, RNE on the dropped 13.
+            let mut m = mant >> 13;
+            let rest = mant & 0x1FFF;
+            if rest > 0x1000 || (rest == 0x1000 && (m & 1) == 1) {
+                m += 1;
+            }
+            let mut e = (unbiased + 15) as u32;
+            if m == 0x400 {
+                // mantissa carry
+                m = 0;
+                e += 1;
+                if e >= 31 {
+                    return f16(sign | 0x7C00);
+                }
+            }
+            return f16(sign | ((e as u16) << 10) | (m as u16));
+        }
+        // Subnormal half (or zero). Shift in the implicit bit; u64 keeps
+        // the shift (up to 37) well-defined.
+        let shift = (-14 - unbiased) as u64;
+        if shift > 24 {
+            return f16(sign); // underflow to zero
+        }
+        let full = (mant | 0x0080_0000) as u64;
+        let mut m = full >> (13 + shift);
+        let rest = full & ((1u64 << (13 + shift)) - 1);
+        let half_ulp = 1u64 << (12 + shift);
+        if rest > half_ulp || (rest == half_ulp && (m & 1) == 1) {
+            m += 1; // may carry into the normal range; encoding still valid
+        }
+        f16(sign | m as u16)
+    }
+
+    pub fn to_f32(self) -> f32 {
+        let sign = ((self.0 & 0x8000) as u32) << 16;
+        let exp = ((self.0 >> 10) & 0x1F) as u32;
+        let mant = (self.0 & 0x3FF) as u32;
+        let bits = if exp == 0x1F {
+            sign | 0x7F80_0000 | (mant << 13) // inf / nan
+        } else if exp == 0 {
+            if mant == 0 {
+                sign // zero
+            } else {
+                // subnormal: value = mant * 2^-24; normalize to 1.f * 2^e
+                let lz = mant.leading_zeros() - 21; // 10 - top_bit_pos
+                let m = (mant << lz) & 0x3FF; // strip implicit 1, align
+                let e = 113 - lz; // (10 - lz) - 24 + 127
+                sign | (e << 23) | (m << 13)
+            }
+        } else {
+            sign | ((exp + 127 - 15) << 23) | (mant << 13)
+        };
+        f32::from_bits(bits)
+    }
+
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7C00) == 0x7C00 && (self.0 & 0x3FF) != 0
+    }
+
+    /// Round-trip an f32 through FP16 (the quantization a value suffers
+    /// crossing SAT's FP16 datapath).
+    pub fn quantize(x: f32) -> f32 {
+        f16::from_f32(x).to_f32()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_values_roundtrip() {
+        for &x in &[0.0f32, 1.0, -1.0, 0.5, 2.0, -0.25, 1024.0, 65504.0] {
+            assert_eq!(f16::from_f32(x).to_f32(), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn known_bit_patterns() {
+        assert_eq!(f16::from_f32(1.0).0, 0x3C00);
+        assert_eq!(f16::from_f32(-2.0).0, 0xC000);
+        assert_eq!(f16::from_f32(65504.0).0, 0x7BFF);
+        assert_eq!(f16::from_f32(6.1035156e-5).0, 0x0400); // smallest normal
+    }
+
+    #[test]
+    fn overflow_to_inf_and_underflow_to_zero() {
+        assert_eq!(f16::from_f32(1e6), f16::INFINITY);
+        assert_eq!(f16::from_f32(-1e6), f16::NEG_INFINITY);
+        assert_eq!(f16::from_f32(1e-10).0, 0);
+        assert_eq!(f16::from_f32(-1e-10).0, 0x8000);
+    }
+
+    #[test]
+    fn nan_propagates() {
+        assert!(f16::from_f32(f32::NAN).is_nan());
+        assert!(f16::from_f32(f32::NAN).to_f32().is_nan());
+    }
+
+    #[test]
+    fn subnormals_roundtrip() {
+        // 2^-24 is the smallest positive subnormal half.
+        let tiny = 2.0f32.powi(-24);
+        assert_eq!(f16::from_f32(tiny).0, 0x0001);
+        assert_eq!(f16(0x0001).to_f32(), tiny);
+        // every subnormal pattern must roundtrip bit-exactly
+        for bits in 1u16..0x400 {
+            let h = f16(bits);
+            assert_eq!(f16::from_f32(h.to_f32()).0, bits, "bits {bits:#x}");
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10 -> even (1.0)
+        let x = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(f16::from_f32(x).0, 0x3C00);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9 -> even (1+2^-9)
+        let y = 1.0 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(f16::from_f32(y).0, 0x3C02);
+    }
+
+    #[test]
+    fn quantization_error_bounded() {
+        let mut r = crate::util::Pcg32::new(17);
+        for _ in 0..10_000 {
+            let x = r.uniform(-100.0, 100.0);
+            let q = f16::quantize(x);
+            // relative error bounded by 2^-11 for normals
+            assert!((q - x).abs() <= x.abs() * 4.9e-4 + 6e-8, "{x} -> {q}");
+        }
+    }
+
+    #[test]
+    fn all_finite_halfs_roundtrip_bitexact() {
+        for bits in 0u16..=0xFFFF {
+            let h = f16(bits);
+            if h.is_nan() {
+                continue;
+            }
+            let rt = f16::from_f32(h.to_f32());
+            assert_eq!(rt.0, bits, "bits {bits:#06x}");
+        }
+    }
+}

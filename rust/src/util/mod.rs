@@ -1,0 +1,19 @@
+//! In-repo substrate utilities.
+//!
+//! The build environment has no crates.io access beyond the vendored set
+//! (`xla`, `anyhow`), so the pieces a production crate would normally pull
+//! in — PRNG, fp16, stats, a bench harness, a property-testing kit, a
+//! tiny table formatter — are implemented here and unit-tested like any
+//! other substrate.
+
+pub mod datagen;
+pub mod half;
+pub mod prng;
+pub mod stats;
+pub mod table;
+pub mod testkit;
+pub mod timer;
+
+pub use half::f16;
+pub use prng::Pcg32;
+pub use timer::Timer;

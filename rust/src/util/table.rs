@@ -1,0 +1,159 @@
+//! Plain-text table formatter for paper-style exhibit regeneration.
+//!
+//! Every bench target prints its table/figure through this so the rows
+//! line up with the paper's and diffs are easy to eyeball.
+
+/// Column-aligned text table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str) -> Table {
+        Table { title: title.to_string(), ..Default::default() }
+    }
+
+    pub fn header(mut self, cols: &[&str]) -> Table {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self
+            .header
+            .len()
+            .max(self.rows.iter().map(|r| r.len()).max().unwrap_or(0));
+        let mut widths = vec![0usize; ncols];
+        let all = std::iter::once(&self.header).chain(self.rows.iter());
+        for row in all {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |row: &[String]| -> String {
+            row.iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+                .trim_end()
+                .to_string()
+        };
+        if !self.header.is_empty() {
+            out.push_str(&fmt_row(&self.header));
+            out.push('\n');
+            out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+            out.push('\n');
+        }
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Render a simple ASCII line chart (figures are reproduced as text
+/// series plus this sketch so the shape is visible in a terminal).
+pub fn ascii_chart(title: &str, series: &[(&str, &[f64])], width: usize, height: usize) -> String {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    let mut maxlen = 0usize;
+    for (_, ys) in series {
+        for &y in *ys {
+            if y.is_finite() {
+                lo = lo.min(y);
+                hi = hi.max(y);
+            }
+        }
+        maxlen = maxlen.max(ys.len());
+    }
+    if !lo.is_finite() || maxlen == 0 {
+        return format!("{title}: (no data)\n");
+    }
+    if (hi - lo).abs() < 1e-12 {
+        hi = lo + 1.0;
+    }
+    let marks = ['*', '+', 'o', 'x', '#', '@'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        for (i, &y) in ys.iter().enumerate() {
+            if !y.is_finite() {
+                continue;
+            }
+            let xx = if maxlen <= 1 { 0 } else { i * (width - 1) / (maxlen - 1) };
+            let yy = ((y - lo) / (hi - lo) * (height - 1) as f64).round() as usize;
+            let yy = (height - 1).saturating_sub(yy.min(height - 1));
+            grid[yy][xx] = marks[si % marks.len()];
+        }
+    }
+    let mut out = format!("-- {title} --  [{lo:.3} .. {hi:.3}]\n");
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", marks[si % marks.len()], name));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo").header(&["name", "val"]);
+        t.row_strs(&["a", "1"]);
+        t.row_strs(&["longer", "22"]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("longer  22"));
+        assert_eq!(t.n_rows(), 2);
+    }
+
+    #[test]
+    fn chart_handles_flat_and_empty() {
+        let flat = [1.0, 1.0, 1.0];
+        let s = ascii_chart("flat", &[("f", &flat)], 10, 4);
+        assert!(s.contains("flat"));
+        let e = ascii_chart("empty", &[("e", &[][..])], 10, 4);
+        assert!(e.contains("no data"));
+    }
+
+    #[test]
+    fn chart_plots_monotone_series() {
+        let ys: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let s = ascii_chart("line", &[("l", &ys)], 20, 5);
+        // first point is bottom-left-ish, last is top-right-ish
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[1].trim_end().ends_with('*')); // top row has the max
+    }
+}

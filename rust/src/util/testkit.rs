@@ -1,0 +1,126 @@
+//! Minimal property-testing kit (proptest is unavailable offline).
+//!
+//! `Gen` wraps a seeded [`Pcg32`] with convenience samplers; [`check`]
+//! runs a property over many generated cases and reports the failing seed
+//! so a failure reproduces with `PROP_SEED=<seed> cargo test`.
+
+use crate::util::Pcg32;
+
+/// Case generator handed to each property run.
+pub struct Gen {
+    rng: Pcg32,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen { rng: Pcg32::new(seed) }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        lo + self.rng.below((hi - lo + 1) as u32) as usize
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u32) as usize]
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.rng.uniform(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: usize) -> Vec<f32> {
+        self.rng.normals(len)
+    }
+
+    /// N:M patterns the paper evaluates (plus degenerate 1:M cases).
+    pub fn nm_pattern(&mut self) -> (usize, usize) {
+        *self.pick(&[(1, 4), (2, 4), (2, 8), (4, 8), (2, 16), (1, 8), (8, 16)])
+    }
+}
+
+/// Run `prop` over `cases` generated cases. Panics with the failing case
+/// seed on the first violation. Base seed overridable via `PROP_SEED`.
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen)) {
+    let base = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64 * 0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || prop(&mut g),
+        ));
+        if let Err(err) = result {
+            eprintln!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (reproduce with PROP_SEED={seed})"
+            );
+            std::panic::resume_unwind(err);
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+#[track_caller]
+pub fn assert_allclose(got: &[f32], want: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(got.len(), want.len(), "length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs();
+        assert!(
+            (g - w).abs() <= tol,
+            "index {i}: got {g}, want {w} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut count = 0;
+        check("counting", 25, |_| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_propagates_failures() {
+        check("fails", 10, |g| {
+            let x = g.usize_in(0, 100);
+            assert!(x < 101); // passes
+            assert!(x < 5, "eventually violated"); // fails for most cases
+        });
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut g = Gen::new(1);
+        for _ in 0..1000 {
+            let v = g.usize_in(3, 9);
+            assert!((3..=9).contains(&v));
+            let f = g.f32_in(-2.0, 2.0);
+            assert!((-2.0..2.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn allclose_accepts_and_rejects() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-6);
+        let r = std::panic::catch_unwind(|| {
+            assert_allclose(&[1.0], &[2.0], 1e-5, 1e-6)
+        });
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,118 @@
+//! Measurement harness (criterion is not available offline): warmup +
+//! repeated timed runs with mean/σ/percentiles, used by `cargo bench`
+//! targets and the §Perf pass.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Wall-clock timer for one-off phases.
+pub struct Timer {
+    start: Instant,
+    label: String,
+}
+
+impl Timer {
+    pub fn start(label: &str) -> Timer {
+        Timer { start: Instant::now(), label: label.to_string() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Print and return elapsed seconds.
+    pub fn report(&self) -> f64 {
+        let s = self.elapsed_s();
+        eprintln!("[timer] {}: {:.3}s", self.label, s);
+        s
+    }
+}
+
+/// Result of a repeated measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub label: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl Measurement {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean_s
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} {:>10.3} ms ±{:>7.3} (p50 {:.3}, p95 {:.3}, min {:.3}) n={}",
+            self.label,
+            self.mean_s * 1e3,
+            self.stddev_s * 1e3,
+            self.p50_s * 1e3,
+            self.p95_s * 1e3,
+            self.min_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Run `f` with warmup, then time `iters` runs. A `black_box`-style sink
+/// prevents the optimizer from deleting the body: callers return a value
+/// that gets written to a volatile-ish accumulator.
+pub fn bench<T>(label: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Measurement {
+    for _ in 0..warmup {
+        sink(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        sink(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    Measurement {
+        label: label.to_string(),
+        iters,
+        mean_s: stats::mean(&times),
+        stddev_s: stats::stddev(&times),
+        p50_s: stats::percentile(&times, 50.0),
+        p95_s: stats::percentile(&times, 95.0),
+        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Optimizer sink (std::hint::black_box wrapper kept behind one name so
+/// benches read uniformly).
+#[inline]
+pub fn sink<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let m = bench("spin", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(m.mean_s > 0.0);
+        assert!(m.min_s <= m.mean_s + 1e-12);
+        assert_eq!(m.iters, 5);
+    }
+
+    #[test]
+    fn timer_elapses() {
+        let t = Timer::start("t");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.elapsed_s() >= 0.002);
+    }
+}

@@ -1,0 +1,148 @@
+//! Integration tests across the runtime + training + simulation stack.
+//!
+//! These need `make artifacts` to have run (they are the Rust half of
+//! the Python↔Rust golden contract). Each test compiles real HLO through
+//! PJRT, so the suite is intentionally small and reuses artifacts.
+
+use sat::nm::{Method, NmPattern};
+use sat::runtime::{Manifest, Runtime, TrainState};
+use sat::train::{golden, run_training, TrainOptions};
+use sat::util::datagen;
+
+fn manifest() -> Manifest {
+    Manifest::load("artifacts").expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_covers_all_method_model_combos() {
+    let m = manifest();
+    for name in [
+        "mlp_dense", "mlp_srste", "mlp_sdgp", "mlp_sdwp", "mlp_bdwp",
+        "mlp_bdwp_pallas", "cnn_dense", "cnn_bdwp", "vit_dense", "vit_bdwp",
+    ] {
+        let a = m.by_name(name).unwrap();
+        assert!(a.hlo.exists(), "{name}: missing hlo");
+        assert!(a.chunk_hlo.exists(), "{name}: missing chunk hlo");
+        assert!(a.init.exists(), "{name}: missing init");
+        assert_eq!(a.pattern, NmPattern::P2_8);
+        let _: Method = a.method.parse().unwrap();
+    }
+}
+
+#[test]
+fn golden_nm_cases_pass() {
+    let n = golden::verify_nm(std::path::Path::new("artifacts")).unwrap();
+    assert!(n >= 6, "expected >=6 nm cases, got {n}");
+}
+
+#[test]
+fn golden_step_losses_reproduce_through_pjrt() {
+    // The core cross-language contract: python-computed losses reproduce
+    // bit-closely when the artifact is replayed from Rust.
+    let rt = Runtime::cpu().unwrap();
+    let m = manifest();
+    let goldens = golden::parse_step_goldens(
+        &std::fs::read_to_string("artifacts/golden_step.txt").unwrap(),
+    )
+    .unwrap();
+    let (name, l1, l3) = goldens
+        .iter()
+        .find(|g| g.0 == "mlp_bdwp")
+        .expect("mlp_bdwp golden");
+    golden::verify_artifact_steps(&rt, &m, name, *l1, *l3).unwrap();
+}
+
+#[test]
+fn pallas_artifact_matches_jnp_artifact() {
+    // mlp_bdwp (pure-jnp forward) and mlp_bdwp_pallas (Pallas nm_matmul
+    // forward) must produce identical training trajectories.
+    let rt = Runtime::cpu().unwrap();
+    let m = manifest();
+    let a = golden::replay_golden_steps(&rt, &m, "mlp_bdwp", 2).unwrap();
+    let b = golden::replay_golden_steps(&rt, &m, "mlp_bdwp_pallas", 2).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 1e-4, "pallas {y} vs jnp {x}");
+    }
+}
+
+#[test]
+fn chunk_path_matches_single_step_path() {
+    let rt = Runtime::cpu().unwrap();
+    let m = manifest();
+    let artifact = m.by_name("mlp_sdwp").unwrap();
+    let init = m.load_init(artifact).unwrap();
+    let k = artifact.chunk_steps;
+
+    // single-step trajectory
+    let mut single = TrainState::create(&rt, artifact, &init, false, false).unwrap();
+    let mut single_losses = Vec::new();
+    for s in 0..k {
+        let (x, y) = datagen::golden_batch(
+            artifact.x_elems(), artifact.batch(), artifact.classes(), s,
+        );
+        single_losses.push(single.step(&x, &y, 0.05).unwrap());
+    }
+
+    // chunked trajectory over the same batches
+    let mut chunked = TrainState::create(&rt, artifact, &init, true, false).unwrap();
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for s in 0..k {
+        let (x, y) = datagen::golden_batch(
+            artifact.x_elems(), artifact.batch(), artifact.classes(), s,
+        );
+        xs.extend_from_slice(&x);
+        ys.extend_from_slice(&y);
+    }
+    let chunk_losses = chunked.step_chunk(&xs, &ys, 0.05).unwrap();
+    assert_eq!(chunk_losses.len(), k);
+    for (a, b) in single_losses.iter().zip(&chunk_losses) {
+        assert!((a - b).abs() < 1e-4, "single {a} vs chunk {b}");
+    }
+}
+
+#[test]
+fn eval_artifact_reports_sane_accuracy() {
+    let rt = Runtime::cpu().unwrap();
+    let m = manifest();
+    let artifact = m.by_name("mlp_dense").unwrap();
+    let init = m.load_init(artifact).unwrap();
+    let ts = TrainState::create(&rt, artifact, &init, false, true).unwrap();
+    let ds = sat::train::dataset_for("mlp", 512, 42);
+    let (x, y) = ds.batch(0, artifact.batch());
+    let (loss, acc) = ts.eval(&x, &y).unwrap();
+    // untrained: loss in the ballpark of ln(8)≈2.08 (random logits over
+    // noisy inputs can sit well above it), accuracy near chance
+    assert!((1.0..=6.0).contains(&loss), "loss {loss}");
+    assert!((0.0..=0.5).contains(&acc), "acc {acc}");
+}
+
+#[test]
+fn training_decreases_loss_for_every_method() {
+    let rt = Runtime::cpu().unwrap();
+    let m = manifest();
+    for name in ["mlp_dense", "mlp_srste", "mlp_sdgp", "mlp_sdwp", "mlp_bdwp"] {
+        let opts = TrainOptions { steps: 30, ..Default::default() };
+        let c = run_training(&rt, &m, name, &opts).unwrap();
+        assert!(
+            c.final_loss() < c.losses[0] * 0.8,
+            "{name}: {} -> {}",
+            c.losses[0],
+            c.final_loss()
+        );
+    }
+}
+
+#[test]
+fn missing_artifact_dir_fails_cleanly() {
+    let err = Manifest::load("/nonexistent-dir").unwrap_err();
+    assert!(err.to_string().contains("make artifacts"));
+}
+
+#[test]
+fn wrong_init_size_detected() {
+    let m = manifest();
+    let mut a = m.by_name("mlp_dense").unwrap().clone();
+    a.init = m.by_name("cnn_dense").unwrap().init.clone(); // wrong model's init
+    assert!(m.load_init(&a).is_err());
+}
