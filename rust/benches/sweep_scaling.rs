@@ -1,0 +1,65 @@
+//! Sweep-engine scaling exhibit: wall-clock for a fixed 200-point grid
+//! vs. worker count, plus the determinism check (identical rows at any
+//! parallelism). This is the perf trajectory source for the sweep
+//! subsystem — run with `cargo bench --bench sweep_scaling`.
+
+use sat::coordinator::jobs::default_workers;
+use sat::coordinator::sweep::{run_sweep, SweepSpec};
+use sat::nm::{Method, NmPattern};
+use sat::util::table::Table;
+use sat::util::timer::Timer;
+
+fn grid() -> SweepSpec {
+    SweepSpec {
+        models: ["resnet9", "vit", "vgg19", "resnet18", "resnet50"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        methods: Method::ALL.to_vec(),
+        patterns: vec![NmPattern::P2_4, NmPattern::P2_8],
+        arrays: vec![(16, 16), (32, 32)],
+        bandwidths: vec![25.6, 102.4],
+        ..SweepSpec::default()
+    }
+}
+
+fn main() {
+    let avail = default_workers();
+    let mut worker_counts = vec![1usize, 2, 4, 8];
+    worker_counts.retain(|&w| w == 1 || w <= 2 * avail);
+    println!(
+        "sweep scaling: {} grid points, host reports {} workers available",
+        grid().grid_size(),
+        avail
+    );
+
+    let mut t = Table::new("sweep wall-clock vs worker count (fixed 200-point grid)")
+        .header(&["jobs", "seconds", "speedup vs 1", "points/s", "cache hits/distinct"]);
+    let mut baseline = None;
+    let mut reference_csv: Option<String> = None;
+    for &jobs in &worker_counts {
+        let spec = SweepSpec { jobs, ..grid() };
+        let timer = Timer::start(&format!("sweep jobs={jobs}"));
+        let results = run_sweep(&spec).expect("sweep runs");
+        let secs = timer.elapsed_s();
+        let base = *baseline.get_or_insert(secs);
+        // determinism: every worker count must emit identical data rows
+        let csv = results.to_csv();
+        match &reference_csv {
+            None => reference_csv = Some(csv),
+            Some(r) => assert_eq!(r, &csv, "rows diverged at jobs={jobs}"),
+        }
+        t.row(&[
+            jobs.to_string(),
+            format!("{secs:.3}"),
+            format!("{:.2}x", base / secs),
+            format!("{:.0}", results.rows.len() as f64 / secs),
+            format!(
+                "{}/{}",
+                results.meta.schedule_hits, results.meta.schedule_misses
+            ),
+        ]);
+    }
+    t.print();
+    println!("rows identical across all worker counts: OK");
+}

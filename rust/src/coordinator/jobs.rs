@@ -5,6 +5,7 @@
 //! on `std::thread` workers (tokio is not in the vendored set — and the
 //! jobs are CPU-bound anyway).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::thread;
 
@@ -52,6 +53,52 @@ where
         .enumerate()
         .map(|(i, s)| s.unwrap_or_else(|| panic!("job {i} panicked")))
         .collect()
+}
+
+/// Dynamic work-queue sibling of [`run_parallel`]: `workers` scoped
+/// threads pull the next job index from a shared atomic counter, so a
+/// handful of expensive jobs (resnet50 sims) cannot stall a statically
+/// assigned bucket while other workers sit idle. Results are returned in
+/// input order, making output independent of scheduling — the sweep
+/// engine's determinism contract. The closure is shared by reference
+/// (`Sync`), which lets callers close over caches without `Arc` plumbing.
+pub fn run_queue<T, F>(n: usize, workers: usize, job: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            let job = &job;
+            let _handle = scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // A panicking job drops its tx clone on unwind; collection
+                // below reports the hole instead of deadlocking.
+                let _ = tx.send((i, job(i)));
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        while let Ok((i, v)) = rx.recv() {
+            slots[i] = Some(v);
+        }
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| s.unwrap_or_else(|| panic!("job {i} panicked")))
+            .collect()
+    })
 }
 
 /// Reasonable default worker count.
@@ -122,5 +169,26 @@ mod tests {
     #[test]
     fn default_workers_positive() {
         assert!(default_workers() >= 1);
+    }
+
+    #[test]
+    fn run_queue_preserves_order_any_worker_count() {
+        for workers in [1usize, 2, 4, 16] {
+            let out = run_queue(50, workers, |i| i * i);
+            assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+        }
+        assert!(run_queue(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn run_queue_shares_state_through_the_closure() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let calls = AtomicUsize::new(0);
+        let out = run_queue(32, 8, |i| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            i + 1
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 32);
+        assert_eq!(out[31], 32);
     }
 }

@@ -7,6 +7,8 @@ pub mod cli;
 pub mod jobs;
 pub mod config;
 pub mod launcher;
+pub mod sweep;
 
 pub use cli::{Args, ParseError};
 pub use config::RunConfig;
+pub use sweep::{run_sweep, SweepSpec};

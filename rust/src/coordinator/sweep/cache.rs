@@ -1,0 +1,172 @@
+//! Shared RWG schedule cache.
+//!
+//! A sweep grid revisits the same (model, method, pattern) coordinates
+//! once per array/bandwidth variant; RWG scheduling is pure, so each
+//! distinct key is computed exactly once and shared across workers as an
+//! `Arc<ModelSchedule>`. The key also carries the arch fields the RWG
+//! actually reads — dataflow selection and predicted cycles depend on
+//! the array geometry — so two array variants never alias a schedule.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::arch::SatConfig;
+use crate::models::Model;
+use crate::nm::{Method, NmPattern};
+use crate::sched::{rwg_schedule, ModelSchedule};
+
+/// Everything `rwg_schedule` reads, in hashable form (`freq_mhz` via
+/// bit pattern; it does not affect scheduling today but keeping it in
+/// the key makes the cache robust to future cycle-model changes).
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct ScheduleKey {
+    pub model: String,
+    pub method: Method,
+    pub pattern: NmPattern,
+    rows: usize,
+    cols: usize,
+    lanes: usize,
+    freq_bits: u64,
+    stce_pattern: NmPattern,
+}
+
+impl ScheduleKey {
+    pub fn new(
+        model: &str,
+        method: Method,
+        pattern: NmPattern,
+        cfg: &SatConfig,
+    ) -> ScheduleKey {
+        ScheduleKey {
+            model: model.to_string(),
+            method,
+            pattern,
+            rows: cfg.rows,
+            cols: cfg.cols,
+            lanes: cfg.lanes,
+            freq_bits: cfg.freq_mhz.to_bits(),
+            stce_pattern: cfg.pattern,
+        }
+    }
+}
+
+/// Per-key slot: the map assigns ownership of a key under the mutex,
+/// but the RWG compute itself runs outside it in the slot's `OnceLock`,
+/// so workers scheduling *different* keys never serialize on each other
+/// (on an all-miss grid — the default `sat sweep` spec — that would
+/// otherwise bottleneck the whole pool on one lock).
+type Slot = Arc<OnceLock<Arc<ModelSchedule>>>;
+
+#[derive(Default)]
+struct CacheInner {
+    map: HashMap<ScheduleKey, Slot>,
+    hits: u64,
+    misses: u64,
+}
+
+/// Thread-safe once-per-key schedule store with hit accounting.
+#[derive(Default)]
+pub struct ScheduleCache {
+    inner: Mutex<CacheInner>,
+}
+
+impl ScheduleCache {
+    pub fn new() -> ScheduleCache {
+        ScheduleCache::default()
+    }
+
+    /// Return the schedule for the key, computing it on first use. The
+    /// mutex is held only to look up / create the key's slot; the
+    /// `OnceLock` guarantees exactly one `rwg_schedule` run per key
+    /// (racing threads for the *same* key block on the slot, threads on
+    /// different keys proceed concurrently).
+    pub fn get_or_compute(
+        &self,
+        model: &Model,
+        method: Method,
+        pattern: NmPattern,
+        cfg: &SatConfig,
+    ) -> Arc<ModelSchedule> {
+        let key = ScheduleKey::new(&model.name, method, pattern, cfg);
+        let slot: Slot = {
+            let mut guard = self.inner.lock().expect("schedule cache poisoned");
+            let inner = &mut *guard;
+            match inner.map.get(&key) {
+                Some(s) => {
+                    inner.hits += 1;
+                    Arc::clone(s)
+                }
+                None => {
+                    inner.misses += 1;
+                    let slot: Slot = Arc::new(OnceLock::new());
+                    inner.map.insert(key, Arc::clone(&slot));
+                    slot
+                }
+            }
+        };
+        Arc::clone(
+            slot.get_or_init(|| Arc::new(rwg_schedule(model, method, pattern, cfg))),
+        )
+    }
+
+    /// (hits, misses) so far; misses == number of distinct keys seen.
+    pub fn stats(&self) -> (u64, u64) {
+        let inner = self.inner.lock().expect("schedule cache poisoned");
+        (inner.hits, inner.misses)
+    }
+
+    /// Number of cached schedules.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("schedule cache poisoned").map.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn distinct_keys_computed_once_each() {
+        let cache = ScheduleCache::new();
+        let model = zoo::resnet9();
+        let cfg = SatConfig::paper_default();
+        for _ in 0..5 {
+            let s = cache.get_or_compute(&model, Method::Bdwp, NmPattern::P2_8, &cfg);
+            assert_eq!(s.model, "resnet9");
+        }
+        cache.get_or_compute(&model, Method::Dense, NmPattern::P2_8, &cfg);
+        let (hits, misses) = cache.stats();
+        assert_eq!(misses, 2, "two distinct keys");
+        assert_eq!(hits, 4, "four repeats of the first key");
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn array_geometry_is_part_of_the_key() {
+        let cache = ScheduleCache::new();
+        let model = zoo::resnet9();
+        let a = SatConfig::paper_default();
+        let b = SatConfig { rows: 16, cols: 16, ..a };
+        cache.get_or_compute(&model, Method::Bdwp, NmPattern::P2_8, &a);
+        cache.get_or_compute(&model, Method::Bdwp, NmPattern::P2_8, &b);
+        assert_eq!(cache.stats(), (0, 2));
+    }
+
+    #[test]
+    fn concurrent_access_still_computes_once() {
+        use crate::coordinator::jobs::run_queue;
+        let cache = ScheduleCache::new();
+        let model = zoo::resnet9();
+        let cfg = SatConfig::paper_default();
+        let totals = run_queue(16, 8, |_| {
+            cache
+                .get_or_compute(&model, Method::Bdwp, NmPattern::P2_8, &cfg)
+                .predicted_total()
+        });
+        assert!(totals.windows(2).all(|w| w[0] == w[1]));
+        let (hits, misses) = cache.stats();
+        assert_eq!(misses, 1);
+        assert_eq!(hits, 15);
+    }
+}

@@ -1,0 +1,271 @@
+//! Grid expansion: a [`SweepSpec`] names axis values; `expand` takes the
+//! Cartesian product into a flat, deterministically ordered job list.
+//!
+//! Axis nesting (outer → inner): model, method, pattern, array geometry,
+//! bandwidth. The order is part of the output contract — result rows,
+//! CSV lines and JSON entries all follow it, so two runs of the same
+//! spec are byte-comparable regardless of worker count.
+
+use anyhow::{anyhow, bail};
+
+use crate::arch::SatConfig;
+use crate::coordinator::cli::Args;
+use crate::models::zoo;
+use crate::nm::{Method, NmPattern};
+use crate::sim::memory::MemConfig;
+
+/// Declarative description of a simulation sweep.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    /// Model zoo names (`zoo::model_by_name`); validated at expansion.
+    pub models: Vec<String>,
+    pub methods: Vec<Method>,
+    pub patterns: Vec<NmPattern>,
+    /// (rows, cols) array geometries.
+    pub arrays: Vec<(usize, usize)>,
+    /// Off-chip bandwidths in GB/s.
+    pub bandwidths: Vec<f64>,
+    /// Double-buffering overlap (applied to every point).
+    pub overlap: bool,
+    /// Template for the non-swept arch knobs (lanes, frequency).
+    pub base: SatConfig,
+    /// Worker threads; 0 = [`crate::coordinator::jobs::default_workers`].
+    pub jobs: usize,
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        let base = SatConfig::paper_default();
+        SweepSpec {
+            models: vec!["resnet18".to_string()],
+            methods: Method::ALL.to_vec(),
+            patterns: vec![NmPattern::P2_4, NmPattern::P2_8],
+            arrays: vec![(base.rows, base.cols)],
+            bandwidths: vec![MemConfig::paper_default().bandwidth_gbs],
+            overlap: true,
+            base,
+            jobs: 0,
+        }
+    }
+}
+
+/// One fully-resolved grid point, ready to simulate.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    /// Position in the expanded grid (also the result-row position).
+    pub index: usize,
+    pub model: String,
+    pub method: Method,
+    pub pattern: NmPattern,
+    /// Arch config with `pattern` synced into the STCE (the bitstream
+    /// follows the requested training pattern, as `RunConfig` does).
+    pub sat: SatConfig,
+    pub mem: MemConfig,
+}
+
+impl SweepSpec {
+    /// Grid cardinality without expanding.
+    pub fn grid_size(&self) -> usize {
+        self.models.len()
+            * self.methods.len()
+            * self.patterns.len()
+            * self.arrays.len()
+            * self.bandwidths.len()
+    }
+
+    /// Expand to the ordered job list; rejects empty axes and unknown
+    /// model names up front so a sweep never fails halfway through.
+    pub fn expand(&self) -> anyhow::Result<Vec<SweepPoint>> {
+        if self.models.is_empty()
+            || self.methods.is_empty()
+            || self.patterns.is_empty()
+            || self.arrays.is_empty()
+            || self.bandwidths.is_empty()
+        {
+            bail!("sweep spec has an empty axis (models/methods/patterns/arrays/bandwidths)");
+        }
+        for name in &self.models {
+            if zoo::model_by_name(name).is_none() {
+                bail!("unknown model {name:?} in sweep spec");
+            }
+        }
+        let mut points = Vec::with_capacity(self.grid_size());
+        for model in &self.models {
+            for &method in &self.methods {
+                for &pattern in &self.patterns {
+                    for &(rows, cols) in &self.arrays {
+                        for &bw in &self.bandwidths {
+                            points.push(SweepPoint {
+                                index: points.len(),
+                                model: model.clone(),
+                                method,
+                                pattern,
+                                sat: SatConfig { rows, cols, pattern, ..self.base },
+                                mem: MemConfig {
+                                    bandwidth_gbs: bw,
+                                    overlap: self.overlap,
+                                },
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        Ok(points)
+    }
+
+    /// Build a spec from `sat sweep` CLI flags (comma-separated lists).
+    pub fn from_args(args: &Args) -> anyhow::Result<SweepSpec> {
+        let mut spec = SweepSpec::default();
+        if let Some(v) = args.get("models") {
+            spec.models = split_list(v).map(str::to_string).collect();
+        }
+        if let Some(v) = args.get("methods") {
+            spec.methods = split_list(v)
+                .map(|s| s.parse::<Method>().map_err(|e| anyhow!("--methods: {e}")))
+                .collect::<anyhow::Result<_>>()?;
+        }
+        if let Some(v) = args.get("patterns") {
+            spec.patterns = split_list(v)
+                .map(|s| s.parse::<NmPattern>().map_err(|e| anyhow!("--patterns: {e}")))
+                .collect::<anyhow::Result<_>>()?;
+        }
+        if let Some(v) = args.get("arrays") {
+            spec.arrays = parse_arrays(v)?;
+        }
+        if let Some(v) = args.get("bandwidths") {
+            spec.bandwidths = split_list(v)
+                .map(|s| {
+                    s.parse::<f64>()
+                        .map_err(|e| anyhow!("--bandwidths {s:?}: {e}"))
+                })
+                .collect::<anyhow::Result<_>>()?;
+        }
+        spec.overlap = !args.has("no-overlap");
+        spec.jobs = args.get_parse("jobs", 0usize)?;
+        Ok(spec)
+    }
+}
+
+fn split_list(s: &str) -> impl Iterator<Item = &str> {
+    s.split(',').map(str::trim).filter(|t| !t.is_empty())
+}
+
+/// Parse `"16x16,32x32"` into geometry pairs.
+pub fn parse_arrays(s: &str) -> anyhow::Result<Vec<(usize, usize)>> {
+    split_list(s)
+        .map(|tok| {
+            let (r, c) = tok
+                .split_once('x')
+                .ok_or_else(|| anyhow!("bad array {tok:?} (want e.g. 32x32)"))?;
+            let rows: usize = r.trim().parse().map_err(|e| anyhow!("array rows {r:?}: {e}"))?;
+            let cols: usize = c.trim().parse().map_err(|e| anyhow!("array cols {c:?}: {e}"))?;
+            if rows == 0 || cols == 0 {
+                bail!("array {tok:?} must be nonzero");
+            }
+            Ok((rows, cols))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expansion_order_and_count() {
+        let spec = SweepSpec {
+            models: vec!["resnet9".into(), "vit".into()],
+            methods: vec![Method::Dense, Method::Bdwp],
+            patterns: vec![NmPattern::P2_8],
+            arrays: vec![(16, 16), (32, 32)],
+            bandwidths: vec![25.6, 102.4],
+            ..SweepSpec::default()
+        };
+        assert_eq!(spec.grid_size(), 16);
+        let points = spec.expand().unwrap();
+        assert_eq!(points.len(), 16);
+        // innermost axis (bandwidth) varies fastest
+        assert_eq!(points[0].mem.bandwidth_gbs, 25.6);
+        assert_eq!(points[1].mem.bandwidth_gbs, 102.4);
+        assert_eq!(points[1].sat.rows, 16);
+        assert_eq!(points[2].sat.rows, 32);
+        // outermost axis (model) varies slowest
+        assert!(points[..8].iter().all(|p| p.model == "resnet9"));
+        assert!(points[8..].iter().all(|p| p.model == "vit"));
+        for (i, p) in points.iter().enumerate() {
+            assert_eq!(p.index, i);
+            assert_eq!(p.sat.pattern, p.pattern, "STCE pattern kept in sync");
+        }
+    }
+
+    #[test]
+    fn unknown_model_rejected_up_front() {
+        let spec = SweepSpec {
+            models: vec!["resnet18".into(), "nope".into()],
+            ..SweepSpec::default()
+        };
+        let err = spec.expand().unwrap_err().to_string();
+        assert!(err.contains("nope"), "{err}");
+    }
+
+    #[test]
+    fn empty_axis_rejected() {
+        let spec = SweepSpec { patterns: vec![], ..SweepSpec::default() };
+        assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn array_parsing() {
+        assert_eq!(parse_arrays("16x16, 32x64").unwrap(), vec![(16, 16), (32, 64)]);
+        assert!(parse_arrays("16").is_err());
+        assert!(parse_arrays("0x16").is_err());
+        assert!(parse_arrays("axb").is_err());
+    }
+
+    #[test]
+    fn from_args_parses_all_axes() {
+        let argv: Vec<String> = [
+            "sweep", "--models", "resnet9,vit", "--methods", "dense,bdwp",
+            "--patterns", "1:4,2:8", "--arrays", "16x16", "--bandwidths",
+            "25.6,102.4", "--jobs", "3", "--no-overlap",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(
+            &argv,
+            &["models", "methods", "patterns", "arrays", "bandwidths", "jobs"],
+            &["no-overlap"],
+        )
+        .unwrap();
+        let spec = SweepSpec::from_args(&args).unwrap();
+        assert_eq!(spec.models, vec!["resnet9", "vit"]);
+        assert_eq!(spec.methods, vec![Method::Dense, Method::Bdwp]);
+        assert_eq!(spec.patterns, vec![NmPattern::P1_4, NmPattern::P2_8]);
+        assert_eq!(spec.arrays, vec![(16, 16)]);
+        assert_eq!(spec.bandwidths, vec![25.6, 102.4]);
+        assert_eq!(spec.jobs, 3);
+        assert!(!spec.overlap);
+        assert_eq!(spec.grid_size(), 2 * 2 * 2 * 1 * 2);
+    }
+
+    #[test]
+    fn bad_flag_values_error() {
+        let mk = |flag: &str, val: &str| {
+            let argv: Vec<String> =
+                ["sweep", flag, val].iter().map(|s| s.to_string()).collect();
+            let args = Args::parse(
+                &argv,
+                &["models", "methods", "patterns", "arrays", "bandwidths", "jobs"],
+                &[],
+            )
+            .unwrap();
+            SweepSpec::from_args(&args)
+        };
+        assert!(mk("--methods", "zzz").is_err());
+        assert!(mk("--patterns", "9").is_err());
+        assert!(mk("--bandwidths", "fast").is_err());
+        assert!(mk("--arrays", "big").is_err());
+    }
+}

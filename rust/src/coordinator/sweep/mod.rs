@@ -1,0 +1,124 @@
+//! Batched multi-scenario simulation — the sweep engine.
+//!
+//! The paper's headline exhibits are grids (model × method × N:M pattern
+//! × array/bandwidth config — Tables II–V, Figs. 13–17), and production
+//! use of the simulator means answering "what does this grid look like"
+//! fast. This subsystem turns the single-shot `sim::engine` into a
+//! batched pipeline:
+//!
+//! 1. [`grid`] expands a declarative [`SweepSpec`] into a deterministic
+//!    job list (Cartesian product over five axes);
+//! 2. [`cache`] shares RWG schedules across grid points — scheduling is
+//!    computed once per distinct (model, method, pattern, arch) key;
+//! 3. [`crate::coordinator::jobs::run_queue`] fans the simulations over
+//!    a dynamic `std::thread` worker pool;
+//! 4. [`sink`] aggregates the [`crate::sim::engine::StepReport`]s into
+//!    JSON / CSV / table output whose data rows are byte-identical for
+//!    any worker count.
+//!
+//! Both the `sat sweep` subcommand and the `exhibits` regeneration path
+//! route through [`run_sweep`]; `benches/sweep_scaling.rs` measures the
+//! wall-clock scaling vs. worker count.
+
+pub mod cache;
+pub mod grid;
+pub mod sink;
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::jobs;
+use crate::models::{zoo, Model};
+use crate::sim::engine::simulate_step;
+
+pub use cache::{ScheduleCache, ScheduleKey};
+pub use grid::{parse_arrays, SweepPoint, SweepSpec};
+pub use sink::{PointKey, SimBank, SweepMeta, SweepResults, SweepRow};
+
+/// Expand `spec` and simulate every grid point on a worker pool.
+///
+/// Results come back in grid order and are independent of `spec.jobs`;
+/// only [`SweepMeta`] records how the run was executed.
+pub fn run_sweep(spec: &SweepSpec) -> anyhow::Result<SweepResults> {
+    run_sweep_cached(spec, &ScheduleCache::new())
+}
+
+/// Like [`run_sweep`], but sharing `schedules` across calls so related
+/// grids (e.g. the `exhibits` prewarm pair, whose specs overlap on the
+/// deployed config) never recompute a schedule for a key another grid
+/// already visited. The returned [`SweepMeta`] counts only this run's
+/// cache lookups.
+pub fn run_sweep_cached(
+    spec: &SweepSpec,
+    schedules: &ScheduleCache,
+) -> anyhow::Result<SweepResults> {
+    let points = spec.expand()?;
+    let jobs_n = if spec.jobs == 0 { jobs::default_workers() } else { spec.jobs };
+
+    // Resolve each distinct model once; grid points share the instance.
+    let mut models: HashMap<String, Arc<Model>> = HashMap::new();
+    for p in &points {
+        if !models.contains_key(&p.model) {
+            let m = zoo::model_by_name(&p.model)
+                .expect("expand() validated model names");
+            models.insert(p.model.clone(), Arc::new(m));
+        }
+    }
+
+    let (hits_before, misses_before) = schedules.stats();
+    let t0 = Instant::now();
+    let rows = {
+        let points = &points;
+        let models = &models;
+        jobs::run_queue(points.len(), jobs_n, move |i| {
+            let p = &points[i];
+            let model = &models[&p.model];
+            let schedule =
+                schedules.get_or_compute(model, p.method, p.pattern, &p.sat);
+            let report = simulate_step(model, &schedule, &p.sat, &p.mem);
+            SweepRow {
+                point: p.clone(),
+                predicted_cycles: schedule.predicted_total(),
+                report,
+            }
+        })
+    };
+    let (hits, misses) = schedules.stats();
+    Ok(SweepResults {
+        rows,
+        meta: SweepMeta {
+            jobs: jobs_n,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            schedule_hits: hits - hits_before,
+            schedule_misses: misses - misses_before,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nm::{Method, NmPattern};
+
+    #[test]
+    fn sweep_smoke_rows_align_with_grid() {
+        let spec = SweepSpec {
+            models: vec!["resnet9".into()],
+            methods: vec![Method::Dense, Method::Bdwp],
+            patterns: vec![NmPattern::P2_8],
+            jobs: 2,
+            ..SweepSpec::default()
+        };
+        let r = run_sweep(&spec).unwrap();
+        assert_eq!(r.rows.len(), spec.grid_size());
+        for (i, row) in r.rows.iter().enumerate() {
+            assert_eq!(row.point.index, i);
+            assert!(row.report.total_cycles > 0);
+            assert_eq!(row.report.model, "resnet9");
+        }
+        assert_eq!(r.rows[0].report.method, "dense");
+        assert_eq!(r.rows[r.rows.len() - 1].report.method, "bdwp");
+        assert_eq!(r.meta.jobs, 2);
+    }
+}

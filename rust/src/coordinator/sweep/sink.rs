@@ -1,0 +1,253 @@
+//! Result sink: aggregate simulated [`StepReport`]s into deterministic
+//! JSON / CSV / table renderings, plus the lookup bank the `exhibits`
+//! subcommand uses to serve report-layer queries from sweep output.
+//!
+//! Determinism contract: everything under `results` (JSON), every CSV
+//! line and every table row is a pure function of the grid point — wall
+//! clock, worker count and cache statistics live only in [`SweepMeta`],
+//! so `sat sweep --jobs 1` and `--jobs N` emit byte-identical rows.
+
+use std::collections::HashMap;
+
+use crate::arch::SatConfig;
+use crate::models::Model;
+use crate::nm::{Method, NmPattern};
+use crate::sim::engine::{simulate_method, StepReport};
+use crate::sim::memory::MemConfig;
+use crate::util::json;
+use crate::util::table::Table;
+
+use super::cache::ScheduleKey;
+use super::grid::SweepPoint;
+
+/// One completed grid point.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub point: SweepPoint,
+    /// The RWG's own cycle estimate for the scheduled stages (drift
+    /// vs. `report.total_cycles` is a scheduler-quality signal).
+    pub predicted_cycles: u64,
+    pub report: StepReport,
+}
+
+impl SweepRow {
+    pub fn batch_ms(&self) -> f64 {
+        self.report.seconds(&self.point.sat) * 1e3
+    }
+
+    pub fn runtime_gops(&self) -> f64 {
+        self.report.runtime_gops(&self.point.sat)
+    }
+
+    fn json(&self) -> String {
+        let (ff, bp, wu, other) = self.report.stage_totals();
+        json::Obj::new()
+            .field_str("model", &self.point.model)
+            .field_str("method", self.point.method.name())
+            .field_str("pattern", &self.point.pattern.to_string())
+            .field_usize("rows", self.point.sat.rows)
+            .field_usize("cols", self.point.sat.cols)
+            .field_usize("lanes", self.point.sat.lanes)
+            .field_f64("freq_mhz", self.point.sat.freq_mhz)
+            .field_f64("bandwidth_gbs", self.point.mem.bandwidth_gbs)
+            .field_bool("overlap", self.point.mem.overlap)
+            .field_u64("total_cycles", self.report.total_cycles)
+            .field_u64("predicted_stce_cycles", self.predicted_cycles)
+            .field_f64("batch_ms", self.batch_ms())
+            .field_f64("runtime_gops", self.runtime_gops())
+            .field_u64("ff_cycles", ff)
+            .field_u64("bp_cycles", bp)
+            .field_u64("wu_cycles", wu)
+            .field_u64("other_cycles", other)
+            .field_u64("dense_macs", self.report.dense_macs)
+            .field_u64("useful_macs", self.report.useful_macs)
+            .finish()
+    }
+
+    fn csv(&self) -> String {
+        let (ff, bp, wu, other) = self.report.stage_totals();
+        format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{:.6},{:.3},{},{},{},{},{},{}",
+            self.point.model,
+            self.point.method.name(),
+            self.point.pattern,
+            self.point.sat.rows,
+            self.point.sat.cols,
+            self.point.sat.lanes,
+            self.point.sat.freq_mhz,
+            self.point.mem.bandwidth_gbs,
+            self.point.mem.overlap,
+            self.report.total_cycles,
+            self.predicted_cycles,
+            self.batch_ms(),
+            self.runtime_gops(),
+            ff,
+            bp,
+            wu,
+            other,
+            self.report.dense_macs,
+            self.report.useful_macs,
+        )
+    }
+}
+
+/// Non-deterministic run metadata, kept out of the result rows.
+#[derive(Clone, Debug, Default)]
+pub struct SweepMeta {
+    pub jobs: usize,
+    pub wall_seconds: f64,
+    pub schedule_hits: u64,
+    pub schedule_misses: u64,
+}
+
+/// A finished sweep: rows in grid order plus run metadata.
+#[derive(Clone, Debug)]
+pub struct SweepResults {
+    pub rows: Vec<SweepRow>,
+    pub meta: SweepMeta,
+}
+
+pub const CSV_HEADER: &str = "model,method,pattern,rows,cols,lanes,freq_mhz,\
+bandwidth_gbs,overlap,total_cycles,predicted_stce_cycles,batch_ms,\
+runtime_gops,ff_cycles,bp_cycles,wu_cycles,other_cycles,dense_macs,\
+useful_macs";
+
+impl SweepResults {
+    /// The deterministic half of the JSON document: the `results` array.
+    pub fn rows_json(&self) -> String {
+        json::array(self.rows.iter().map(|r| r.json()))
+    }
+
+    /// Full JSON document. Timing/concurrency metadata is confined to
+    /// the `meta` object; strip or ignore it when diffing runs.
+    pub fn to_json(&self) -> String {
+        let meta = json::Obj::new()
+            .field_usize("jobs", self.meta.jobs)
+            .field_f64("wall_seconds", self.meta.wall_seconds)
+            .field_u64("schedule_hits", self.meta.schedule_hits)
+            .field_u64("schedule_misses", self.meta.schedule_misses)
+            .finish();
+        json::Obj::new()
+            .field_str("schema", "sat-sweep-v1")
+            .field_usize("grid", self.rows.len())
+            .field_raw("meta", &meta)
+            .field_raw("results", &self.rows_json())
+            .finish()
+    }
+
+    /// CSV with header; fully deterministic (no timing fields at all).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(CSV_HEADER);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.csv());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Human-oriented table for terminal runs.
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new("sweep results").header(&[
+            "model", "method", "pattern", "array", "GB/s", "cycles",
+            "ms/batch", "GOPS", "useful/dense",
+        ]);
+        for r in &self.rows {
+            t.row(&[
+                r.point.model.clone(),
+                r.point.method.name().to_string(),
+                r.point.pattern.to_string(),
+                format!("{}x{}", r.point.sat.rows, r.point.sat.cols),
+                format!("{}", r.point.mem.bandwidth_gbs),
+                r.report.total_cycles.to_string(),
+                format!("{:.2}", r.batch_ms()),
+                format!("{:.1}", r.runtime_gops()),
+                format!(
+                    "{:.3}",
+                    r.report.useful_macs as f64 / r.report.dense_macs as f64
+                ),
+            ]);
+        }
+        t
+    }
+
+    /// One-line run summary (stderr companion to the data outputs).
+    pub fn summary(&self) -> String {
+        format!(
+            "{} points in {:.2}s with {} worker(s); schedule cache {} hit(s) / {} distinct",
+            self.rows.len(),
+            self.meta.wall_seconds,
+            self.meta.jobs,
+            self.meta.schedule_hits,
+            self.meta.schedule_misses,
+        )
+    }
+}
+
+/// Hashable identity of one simulation request: the schedule-relevant
+/// coordinates (reusing [`ScheduleKey`] so arch-field coverage can
+/// never drift between the two caches) plus the memory knobs.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct PointKey {
+    sched: ScheduleKey,
+    bandwidth_bits: u64,
+    overlap: bool,
+}
+
+impl PointKey {
+    pub fn of(
+        model: &str,
+        method: Method,
+        pattern: NmPattern,
+        sat: &SatConfig,
+        mem: &MemConfig,
+    ) -> PointKey {
+        PointKey {
+            sched: ScheduleKey::new(model, method, pattern, sat),
+            bandwidth_bits: mem.bandwidth_gbs.to_bits(),
+            overlap: mem.overlap,
+        }
+    }
+}
+
+/// Lookup bank over completed sweeps: the `exhibits` subcommand pre-runs
+/// its grids through the sweep engine, then report generators pull from
+/// here (falling back to a direct simulation for off-grid points, e.g.
+/// Fig. 16's overlap-off presentation variant).
+#[derive(Default)]
+pub struct SimBank {
+    map: HashMap<PointKey, StepReport>,
+}
+
+impl SimBank {
+    pub fn absorb(&mut self, results: &SweepResults) {
+        for row in &results.rows {
+            let key = PointKey::of(
+                &row.point.model,
+                row.point.method,
+                row.point.pattern,
+                &row.point.sat,
+                &row.point.mem,
+            );
+            self.map.insert(key, row.report.clone());
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// A `report::SimFn`-compatible provider: cached report on hit,
+    /// direct simulation on miss.
+    pub fn provider(
+        &self,
+    ) -> impl FnMut(&Model, Method, NmPattern, &SatConfig, &MemConfig) -> StepReport + '_ {
+        move |model, method, pattern, sat, mem| {
+            let key = PointKey::of(&model.name, method, pattern, sat, mem);
+            match self.map.get(&key) {
+                Some(r) => r.clone(),
+                None => simulate_method(model, method, pattern, sat, mem),
+            }
+        }
+    }
+}

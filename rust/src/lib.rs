@@ -13,11 +13,25 @@
 //! * **L3** — this crate: the SAT accelerator simulator ([`sim`]), the RWG
 //!   offline scheduler ([`sched`]), the FPGA resource/power model
 //!   ([`arch`]), CPU/GPU/FPGA baselines ([`baselines`]), the PJRT runtime
-//!   that replays the AOT artifacts ([`runtime`]), and the training
-//!   orchestrator ([`train`]).
+//!   that replays the AOT artifacts ([`runtime`], behind the `pjrt`
+//!   feature), the training orchestrator ([`train`]), and the parallel
+//!   multi-scenario sweep engine ([`coordinator::sweep`]).
 //!
 //! Python never runs on a measured path: `make artifacts` lowers once and
 //! the `sat` binary is self-contained afterwards.
+//!
+//! ## Scaling out: the sweep subsystem
+//!
+//! Every headline exhibit is a *grid* of scenarios. [`coordinator::sweep`]
+//! expands a declarative [`coordinator::sweep::SweepSpec`] (models ×
+//! methods × N:M patterns × array geometries × bandwidths) into jobs,
+//! shares RWG schedules through a keyed cache so scheduling runs once per
+//! distinct (model, method, pattern, arch) tuple, executes the
+//! simulations on a dynamic `std::thread` worker pool, and sinks the
+//! [`sim::engine::StepReport`]s into deterministic JSON/CSV/table output
+//! (`sat sweep --models ... --methods ... --patterns 2:8 --jobs N`). The
+//! `exhibits` subcommand routes its sim-backed tables through the same
+//! engine.
 //!
 //! ## Quick map to the paper
 //!
@@ -31,6 +45,7 @@
 //! | Pre-generation (Fig. 11) | [`sched`] SORE placement |
 //! | RWG / offline scheduling (Fig. 12) | [`sched`] |
 //! | Tables II–V, Figs. 2,4,13–17 | `rust/benches/` (one per exhibit) |
+//! | grid evaluation protocol (§VI) | [`coordinator::sweep`] + `sat sweep` |
 
 pub mod arch;
 pub mod baselines;

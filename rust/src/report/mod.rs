@@ -7,11 +7,29 @@
 
 use crate::arch::{power, ChipResources, SatConfig};
 use crate::baselines::{fpga, roofline};
-use crate::models::{zoo, Stage};
+use crate::models::{zoo, Model, Stage};
 use crate::nm::{flops, Method, NmPattern};
-use crate::sim::engine::simulate_method;
+use crate::sim::engine::{simulate_method, StepReport};
 use crate::sim::memory::MemConfig;
 use crate::util::table::Table;
+
+/// Simulation provider for the sim-backed exhibits. The plain exhibit
+/// functions pass [`simulate_method`]; the `exhibits` subcommand passes
+/// a [`crate::coordinator::sweep::SimBank`] provider so every exhibit is
+/// served from one parallel sweep-engine pass instead of re-simulating
+/// serially per figure.
+pub type SimFn<'a> =
+    &'a mut dyn FnMut(&Model, Method, NmPattern, &SatConfig, &MemConfig) -> StepReport;
+
+fn direct_sim(
+    model: &Model,
+    method: Method,
+    pattern: NmPattern,
+    cfg: &SatConfig,
+    mem: &MemConfig,
+) -> StepReport {
+    simulate_method(model, method, pattern, cfg, mem)
+}
 
 fn fmt_e(v: f64) -> String {
     format!("{v:.3e}")
@@ -19,13 +37,18 @@ fn fmt_e(v: f64) -> String {
 
 /// Fig. 2 — MatMul share of per-batch training time.
 pub fn fig02_matmul_share() -> Table {
+    fig02_matmul_share_with(&mut direct_sim)
+}
+
+/// Fig. 2 via an injected simulation provider.
+pub fn fig02_matmul_share_with(sim: SimFn) -> Table {
     let cfg = SatConfig::paper_default();
     let mem = MemConfig::paper_default();
     let mut t = Table::new("Fig. 2 — execution-time profile (share of batch time)")
         .header(&["model", "FF mm", "BP mm", "WU mm+opt", "other", "MatMul %"]);
     for name in ["resnet18", "vgg19", "vit"] {
         let m = zoo::model_by_name(name).unwrap();
-        let r = simulate_method(&m, Method::Dense, NmPattern::P2_8, &cfg, &mem);
+        let r = sim(&m, Method::Dense, NmPattern::P2_8, &cfg, &mem);
         let (ff, bp, wu, other) = r.stage_totals();
         let total = (ff + bp + wu + other) as f64;
         let mm_frac = (ff + bp + wu) as f64 / total * 100.0;
@@ -170,6 +193,11 @@ pub fn table3_breakdown(cfg: &SatConfig) -> Table {
 
 /// Fig. 15 upper — per-batch training time by method, per model.
 pub fn fig15_batch_times() -> Table {
+    fig15_batch_times_with(&mut direct_sim)
+}
+
+/// Fig. 15 via an injected simulation provider.
+pub fn fig15_batch_times_with(sim: SimFn) -> Table {
     let cfg = SatConfig::paper_default();
     let mem = MemConfig::paper_default();
     let mut t = Table::new(
@@ -179,9 +207,8 @@ pub fn fig15_batch_times() -> Table {
     let mut speedups = Vec::new();
     for name in zoo::PAPER_MODELS {
         let m = zoo::model_by_name(name).unwrap();
-        let ms = |method| {
-            simulate_method(&m, method, NmPattern::P2_8, &cfg, &mem).seconds(&cfg)
-                * 1e3
+        let mut ms = |method| {
+            sim(&m, method, NmPattern::P2_8, &cfg, &mem).seconds(&cfg) * 1e3
         };
         let dense = ms(Method::Dense);
         let bdwp = ms(Method::Bdwp);
@@ -206,10 +233,15 @@ pub fn fig15_batch_times() -> Table {
 /// Fig. 16 — layer-wise per-batch runtime of ResNet18 2:8 BDWP (overlap
 /// disabled, as the paper notes for this figure).
 pub fn fig16_layerwise() -> Table {
+    fig16_layerwise_with(&mut direct_sim)
+}
+
+/// Fig. 16 via an injected simulation provider.
+pub fn fig16_layerwise_with(sim: SimFn) -> Table {
     let cfg = SatConfig::paper_default();
     let mem = MemConfig { bandwidth_gbs: 25.6, overlap: false };
     let model = zoo::resnet18();
-    let r = simulate_method(&model, Method::Bdwp, NmPattern::P2_8, &cfg, &mem);
+    let r = sim(&model, Method::Bdwp, NmPattern::P2_8, &cfg, &mem);
     let mut t = Table::new(
         "Fig. 16 — ResNet18 2:8 BDWP layer-wise time per batch (ms, no overlap)",
     )
@@ -231,6 +263,11 @@ pub fn fig16_layerwise() -> Table {
 
 /// Table IV — SAT vs CPU/GPU.
 pub fn table4_cpu_gpu() -> Table {
+    table4_cpu_gpu_with(&mut direct_sim)
+}
+
+/// Table IV via an injected simulation provider.
+pub fn table4_cpu_gpu_with(sim: SimFn) -> Table {
     let cfg = SatConfig::paper_default();
     let mem = MemConfig::paper_default();
     let chip = ChipResources::model(&cfg);
@@ -250,10 +287,9 @@ pub fn table4_cpu_gpu() -> Table {
             format!("{ee:.2}"),
         ]);
     }
-    let dense = simulate_method(&model, Method::Dense, NmPattern::P2_8, &cfg, &mem);
-    let bdwp = simulate_method(&model, Method::Bdwp, NmPattern::P2_8, &cfg, &mem);
-    let steps_per_epoch = 1; // single batch latency, as the paper reports
-    let _ = steps_per_epoch;
+    // Latencies are single-batch, as the paper reports them.
+    let dense = sim(&model, Method::Dense, NmPattern::P2_8, &cfg, &mem);
+    let bdwp = sim(&model, Method::Bdwp, NmPattern::P2_8, &cfg, &mem);
     let d_g = dense.runtime_gops(&cfg);
     let s_g = bdwp.runtime_gops(&cfg);
     let pw_d = power::power_w(&chip, power::Mode::Dense, cfg.freq_mhz);
@@ -284,17 +320,27 @@ pub fn table4_cpu_gpu() -> Table {
 
 /// Fig. 17 — throughput scaling with array size × off-chip bandwidth.
 pub fn fig17_scaling() -> Table {
+    fig17_scaling_with(&mut direct_sim)
+}
+
+/// The array sizes and bandwidths Fig. 17 sweeps (shared with the
+/// `exhibits` pre-simulation grid so the sweep engine covers them).
+pub const FIG17_ARRAYS: [usize; 4] = [16, 32, 48, 64];
+pub const FIG17_BANDWIDTHS: [f64; 3] = [25.6, 102.4, 409.6];
+
+/// Fig. 17 via an injected simulation provider.
+pub fn fig17_scaling_with(sim: SimFn) -> Table {
     let mut t = Table::new(
         "Fig. 17 — ResNet18 2:8 BDWP runtime throughput (GOPS) vs array size and BW",
     )
     .header(&["array", "25.6 GB/s", "102.4 GB/s", "409.6 GB/s"]);
     let model = zoo::resnet18();
-    for size in [16usize, 32, 48, 64] {
+    for size in FIG17_ARRAYS {
         let cfg = SatConfig { rows: size, cols: size, ..SatConfig::paper_default() };
         let mut cells = vec![format!("{size}x{size}")];
-        for bw in [25.6, 102.4, 409.6] {
+        for bw in FIG17_BANDWIDTHS {
             let mem = MemConfig { bandwidth_gbs: bw, overlap: true };
-            let r = simulate_method(&model, Method::Bdwp, NmPattern::P2_8, &cfg, &mem);
+            let r = sim(&model, Method::Bdwp, NmPattern::P2_8, &cfg, &mem);
             cells.push(format!("{:.0}", r.runtime_gops(&cfg)));
         }
         t.row(&cells);
@@ -304,12 +350,17 @@ pub fn fig17_scaling() -> Table {
 
 /// Table V — SAT vs prior FPGA training accelerators.
 pub fn table5_fpga() -> Table {
+    table5_fpga_with(&mut direct_sim)
+}
+
+/// Table V via an injected simulation provider.
+pub fn table5_fpga_with(sim: SimFn) -> Table {
     let cfg = SatConfig::paper_default();
     let mem = MemConfig::paper_default();
     let chip = ChipResources::model(&cfg);
     let model = zoo::resnet18();
-    let dense = simulate_method(&model, Method::Dense, NmPattern::P2_8, &cfg, &mem);
-    let bdwp = simulate_method(&model, Method::Bdwp, NmPattern::P2_8, &cfg, &mem);
+    let dense = sim(&model, Method::Dense, NmPattern::P2_8, &cfg, &mem);
+    let bdwp = sim(&model, Method::Bdwp, NmPattern::P2_8, &cfg, &mem);
     let sat_gops = 0.5 * (dense.runtime_gops(&cfg) + bdwp.runtime_gops(&cfg));
     let sat_w = power::power_avg_w(&chip, cfg.freq_mhz);
     let sat_ee = sat_gops / sat_w;
@@ -399,6 +450,26 @@ mod tests {
         assert!(table5_fpga().n_rows() == 13);
         assert!(matmul_inventory("vit").is_some());
         assert!(matmul_inventory("nope").is_none());
+    }
+
+    #[test]
+    fn injected_provider_matches_direct_simulation() {
+        // A counting pass-through provider must reproduce the default
+        // renderings exactly — the `exhibits` sweep routing depends on it.
+        let mut calls = 0usize;
+        let mut counting = |m: &Model,
+                            method: Method,
+                            p: NmPattern,
+                            cfg: &SatConfig,
+                            mem: &MemConfig| {
+            calls += 1;
+            simulate_method(m, method, p, cfg, mem)
+        };
+        let a = fig15_batch_times_with(&mut counting).render();
+        assert_eq!(a, fig15_batch_times().render());
+        assert_eq!(calls, 5 * 5, "five models x five methods");
+        let b = fig17_scaling_with(&mut counting).render();
+        assert_eq!(b, fig17_scaling().render());
     }
 
     #[test]

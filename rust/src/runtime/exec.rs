@@ -1,197 +1,279 @@
 //! PJRT execution: compile artifacts once, hold training state, step.
+//!
+//! The real implementation rides the vendored `xla` crate and is gated
+//! behind the `pjrt` cargo feature (the crate is not on crates.io, so a
+//! fresh clone builds the stub below instead). The stub exposes the same
+//! `Runtime`/`TrainState` surface and fails cleanly at run time, which
+//! keeps every analytical path — simulator, scheduler, sweep engine,
+//! exhibits — buildable and testable without the PJRT toolchain.
 
-use anyhow::{anyhow, Context};
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+#[cfg(feature = "pjrt")]
+mod real {
+    use anyhow::{anyhow, Context};
+    use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
-use crate::runtime::artifact::Artifact;
+    use crate::runtime::artifact::Artifact;
 
-/// A CPU PJRT client plus compiled-executable cache helpers.
-pub struct Runtime {
-    client: PjRtClient,
-}
-
-impl Runtime {
-    pub fn cpu() -> anyhow::Result<Runtime> {
-        Ok(Runtime { client: PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))? })
+    /// A CPU PJRT client plus compiled-executable cache helpers.
+    pub struct Runtime {
+        client: PjRtClient,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load HLO text and compile it for this client.
-    pub fn compile_file(
-        &self,
-        path: &std::path::Path,
-    ) -> anyhow::Result<PjRtLoadedExecutable> {
-        let proto = HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
-        let comp = XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))
-    }
-}
-
-fn lit_from_f32(data: &[f32], shape: &[usize]) -> anyhow::Result<Literal> {
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Literal::vec1(data)
-        .reshape(&dims)
-        .map_err(|e| anyhow!("reshape to {shape:?}: {e:?}"))
-}
-
-fn scalar_f32(lit: &Literal) -> anyhow::Result<f32> {
-    lit.get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))
-}
-
-/// Live training state for one artifact: compiled step/chunk/eval
-/// executables plus the current parameter and momentum literals.
-pub struct TrainState {
-    pub artifact: Artifact,
-    step_exe: PjRtLoadedExecutable,
-    chunk_exe: Option<PjRtLoadedExecutable>,
-    eval_exe: Option<PjRtLoadedExecutable>,
-    /// Current params then momentums, as literals ready to feed back.
-    state: Vec<Literal>,
-    pub steps_taken: usize,
-}
-
-impl TrainState {
-    /// Compile the artifact and initialize state from its init bin.
-    /// `with_chunk`/`with_eval` control compiling the companions (compile
-    /// time on CPU is nontrivial; benches opt in to what they need).
-    pub fn create(
-        rt: &Runtime,
-        artifact: &Artifact,
-        init: &[Vec<f32>],
-        with_chunk: bool,
-        with_eval: bool,
-    ) -> anyhow::Result<TrainState> {
-        let step_exe = rt.compile_file(&artifact.hlo)?;
-        let chunk_exe = if with_chunk {
-            Some(rt.compile_file(&artifact.chunk_hlo)?)
-        } else {
-            None
-        };
-        let eval_exe = match (&artifact.eval_hlo, with_eval) {
-            (Some(p), true) => Some(rt.compile_file(p)?),
-            _ => None,
-        };
-        let mut state = Vec::with_capacity(2 * artifact.nparams());
-        for (data, shape) in init.iter().zip(&artifact.param_shapes) {
-            state.push(lit_from_f32(data, shape)?);
+    impl Runtime {
+        pub fn cpu() -> anyhow::Result<Runtime> {
+            Ok(Runtime { client: PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))? })
         }
-        for (data, shape) in init.iter().zip(&artifact.param_shapes) {
-            let zeros = vec![0.0f32; data.len()];
-            state.push(lit_from_f32(&zeros, shape)?);
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
         }
-        Ok(TrainState {
-            artifact: artifact.clone(),
-            step_exe,
-            chunk_exe,
-            eval_exe,
-            state,
-            steps_taken: 0,
-        })
+
+        /// Load HLO text and compile it for this client.
+        pub fn compile_file(
+            &self,
+            path: &std::path::Path,
+        ) -> anyhow::Result<PjRtLoadedExecutable> {
+            let proto = HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = XlaComputation::from_proto(&proto);
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))
+        }
     }
 
-    /// One training step; returns the loss.
-    pub fn step(&mut self, x: &[f32], y: &[f32], lr: f32) -> anyhow::Result<f32> {
-        let mut args: Vec<&Literal> = self.state.iter().collect();
-        let xl = lit_from_f32(x, &self.artifact.x_shape)?;
-        let yl = lit_from_f32(y, &self.artifact.y_shape)?;
-        let lrl = Literal::scalar(lr);
-        args.push(&xl);
-        args.push(&yl);
-        args.push(&lrl);
-        let result = self
-            .step_exe
-            .execute::<&Literal>(&args)
-            .map_err(|e| anyhow!("step execute: {e:?}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let mut outs = tuple.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
-        let np = self.artifact.nparams();
-        anyhow::ensure!(
-            outs.len() == 2 * np + 1,
-            "expected {} outputs, got {}",
-            2 * np + 1,
-            outs.len()
-        );
-        let loss = scalar_f32(&outs[2 * np])?;
-        outs.truncate(2 * np);
-        self.state = outs;
-        self.steps_taken += 1;
-        Ok(loss)
+    fn lit_from_f32(data: &[f32], shape: &[usize]) -> anyhow::Result<Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape to {shape:?}: {e:?}"))
     }
 
-    /// `chunk_steps` training steps in ONE PJRT dispatch (lax.scan inside
-    /// the artifact); `xs`/`ys` are the stacked batches. Returns losses.
-    pub fn step_chunk(&mut self, xs: &[f32], ys: &[f32], lr: f32) -> anyhow::Result<Vec<f32>> {
-        let k = self.artifact.chunk_steps;
-        let exe = self
-            .chunk_exe
-            .as_ref()
-            .ok_or_else(|| anyhow!("chunk executable not compiled"))?;
-        let mut xshape = vec![k];
-        xshape.extend(&self.artifact.x_shape);
-        let mut yshape = vec![k];
-        yshape.extend(&self.artifact.y_shape);
-        let mut args: Vec<&Literal> = self.state.iter().collect();
-        let xl = lit_from_f32(xs, &xshape)?;
-        let yl = lit_from_f32(ys, &yshape)?;
-        let lrl = Literal::scalar(lr);
-        args.push(&xl);
-        args.push(&yl);
-        args.push(&lrl);
-        let result = exe
-            .execute::<&Literal>(&args)
-            .map_err(|e| anyhow!("chunk execute: {e:?}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let mut outs = tuple.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
-        let np = self.artifact.nparams();
-        let losses = outs[2 * np].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-        outs.truncate(2 * np);
-        self.state = outs;
-        self.steps_taken += k;
-        Ok(losses)
+    fn scalar_f32(lit: &Literal) -> anyhow::Result<f32> {
+        lit.get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))
     }
 
-    /// Evaluate (loss, accuracy) on one batch with the method's
-    /// inference forward.
-    pub fn eval(&self, x: &[f32], y: &[f32]) -> anyhow::Result<(f32, f32)> {
-        let exe = self
-            .eval_exe
-            .as_ref()
-            .ok_or_else(|| anyhow!("eval executable not compiled"))?;
-        let np = self.artifact.nparams();
-        let mut args: Vec<&Literal> = self.state[..np].iter().collect();
-        let xl = lit_from_f32(x, &self.artifact.x_shape)?;
-        let yl = lit_from_f32(y, &self.artifact.y_shape)?;
-        args.push(&xl);
-        args.push(&yl);
-        let result = exe
-            .execute::<&Literal>(&args)
-            .map_err(|e| anyhow!("eval execute: {e:?}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let outs = tuple.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
-        let loss = scalar_f32(&outs[0])?;
-        let correct = scalar_f32(&outs[1])?;
-        Ok((loss, correct / self.artifact.batch() as f32))
+    /// Live training state for one artifact: compiled step/chunk/eval
+    /// executables plus the current parameter and momentum literals.
+    pub struct TrainState {
+        pub artifact: Artifact,
+        step_exe: PjRtLoadedExecutable,
+        chunk_exe: Option<PjRtLoadedExecutable>,
+        eval_exe: Option<PjRtLoadedExecutable>,
+        /// Current params then momentums, as literals ready to feed back.
+        state: Vec<Literal>,
+        pub steps_taken: usize,
     }
 
-    /// Copy the current master parameters back to host vectors.
-    pub fn params(&self) -> anyhow::Result<Vec<Vec<f32>>> {
-        self.state[..self.artifact.nparams()]
-            .iter()
-            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("{e:?}")))
-            .collect()
+    impl TrainState {
+        /// Compile the artifact and initialize state from its init bin.
+        /// `with_chunk`/`with_eval` control compiling the companions (compile
+        /// time on CPU is nontrivial; benches opt in to what they need).
+        pub fn create(
+            rt: &Runtime,
+            artifact: &Artifact,
+            init: &[Vec<f32>],
+            with_chunk: bool,
+            with_eval: bool,
+        ) -> anyhow::Result<TrainState> {
+            let step_exe = rt.compile_file(&artifact.hlo)?;
+            let chunk_exe = if with_chunk {
+                Some(rt.compile_file(&artifact.chunk_hlo)?)
+            } else {
+                None
+            };
+            let eval_exe = match (&artifact.eval_hlo, with_eval) {
+                (Some(p), true) => Some(rt.compile_file(p)?),
+                _ => None,
+            };
+            let mut state = Vec::with_capacity(2 * artifact.nparams());
+            for (data, shape) in init.iter().zip(&artifact.param_shapes) {
+                state.push(lit_from_f32(data, shape)?);
+            }
+            for (data, shape) in init.iter().zip(&artifact.param_shapes) {
+                let zeros = vec![0.0f32; data.len()];
+                state.push(lit_from_f32(&zeros, shape)?);
+            }
+            Ok(TrainState {
+                artifact: artifact.clone(),
+                step_exe,
+                chunk_exe,
+                eval_exe,
+                state,
+                steps_taken: 0,
+            })
+        }
+
+        /// One training step; returns the loss.
+        pub fn step(&mut self, x: &[f32], y: &[f32], lr: f32) -> anyhow::Result<f32> {
+            let mut args: Vec<&Literal> = self.state.iter().collect();
+            let xl = lit_from_f32(x, &self.artifact.x_shape)?;
+            let yl = lit_from_f32(y, &self.artifact.y_shape)?;
+            let lrl = Literal::scalar(lr);
+            args.push(&xl);
+            args.push(&yl);
+            args.push(&lrl);
+            let result = self
+                .step_exe
+                .execute::<&Literal>(&args)
+                .map_err(|e| anyhow!("step execute: {e:?}"))?;
+            let tuple = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let mut outs = tuple.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+            let np = self.artifact.nparams();
+            anyhow::ensure!(
+                outs.len() == 2 * np + 1,
+                "expected {} outputs, got {}",
+                2 * np + 1,
+                outs.len()
+            );
+            let loss = scalar_f32(&outs[2 * np])?;
+            outs.truncate(2 * np);
+            self.state = outs;
+            self.steps_taken += 1;
+            Ok(loss)
+        }
+
+        /// `chunk_steps` training steps in ONE PJRT dispatch (lax.scan inside
+        /// the artifact); `xs`/`ys` are the stacked batches. Returns losses.
+        pub fn step_chunk(&mut self, xs: &[f32], ys: &[f32], lr: f32) -> anyhow::Result<Vec<f32>> {
+            let k = self.artifact.chunk_steps;
+            let exe = self
+                .chunk_exe
+                .as_ref()
+                .ok_or_else(|| anyhow!("chunk executable not compiled"))?;
+            let mut xshape = vec![k];
+            xshape.extend(&self.artifact.x_shape);
+            let mut yshape = vec![k];
+            yshape.extend(&self.artifact.y_shape);
+            let mut args: Vec<&Literal> = self.state.iter().collect();
+            let xl = lit_from_f32(xs, &xshape)?;
+            let yl = lit_from_f32(ys, &yshape)?;
+            let lrl = Literal::scalar(lr);
+            args.push(&xl);
+            args.push(&yl);
+            args.push(&lrl);
+            let result = exe
+                .execute::<&Literal>(&args)
+                .map_err(|e| anyhow!("chunk execute: {e:?}"))?;
+            let tuple = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let mut outs = tuple.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+            let np = self.artifact.nparams();
+            let losses = outs[2 * np].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+            outs.truncate(2 * np);
+            self.state = outs;
+            self.steps_taken += k;
+            Ok(losses)
+        }
+
+        /// Evaluate (loss, accuracy) on one batch with the method's
+        /// inference forward.
+        pub fn eval(&self, x: &[f32], y: &[f32]) -> anyhow::Result<(f32, f32)> {
+            let exe = self
+                .eval_exe
+                .as_ref()
+                .ok_or_else(|| anyhow!("eval executable not compiled"))?;
+            let np = self.artifact.nparams();
+            let mut args: Vec<&Literal> = self.state[..np].iter().collect();
+            let xl = lit_from_f32(x, &self.artifact.x_shape)?;
+            let yl = lit_from_f32(y, &self.artifact.y_shape)?;
+            args.push(&xl);
+            args.push(&yl);
+            let result = exe
+                .execute::<&Literal>(&args)
+                .map_err(|e| anyhow!("eval execute: {e:?}"))?;
+            let tuple = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let outs = tuple.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+            let loss = scalar_f32(&outs[0])?;
+            let correct = scalar_f32(&outs[1])?;
+            Ok((loss, correct / self.artifact.batch() as f32))
+        }
+
+        /// Copy the current master parameters back to host vectors.
+        pub fn params(&self) -> anyhow::Result<Vec<Vec<f32>>> {
+            self.state[..self.artifact.nparams()]
+                .iter()
+                .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("{e:?}")))
+                .collect()
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use real::{Runtime, TrainState};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use anyhow::bail;
+
+    use crate::runtime::artifact::Artifact;
+
+    const NO_PJRT: &str = "built without the `pjrt` feature: the vendored \
+        `xla` crate is unavailable in this environment; analytical paths \
+        (sim/sched/sweep/exhibits) are unaffected";
+
+    /// Stub PJRT client: same surface as the real one, fails at run time.
+    pub struct Runtime {
+        _priv: (),
+    }
+
+    impl Runtime {
+        pub fn cpu() -> anyhow::Result<Runtime> {
+            bail!(NO_PJRT)
+        }
+
+        pub fn platform(&self) -> String {
+            "stub (no pjrt)".to_string()
+        }
+    }
+
+    /// Stub training state; `create` always fails, so the accessor
+    /// methods below are unreachable but keep call sites compiling.
+    pub struct TrainState {
+        pub artifact: Artifact,
+        pub steps_taken: usize,
+    }
+
+    impl TrainState {
+        pub fn create(
+            _rt: &Runtime,
+            _artifact: &Artifact,
+            _init: &[Vec<f32>],
+            _with_chunk: bool,
+            _with_eval: bool,
+        ) -> anyhow::Result<TrainState> {
+            bail!(NO_PJRT)
+        }
+
+        pub fn step(&mut self, _x: &[f32], _y: &[f32], _lr: f32) -> anyhow::Result<f32> {
+            bail!(NO_PJRT)
+        }
+
+        pub fn step_chunk(
+            &mut self,
+            _xs: &[f32],
+            _ys: &[f32],
+            _lr: f32,
+        ) -> anyhow::Result<Vec<f32>> {
+            bail!(NO_PJRT)
+        }
+
+        pub fn eval(&self, _x: &[f32], _y: &[f32]) -> anyhow::Result<(f32, f32)> {
+            bail!(NO_PJRT)
+        }
+
+        pub fn params(&self) -> anyhow::Result<Vec<Vec<f32>>> {
+            bail!(NO_PJRT)
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Runtime, TrainState};

@@ -6,6 +6,11 @@
 //!
 //! Nothing here imports Python: after `make artifacts`, the `sat` binary
 //! is self-contained on the request path.
+//!
+//! The execution half ([`exec`]) requires the vendored `xla` crate and is
+//! gated behind the `pjrt` cargo feature; without it a stub with the same
+//! surface is compiled (see `exec` docs), and only the artifact/manifest
+//! layer is functional.
 
 pub mod artifact;
 pub mod exec;

@@ -47,6 +47,17 @@ impl ModelSchedule {
     pub fn for_layer(&self, layer_index: usize) -> Option<&LayerSchedule> {
         self.layers.iter().find(|l| l.layer_index == layer_index)
     }
+
+    /// Sum of the RWG's predicted STCE cycles over every scheduled stage —
+    /// the scheduler's own estimate of the MatMul critical path, reported
+    /// next to the simulated total by the sweep sink so prediction drift
+    /// is visible per grid point.
+    pub fn predicted_total(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.stages.iter().map(|s| s.predicted_cycles).sum::<u64>())
+            .sum()
+    }
 }
 
 /// Run the RWG over a model (Fig. 12 flow).
@@ -210,6 +221,19 @@ mod tests {
         let ws = matmul_cycles(&mm, l.stages[0].sparse, Dataflow::WS, &cfg, true);
         let os = matmul_cycles(&mm, l.stages[0].sparse, Dataflow::OS, &cfg, true);
         assert_eq!(l.stages[0].predicted_cycles, ws.cycles.min(os.cycles));
+    }
+
+    #[test]
+    fn predicted_total_sums_all_stages() {
+        let s = sched(Method::Bdwp);
+        let manual: u64 = s
+            .layers
+            .iter()
+            .flat_map(|l| l.stages.iter())
+            .map(|sc| sc.predicted_cycles)
+            .sum();
+        assert_eq!(s.predicted_total(), manual);
+        assert!(s.predicted_total() > 0);
     }
 
     #[test]

@@ -13,7 +13,11 @@ use crate::sim::stce::{matmul_cycles, useful_macs};
 use crate::sim::{sore, wuve};
 
 /// Per-layer cycle breakdown of one training iteration.
-#[derive(Clone, Debug, Default)]
+///
+/// `PartialEq`/`Eq` because the sweep engine's determinism contract is
+/// "identical reports regardless of worker count", and tests assert it
+/// structurally rather than via rendered output.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct LayerTime {
     pub name: String,
     /// STCE cycles (incl. memory per the overlap policy) per stage.
@@ -36,7 +40,7 @@ impl LayerTime {
 }
 
 /// Whole-step result.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct StepReport {
     pub model: String,
     pub method: String,

@@ -1,0 +1,156 @@
+//! Minimal JSON emission (serde is not in the vendored set).
+//!
+//! The sweep result sink needs deterministic, machine-readable output:
+//! field order follows insertion order, floats use Rust's shortest
+//! round-trip `Display`, and non-finite floats serialize as `null`, so
+//! the same grid always serializes to the same bytes regardless of
+//! worker count or platform.
+
+use std::fmt::Write as _;
+
+/// Quote and escape a string per RFC 8259.
+pub fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Serialize a float: shortest round-trip decimal, `null` if non-finite.
+pub fn number(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Insertion-ordered JSON object builder.
+#[derive(Clone, Debug)]
+pub struct Obj {
+    buf: String,
+}
+
+impl Obj {
+    pub fn new() -> Obj {
+        Obj { buf: String::from("{") }
+    }
+
+    fn key(&mut self, k: &str) {
+        if self.buf.len() > 1 {
+            self.buf.push(',');
+        }
+        self.buf.push_str(&quote(k));
+        self.buf.push(':');
+    }
+
+    pub fn field_str(mut self, k: &str, v: &str) -> Obj {
+        self.key(k);
+        self.buf.push_str(&quote(v));
+        self
+    }
+
+    pub fn field_u64(mut self, k: &str, v: u64) -> Obj {
+        self.key(k);
+        let _ = write!(self.buf, "{v}");
+        self
+    }
+
+    pub fn field_usize(self, k: &str, v: usize) -> Obj {
+        self.field_u64(k, v as u64)
+    }
+
+    pub fn field_f64(mut self, k: &str, v: f64) -> Obj {
+        self.key(k);
+        self.buf.push_str(&number(v));
+        self
+    }
+
+    pub fn field_bool(mut self, k: &str, v: bool) -> Obj {
+        self.key(k);
+        self.buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    /// Insert pre-serialized JSON (an array or nested object) verbatim.
+    pub fn field_raw(mut self, k: &str, v: &str) -> Obj {
+        self.key(k);
+        self.buf.push_str(v);
+        self
+    }
+
+    pub fn finish(mut self) -> String {
+        self.buf.push('}');
+        self.buf
+    }
+}
+
+/// Join pre-serialized JSON values into an array.
+pub fn array<I: IntoIterator<Item = String>>(items: I) -> String {
+    let mut out = String::from("[");
+    for (i, item) in items.into_iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&item);
+    }
+    out.push(']');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quoting_escapes_specials() {
+        assert_eq!(quote("plain"), "\"plain\"");
+        assert_eq!(quote("a\"b\\c"), "\"a\\\"b\\\\c\"");
+        assert_eq!(quote("line\nbreak\ttab"), "\"line\\nbreak\\ttab\"");
+        assert_eq!(quote("\u{1}"), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn numbers_are_shortest_roundtrip() {
+        assert_eq!(number(25.6), "25.6");
+        assert_eq!(number(200.0), "200");
+        assert_eq!(number(f64::NAN), "null");
+        assert_eq!(number(f64::INFINITY), "null");
+    }
+
+    #[test]
+    fn object_builder_preserves_order() {
+        let s = Obj::new()
+            .field_str("model", "resnet18")
+            .field_u64("cycles", 42)
+            .field_f64("bw", 25.6)
+            .field_bool("overlap", true)
+            .field_raw("inner", "[1,2]")
+            .finish();
+        assert_eq!(
+            s,
+            "{\"model\":\"resnet18\",\"cycles\":42,\"bw\":25.6,\
+             \"overlap\":true,\"inner\":[1,2]}"
+        );
+    }
+
+    #[test]
+    fn empty_object_and_array() {
+        assert_eq!(Obj::new().finish(), "{}");
+        assert_eq!(array(Vec::<String>::new()), "[]");
+        assert_eq!(array(vec!["1".to_string(), "2".to_string()]), "[1,2]");
+    }
+}

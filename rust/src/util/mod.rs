@@ -8,6 +8,7 @@
 
 pub mod datagen;
 pub mod half;
+pub mod json;
 pub mod prng;
 pub mod stats;
 pub mod table;

@@ -1,13 +1,44 @@
 //! Integration tests across the runtime + training + simulation stack.
 //!
 //! These need `make artifacts` to have run (they are the Rust half of
-//! the Python↔Rust golden contract). Each test compiles real HLO through
+//! the Python↔Rust golden contract) and a build with the `pjrt` feature
+//! (the vendored `xla` crate). Each test compiles real HLO through
 //! PJRT, so the suite is intentionally small and reuses artifacts.
+//!
+//! Tier-1 CI runs from a fresh clone with neither artifacts nor PJRT:
+//! every test that depends on them skips itself with a note instead of
+//! failing, so the golden contract is enforced exactly where it *can*
+//! be checked (a `make artifacts` + `--features pjrt` environment).
+
+use std::path::Path;
 
 use sat::nm::{Method, NmPattern};
 use sat::runtime::{Manifest, Runtime, TrainState};
 use sat::train::{golden, run_training, TrainOptions};
 use sat::util::datagen;
+
+/// `make artifacts` output present?
+fn artifacts_ready() -> bool {
+    Path::new("artifacts/manifest.txt").exists()
+}
+
+/// Artifacts present AND the real PJRT runtime compiled in?
+fn pjrt_ready() -> bool {
+    cfg!(feature = "pjrt") && artifacts_ready()
+}
+
+macro_rules! require {
+    ($cond:expr, $why:expr) => {
+        if !$cond {
+            eprintln!("SKIP ({}): {}", module_path!(), $why);
+            return;
+        }
+    };
+}
+
+const NEED_ARTIFACTS: &str = "artifacts/ missing — run `make artifacts`";
+const NEED_PJRT: &str =
+    "needs artifacts/ and a `--features pjrt` build with the vendored xla crate";
 
 fn manifest() -> Manifest {
     Manifest::load("artifacts").expect("run `make artifacts` first")
@@ -15,6 +46,7 @@ fn manifest() -> Manifest {
 
 #[test]
 fn manifest_covers_all_method_model_combos() {
+    require!(artifacts_ready(), NEED_ARTIFACTS);
     let m = manifest();
     for name in [
         "mlp_dense", "mlp_srste", "mlp_sdgp", "mlp_sdwp", "mlp_bdwp",
@@ -31,12 +63,14 @@ fn manifest_covers_all_method_model_combos() {
 
 #[test]
 fn golden_nm_cases_pass() {
-    let n = golden::verify_nm(std::path::Path::new("artifacts")).unwrap();
+    require!(artifacts_ready(), NEED_ARTIFACTS);
+    let n = golden::verify_nm(Path::new("artifacts")).unwrap();
     assert!(n >= 6, "expected >=6 nm cases, got {n}");
 }
 
 #[test]
 fn golden_step_losses_reproduce_through_pjrt() {
+    require!(pjrt_ready(), NEED_PJRT);
     // The core cross-language contract: python-computed losses reproduce
     // bit-closely when the artifact is replayed from Rust.
     let rt = Runtime::cpu().unwrap();
@@ -54,6 +88,7 @@ fn golden_step_losses_reproduce_through_pjrt() {
 
 #[test]
 fn pallas_artifact_matches_jnp_artifact() {
+    require!(pjrt_ready(), NEED_PJRT);
     // mlp_bdwp (pure-jnp forward) and mlp_bdwp_pallas (Pallas nm_matmul
     // forward) must produce identical training trajectories.
     let rt = Runtime::cpu().unwrap();
@@ -67,6 +102,7 @@ fn pallas_artifact_matches_jnp_artifact() {
 
 #[test]
 fn chunk_path_matches_single_step_path() {
+    require!(pjrt_ready(), NEED_PJRT);
     let rt = Runtime::cpu().unwrap();
     let m = manifest();
     let artifact = m.by_name("mlp_sdwp").unwrap();
@@ -103,6 +139,7 @@ fn chunk_path_matches_single_step_path() {
 
 #[test]
 fn eval_artifact_reports_sane_accuracy() {
+    require!(pjrt_ready(), NEED_PJRT);
     let rt = Runtime::cpu().unwrap();
     let m = manifest();
     let artifact = m.by_name("mlp_dense").unwrap();
@@ -119,6 +156,7 @@ fn eval_artifact_reports_sane_accuracy() {
 
 #[test]
 fn training_decreases_loss_for_every_method() {
+    require!(pjrt_ready(), NEED_PJRT);
     let rt = Runtime::cpu().unwrap();
     let m = manifest();
     for name in ["mlp_dense", "mlp_srste", "mlp_sdgp", "mlp_sdwp", "mlp_bdwp"] {
@@ -140,7 +178,21 @@ fn missing_artifact_dir_fails_cleanly() {
 }
 
 #[test]
+fn runtime_without_pjrt_fails_cleanly() {
+    // The stub must point users at the feature flag instead of panicking.
+    if cfg!(feature = "pjrt") {
+        return; // real runtime; covered by the golden tests above
+    }
+    let err = match Runtime::cpu() {
+        Ok(_) => panic!("stub Runtime::cpu unexpectedly succeeded"),
+        Err(e) => e,
+    };
+    assert!(err.to_string().contains("pjrt"), "{err}");
+}
+
+#[test]
 fn wrong_init_size_detected() {
+    require!(artifacts_ready(), NEED_ARTIFACTS);
     let m = manifest();
     let mut a = m.by_name("mlp_dense").unwrap().clone();
     a.init = m.by_name("cnn_dense").unwrap().init.clone(); // wrong model's init

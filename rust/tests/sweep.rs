@@ -1,0 +1,120 @@
+//! Cross-module tests of the sweep engine: grid expansion, schedule-cache
+//! behaviour, worker-count determinism, and sink serialization — the
+//! contract the CI smoke job and `benches/sweep_scaling.rs` rely on.
+
+use sat::arch::SatConfig;
+use sat::coordinator::sweep::{run_sweep, SweepSpec};
+use sat::models::zoo;
+use sat::nm::{Method, NmPattern};
+use sat::sim::engine::simulate_method;
+
+fn acceptance_spec(jobs: usize) -> SweepSpec {
+    // The acceptance grid from the issue: >= 3 models x 3 methods x
+    // 2 patterns, plus two bandwidth variants to exercise the cache.
+    SweepSpec {
+        models: vec!["resnet9".into(), "resnet18".into(), "vit".into()],
+        methods: vec![Method::Dense, Method::SrSte, Method::Bdwp],
+        patterns: vec![NmPattern::P1_4, NmPattern::P2_8],
+        arrays: vec![(32, 32)],
+        bandwidths: vec![25.6, 102.4],
+        overlap: true,
+        base: SatConfig::paper_default(),
+        jobs,
+    }
+}
+
+#[test]
+fn grid_expansion_count_matches_axes_product() {
+    let spec = acceptance_spec(1);
+    assert_eq!(spec.grid_size(), 3 * 3 * 2 * 1 * 2);
+    let points = spec.expand().unwrap();
+    assert_eq!(points.len(), 36);
+    // every point unique and indexed in order
+    for (i, p) in points.iter().enumerate() {
+        assert_eq!(p.index, i);
+    }
+}
+
+#[test]
+fn schedule_cache_computes_each_distinct_key_once() {
+    let r = run_sweep(&acceptance_spec(4)).unwrap();
+    // 2 bandwidth variants share each (model, method, pattern, arch) key:
+    // 18 distinct schedules, 18 cache hits.
+    assert_eq!(r.meta.schedule_misses, 18);
+    assert_eq!(r.meta.schedule_hits, 18);
+    assert_eq!(
+        r.meta.schedule_hits + r.meta.schedule_misses,
+        r.rows.len() as u64
+    );
+}
+
+#[test]
+fn results_identical_across_worker_counts() {
+    let serial = run_sweep(&acceptance_spec(1)).unwrap();
+    let parallel = run_sweep(&acceptance_spec(4)).unwrap();
+    assert_eq!(serial.rows.len(), parallel.rows.len());
+    for (a, b) in serial.rows.iter().zip(&parallel.rows) {
+        assert_eq!(a.point.index, b.point.index);
+        assert_eq!(a.report, b.report, "row {} diverged", a.point.index);
+        assert_eq!(a.predicted_cycles, b.predicted_cycles);
+    }
+    // Serialized forms byte-identical modulo the meta block.
+    assert_eq!(serial.rows_json(), parallel.rows_json());
+    assert_eq!(serial.to_csv(), parallel.to_csv());
+    // The full JSON documents differ only in `meta` (timing/jobs).
+    assert_ne!(serial.to_json(), parallel.to_json());
+}
+
+#[test]
+fn sweep_rows_match_direct_single_shot_simulation() {
+    let r = run_sweep(&acceptance_spec(2)).unwrap();
+    for row in r.rows.iter().step_by(7) {
+        let model = zoo::model_by_name(&row.point.model).unwrap();
+        let direct = simulate_method(
+            &model,
+            row.point.method,
+            row.point.pattern,
+            &row.point.sat,
+            &row.point.mem,
+        );
+        assert_eq!(row.report, direct, "point {}", row.point.index);
+    }
+}
+
+#[test]
+fn json_document_shape_is_stable() {
+    let spec = SweepSpec {
+        models: vec!["resnet9".into()],
+        methods: vec![Method::Bdwp],
+        patterns: vec![NmPattern::P2_8],
+        arrays: vec![(16, 16)],
+        bandwidths: vec![25.6],
+        jobs: 1,
+        ..SweepSpec::default()
+    };
+    let r = run_sweep(&spec).unwrap();
+    let json = r.to_json();
+    assert!(json.starts_with("{\"schema\":\"sat-sweep-v1\",\"grid\":1,"));
+    assert!(json.contains("\"meta\":{\"jobs\":1,"));
+    assert!(json.contains("\"model\":\"resnet9\""));
+    assert!(json.contains("\"pattern\":\"2:8\""));
+    assert!(json.contains("\"total_cycles\":"));
+    let csv = r.to_csv();
+    let mut lines = csv.lines();
+    assert!(lines.next().unwrap().starts_with("model,method,pattern,"));
+    assert_eq!(lines.count(), 1);
+}
+
+#[test]
+fn default_jobs_resolves_to_available_parallelism() {
+    let spec = SweepSpec {
+        models: vec!["resnet9".into()],
+        methods: vec![Method::Dense],
+        patterns: vec![NmPattern::P2_8],
+        jobs: 0,
+        ..SweepSpec::default()
+    };
+    let r = run_sweep(&spec).unwrap();
+    assert!(r.meta.jobs >= 1);
+    assert_eq!(r.rows.len(), 1);
+}
