@@ -1,0 +1,58 @@
+//! Regenerates Fig. 4 on the NATIVE backend — no artifacts, no PJRT:
+//! all five methods on the tiny MLP with identical data order, plus the
+//! dense-vs-BDWP held-out eval gap (the paper's "BDWP tracks dense"
+//! claim at reproduction scale). This is the loss-curve exhibit a fresh
+//! clone can actually run; `fig04_loss_curves.rs` remains the PJRT
+//! replay variant.
+
+use sat::nm::{Method, NmPattern};
+use sat::report;
+use sat::train::{compare_specs, NativeBackend, TrainOptions, TrainSpec};
+use sat::util::stats::ema;
+use sat::util::table::ascii_chart;
+
+fn main() -> anyhow::Result<()> {
+    let steps = 300;
+    let opts = TrainOptions { steps, lr: 0.05, eval_every: 100, use_chunk: false, seed: 1 };
+    let specs: Vec<TrainSpec> = Method::ALL
+        .iter()
+        .map(|&m| TrainSpec::new("tiny_mlp", m, NmPattern::P2_8))
+        .collect();
+    let t0 = std::time::Instant::now();
+    let curves = compare_specs(&NativeBackend, &specs, &opts)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let series: Vec<(String, Vec<f64>)> = curves
+        .iter()
+        .map(|c| {
+            (
+                c.method.clone(),
+                ema(&c.losses.iter().map(|&l| l as f64).collect::<Vec<_>>(), 0.08),
+            )
+        })
+        .collect();
+    let refs: Vec<(&str, &[f64])> =
+        series.iter().map(|(n, v)| (n.as_str(), v.as_slice())).collect();
+    print!(
+        "{}",
+        ascii_chart("Fig. 4 — tiny_mlp loss curves (EMA, native backend)", &refs, 76, 16)
+    );
+    report::fig04_summary(&curves).print();
+
+    let eval_of = |m: &str| {
+        curves
+            .iter()
+            .find(|c| c.method == m)
+            .and_then(|c| c.evals.last())
+            .map(|&(_, l, _)| l as f64)
+            .unwrap_or(f64::NAN)
+    };
+    let (dense, bdwp) = (eval_of("dense"), eval_of("bdwp"));
+    println!(
+        "fig04_native bench: 5 methods x {steps} steps in {wall:.1}s \
+         ({:.0} steps/s aggregate); bdwp/dense eval-loss ratio {:.3}",
+        5.0 * steps as f64 / wall,
+        bdwp / dense,
+    );
+    Ok(())
+}

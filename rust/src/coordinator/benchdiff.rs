@@ -1,0 +1,325 @@
+//! `sat bench-diff` — compare two sweep/bench JSON reports and flag
+//! cycle-count regressions (the ROADMAP "result diffing across PRs"
+//! item).
+//!
+//! Inputs are `sat sweep --format json` documents (schema
+//! `sat-sweep-v1`): scenarios are matched on their full grid coordinate
+//! (model, method, pattern, array, bandwidth, overlap) — the `meta`
+//! block (wall time, worker count) is ignored by construction, so
+//! reports from different machines and `--jobs` values diff cleanly.
+//! Exit policy is the caller's: [`BenchDiff::regressions_above`] counts
+//! scenarios whose metric grew by more than a threshold percentage.
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::util::json::{self, Value};
+use crate::util::table::Table;
+
+/// Metrics a diff can run on (fields of each result row).
+pub const METRICS: &[&str] = &["total_cycles", "batch_ms", "runtime_gops"];
+
+/// One scenario present in both reports.
+#[derive(Clone, Debug)]
+pub struct DiffRow {
+    pub key: String,
+    pub old: f64,
+    pub new: f64,
+}
+
+impl DiffRow {
+    /// Relative change in percent (positive = grew = regression for
+    /// cycle/time metrics).
+    pub fn delta_pct(&self) -> f64 {
+        if self.old == 0.0 {
+            if self.new == 0.0 {
+                0.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            (self.new - self.old) / self.old * 100.0
+        }
+    }
+}
+
+/// Outcome of diffing two reports.
+#[derive(Clone, Debug)]
+pub struct BenchDiff {
+    pub metric: String,
+    /// Scenarios in both reports, in the new report's order.
+    pub rows: Vec<DiffRow>,
+    /// Scenario keys only in the old / only in the new report.
+    pub only_old: Vec<String>,
+    pub only_new: Vec<String>,
+}
+
+/// The full grid coordinate of one result row — everything that
+/// identifies a scenario (model, method, pattern, array geometry
+/// including lanes, clock, bandwidth, overlap), nothing that depends
+/// on the run.
+fn scenario_key(row: &Value) -> anyhow::Result<String> {
+    let s = |k: &str| -> anyhow::Result<&str> {
+        row.get(k)
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow!("result row missing string field {k:?}"))
+    };
+    let n = |k: &str| -> anyhow::Result<f64> {
+        row.get(k)
+            .and_then(Value::as_f64)
+            .ok_or_else(|| anyhow!("result row missing numeric field {k:?}"))
+    };
+    let overlap = row
+        .get("overlap")
+        .and_then(Value::as_bool)
+        .ok_or_else(|| anyhow!("result row missing bool field \"overlap\""))?;
+    Ok(format!(
+        "{} {} {} {}x{}x{} @{}MHz {}GB/s overlap={}",
+        s("model")?,
+        s("method")?,
+        s("pattern")?,
+        n("rows")?,
+        n("cols")?,
+        n("lanes")?,
+        n("freq_mhz")?,
+        n("bandwidth_gbs")?,
+        overlap,
+    ))
+}
+
+fn metric_of(row: &Value, metric: &str) -> anyhow::Result<f64> {
+    row.get(metric)
+        .and_then(Value::as_f64)
+        .ok_or_else(|| anyhow!("result row has no numeric metric {metric:?}"))
+}
+
+/// Extract `(key, metric)` pairs from one report document. Accepts a
+/// full sweep document (`results` array) or a bare array of rows.
+fn report_rows(doc: &Value, metric: &str) -> anyhow::Result<Vec<(String, f64)>> {
+    let root = match doc.get("results") {
+        Some(results) => results,
+        None => doc,
+    };
+    let rows = root
+        .as_array()
+        .ok_or_else(|| anyhow!("document has no results array"))?;
+    rows.iter()
+        .map(|r| Ok((scenario_key(r)?, metric_of(r, metric)?)))
+        .collect()
+}
+
+/// Diff two report texts on `metric`.
+pub fn diff_texts(old: &str, new: &str, metric: &str) -> anyhow::Result<BenchDiff> {
+    if !METRICS.contains(&metric) {
+        bail!("unknown metric {metric:?} (one of {METRICS:?})");
+    }
+    let old_doc = json::parse(old).map_err(|e| anyhow!("old report: {e}"))?;
+    let new_doc = json::parse(new).map_err(|e| anyhow!("new report: {e}"))?;
+    let old_rows = report_rows(&old_doc, metric).context("old report")?;
+    let new_rows = report_rows(&new_doc, metric).context("new report")?;
+    let mut rows = Vec::new();
+    let mut only_new = Vec::new();
+    for (key, new_v) in &new_rows {
+        match old_rows.iter().find(|(k, _)| k == key) {
+            Some((_, old_v)) => rows.push(DiffRow { key: key.clone(), old: *old_v, new: *new_v }),
+            None => only_new.push(key.clone()),
+        }
+    }
+    let only_old: Vec<String> = old_rows
+        .iter()
+        .filter(|(k, _)| !new_rows.iter().any(|(nk, _)| nk == k))
+        .map(|(k, _)| k.clone())
+        .collect();
+    if rows.is_empty() {
+        bail!(
+            "no common scenarios between the reports ({} old-only, {} new-only)",
+            only_old.len(),
+            only_new.len()
+        );
+    }
+    Ok(BenchDiff { metric: metric.to_string(), rows, only_old, only_new })
+}
+
+impl BenchDiff {
+    /// Direction of badness: cycles/time regress when they GROW,
+    /// throughput (GOPS) regresses when it SHRINKS.
+    fn regression_sign(&self) -> f64 {
+        if self.metric == "runtime_gops" {
+            -1.0
+        } else {
+            1.0
+        }
+    }
+
+    /// How much worse `row` got, in percent (positive = regression,
+    /// whatever the metric's good direction is).
+    pub fn regression_pct(&self, row: &DiffRow) -> f64 {
+        row.delta_pct() * self.regression_sign()
+    }
+
+    /// Scenarios that got worse by strictly more than `threshold_pct`.
+    pub fn regressions_above(&self, threshold_pct: f64) -> Vec<&DiffRow> {
+        self.rows.iter().filter(|r| self.regression_pct(r) > threshold_pct).collect()
+    }
+
+    /// Largest regression (0.0 if nothing got worse).
+    pub fn max_regression_pct(&self) -> f64 {
+        self.rows.iter().map(|r| self.regression_pct(r)).fold(0.0, f64::max)
+    }
+
+    /// Per-scenario delta table, worst regressions first.
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(&format!("bench diff — {}", self.metric)).header(&[
+            "scenario",
+            "old",
+            "new",
+            "delta",
+        ]);
+        let mut rows: Vec<&DiffRow> = self.rows.iter().collect();
+        rows.sort_by(|a, b| {
+            self.regression_pct(b)
+                .partial_cmp(&self.regression_pct(a))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for r in rows {
+            t.row(&[
+                r.key.clone(),
+                format!("{}", r.old),
+                format!("{}", r.new),
+                format!("{:+.2}%", r.delta_pct()),
+            ]);
+        }
+        t
+    }
+
+    /// One-line outcome summary.
+    pub fn summary(&self, threshold_pct: f64) -> String {
+        format!(
+            "{} scenario(s) compared on {}; max regression {:+.2}%; \
+             {} above the {:.2}% threshold; {} old-only, {} new-only",
+            self.rows.len(),
+            self.metric,
+            self.max_regression_pct(),
+            self.regressions_above(threshold_pct).len(),
+            threshold_pct,
+            self.only_old.len(),
+            self.only_new.len(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Obj;
+
+    fn row(model: &str, bw: f64, cycles: u64) -> String {
+        Obj::new()
+            .field_str("model", model)
+            .field_str("method", "bdwp")
+            .field_str("pattern", "2:8")
+            .field_usize("rows", 32)
+            .field_usize("cols", 32)
+            .field_usize("lanes", 4)
+            .field_f64("freq_mhz", 800.0)
+            .field_f64("bandwidth_gbs", bw)
+            .field_bool("overlap", true)
+            .field_u64("total_cycles", cycles)
+            .field_f64("batch_ms", cycles as f64 / 1e5)
+            .field_f64("runtime_gops", 1e9 / cycles as f64)
+            .finish()
+    }
+
+    fn doc(rows: Vec<String>) -> String {
+        Obj::new()
+            .field_str("schema", "sat-sweep-v1")
+            .field_raw("meta", "{\"jobs\":4,\"wall_seconds\":1.5}")
+            .field_raw("results", &crate::util::json::array(rows))
+            .finish()
+    }
+
+    #[test]
+    fn equal_reports_have_zero_delta() {
+        let d = doc(vec![row("resnet18", 25.6, 1000), row("vit", 25.6, 500)]);
+        let diff = diff_texts(&d, &d, "total_cycles").unwrap();
+        assert_eq!(diff.rows.len(), 2);
+        assert_eq!(diff.max_regression_pct(), 0.0);
+        assert!(diff.regressions_above(0.0).is_empty());
+    }
+
+    #[test]
+    fn regression_detected_above_threshold() {
+        let old = doc(vec![row("resnet18", 25.6, 1000), row("vit", 25.6, 500)]);
+        let new = doc(vec![row("resnet18", 25.6, 1060), row("vit", 25.6, 490)]);
+        let diff = diff_texts(&old, &new, "total_cycles").unwrap();
+        assert!((diff.max_regression_pct() - 6.0).abs() < 1e-9);
+        assert_eq!(diff.regressions_above(5.0).len(), 1);
+        assert_eq!(diff.regressions_above(6.0).len(), 0); // strict >
+        assert!(diff.summary(5.0).contains("max regression +6.00%"));
+    }
+
+    #[test]
+    fn throughput_metrics_regress_downward() {
+        // runtime_gops: 100 -> 90 is the regression; 100 -> 110 is not
+        let old = doc(vec![row("resnet18", 25.6, 1000)]); // gops = 1e6
+        let worse = doc(vec![row("resnet18", 25.6, 1112)]); // gops ~ 0.9e6
+        let better = doc(vec![row("resnet18", 25.6, 900)]); // gops ~ 1.11e6
+        let d = diff_texts(&old, &worse, "runtime_gops").unwrap();
+        assert_eq!(d.regressions_above(5.0).len(), 1, "throughput drop must flag");
+        assert!(d.max_regression_pct() > 5.0);
+        let d = diff_texts(&old, &better, "runtime_gops").unwrap();
+        assert!(d.regressions_above(0.0).is_empty(), "improvement must not flag");
+        // and cycles keep the grow-is-bad direction
+        let d = diff_texts(&old, &worse, "total_cycles").unwrap();
+        assert_eq!(d.regressions_above(5.0).len(), 1);
+    }
+
+    #[test]
+    fn key_separates_array_and_clock_configs() {
+        let base = doc(vec![row("resnet18", 25.6, 1000)]);
+        let other = base.replace("\"freq_mhz\":800", "\"freq_mhz\":400");
+        // same grid otherwise, different clock: nothing should match
+        assert!(diff_texts(&base, &other, "total_cycles").is_err());
+    }
+
+    #[test]
+    fn disjoint_scenarios_are_reported_not_matched() {
+        let old = doc(vec![row("resnet18", 25.6, 1000), row("vgg19", 25.6, 700)]);
+        let new = doc(vec![row("resnet18", 25.6, 1000), row("vit", 102.4, 500)]);
+        let diff = diff_texts(&old, &new, "total_cycles").unwrap();
+        assert_eq!(diff.rows.len(), 1);
+        assert_eq!(diff.only_old.len(), 1);
+        assert_eq!(diff.only_new.len(), 1);
+        // wholly disjoint grids are an error, not a silent pass
+        let o2 = doc(vec![row("vgg19", 25.6, 700)]);
+        let n2 = doc(vec![row("vit", 25.6, 500)]);
+        assert!(diff_texts(&o2, &n2, "total_cycles").is_err());
+    }
+
+    #[test]
+    fn bad_inputs_fail_loudly() {
+        let good = doc(vec![row("vit", 25.6, 500)]);
+        assert!(diff_texts("not json", &good, "total_cycles").is_err());
+        assert!(diff_texts(&good, &good, "no_such_metric").is_err());
+        let no_results = Obj::new().field_str("schema", "x").finish();
+        assert!(diff_texts(&no_results, &good, "total_cycles").is_err());
+    }
+
+    #[test]
+    fn bare_result_arrays_are_accepted() {
+        let old = crate::util::json::array(vec![row("vit", 25.6, 500)]);
+        let new = crate::util::json::array(vec![row("vit", 25.6, 505)]);
+        let diff = diff_texts(&old, &new, "total_cycles").unwrap();
+        assert!((diff.rows[0].delta_pct() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_sorts_worst_regression_first() {
+        let old = doc(vec![row("a", 1.0, 100), row("b", 1.0, 100)]);
+        let new = doc(vec![row("a", 1.0, 101), row("b", 1.0, 150)]);
+        let diff = diff_texts(&old, &new, "total_cycles").unwrap();
+        let rendered = diff.to_table().render();
+        let pos_b = rendered.find("+50.00%").unwrap();
+        let pos_a = rendered.find("+1.00%").unwrap();
+        assert!(pos_b < pos_a, "worst first:\n{rendered}");
+    }
+}

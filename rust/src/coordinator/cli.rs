@@ -13,6 +13,7 @@ pub struct Args {
     pub subcommand: String,
     flags: HashMap<String, String>,
     switches: Vec<String>,
+    positionals: Vec<String>,
 }
 
 /// Parse failure with a message suitable for printing with usage.
@@ -29,11 +30,24 @@ impl std::error::Error for ParseError {}
 
 impl Args {
     /// Parse argv-style input. `known_flags` take a value; `known_switches`
-    /// are boolean.
+    /// are boolean. Positional arguments stay errors on this entry point
+    /// (typos fail loudly); subcommands that take them use
+    /// [`Args::parse_with_positionals`].
     pub fn parse(
         argv: &[String],
         known_flags: &[&str],
         known_switches: &[&str],
+    ) -> Result<Args, ParseError> {
+        Args::parse_with_positionals(argv, known_flags, known_switches, 0)
+    }
+
+    /// [`Args::parse`] accepting up to `max_positionals` non-flag
+    /// arguments after the subcommand (e.g. `sat bench-diff old new`).
+    pub fn parse_with_positionals(
+        argv: &[String],
+        known_flags: &[&str],
+        known_switches: &[&str],
+        max_positionals: usize,
     ) -> Result<Args, ParseError> {
         let mut out = Args::default();
         let mut it = argv.iter().peekable();
@@ -44,6 +58,10 @@ impl Args {
         }
         while let Some(tok) = it.next() {
             let Some(name) = tok.strip_prefix("--") else {
+                if out.positionals.len() < max_positionals {
+                    out.positionals.push(tok.clone());
+                    continue;
+                }
                 return Err(ParseError(format!("unexpected positional arg {tok:?}")));
             };
             if known_switches.contains(&name) {
@@ -58,6 +76,11 @@ impl Args {
             }
         }
         Ok(out)
+    }
+
+    /// The i-th positional argument, if present.
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
     }
 
     pub fn get(&self, name: &str) -> Option<&str> {
@@ -148,5 +171,30 @@ mod tests {
     fn no_subcommand_is_error() {
         assert!(Args::parse(&sv(&[]), &[], &[]).is_err());
         assert!(Args::parse(&sv(&["--x"]), &[], &[]).is_err());
+    }
+
+    #[test]
+    fn positionals_only_where_allowed() {
+        // default entry point keeps rejecting positionals
+        assert!(Args::parse(&sv(&["diff", "a.json"]), &[], &[]).is_err());
+        let a = Args::parse_with_positionals(
+            &sv(&["diff", "a.json", "b.json", "--threshold", "2"]),
+            &["threshold"],
+            &[],
+            2,
+        )
+        .unwrap();
+        assert_eq!(a.positional(0), Some("a.json"));
+        assert_eq!(a.positional(1), Some("b.json"));
+        assert_eq!(a.positional(2), None);
+        assert_eq!(a.get("threshold"), Some("2"));
+        // a third positional overflows the allowance
+        let e = Args::parse_with_positionals(
+            &sv(&["diff", "a", "b", "c"]),
+            &[],
+            &[],
+            2,
+        );
+        assert!(e.unwrap_err().0.contains("positional"));
     }
 }

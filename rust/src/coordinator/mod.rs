@@ -3,6 +3,7 @@
 //! coordination contribution lives in [`crate::sched`] and [`crate::sim`];
 //! this module is process lifecycle, config resolution, and dispatch).
 
+pub mod benchdiff;
 pub mod cli;
 pub mod jobs;
 pub mod config;

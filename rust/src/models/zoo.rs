@@ -43,6 +43,33 @@ impl Model {
     pub fn weight_layers(&self) -> Vec<&Layer> {
         self.layers.iter().filter(|l| l.weight_elems() > 0).collect()
     }
+
+    /// Output classes: the final weighted layer's output features
+    /// (0 for a weightless graph).
+    pub fn classes(&self) -> usize {
+        self.layers
+            .iter()
+            .rev()
+            .find_map(|l| match l.kind {
+                LayerKind::Conv { co, .. } => Some(co),
+                LayerKind::Linear { fo, .. } => Some(fo),
+                _ => None,
+            })
+            .unwrap_or(0)
+    }
+
+    /// Flat input elements one sample presents to the first weighted
+    /// layer (NHWC for convs, features × tokens for linears).
+    pub fn input_elems_per_sample(&self) -> usize {
+        self.layers
+            .iter()
+            .find_map(|l| match l.kind {
+                LayerKind::Conv { ci, .. } => Some(l.h * l.w * ci),
+                LayerKind::Linear { fi, tokens, .. } => Some(fi * tokens),
+                _ => None,
+            })
+            .unwrap_or(0)
+    }
 }
 
 fn conv(name: &str, hw: usize, ci: usize, co: usize, stride: usize, sparse: bool) -> Layer {
@@ -429,6 +456,27 @@ mod tests {
         assert_eq!(dims, vec![32 * 256, 256 * 256, 256 * 8]);
         assert_eq!(tiny_cnn().batch, 32);
         assert_eq!(tiny_vit().batch, 32);
+    }
+
+    #[test]
+    fn classes_and_input_elems_helpers() {
+        assert_eq!(tiny_mlp().classes(), 8);
+        assert_eq!(tiny_mlp().input_elems_per_sample(), 32);
+        assert_eq!(tiny_cnn().classes(), 8);
+        assert_eq!(tiny_cnn().input_elems_per_sample(), 8 * 8 * 8);
+        assert_eq!(resnet18().classes(), 200);
+        assert_eq!(resnet18().input_elems_per_sample(), 64 * 64 * 3);
+        assert_eq!(vit().input_elems_per_sample(), 4 * 4 * 3 * 64);
+        let empty = Model {
+            name: "none".into(),
+            dataset: "none".into(),
+            batch: 1,
+            layers: vec![],
+            epochs: 1,
+            dataset_size: 0,
+        };
+        assert_eq!(empty.classes(), 0);
+        assert_eq!(empty.input_elems_per_sample(), 0);
     }
 
     #[test]

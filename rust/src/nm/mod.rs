@@ -14,4 +14,4 @@ pub mod prune;
 pub use compact::CompactNm;
 pub use flops::Method;
 pub use pattern::NmPattern;
-pub use prune::{prune_mask, prune_values, PruneAxis};
+pub use prune::{prune_mask, prune_values, prune_values_into, PruneAxis};

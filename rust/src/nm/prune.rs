@@ -142,11 +142,71 @@ pub fn prune_values(
     p: NmPattern,
     axis: PruneAxis,
 ) -> Vec<f32> {
-    let mask = prune_mask(w, rows, cols, p, axis);
-    w.iter()
-        .zip(&mask)
-        .map(|(&v, &keep)| if keep { v } else { 0.0 })
-        .collect()
+    let mut out = Vec::new();
+    prune_values_into(w, rows, cols, p, axis, &mut out);
+    out
+}
+
+/// [`prune_values`] into a caller-owned buffer. The native training
+/// backend re-prunes every weight matrix on every step (w̃ follows the
+/// live weights, Algorithm 1 line 4/6), so the hot loop reuses one
+/// scratch vector per prune site instead of churning allocations.
+///
+/// For M ≤ 32 the selection runs on the register-only [`topn_bits`]
+/// chain with no intermediate mask; larger M falls back to the mask
+/// path. Selection semantics are identical to [`prune_mask`] by
+/// construction (both funnel into the same top-N kernels).
+pub fn prune_values_into(
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    p: NmPattern,
+    axis: PruneAxis,
+    out: &mut Vec<f32>,
+) {
+    assert_eq!(w.len(), rows * cols, "shape mismatch");
+    out.clear();
+    out.extend_from_slice(w);
+    if p.m > TOPN_STACK_M {
+        let mask = prune_mask(w, rows, cols, p, axis);
+        for (v, &keep) in out.iter_mut().zip(&mask) {
+            if !keep {
+                *v = 0.0;
+            }
+        }
+        return;
+    }
+    match axis {
+        PruneAxis::Cols => {
+            assert!(cols % p.m == 0, "cols {cols} not divisible by M={}", p.m);
+            for group in out.chunks_exact_mut(p.m) {
+                let mut sel = topn_bits(group, p.n);
+                for v in group.iter_mut() {
+                    if sel & 1 == 0 {
+                        *v = 0.0;
+                    }
+                    sel >>= 1;
+                }
+            }
+        }
+        PruneAxis::Rows => {
+            assert!(rows % p.m == 0, "rows {rows} not divisible by M={}", p.m);
+            let mut group = [0.0f32; TOPN_STACK_M];
+            for c in 0..cols {
+                for g0 in (0..rows).step_by(p.m) {
+                    for i in 0..p.m {
+                        group[i] = w[(g0 + i) * cols + c];
+                    }
+                    let sel = topn_bits(&group[..p.m], p.n);
+                    for i in 0..p.m {
+                        if sel & (1 << i) == 0 {
+                            out[(g0 + i) * cols + c] = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// Count of nonzeros a mask keeps.
@@ -255,5 +315,24 @@ mod tests {
     #[should_panic(expected = "divisible")]
     fn rejects_indivisible_length() {
         prune_mask_flat(&[1.0; 6], P24); // 6 % 4 != 0 -> panic
+    }
+
+    #[test]
+    fn prop_prune_values_into_matches_mask_path() {
+        check("prune_values_into parity", 50, |g| {
+            let (n, m) = g.nm_pattern();
+            let p = NmPattern::new(n, m);
+            let groups = g.usize_in(1, 4);
+            let (rows, cols) = (groups * m, groups * m);
+            let w = g.vec_normal(rows * cols);
+            let mut buf = Vec::new();
+            for axis in [PruneAxis::Cols, PruneAxis::Rows] {
+                let mask = prune_mask(&w, rows, cols, p, axis);
+                prune_values_into(&w, rows, cols, p, axis, &mut buf);
+                for ((&v, &keep), &orig) in buf.iter().zip(&mask).zip(&w) {
+                    assert_eq!(v, if keep { orig } else { 0.0 });
+                }
+            }
+        });
     }
 }

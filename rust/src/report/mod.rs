@@ -114,6 +114,47 @@ pub fn bdwp_2_8_reduction() -> f64 {
     crate::util::stats::geomean(&ratios)
 }
 
+/// Fig. 4 companion table: per-method convergence summary for a set of
+/// identically-seeded training curves. Backend-agnostic — `sat compare`
+/// feeds it native-engine curves, `benches/fig04_loss_curves.rs` PJRT
+/// ones. The Δ column references the first `dense` curve (or the first
+/// curve when no dense run is present).
+pub fn fig04_summary(curves: &[crate::train::TrainCurve]) -> Table {
+    let mut t = Table::new("Fig. 4 — convergence summary (identical data order)").header(&[
+        "method",
+        "first",
+        "final",
+        "d vs dense",
+        "steps to <1.0",
+        "eval loss",
+        "eval acc",
+    ]);
+    let dense_final = curves
+        .iter()
+        .find(|c| c.method == "dense")
+        .or_else(|| curves.first())
+        .map(|c| c.final_loss())
+        .unwrap_or(f32::NAN);
+    for c in curves {
+        let (eval_l, eval_a) = match c.evals.last() {
+            Some(&(_, l, a)) => (format!("{l:.4}"), format!("{:.1}%", a * 100.0)),
+            None => ("-".into(), "-".into()),
+        };
+        t.row(&[
+            c.method.clone(),
+            format!("{:.4}", c.losses.first().copied().unwrap_or(f32::NAN)),
+            format!("{:.4}", c.final_loss()),
+            format!("{:+.4}", c.final_loss() - dense_final),
+            c.steps_to_loss(1.0)
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| "-".into()),
+            eval_l,
+            eval_a,
+        ]);
+    }
+    t
+}
+
 /// Fig. 13 — FLOP side of the N:M ratio sweep (accuracy from training).
 pub fn fig13_pattern_sweep(model: &str) -> Table {
     let m = zoo::model_by_name(model).unwrap();
@@ -470,6 +511,24 @@ mod tests {
         assert_eq!(calls, 5 * 5, "five models x five methods");
         let b = fig17_scaling_with(&mut counting).render();
         assert_eq!(b, fig17_scaling().render());
+    }
+
+    #[test]
+    fn fig04_summary_references_dense() {
+        let curve = |method: &str, first: f32, last: f32| crate::train::TrainCurve {
+            artifact: format!("mlp_{method}"),
+            method: method.into(),
+            losses: vec![first, last],
+            evals: vec![(2, last + 0.1, 0.5)],
+            wall_seconds: 1.0,
+        };
+        let curves = vec![curve("dense", 2.0, 0.5), curve("bdwp", 2.0, 0.6)];
+        let r = fig04_summary(&curves).render();
+        assert!(r.contains("+0.1000"), "bdwp delta vs dense:\n{r}");
+        assert!(r.contains("50.0%"), "eval acc column:\n{r}");
+        // no dense curve: first curve becomes the reference
+        let only = vec![curve("bdwp", 2.0, 0.6)];
+        assert!(fig04_summary(&only).render().contains("+0.0000"));
     }
 
     #[test]

@@ -1,0 +1,222 @@
+//! Training backends: one `train` entry point, two engines.
+//!
+//! [`TrainSpec`] names what to train — a zoo model, a sparse-training
+//! [`Method`] and an [`NmPattern`] — independently of how. The two
+//! [`Backend`] implementations are:
+//!
+//! * [`crate::train::native::NativeBackend`] — the pure-Rust engine
+//!   (dense/conv forward + hand-written backward, BDWP semantics).
+//!   Works from a fresh clone; what CI trains.
+//! * [`PjrtBackend`] — replays the AOT-lowered XLA artifacts through
+//!   PJRT. Needs `make artifacts` output and a `--features pjrt` build;
+//!   the golden cross-language contract lives here.
+//!
+//! `sat train --backend native|pjrt` and `sat compare` route through
+//! [`open_backend`]; library callers can hold a `&dyn Backend` and stay
+//! agnostic.
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::Context;
+
+use crate::nm::{Method, NmPattern};
+use crate::runtime::{Manifest, Runtime};
+use crate::train::{run_training, TrainCurve, TrainOptions};
+
+/// What to train: a model, a method, a pattern. The spec is the shared
+/// currency between backends — the PJRT side maps it onto an artifact
+/// name (`mlp_bdwp`), the native side onto a zoo layer graph.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TrainSpec {
+    /// Zoo model name (`tiny_mlp`, `tiny_cnn`, ...).
+    pub model: String,
+    pub method: Method,
+    pub pattern: NmPattern,
+    /// Replay the Pallas-kernel artifact variant (`mlp_bdwp_pallas`).
+    /// PJRT-only flavour: the lowered HLO differs (nm_matmul tiling),
+    /// the math does not, so the native backend treats it as `method`.
+    pub pallas: bool,
+}
+
+impl TrainSpec {
+    /// Build a spec, canonicalizing family shorthands (`mlp` →
+    /// `tiny_mlp`) so CLI input, artifact names and zoo names all meet
+    /// in one place.
+    pub fn new(model: &str, method: Method, pattern: NmPattern) -> TrainSpec {
+        let model = match model {
+            "mlp" => "tiny_mlp",
+            "cnn" => "tiny_cnn",
+            "vit" => "tiny_vit",
+            other => other,
+        };
+        TrainSpec { model: model.to_string(), method, pattern, pallas: false }
+    }
+
+    /// The model family the datasets and artifacts are keyed by
+    /// (`tiny_mlp` → `mlp`); non-stand-in models map to themselves.
+    pub fn family(&self) -> &str {
+        self.model.strip_prefix("tiny_").unwrap_or(&self.model)
+    }
+
+    /// The AOT artifact name this spec replays on the PJRT backend
+    /// (`mlp_bdwp`, `mlp_bdwp_pallas`). Artifacts are lowered at the
+    /// default 2:8 pattern; the native backend honours `pattern`
+    /// exactly.
+    pub fn artifact_name(&self) -> String {
+        let suffix = if self.pallas { "_pallas" } else { "" };
+        format!("{}_{}{suffix}", self.family(), self.method.name())
+    }
+
+    /// Inverse of [`TrainSpec::artifact_name`], accepting the lowered
+    /// artifact naming (`mlp_bdwp`, `cnn_dense`, `mlp_bdwp_pallas`).
+    pub fn from_artifact_name(name: &str, pattern: NmPattern) -> anyhow::Result<TrainSpec> {
+        let base = name.strip_suffix("_pallas").unwrap_or(name);
+        let (family, method) = base
+            .rsplit_once('_')
+            .with_context(|| format!("artifact name {name:?} has no _method suffix"))?;
+        let method: Method = method
+            .parse()
+            .map_err(|e| anyhow::anyhow!("artifact {name:?}: {e}"))?;
+        let mut spec = TrainSpec::new(family, method, pattern);
+        spec.pallas = base.len() != name.len();
+        Ok(spec)
+    }
+}
+
+impl fmt::Display for TrainSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} {} {}", self.model, self.method, self.pattern)
+    }
+}
+
+/// Which engine executes a [`TrainSpec`].
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum BackendKind {
+    Native,
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+impl FromStr for BackendKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<BackendKind, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => Err(format!("unknown backend {other:?} (native|pjrt)")),
+        }
+    }
+}
+
+/// A training engine: turns a spec + options into a loss curve.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    fn train(&self, spec: &TrainSpec, opts: &TrainOptions) -> anyhow::Result<TrainCurve>;
+}
+
+/// The PJRT replay engine: compiled AOT artifacts + a live XLA client.
+/// Construction fails cleanly without the `pjrt` feature (stub runtime)
+/// or without `make artifacts` output.
+pub struct PjrtBackend {
+    rt: Runtime,
+    manifest: Manifest,
+}
+
+impl PjrtBackend {
+    pub fn open(artifacts_dir: &str) -> anyhow::Result<PjrtBackend> {
+        Ok(PjrtBackend { rt: Runtime::cpu()?, manifest: Manifest::load(artifacts_dir)? })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn train(&self, spec: &TrainSpec, opts: &TrainOptions) -> anyhow::Result<TrainCurve> {
+        run_training(&self.rt, &self.manifest, &spec.artifact_name(), opts)
+    }
+}
+
+/// Open the requested backend (`Pjrt` needs `artifacts_dir`).
+pub fn open_backend(kind: BackendKind, artifacts_dir: &str) -> anyhow::Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Native => Ok(Box::new(crate::train::native::NativeBackend)),
+        BackendKind::Pjrt => Ok(Box::new(PjrtBackend::open(artifacts_dir)?)),
+    }
+}
+
+/// Train several specs on the SAME data order (seeded identically) —
+/// the fair-comparison protocol of Fig. 4, backend-agnostic.
+pub fn compare_specs(
+    backend: &dyn Backend,
+    specs: &[TrainSpec],
+    opts: &TrainOptions,
+) -> anyhow::Result<Vec<TrainCurve>> {
+    specs.iter().map(|s| backend.train(s, opts)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_canonicalizes_family_names() {
+        let s = TrainSpec::new("mlp", Method::Bdwp, NmPattern::P2_8);
+        assert_eq!(s.model, "tiny_mlp");
+        assert_eq!(s.family(), "mlp");
+        assert_eq!(s.artifact_name(), "mlp_bdwp");
+        let t = TrainSpec::new("tiny_cnn", Method::Dense, NmPattern::P2_8);
+        assert_eq!(t.artifact_name(), "cnn_dense");
+        let u = TrainSpec::new("resnet18", Method::Bdwp, NmPattern::P2_8);
+        assert_eq!(u.family(), "resnet18");
+    }
+
+    #[test]
+    fn artifact_name_roundtrip() {
+        // every aot.py artifact name survives the roundtrip verbatim,
+        // including the Pallas-kernel variant
+        for name in
+            ["mlp_dense", "mlp_srste", "mlp_sdgp", "cnn_bdwp", "vit_bdwp", "mlp_bdwp_pallas"]
+        {
+            let s = TrainSpec::from_artifact_name(name, NmPattern::P2_8).unwrap();
+            assert_eq!(s.artifact_name(), name);
+        }
+        let s = TrainSpec::from_artifact_name("mlp_bdwp_pallas", NmPattern::P2_8).unwrap();
+        assert_eq!((s.model.as_str(), s.method, s.pallas), ("tiny_mlp", Method::Bdwp, true));
+        assert!(TrainSpec::from_artifact_name("nounderscore", NmPattern::P2_8).is_err());
+        assert!(TrainSpec::from_artifact_name("mlp_bogus", NmPattern::P2_8).is_err());
+    }
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!("native".parse::<BackendKind>().unwrap(), BackendKind::Native);
+        assert_eq!("PJRT".parse::<BackendKind>().unwrap(), BackendKind::Pjrt);
+        assert!("xla".parse::<BackendKind>().is_err());
+        assert_eq!(BackendKind::Native.name(), "native");
+    }
+
+    #[test]
+    fn native_backend_opens_everywhere() {
+        let b = open_backend(BackendKind::Native, "artifacts").unwrap();
+        assert_eq!(b.name(), "native");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_backend_fails_cleanly_without_the_feature() {
+        let err = open_backend(BackendKind::Pjrt, "artifacts").unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

@@ -1,10 +1,27 @@
-//! Training orchestrator: drives the AOT train-step artifacts through the
-//! PJRT runtime over synthetic datasets, producing the convergence curves
-//! behind Fig. 4 / Fig. 13 / Table II (accuracy columns) and the
-//! convergence half of the TTA metric (Fig. 15).
+//! Training orchestrator: produces the convergence curves behind
+//! Fig. 4 / Fig. 13 / Table II (accuracy columns) and the convergence
+//! half of the TTA metric (Fig. 15), through one of two [`Backend`]s:
+//!
+//! * **`native`** ([`native`]) — dependency-free pure-Rust training
+//!   (dense/conv forward, hand-written backward, BDWP bidirectional
+//!   N:M masking via [`crate::nm`]). Runs from a fresh clone and in CI.
+//! * **`pjrt`** ([`backend::PjrtBackend`]) — replays the AOT-lowered
+//!   XLA artifacts through the PJRT runtime (`--features pjrt` +
+//!   `make artifacts`); the Python↔Rust golden contract ([`golden`])
+//!   is enforced on this path, and the N:M mask half of that contract
+//!   is additionally checked against the native engine everywhere.
+//!
+//! Both backends train on the same synthetic datasets with the same
+//! batch order ([`dataset_for`]), so Fig. 4-style method comparisons
+//! are fair across engines.
 
+pub mod backend;
 pub mod golden;
+pub mod native;
 pub mod tta;
+
+pub use backend::{compare_specs, open_backend, Backend, BackendKind, PjrtBackend, TrainSpec};
+pub use native::NativeBackend;
 
 use anyhow::Context;
 

@@ -1,0 +1,542 @@
+//! Dense f32 tensor primitives for the native training backend.
+//!
+//! Everything operates on flat row-major slices with explicit shapes —
+//! the same (B, K) × (K, F) MatMul currency as the rest of the stack.
+//! No BLAS and no unsafe: the fixed k-outer / column-inner accumulation
+//! order keeps every result bit-deterministic across platforms, worker
+//! counts and opt levels (the same contract the sweep engine gives its
+//! cycle reports).
+
+/// `x (rows × k) @ w (k × cols)` → `(rows × cols)`.
+///
+/// ikj loop order: each `x[i][kk]` broadcasts over a contiguous weight
+/// row, so the inner loop is a stride-1 AXPY that the compiler can
+/// vectorize without reordering the per-element sum (k ascending).
+pub fn matmul(x: &[f32], w: &[f32], rows: usize, k: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(x.len(), rows * k, "x shape mismatch");
+    assert_eq!(w.len(), k * cols, "w shape mismatch");
+    let mut out = vec![0.0f32; rows * cols];
+    for i in 0..rows {
+        let xr = &x[i * k..(i + 1) * k];
+        let or = &mut out[i * cols..(i + 1) * cols];
+        for (kk, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wr = &w[kk * cols..(kk + 1) * cols];
+            for (o, &wv) in or.iter_mut().zip(wr) {
+                *o += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+/// `dy (rows × f) @ w (k × f)ᵀ` → `(rows × k)` — the BP-stage product
+/// `dx = dy · w̃ᵀ` without materializing the transpose: each output
+/// element is a dot product of two contiguous rows.
+pub fn matmul_bt(dy: &[f32], w: &[f32], rows: usize, f: usize, k: usize) -> Vec<f32> {
+    assert_eq!(dy.len(), rows * f, "dy shape mismatch");
+    assert_eq!(w.len(), k * f, "w shape mismatch");
+    let mut out = vec![0.0f32; rows * k];
+    for i in 0..rows {
+        let dr = &dy[i * f..(i + 1) * f];
+        let or = &mut out[i * k..(i + 1) * k];
+        for (kk, o) in or.iter_mut().enumerate() {
+            let wr = &w[kk * f..(kk + 1) * f];
+            let mut acc = 0.0f32;
+            for (&d, &wv) in dr.iter().zip(wr) {
+                acc += d * wv;
+            }
+            *o = acc;
+        }
+    }
+    out
+}
+
+/// `x (rows × k)ᵀ @ dy (rows × f)` → `(k × f)` — the WU-stage product
+/// `dw = xᵀ · dy` (dense for every method, Algorithm 1 line 9).
+pub fn matmul_at(x: &[f32], dy: &[f32], rows: usize, k: usize, f: usize) -> Vec<f32> {
+    assert_eq!(x.len(), rows * k, "x shape mismatch");
+    assert_eq!(dy.len(), rows * f, "dy shape mismatch");
+    let mut out = vec![0.0f32; k * f];
+    for r in 0..rows {
+        let xr = &x[r * k..(r + 1) * k];
+        let dr = &dy[r * f..(r + 1) * f];
+        for (kk, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let or = &mut out[kk * f..(kk + 1) * f];
+            for (o, &d) in or.iter_mut().zip(dr) {
+                *o += xv * d;
+            }
+        }
+    }
+    out
+}
+
+/// Add a bias row to every row of `z (rows × f)` in place.
+pub fn add_bias(z: &mut [f32], bias: &[f32]) {
+    for row in z.chunks_exact_mut(bias.len()) {
+        for (zv, &b) in row.iter_mut().zip(bias) {
+            *zv += b;
+        }
+    }
+}
+
+/// Column sums of `dy (rows × f)` — the bias gradient.
+pub fn bias_grad(dy: &[f32], f: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; f];
+    for row in dy.chunks_exact(f) {
+        for (o, &d) in out.iter_mut().zip(row) {
+            *o += d;
+        }
+    }
+    out
+}
+
+/// `max(z, 0)` elementwise, as a new activation buffer.
+pub fn relu(z: &[f32]) -> Vec<f32> {
+    z.iter().map(|&v| if v > 0.0 { v } else { 0.0 }).collect()
+}
+
+/// In-place ReLU backward: `dz[i] = 0` wherever `z[i] <= 0`.
+pub fn relu_backward(dz: &mut [f32], z: &[f32]) {
+    for (d, &zv) in dz.iter_mut().zip(z) {
+        if zv <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// Softmax cross-entropy with mean reduction over the batch.
+/// Returns `(loss, dlogits)` with `dlogits = (softmax - y) / batch`
+/// (the gradient the BP stage starts from).
+pub fn softmax_xent(logits: &[f32], y: &[f32], batch: usize, classes: usize) -> (f32, Vec<f32>) {
+    assert_eq!(logits.len(), batch * classes);
+    assert_eq!(y.len(), batch * classes);
+    let mut dl = vec![0.0f32; batch * classes];
+    let mut loss = 0.0f32;
+    let inv_b = 1.0 / batch as f32;
+    for b in 0..batch {
+        let zr = &logits[b * classes..(b + 1) * classes];
+        let yr = &y[b * classes..(b + 1) * classes];
+        let zmax = zr.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let mut sum = 0.0f32;
+        for &z in zr {
+            sum += (z - zmax).exp();
+        }
+        let log_sum = sum.ln();
+        let dr = &mut dl[b * classes..(b + 1) * classes];
+        for c in 0..classes {
+            let logp = zr[c] - zmax - log_sum;
+            loss -= yr[c] * logp;
+            dr[c] = (logp.exp() - yr[c]) * inv_b;
+        }
+    }
+    (loss * inv_b, dl)
+}
+
+/// Fraction of rows whose argmax logit matches the one-hot label.
+pub fn accuracy(logits: &[f32], y: &[f32], batch: usize, classes: usize) -> f32 {
+    let mut correct = 0usize;
+    for b in 0..batch {
+        let zr = &logits[b * classes..(b + 1) * classes];
+        let yr = &y[b * classes..(b + 1) * classes];
+        let pred = argmax(zr);
+        let label = argmax(yr);
+        if pred == label {
+            correct += 1;
+        }
+    }
+    correct as f32 / batch as f32
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = (f32::NEG_INFINITY, 0);
+    for (i, &v) in xs.iter().enumerate() {
+        if v > best.0 {
+            best = (v, i);
+        }
+    }
+    best.1
+}
+
+/// Static geometry of one im2col'd convolution (NHWC input, HWIO
+/// weights reshaped to `(kh·kw·ci) × co` — channel-minor K layout, so
+/// M ≤ C_i groups always fall within the input channels of one kernel
+/// tap, exactly the paper's Fig. 5(a) forward grouping).
+#[derive(Clone, Copy, Debug)]
+pub struct ConvGeom {
+    pub kh: usize,
+    pub kw: usize,
+    pub ci: usize,
+    pub co: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub h: usize,
+    pub w: usize,
+    pub ho: usize,
+    pub wo: usize,
+}
+
+impl ConvGeom {
+    /// im2col K dimension (`kh·kw·ci`).
+    pub fn k(&self) -> usize {
+        self.kh * self.kw * self.ci
+    }
+
+    /// im2col row count at batch `b` (`b·ho·wo`).
+    pub fn rows(&self, batch: usize) -> usize {
+        batch * self.ho * self.wo
+    }
+}
+
+/// Lower `x (batch, h, w, ci)` to its im2col matrix
+/// `(batch·ho·wo, kh·kw·ci)`, zero-padding out-of-bounds taps.
+pub fn im2col(x: &[f32], batch: usize, g: &ConvGeom) -> Vec<f32> {
+    assert_eq!(x.len(), batch * g.h * g.w * g.ci, "input shape mismatch");
+    let k = g.k();
+    let mut cols = vec![0.0f32; g.rows(batch) * k];
+    let mut r = 0usize;
+    for b in 0..batch {
+        let xb = &x[b * g.h * g.w * g.ci..(b + 1) * g.h * g.w * g.ci];
+        for oy in 0..g.ho {
+            for ox in 0..g.wo {
+                let row = &mut cols[r * k..(r + 1) * k];
+                let mut kcol = 0usize;
+                for i in 0..g.kh {
+                    for j in 0..g.kw {
+                        let iy = (oy * g.stride + i) as isize - g.pad as isize;
+                        let ix = (ox * g.stride + j) as isize - g.pad as isize;
+                        if iy >= 0 && (iy as usize) < g.h && ix >= 0 && (ix as usize) < g.w {
+                            let base = (iy as usize * g.w + ix as usize) * g.ci;
+                            row[kcol..kcol + g.ci].copy_from_slice(&xb[base..base + g.ci]);
+                        }
+                        kcol += g.ci;
+                    }
+                }
+                r += 1;
+            }
+        }
+    }
+    cols
+}
+
+/// Adjoint of [`im2col`]: scatter-add column gradients back onto the
+/// input image, `(batch·ho·wo, kh·kw·ci)` → `(batch, h, w, ci)`.
+pub fn col2im(dcols: &[f32], batch: usize, g: &ConvGeom) -> Vec<f32> {
+    let k = g.k();
+    assert_eq!(dcols.len(), g.rows(batch) * k, "dcols shape mismatch");
+    let mut dx = vec![0.0f32; batch * g.h * g.w * g.ci];
+    let mut r = 0usize;
+    for b in 0..batch {
+        let xb = &mut dx[b * g.h * g.w * g.ci..(b + 1) * g.h * g.w * g.ci];
+        for oy in 0..g.ho {
+            for ox in 0..g.wo {
+                let row = &dcols[r * k..(r + 1) * k];
+                let mut kcol = 0usize;
+                for i in 0..g.kh {
+                    for j in 0..g.kw {
+                        let iy = (oy * g.stride + i) as isize - g.pad as isize;
+                        let ix = (ox * g.stride + j) as isize - g.pad as isize;
+                        if iy >= 0 && (iy as usize) < g.h && ix >= 0 && (ix as usize) < g.w {
+                            let base = (iy as usize * g.w + ix as usize) * g.ci;
+                            for (o, &d) in
+                                xb[base..base + g.ci].iter_mut().zip(&row[kcol..kcol + g.ci])
+                            {
+                                *o += d;
+                            }
+                        }
+                        kcol += g.ci;
+                    }
+                }
+                r += 1;
+            }
+        }
+    }
+    dx
+}
+
+/// Non-overlapping `f × f` max pooling over NHWC, recording per output
+/// element the winning in-window offset (`wy·f + wx`, first-wins ties)
+/// for the backward scatter.
+pub fn maxpool(
+    x: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    f: usize,
+) -> (Vec<f32>, Vec<u32>) {
+    assert_eq!(x.len(), batch * h * w * c, "input shape mismatch");
+    assert!(h % f == 0 && w % f == 0, "pool factor must divide h and w");
+    let (ho, wo) = (h / f, w / f);
+    let mut out = vec![0.0f32; batch * ho * wo * c];
+    let mut arg = vec![0u32; batch * ho * wo * c];
+    for b in 0..batch {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for ch in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_i = 0u32;
+                    for wy in 0..f {
+                        for wx in 0..f {
+                            let v = x[((b * h + oy * f + wy) * w + ox * f + wx) * c + ch];
+                            if v > best {
+                                best = v;
+                                best_i = (wy * f + wx) as u32;
+                            }
+                        }
+                    }
+                    let o = ((b * ho + oy) * wo + ox) * c + ch;
+                    out[o] = best;
+                    arg[o] = best_i;
+                }
+            }
+        }
+    }
+    (out, arg)
+}
+
+/// Backward of [`maxpool`]: route each output gradient to the element
+/// that won the forward max.
+pub fn maxpool_backward(
+    dy: &[f32],
+    arg: &[u32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    f: usize,
+) -> Vec<f32> {
+    let (ho, wo) = (h / f, w / f);
+    assert_eq!(dy.len(), batch * ho * wo * c, "dy shape mismatch");
+    let mut dx = vec![0.0f32; batch * h * w * c];
+    for b in 0..batch {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for ch in 0..c {
+                    let o = ((b * ho + oy) * wo + ox) * c + ch;
+                    let wy = (arg[o] as usize) / f;
+                    let wx = (arg[o] as usize) % f;
+                    dx[((b * h + oy * f + wy) * w + ox * f + wx) * c + ch] += dy[o];
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// Global average pool NHWC → `(batch, c)`.
+pub fn global_avg(x: &[f32], batch: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    assert_eq!(x.len(), batch * h * w * c, "input shape mismatch");
+    let inv = 1.0 / (h * w) as f32;
+    let mut out = vec![0.0f32; batch * c];
+    for b in 0..batch {
+        let or = &mut out[b * c..(b + 1) * c];
+        for hw in 0..h * w {
+            let xr = &x[(b * h * w + hw) * c..(b * h * w + hw + 1) * c];
+            for (o, &v) in or.iter_mut().zip(xr) {
+                *o += v;
+            }
+        }
+        for o in or.iter_mut() {
+            *o *= inv;
+        }
+    }
+    out
+}
+
+/// Backward of [`global_avg`]: broadcast `dy / (h·w)` over the window.
+pub fn global_avg_backward(dy: &[f32], batch: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    assert_eq!(dy.len(), batch * c, "dy shape mismatch");
+    let inv = 1.0 / (h * w) as f32;
+    let mut dx = vec![0.0f32; batch * h * w * c];
+    for b in 0..batch {
+        let dr = &dy[b * c..(b + 1) * c];
+        for hw in 0..h * w {
+            let xr = &mut dx[(b * h * w + hw) * c..(b * h * w + hw + 1) * c];
+            for (o, &d) in xr.iter_mut().zip(dr) {
+                *o = d * inv;
+            }
+        }
+    }
+    dx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{assert_allclose, Gen};
+
+    #[test]
+    fn matmul_matches_hand_case() {
+        // (2x3) @ (3x2)
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let w = [7.0, 8.0, 9.0, 10.0, 11.0, 12.0];
+        let out = matmul(&x, &w, 2, 3, 2);
+        assert_eq!(out, vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn transposed_products_agree_with_explicit_transpose() {
+        let mut g = Gen::new(11);
+        let (rows, k, f) = (5, 7, 4);
+        let x = g.vec_normal(rows * k);
+        let w = g.vec_normal(k * f);
+        let dy = g.vec_normal(rows * f);
+        // dy @ w^T via explicit transpose
+        let mut wt = vec![0.0f32; k * f];
+        for kk in 0..k {
+            for ff in 0..f {
+                wt[ff * k + kk] = w[kk * f + ff];
+            }
+        }
+        let want_bt = matmul(&dy, &wt, rows, f, k);
+        assert_allclose(&matmul_bt(&dy, &w, rows, f, k), &want_bt, 1e-5, 1e-6);
+        // x^T @ dy via explicit transpose
+        let mut xt = vec![0.0f32; rows * k];
+        for r in 0..rows {
+            for kk in 0..k {
+                xt[kk * rows + r] = x[r * k + kk];
+            }
+        }
+        let want_at = matmul(&xt, &dy, k, rows, f);
+        assert_allclose(&matmul_at(&x, &dy, rows, k, f), &want_at, 1e-5, 1e-6);
+    }
+
+    #[test]
+    fn bias_and_relu() {
+        let mut z = vec![1.0, -2.0, 3.0, -4.0];
+        add_bias(&mut z, &[0.5, 0.5]);
+        assert_eq!(z, vec![1.5, -1.5, 3.5, -3.5]);
+        let a = relu(&z);
+        assert_eq!(a, vec![1.5, 0.0, 3.5, 0.0]);
+        let mut dz = vec![1.0, 1.0, 1.0, 1.0];
+        relu_backward(&mut dz, &z);
+        assert_eq!(dz, vec![1.0, 0.0, 1.0, 0.0]);
+        assert_eq!(bias_grad(&[1.0, 2.0, 3.0, 4.0], 2), vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn softmax_xent_uniform_logits_give_ln_c() {
+        let logits = vec![0.0f32; 2 * 4];
+        let mut y = vec![0.0f32; 2 * 4];
+        y[0] = 1.0;
+        y[4 + 2] = 1.0;
+        let (loss, dl) = softmax_xent(&logits, &y, 2, 4);
+        assert!((loss - (4.0f32).ln()).abs() < 1e-6, "loss {loss}");
+        // gradient sums to zero per row
+        assert!(dl[..4].iter().sum::<f32>().abs() < 1e-7);
+    }
+
+    #[test]
+    fn softmax_xent_gradient_matches_finite_difference() {
+        let mut g = Gen::new(3);
+        let (b, c) = (3, 5);
+        let logits = g.vec_normal(b * c);
+        let mut y = vec![0.0f32; b * c];
+        for i in 0..b {
+            y[i * c + i % c] = 1.0;
+        }
+        let (_, dl) = softmax_xent(&logits, &y, b, c);
+        let eps = 1e-3f32;
+        for i in [0usize, 7, 14] {
+            let mut lp = logits.clone();
+            lp[i] += eps;
+            let (up, _) = softmax_xent(&lp, &y, b, c);
+            lp[i] -= 2.0 * eps;
+            let (dn, _) = softmax_xent(&lp, &y, b, c);
+            let num = (up - dn) / (2.0 * eps);
+            assert!((num - dl[i]).abs() < 1e-3, "i={i}: {num} vs {}", dl[i]);
+        }
+    }
+
+    #[test]
+    fn accuracy_counts_argmax_matches() {
+        let logits = [0.1, 0.9, 0.8, 0.2];
+        let y = [0.0, 1.0, 0.0, 1.0];
+        assert_eq!(accuracy(&logits, &y, 2, 2), 0.5);
+    }
+
+    fn geom_3x3(h: usize, w: usize, ci: usize, co: usize) -> ConvGeom {
+        ConvGeom { kh: 3, kw: 3, ci, co, stride: 1, pad: 1, h, w, ho: h, wo: w }
+    }
+
+    #[test]
+    fn im2col_matches_direct_convolution() {
+        let mut g = Gen::new(5);
+        let geom = geom_3x3(4, 4, 2, 3);
+        let (b, k) = (2, geom.k());
+        let x = g.vec_normal(b * 4 * 4 * 2);
+        let w = g.vec_normal(k * 3);
+        let cols = im2col(&x, b, &geom);
+        let got = matmul(&cols, &w, geom.rows(b), k, 3);
+        // direct NHWC x HWIO convolution
+        for bi in 0..b {
+            for oy in 0..4usize {
+                for ox in 0..4usize {
+                    for oc in 0..3usize {
+                        let mut acc = 0.0f32;
+                        for i in 0..3usize {
+                            for j in 0..3usize {
+                                let (iy, ix) = (oy + i, ox + j);
+                                if iy < 1 || ix < 1 || iy > 4 || ix > 4 {
+                                    continue;
+                                }
+                                for ch in 0..2usize {
+                                    let xv = x[((bi * 4 + iy - 1) * 4 + ix - 1) * 2 + ch];
+                                    let wv = w[((i * 3 + j) * 2 + ch) * 3 + oc];
+                                    acc += xv * wv;
+                                }
+                            }
+                        }
+                        let o = ((bi * 4 + oy) * 4 + ox) * 3 + oc;
+                        assert!((got[o] - acc).abs() < 1e-4, "mismatch at {o}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_im2col() {
+        // <im2col(x), d> == <x, col2im(d)> pins the backward exactly.
+        let mut g = Gen::new(9);
+        let geom = ConvGeom {
+            kh: 3, kw: 3, ci: 2, co: 1, stride: 2, pad: 1, h: 5, w: 5, ho: 3, wo: 3,
+        };
+        let b = 2;
+        let x = g.vec_normal(b * 5 * 5 * 2);
+        let d = g.vec_normal(geom.rows(b) * geom.k());
+        let cols = im2col(&x, b, &geom);
+        let back = col2im(&d, b, &geom);
+        let lhs: f32 = cols.iter().zip(&d).map(|(a, b)| a * b).sum();
+        let rhs: f32 = x.iter().zip(&back).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-2 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn maxpool_and_backward_route_to_argmax() {
+        // one batch, 2x2 -> 1x1, 1 channel
+        let x = [1.0, 5.0, 2.0, 3.0];
+        let (out, arg) = maxpool(&x, 1, 2, 2, 1, 2);
+        assert_eq!(out, vec![5.0]);
+        assert_eq!(arg, vec![1]); // wy=0, wx=1
+        let dx = maxpool_backward(&[2.5], &arg, 1, 2, 2, 1, 2);
+        assert_eq!(dx, vec![0.0, 2.5, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn global_avg_and_backward() {
+        // batch 1, 2x2 spatial, 2 channels
+        let x = [1.0, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0];
+        let out = global_avg(&x, 1, 2, 2, 2);
+        assert_eq!(out, vec![2.5, 25.0]);
+        let dx = global_avg_backward(&[4.0, 8.0], 1, 2, 2, 2);
+        assert_eq!(dx[..2], [1.0, 2.0]);
+        assert_eq!(dx.iter().sum::<f32>(), 4.0 * 4.0 / 4.0 + 8.0 * 4.0 / 4.0);
+    }
+}

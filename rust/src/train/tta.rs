@@ -61,6 +61,27 @@ pub fn speedup_over(dense: &TtaRow, row: &TtaRow) -> Option<f64> {
     }
 }
 
+/// TTA rows for a whole set of measured curves (native or PJRT backend
+/// — the `sat compare --tta` path): each curve's method is combined
+/// with the simulated per-batch time of `model` under that method.
+/// Curves whose method string does not parse are skipped.
+pub fn rows_for_curves(
+    model: &crate::models::Model,
+    pattern: NmPattern,
+    cfg: &SatConfig,
+    mem: &MemConfig,
+    curves: &[TrainCurve],
+    target_loss: f32,
+) -> Vec<TtaRow> {
+    curves
+        .iter()
+        .filter_map(|c| {
+            let method: Method = c.method.parse().ok()?;
+            Some(tta_row(model, method, pattern, c, target_loss, cfg, mem))
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -96,6 +117,23 @@ mod tests {
         // TTA speedup is per-batch speedup shrunk by the extra steps
         assert!(tta < per_batch);
         assert!(tta > 1.0);
+    }
+
+    #[test]
+    fn rows_for_curves_maps_methods_and_skips_unparsable() {
+        let model = zoo::tiny_mlp();
+        let cfg = SatConfig::paper_default();
+        let mem = MemConfig::paper_default();
+        let mut losses = vec![2.0f32];
+        losses.extend(vec![0.0; 40]); // EMA(0.1) sinks below 0.5 by ~step 14
+        let mut good = fake_curve(losses.clone());
+        good.method = "dense".into();
+        let mut bad = fake_curve(losses);
+        bad.method = "mystery".into();
+        let rows = rows_for_curves(&model, NmPattern::P2_8, &cfg, &mem, &[good, bad], 0.5);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].method, Method::Dense);
+        assert!(rows[0].tta_seconds.is_some());
     }
 
     #[test]
