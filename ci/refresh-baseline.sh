@@ -1,0 +1,22 @@
+#!/usr/bin/env sh
+# Regenerate the committed cross-commit bench-diff baseline for the CI
+# sweep-smoke gate. The grid below MUST stay in sync with the
+# "Sweep smoke grid" step of .github/workflows/ci.yml — bench-diff
+# matches scenarios on their full grid coordinates, so a drifted grid
+# silently shrinks the comparison.
+#
+# Usage: ci/refresh-baseline.sh   (from any directory; needs cargo)
+# Then commit the updated ci/BENCH_sweep_smoke.baseline.json.
+#
+# The sweep result rows are pure simulator output (no timing), so the
+# file is byte-stable for a given commit; until it is committed, CI
+# falls back to a rolling baseline cached from the previous run.
+set -eu
+cd "$(dirname "$0")/.."
+cargo run --release -p sat -- sweep \
+  --models resnet9,resnet18,vit \
+  --methods dense,srste,bdwp \
+  --patterns 1:4,2:8 \
+  --bandwidths 25.6,102.4 \
+  --jobs 4 --format json --out ci/BENCH_sweep_smoke.baseline.json
+echo "refreshed ci/BENCH_sweep_smoke.baseline.json — commit it to pin the gate"

@@ -13,7 +13,8 @@ use sat::util::table::ascii_chart;
 
 fn main() -> anyhow::Result<()> {
     let steps = 300;
-    let opts = TrainOptions { steps, lr: 0.05, eval_every: 100, use_chunk: false, seed: 1 };
+    let opts =
+        TrainOptions { steps, lr: 0.05, eval_every: 100, seed: 1, ..TrainOptions::default() };
     let specs: Vec<TrainSpec> = Method::ALL
         .iter()
         .map(|&m| TrainSpec::new("tiny_mlp", m, NmPattern::P2_8))

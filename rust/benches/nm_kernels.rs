@@ -1,0 +1,268 @@
+//! N:M kernel microbench — the compute-skipping acceptance exhibit.
+//!
+//! Measures the native backend's compact sparse kernels (`spmm_ff`,
+//! `spmm_bt`) against the dense kernels on masked weights, over a
+//! ResNet-shaped (B,K)×(K,F) sweep (constant dense-MAC volume, depth
+//! shifting from wide-and-shallow to narrow-and-deep im2col shapes),
+//! plus the per-step `CompactNm` pre-generation (encode) cost and an
+//! end-to-end BDWP `NativeNet` step-time A/B with `--sparse-compute`
+//! on vs off.
+//!
+//! Emits `BENCH_nm_kernels.json` in the `sat bench-diff` row schema so
+//! CI can self-diff and archive it.
+//!
+//! Run: `cargo bench --bench nm_kernels` (add `-- --quick` for the CI
+//! smoke grid, `-- --out FILE` to change the report path).
+
+use sat::models::zoo::Model;
+use sat::models::{Layer, LayerKind};
+use sat::nm::{prune_values, CompactNm, Method, NmPattern, PruneAxis};
+use sat::train::native::{ops, par, sparse_ops, NativeNet, SparseCompute};
+use sat::util::json;
+use sat::util::prng::Pcg32;
+use sat::util::stats::geomean;
+use sat::util::table::Table;
+use sat::util::timer::{bench, Measurement};
+
+struct KernelRow {
+    shape: String,
+    kernel: &'static str,
+    pattern: NmPattern,
+    k: usize,
+    f: usize,
+    workers: usize,
+    m: Measurement,
+    dense_macs: u64,
+}
+
+impl KernelRow {
+    fn json(&self) -> String {
+        json::Obj::new()
+            .field_str("model", &self.shape)
+            .field_str("method", self.kernel)
+            .field_str("pattern", &self.pattern.to_string())
+            .field_usize("rows", self.k)
+            .field_usize("cols", self.f)
+            .field_usize("lanes", self.workers)
+            .field_f64("freq_mhz", 0.0)
+            .field_f64("bandwidth_gbs", 0.0)
+            .field_bool("overlap", true)
+            .field_u64("total_cycles", (self.m.mean_s * 1e9) as u64) // ns
+            .field_f64("batch_ms", self.m.mean_s * 1e3)
+            .field_f64("runtime_gops", {
+                // dense-equivalent throughput, Table IV convention
+                2.0 * self.dense_macs as f64 / self.m.mean_s / 1e9
+            })
+            .finish()
+    }
+}
+
+fn vec_normal(rng: &mut Pcg32, len: usize) -> Vec<f32> {
+    rng.normals(len)
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().collect();
+    let quick = argv.iter().any(|a| a == "--quick");
+    let out_path = argv
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| argv.get(i + 1).cloned())
+        .unwrap_or_else(|| "BENCH_nm_kernels.json".to_string());
+    let threaded_workers = 4usize;
+    let (warmup, iters) = if quick { (1, 3) } else { (2, 7) };
+    // ResNet-ish im2col shapes (B·Ho·Wo, kh·kw·Ci, Co), constant dense
+    // MAC volume so the sweep isolates shape effects.
+    let shapes: &[(usize, usize, usize)] = if quick {
+        &[(784, 576, 64), (196, 1152, 128), (49, 2304, 256)]
+    } else {
+        &[(3136, 576, 64), (784, 1152, 128), (196, 2304, 256), (49, 4608, 512)]
+    };
+    let patterns: &[NmPattern] = if quick {
+        &[NmPattern::P2_8]
+    } else {
+        &[NmPattern::P2_4, NmPattern::P2_8, NmPattern::P2_16]
+    };
+
+    let mut rows: Vec<KernelRow> = Vec::new();
+    let mut ff_speedups_28 = Vec::new();
+    let mut bt_speedups_28 = Vec::new();
+    let mut table = Table::new("N:M kernel sweep — dense (masked w̃) vs compute-skipping")
+        .header(&[
+            "shape", "pattern", "dense FF ms", "spmm_ff ms", "FF speedup",
+            "dense BT ms", "spmm_bt ms", "BT speedup", "encode ms",
+        ]);
+
+    for &(b, k, f) in shapes {
+        let mut rng = Pcg32::new(0xBE7C + k as u64);
+        let x = vec_normal(&mut rng, b * k);
+        let w = vec_normal(&mut rng, k * f);
+        let dy = vec_normal(&mut rng, b * f);
+        let macs = (b * k * f) as u64;
+        let shape = format!("b{b}_k{k}_f{f}");
+        for &p in patterns {
+            let wff = prune_values(&w, k, f, p, PruneAxis::Rows);
+            let wbp = prune_values(&w, k, f, p, PruneAxis::Cols);
+            let enc_ff = CompactNm::encode_t(&w, k, f, p);
+            let enc_bp = CompactNm::encode(&w, k, f, p);
+            // correctness pin before timing anything
+            assert_eq!(
+                sparse_ops::spmm_ff(&x, &enc_ff, b, k, f),
+                ops::matmul(&x, &wff, b, k, f),
+                "spmm_ff != masked dense at {shape} {p}"
+            );
+            assert_eq!(
+                sparse_ops::spmm_bt(&dy, &enc_bp, b, f, k),
+                ops::matmul_bt(&dy, &wbp, b, f, k),
+                "spmm_bt != masked dense at {shape} {p}"
+            );
+
+            let label = |kern: &str| format!("{kern} {shape} {p}");
+            let dense_ff =
+                bench(&label("matmul(w̃_FF)"), warmup, iters, || ops::matmul(&x, &wff, b, k, f));
+            let spmm_ff = bench(&label("spmm_ff"), warmup, iters, || {
+                sparse_ops::spmm_ff(&x, &enc_ff, b, k, f)
+            });
+            let mut buf = Vec::new();
+            let spmm_ff_mt = bench(&label("spmm_ff/mt"), warmup, iters, || {
+                par::spmm_ff_into(&x, &enc_ff, b, k, f, threaded_workers, &mut buf);
+                buf.len()
+            });
+            let dense_bt = bench(&label("matmul_bt(w̃_BP)"), warmup, iters, || {
+                ops::matmul_bt(&dy, &wbp, b, f, k)
+            });
+            let spmm_bt = bench(&label("spmm_bt"), warmup, iters, || {
+                sparse_ops::spmm_bt(&dy, &enc_bp, b, f, k)
+            });
+            let mut buf2 = Vec::new();
+            let spmm_bt_mt = bench(&label("spmm_bt/mt"), warmup, iters, || {
+                par::spmm_bt_into(&dy, &enc_bp, b, f, k, threaded_workers, &mut buf2);
+                buf2.len()
+            });
+            let mut enc_scratch = CompactNm::empty(p);
+            let encode = bench(&label("encode_t+encode"), warmup, iters, || {
+                CompactNm::encode_t_into(&w, k, f, p, &mut enc_scratch);
+                let a = enc_scratch.nnz();
+                CompactNm::encode_into(&w, k, f, p, &mut enc_scratch);
+                a + enc_scratch.nnz()
+            });
+
+            let ff_speedup = dense_ff.mean_s / spmm_ff.mean_s;
+            let bt_speedup = dense_bt.mean_s / spmm_bt.mean_s;
+            if p == NmPattern::P2_8 {
+                ff_speedups_28.push(ff_speedup);
+                bt_speedups_28.push(bt_speedup);
+            }
+            table.row(&[
+                shape.clone(),
+                p.to_string(),
+                format!("{:.2}", dense_ff.mean_s * 1e3),
+                format!("{:.2}", spmm_ff.mean_s * 1e3),
+                format!("{ff_speedup:.2}x"),
+                format!("{:.2}", dense_bt.mean_s * 1e3),
+                format!("{:.2}", spmm_bt.mean_s * 1e3),
+                format!("{bt_speedup:.2}x"),
+                format!("{:.2}", encode.mean_s * 1e3),
+            ]);
+            for (kernel, workers, m) in [
+                ("matmul_dense_ff", 1, dense_ff),
+                ("spmm_ff", 1, spmm_ff),
+                ("spmm_ff_mt", threaded_workers, spmm_ff_mt),
+                ("matmul_dense_bt", 1, dense_bt),
+                ("spmm_bt", 1, spmm_bt),
+                ("spmm_bt_mt", threaded_workers, spmm_bt_mt),
+                ("encode_pregen", 1, encode),
+            ] {
+                rows.push(KernelRow {
+                    shape: shape.clone(),
+                    kernel,
+                    pattern: p,
+                    k,
+                    f,
+                    workers,
+                    m,
+                    dense_macs: macs,
+                });
+            }
+        }
+    }
+    table.print();
+
+    // ---- end-to-end: BDWP NativeNet step time, sparse-compute A/B ----
+    let (dims, e2e_batch, e2e_steps): (&[usize], usize, usize) =
+        if quick { (&[512, 512, 512, 64], 128, 2) } else { (&[1024, 1024, 1024, 512, 64], 256, 3) };
+    let layers: Vec<Layer> = dims
+        .windows(2)
+        .enumerate()
+        .map(|(i, d)| Layer {
+            name: format!("fc{i}"),
+            kind: LayerKind::Linear { fi: d[0], fo: d[1], tokens: 1 },
+            h: 1,
+            w: 1,
+            sparse_ok: true,
+        })
+        .collect();
+    let model = Model {
+        name: "bench_mlp".into(),
+        dataset: "clusters".into(),
+        batch: e2e_batch,
+        layers,
+        epochs: 1,
+        dataset_size: 0,
+    };
+    let mut rng = Pcg32::new(7);
+    let x = vec_normal(&mut rng, e2e_batch * dims[0]);
+    let classes = *dims.last().unwrap();
+    let mut y = vec![0.0f32; e2e_batch * classes];
+    for i in 0..e2e_batch {
+        y[i * classes + i % classes] = 1.0;
+    }
+    let step_time = |sparse: SparseCompute, threads: usize| -> f64 {
+        let mut net = NativeNet::build(&model, Method::Bdwp, NmPattern::P2_8, 1).unwrap();
+        net.sparse = sparse;
+        net.threads = threads;
+        net.train_step(&x, &y, 0.01); // warm the arena + encodings
+        let t0 = std::time::Instant::now();
+        for _ in 0..e2e_steps {
+            net.train_step(&x, &y, 0.01);
+        }
+        t0.elapsed().as_secs_f64() / e2e_steps as f64
+    };
+    let off = step_time(SparseCompute::Off, 1);
+    let on = step_time(SparseCompute::On, 1);
+    let on_mt = step_time(SparseCompute::On, threaded_workers);
+    println!(
+        "e2e bdwp 2:8 ({} x batch {}): step {:.1} ms dense-path, {:.1} ms sparse-compute \
+         ({:.2}x), {:.1} ms sparse+{} threads ({:.2}x)",
+        model.name, e2e_batch, off * 1e3, on * 1e3, off / on,
+        threaded_workers, on_mt * 1e3, off / on_mt,
+    );
+
+    let ff_geo = geomean(&ff_speedups_28);
+    let bt_geo = geomean(&bt_speedups_28);
+    println!(
+        "ACCEPTANCE spmm_ff speedup vs dense(masked) at 2:8: geomean {ff_geo:.2}x \
+         (target >= 2x); spmm_bt geomean {bt_geo:.2}x"
+    );
+
+    let doc = json::Obj::new()
+        .field_str("schema", "sat-nm-kernels-v1")
+        .field_usize("grid", rows.len())
+        .field_raw(
+            "meta",
+            &json::Obj::new()
+                .field_bool("quick", quick)
+                .field_usize("iters", iters)
+                .field_f64("ff_geomean_speedup_2_8", ff_geo)
+                .field_f64("bt_geomean_speedup_2_8", bt_geo)
+                .field_f64("e2e_step_ms_dense_path", off * 1e3)
+                .field_f64("e2e_step_ms_sparse", on * 1e3)
+                .field_f64("e2e_step_ms_sparse_mt", on_mt * 1e3)
+                .finish(),
+        )
+        .field_raw("results", &json::array(rows.iter().map(|r| r.json())))
+        .finish();
+    std::fs::write(&out_path, &doc)?;
+    eprintln!("wrote {} bytes to {out_path}", doc.len());
+    Ok(())
+}

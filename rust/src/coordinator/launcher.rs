@@ -40,10 +40,12 @@ SUBCOMMANDS
              [--backend native|pjrt --model tiny_mlp|tiny_cnn|...
               --method dense|srste|sdgp|sdwp|bdwp --pattern N:M
               --steps N --lr F --eval-every K --seed S --chunk
+              --sparse-compute auto|on|off --threads N
               --artifact NAME --assert-decreasing]
   compare    train several methods on identical data (Fig. 4 protocol)
              [--backend native|pjrt --model mlp|cnn|vit --steps N
               --eval-every K --tta --sim-model M --target F
+              --sparse-compute auto|on|off --threads N
               --check-tracks-dense PCT]
   verify     check the N:M golden contract; native checks run from a
              fresh clone, PJRT step goldens when artifacts exist
@@ -69,12 +71,13 @@ pub fn run(argv: &[String]) -> i32 {
         ]),
         Some("exhibits") => flags.push("jobs"),
         Some("train") => {
-            flags.push("backend");
+            flags.extend_from_slice(&["backend", "sparse-compute", "threads"]);
             switches.push("assert-decreasing");
         }
         Some("compare") => {
             flags.extend_from_slice(&[
                 "backend", "target", "sim-model", "check-tracks-dense",
+                "sparse-compute", "threads",
             ]);
             switches.push("tta");
         }
@@ -128,7 +131,7 @@ pub fn run(argv: &[String]) -> i32 {
 /// (resnet18 BDWP at the deployed config) are scheduled once.
 fn prewarm_exhibits(only: Option<&str>, jobs_n: usize) -> anyhow::Result<SimBank> {
     let mut bank = SimBank::default();
-    let schedules = sweep::ScheduleCache::new();
+    let caches = sweep::SweepCaches::new();
     let base = SweepSpec {
         patterns: vec![NmPattern::P2_8],
         jobs: jobs_n,
@@ -150,7 +153,7 @@ fn prewarm_exhibits(only: Option<&str>, jobs_n: usize) -> anyhow::Result<SimBank
             methods,
             ..base.clone()
         };
-        bank.absorb(&sweep::run_sweep_cached(&spec, &schedules)?);
+        bank.absorb(&sweep::run_sweep_cached(&spec, &caches)?);
     }
     if only.map_or(true, |o| o == "fig17") {
         let spec = SweepSpec {
@@ -160,7 +163,7 @@ fn prewarm_exhibits(only: Option<&str>, jobs_n: usize) -> anyhow::Result<SimBank
             bandwidths: report::FIG17_BANDWIDTHS.to_vec(),
             ..base
         };
-        bank.absorb(&sweep::run_sweep_cached(&spec, &schedules)?);
+        bank.absorb(&sweep::run_sweep_cached(&spec, &caches)?);
     }
     Ok(bank)
 }
@@ -304,6 +307,18 @@ fn backend_kind(args: &Args) -> anyhow::Result<BackendKind> {
     args.get_or("backend", "native").parse().map_err(|e: String| anyhow!("{e}"))
 }
 
+/// Resolve the native engine's execution knobs (`--sparse-compute`,
+/// `--threads`); both are result-neutral, so they live outside
+/// `RunConfig`'s what-to-run surface.
+fn compute_knobs(args: &Args) -> anyhow::Result<(train::SparseCompute, usize)> {
+    let sparse = args
+        .get_or("sparse-compute", "auto")
+        .parse()
+        .map_err(|e: String| anyhow!("{e}"))?;
+    let threads = args.get_parse("threads", 0usize)?;
+    Ok((sparse, threads))
+}
+
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = RunConfig::resolve(args)?;
     let kind = backend_kind(args)?;
@@ -320,12 +335,15 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     };
     // family-tuned default lr unless the user pinned one
     let lr = if args.get("lr").is_some() { cfg.lr } else { train::default_lr(spec.family()) };
+    let (sparse_compute, threads) = compute_knobs(args)?;
     let opts = TrainOptions {
         steps: cfg.steps,
         lr,
         eval_every: cfg.eval_every,
         use_chunk: cfg.use_chunk,
         seed: cfg.seed,
+        sparse_compute,
+        threads,
     };
     let backend = train::open_backend(kind, &cfg.artifacts_dir)?;
     println!("training {spec} for {} steps on the {} backend", opts.steps, backend.name());
@@ -382,12 +400,15 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
     } else {
         train::default_lr(specs[0].family())
     };
+    let (sparse_compute, threads) = compute_knobs(args)?;
     let opts = TrainOptions {
         steps: cfg.steps,
         lr,
         eval_every,
         use_chunk: cfg.use_chunk,
         seed: cfg.seed,
+        sparse_compute,
+        threads,
     };
     let backend = train::open_backend(kind, &cfg.artifacts_dir)?;
     let curves = train::compare_specs(&*backend, &specs, &opts)?;

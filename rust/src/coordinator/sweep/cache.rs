@@ -1,11 +1,22 @@
-//! Shared RWG schedule cache.
+//! Shared once-per-key compute caches for the sweep engine.
 //!
-//! A sweep grid revisits the same (model, method, pattern) coordinates
-//! once per array/bandwidth variant; RWG scheduling is pure, so each
-//! distinct key is computed exactly once and shared across workers as an
-//! `Arc<ModelSchedule>`. The key also carries the arch fields the RWG
-//! actually reads — dataflow selection and predicted cycles depend on
-//! the array geometry — so two array variants never alias a schedule.
+//! A sweep grid revisits the same (model, method, pattern, arch)
+//! coordinates once per bandwidth/overlap variant. Two pure computations
+//! hang off that key and are cached here:
+//!
+//! * the RWG schedule ([`ScheduleCache`]) — dataflow selection and
+//!   predicted cycles per layer/stage;
+//! * the memory-independent step precomputation ([`PrecompCache`],
+//!   [`crate::sim::engine::precompute_step`]) — per-layer MatMul shapes,
+//!   STCE/SORE/WUVE cycle counts and traffic volumes, so grid points
+//!   that differ only in bandwidth never re-walk the model (the ROADMAP
+//!   "batched single-pass simulation" item).
+//!
+//! Both wrap one generic [`OnceKeyed`] store: the map assigns ownership
+//! of a key under a mutex, but the compute itself runs outside it in the
+//! slot's `OnceLock`, so workers computing *different* keys never
+//! serialize on each other (on an all-miss grid — the default
+//! `sat sweep` spec — a single lock would bottleneck the whole pool).
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -14,10 +25,12 @@ use crate::arch::SatConfig;
 use crate::models::Model;
 use crate::nm::{Method, NmPattern};
 use crate::sched::{rwg_schedule, ModelSchedule};
+use crate::sim::engine::{precompute_step, StepPrecomp};
 
-/// Everything `rwg_schedule` reads, in hashable form (`freq_mhz` via
-/// bit pattern; it does not affect scheduling today but keeping it in
-/// the key makes the cache robust to future cycle-model changes).
+/// Everything `rwg_schedule` / `precompute_step` read, in hashable form
+/// (`freq_mhz` via bit pattern; it does not affect scheduling today but
+/// keeping it in the key makes the caches robust to future cycle-model
+/// changes).
 #[derive(Clone, PartialEq, Eq, Hash, Debug)]
 pub struct ScheduleKey {
     pub model: String,
@@ -50,46 +63,36 @@ impl ScheduleKey {
     }
 }
 
-/// Per-key slot: the map assigns ownership of a key under the mutex,
-/// but the RWG compute itself runs outside it in the slot's `OnceLock`,
-/// so workers scheduling *different* keys never serialize on each other
-/// (on an all-miss grid — the default `sat sweep` spec — that would
-/// otherwise bottleneck the whole pool on one lock).
-type Slot = Arc<OnceLock<Arc<ModelSchedule>>>;
+/// Per-key slot; racing threads for the *same* key block on the slot,
+/// threads on different keys proceed concurrently.
+type Slot<V> = Arc<OnceLock<Arc<V>>>;
 
-#[derive(Default)]
-struct CacheInner {
-    map: HashMap<ScheduleKey, Slot>,
+struct OnceKeyedInner<V> {
+    map: HashMap<ScheduleKey, Slot<V>>,
     hits: u64,
     misses: u64,
 }
 
-/// Thread-safe once-per-key schedule store with hit accounting.
-#[derive(Default)]
-pub struct ScheduleCache {
-    inner: Mutex<CacheInner>,
+/// Thread-safe once-per-[`ScheduleKey`] value store with hit accounting.
+pub struct OnceKeyed<V> {
+    inner: Mutex<OnceKeyedInner<V>>,
 }
 
-impl ScheduleCache {
-    pub fn new() -> ScheduleCache {
-        ScheduleCache::default()
+impl<V> Default for OnceKeyed<V> {
+    fn default() -> Self {
+        OnceKeyed {
+            inner: Mutex::new(OnceKeyedInner { map: HashMap::new(), hits: 0, misses: 0 }),
+        }
     }
+}
 
-    /// Return the schedule for the key, computing it on first use. The
-    /// mutex is held only to look up / create the key's slot; the
-    /// `OnceLock` guarantees exactly one `rwg_schedule` run per key
-    /// (racing threads for the *same* key block on the slot, threads on
-    /// different keys proceed concurrently).
-    pub fn get_or_compute(
-        &self,
-        model: &Model,
-        method: Method,
-        pattern: NmPattern,
-        cfg: &SatConfig,
-    ) -> Arc<ModelSchedule> {
-        let key = ScheduleKey::new(&model.name, method, pattern, cfg);
-        let slot: Slot = {
-            let mut guard = self.inner.lock().expect("schedule cache poisoned");
+impl<V> OnceKeyed<V> {
+    /// Return the key's value, computing it on first use. The mutex is
+    /// held only to look up / create the key's slot; the `OnceLock`
+    /// guarantees exactly one `compute` run per key.
+    pub fn get_or_compute(&self, key: ScheduleKey, compute: impl FnOnce() -> V) -> Arc<V> {
+        let slot: Slot<V> = {
+            let mut guard = self.inner.lock().expect("sweep cache poisoned");
             let inner = &mut *guard;
             match inner.map.get(&key) {
                 Some(s) => {
@@ -98,26 +101,91 @@ impl ScheduleCache {
                 }
                 None => {
                     inner.misses += 1;
-                    let slot: Slot = Arc::new(OnceLock::new());
+                    let slot: Slot<V> = Arc::new(OnceLock::new());
                     inner.map.insert(key, Arc::clone(&slot));
                     slot
                 }
             }
         };
-        Arc::clone(
-            slot.get_or_init(|| Arc::new(rwg_schedule(model, method, pattern, cfg))),
-        )
+        Arc::clone(slot.get_or_init(|| Arc::new(compute())))
     }
 
     /// (hits, misses) so far; misses == number of distinct keys seen.
     pub fn stats(&self) -> (u64, u64) {
-        let inner = self.inner.lock().expect("schedule cache poisoned");
+        let inner = self.inner.lock().expect("sweep cache poisoned");
         (inner.hits, inner.misses)
     }
 
-    /// Number of cached schedules.
+    /// Number of cached values.
     pub fn len(&self) -> usize {
-        self.inner.lock().expect("schedule cache poisoned").map.len()
+        self.inner.lock().expect("sweep cache poisoned").map.len()
+    }
+}
+
+/// Once-per-key RWG schedule store.
+#[derive(Default)]
+pub struct ScheduleCache {
+    inner: OnceKeyed<ModelSchedule>,
+}
+
+impl ScheduleCache {
+    pub fn new() -> ScheduleCache {
+        ScheduleCache::default()
+    }
+
+    /// Return the schedule for the key, computing it on first use.
+    pub fn get_or_compute(
+        &self,
+        model: &Model,
+        method: Method,
+        pattern: NmPattern,
+        cfg: &SatConfig,
+    ) -> Arc<ModelSchedule> {
+        let key = ScheduleKey::new(&model.name, method, pattern, cfg);
+        self.inner.get_or_compute(key, || rwg_schedule(model, method, pattern, cfg))
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        self.inner.stats()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.len()
+    }
+}
+
+/// Once-per-key step precomputation store
+/// ([`crate::sim::engine::precompute_step`] output). Keyed identically
+/// to [`ScheduleCache`] — the precomputation is a pure function of the
+/// same coordinates — so bandwidth-only grid variants all hit.
+#[derive(Default)]
+pub struct PrecompCache {
+    inner: OnceKeyed<StepPrecomp>,
+}
+
+impl PrecompCache {
+    pub fn new() -> PrecompCache {
+        PrecompCache::default()
+    }
+
+    /// Return the precomputation for the key, computing it on first use
+    /// from the (already cached) schedule.
+    pub fn get_or_compute(
+        &self,
+        model: &Model,
+        schedule: &ModelSchedule,
+        cfg: &SatConfig,
+    ) -> Arc<StepPrecomp> {
+        let key = ScheduleKey::new(&model.name, schedule.method, schedule.pattern, cfg);
+        self.inner.get_or_compute(key, || precompute_step(model, schedule, cfg))
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        self.inner.stats()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.len()
     }
 }
 
@@ -168,5 +236,27 @@ mod tests {
         let (hits, misses) = cache.stats();
         assert_eq!(misses, 1);
         assert_eq!(hits, 15);
+    }
+
+    #[test]
+    fn precomp_cache_shares_across_bandwidth_variants() {
+        let schedules = ScheduleCache::new();
+        let precomps = PrecompCache::new();
+        let model = zoo::resnet9();
+        let cfg = SatConfig::paper_default();
+        let s = schedules.get_or_compute(&model, Method::Bdwp, NmPattern::P2_8, &cfg);
+        // three bandwidth-only "grid points" — one precompute
+        for _ in 0..3 {
+            let pre = precomps.get_or_compute(&model, &s, &cfg);
+            assert_eq!(pre.model, "resnet9");
+            assert!(!pre.layers.is_empty());
+        }
+        assert_eq!(precomps.stats(), (2, 1));
+        // a different arch is a different key
+        let cfg2 = SatConfig { rows: 16, cols: 16, ..cfg };
+        let s2 = schedules.get_or_compute(&model, Method::Bdwp, NmPattern::P2_8, &cfg2);
+        precomps.get_or_compute(&model, &s2, &cfg2);
+        assert_eq!(precomps.stats(), (2, 2));
+        assert_eq!(precomps.len(), 2);
     }
 }

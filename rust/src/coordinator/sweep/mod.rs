@@ -8,8 +8,13 @@
 //!
 //! 1. [`grid`] expands a declarative [`SweepSpec`] into a deterministic
 //!    job list (Cartesian product over five axes);
-//! 2. [`cache`] shares RWG schedules across grid points — scheduling is
-//!    computed once per distinct (model, method, pattern, arch) key;
+//! 2. [`cache`] shares the pure per-key computations across grid points:
+//!    the RWG schedule AND the memory-independent step precomputation
+//!    ([`crate::sim::engine::precompute_step`]) are each computed once
+//!    per distinct (model, method, pattern, arch) key — points that
+//!    differ only in bandwidth/overlap pay only the cheap
+//!    [`crate::sim::engine::finish_step`] (batched single-pass
+//!    simulation);
 //! 3. [`crate::coordinator::jobs::run_queue`] fans the simulations over
 //!    a dynamic `std::thread` worker pool;
 //! 4. [`sink`] aggregates the [`crate::sim::engine::StepReport`]s into
@@ -30,28 +35,42 @@ use std::time::Instant;
 
 use crate::coordinator::jobs;
 use crate::models::{zoo, Model};
-use crate::sim::engine::simulate_step;
+use crate::sim::engine::finish_step;
 
-pub use cache::{ScheduleCache, ScheduleKey};
+pub use cache::{PrecompCache, ScheduleCache, ScheduleKey};
 pub use grid::{parse_arrays, SweepPoint, SweepSpec};
 pub use sink::{PointKey, SimBank, SweepMeta, SweepResults, SweepRow};
+
+/// The per-key compute caches one or more sweeps share: RWG schedules
+/// and step precomputations, keyed identically.
+#[derive(Default)]
+pub struct SweepCaches {
+    pub schedules: ScheduleCache,
+    pub precomps: PrecompCache,
+}
+
+impl SweepCaches {
+    pub fn new() -> SweepCaches {
+        SweepCaches::default()
+    }
+}
 
 /// Expand `spec` and simulate every grid point on a worker pool.
 ///
 /// Results come back in grid order and are independent of `spec.jobs`;
 /// only [`SweepMeta`] records how the run was executed.
 pub fn run_sweep(spec: &SweepSpec) -> anyhow::Result<SweepResults> {
-    run_sweep_cached(spec, &ScheduleCache::new())
+    run_sweep_cached(spec, &SweepCaches::new())
 }
 
-/// Like [`run_sweep`], but sharing `schedules` across calls so related
+/// Like [`run_sweep`], but sharing `caches` across calls so related
 /// grids (e.g. the `exhibits` prewarm pair, whose specs overlap on the
-/// deployed config) never recompute a schedule for a key another grid
-/// already visited. The returned [`SweepMeta`] counts only this run's
-/// cache lookups.
+/// deployed config) never recompute a schedule or step precomputation
+/// for a key another grid already visited. The returned [`SweepMeta`]
+/// counts only this run's cache lookups.
 pub fn run_sweep_cached(
     spec: &SweepSpec,
-    schedules: &ScheduleCache,
+    caches: &SweepCaches,
 ) -> anyhow::Result<SweepResults> {
     let points = spec.expand()?;
     let jobs_n = if spec.jobs == 0 { jobs::default_workers() } else { spec.jobs };
@@ -66,7 +85,8 @@ pub fn run_sweep_cached(
         }
     }
 
-    let (hits_before, misses_before) = schedules.stats();
+    let (s_hits0, s_misses0) = caches.schedules.stats();
+    let (p_hits0, p_misses0) = caches.precomps.stats();
     let t0 = Instant::now();
     let rows = {
         let points = &points;
@@ -75,8 +95,9 @@ pub fn run_sweep_cached(
             let p = &points[i];
             let model = &models[&p.model];
             let schedule =
-                schedules.get_or_compute(model, p.method, p.pattern, &p.sat);
-            let report = simulate_step(model, &schedule, &p.sat, &p.mem);
+                caches.schedules.get_or_compute(model, p.method, p.pattern, &p.sat);
+            let pre = caches.precomps.get_or_compute(model, &schedule, &p.sat);
+            let report = finish_step(&pre, &p.sat, &p.mem);
             SweepRow {
                 point: p.clone(),
                 predicted_cycles: schedule.predicted_total(),
@@ -84,14 +105,17 @@ pub fn run_sweep_cached(
             }
         })
     };
-    let (hits, misses) = schedules.stats();
+    let (s_hits, s_misses) = caches.schedules.stats();
+    let (p_hits, p_misses) = caches.precomps.stats();
     Ok(SweepResults {
         rows,
         meta: SweepMeta {
             jobs: jobs_n,
             wall_seconds: t0.elapsed().as_secs_f64(),
-            schedule_hits: hits - hits_before,
-            schedule_misses: misses - misses_before,
+            schedule_hits: s_hits - s_hits0,
+            schedule_misses: s_misses - s_misses0,
+            precomp_hits: p_hits - p_hits0,
+            precomp_misses: p_misses - p_misses0,
         },
     })
 }
@@ -120,5 +144,32 @@ mod tests {
         assert_eq!(r.rows[0].report.method, "dense");
         assert_eq!(r.rows[r.rows.len() - 1].report.method, "bdwp");
         assert_eq!(r.meta.jobs, 2);
+    }
+
+    #[test]
+    fn bandwidth_variants_share_one_precomputation() {
+        // 1 model x 2 methods x 1 pattern x 1 array x 3 bandwidths:
+        // 2 distinct (schedule, precomp) keys, 4 hits each
+        let spec = SweepSpec {
+            models: vec!["resnet9".into()],
+            methods: vec![Method::Dense, Method::Bdwp],
+            patterns: vec![NmPattern::P2_8],
+            bandwidths: vec![12.8, 25.6, 102.4],
+            jobs: 1,
+            ..SweepSpec::default()
+        };
+        let r = run_sweep(&spec).unwrap();
+        assert_eq!(r.rows.len(), 6);
+        assert_eq!((r.meta.precomp_hits, r.meta.precomp_misses), (4, 2));
+        assert_eq!((r.meta.schedule_hits, r.meta.schedule_misses), (4, 2));
+        // and the memoized path must report exactly what the direct
+        // simulator reports (also pinned model-wide in sim::engine)
+        for row in &r.rows {
+            let model = zoo::model_by_name(&row.point.model).unwrap();
+            let direct = crate::sim::engine::simulate_method(
+                &model, row.point.method, row.point.pattern, &row.point.sat, &row.point.mem,
+            );
+            assert_eq!(row.report, direct);
+        }
     }
 }

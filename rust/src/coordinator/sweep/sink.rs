@@ -98,6 +98,10 @@ pub struct SweepMeta {
     pub wall_seconds: f64,
     pub schedule_hits: u64,
     pub schedule_misses: u64,
+    /// Step-precomputation cache traffic (bandwidth-only grid variants
+    /// hit; see `sim::engine::precompute_step`).
+    pub precomp_hits: u64,
+    pub precomp_misses: u64,
 }
 
 /// A finished sweep: rows in grid order plus run metadata.
@@ -126,6 +130,8 @@ impl SweepResults {
             .field_f64("wall_seconds", self.meta.wall_seconds)
             .field_u64("schedule_hits", self.meta.schedule_hits)
             .field_u64("schedule_misses", self.meta.schedule_misses)
+            .field_u64("precomp_hits", self.meta.precomp_hits)
+            .field_u64("precomp_misses", self.meta.precomp_misses)
             .finish();
         json::Obj::new()
             .field_str("schema", "sat-sweep-v1")
@@ -174,12 +180,15 @@ impl SweepResults {
     /// One-line run summary (stderr companion to the data outputs).
     pub fn summary(&self) -> String {
         format!(
-            "{} points in {:.2}s with {} worker(s); schedule cache {} hit(s) / {} distinct",
+            "{} points in {:.2}s with {} worker(s); schedule cache {} hit(s) / {} distinct; \
+             precomp cache {} hit(s) / {} distinct",
             self.rows.len(),
             self.meta.wall_seconds,
             self.meta.jobs,
             self.meta.schedule_hits,
             self.meta.schedule_misses,
+            self.meta.precomp_hits,
+            self.meta.precomp_misses,
         )
     }
 }

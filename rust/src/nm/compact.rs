@@ -23,25 +23,49 @@ pub struct CompactNm {
 }
 
 impl CompactNm {
+    /// An empty encoding ready to be filled by [`CompactNm::encode_into`]
+    /// or [`CompactNm::encode_t_into`] — the buffer-reuse entry points of
+    /// the native backend's per-step weight pre-generation.
+    pub fn empty(p: NmPattern) -> CompactNm {
+        CompactNm { pattern: p, rows: 0, cols: 0, values: Vec::new(), indexes: Vec::new() }
+    }
+
     /// Encode by pruning `w` (rows × cols, groups along cols).
     ///
     /// Single fused pass per group (§Perf iteration 2): the top-N chain
     /// emits ascending indexes directly — no intermediate mask vector.
     /// Falls back to the mask path for exotic M > 32.
     pub fn encode(w: &[f32], rows: usize, cols: usize, p: NmPattern) -> CompactNm {
+        let mut out = CompactNm::empty(p);
+        CompactNm::encode_into(w, rows, cols, p, &mut out);
+        out
+    }
+
+    /// [`CompactNm::encode`] into a caller-owned encoding, reusing its
+    /// `values`/`indexes` allocations — the `prune_values_into` idiom
+    /// extended to the compact format. The native training backend
+    /// re-encodes every pruned weight matrix once per optimizer step
+    /// (the paper's "pre-generation of N:M sparse weights" dataflow
+    /// optimization), so the hot loop must not churn allocations.
+    pub fn encode_into(w: &[f32], rows: usize, cols: usize, p: NmPattern, out: &mut CompactNm) {
         assert_eq!(w.len(), rows * cols);
         assert!(cols % p.m == 0, "cols {cols} not divisible by M={}", p.m);
+        out.pattern = p;
+        out.rows = rows;
+        out.cols = cols;
+        out.values.clear();
+        out.indexes.clear();
         let groups = rows * cols / p.m;
-        let mut values = Vec::with_capacity(groups * p.n);
-        let mut indexes = Vec::with_capacity(groups * p.n);
+        out.values.reserve(groups * p.n);
+        out.indexes.reserve(groups * p.n);
         if p.m <= 32 {
             for group in w.chunks_exact(p.m) {
                 // bit order of the keep-mask IS ascending index order
                 let mut sel = crate::nm::prune::topn_bits(group, p.n);
                 while sel != 0 {
                     let i = sel.trailing_zeros() as usize;
-                    indexes.push(i as u8);
-                    values.push(group[i]);
+                    out.indexes.push(i as u8);
+                    out.values.push(group[i]);
                     sel &= sel - 1;
                 }
             }
@@ -50,13 +74,77 @@ impl CompactNm {
             for (g, group) in w.chunks_exact(p.m).enumerate() {
                 for (i, &v) in group.iter().enumerate() {
                     if mask[g * p.m + i] {
-                        values.push(v);
-                        indexes.push(i as u8);
+                        out.values.push(v);
+                        out.indexes.push(i as u8);
                     }
                 }
             }
         }
-        CompactNm { pattern: p, rows, cols, values, indexes }
+    }
+
+    /// Encode the TRANSPOSE of `w` (rows × cols) with groups along the
+    /// row axis of `w` — i.e. the compact form of `w̃ᵀ` where `w̃` is
+    /// `prune_values(w, .., PruneAxis::Rows)`, without materializing
+    /// either the transpose or the dense pruned copy.
+    ///
+    /// This is the storage orientation of the forward-pass weights
+    /// `w̃_FF` (Fig. 5(a): FF groups run along the K axis of the (K × F)
+    /// weight matrix): the resulting encoding has `rows == cols(w)` and
+    /// `cols == rows(w)`, and each compact row c holds column c of `w`
+    /// group-by-group in ascending-k order — exactly the walk order of
+    /// the `spmm_ff` compute-skipping kernel.
+    pub fn encode_t_into(w: &[f32], rows: usize, cols: usize, p: NmPattern, out: &mut CompactNm) {
+        assert_eq!(w.len(), rows * cols);
+        assert!(rows % p.m == 0, "rows {rows} not divisible by M={}", p.m);
+        out.pattern = p;
+        out.rows = cols;
+        out.cols = rows;
+        out.values.clear();
+        out.indexes.clear();
+        let groups = rows * cols / p.m;
+        out.values.reserve(groups * p.n);
+        out.indexes.reserve(groups * p.n);
+        if p.m <= 32 {
+            let mut group = [0.0f32; 32];
+            for c in 0..cols {
+                for g0 in (0..rows).step_by(p.m) {
+                    for i in 0..p.m {
+                        group[i] = w[(g0 + i) * cols + c];
+                    }
+                    let mut sel = crate::nm::prune::topn_bits(&group[..p.m], p.n);
+                    while sel != 0 {
+                        let i = sel.trailing_zeros() as usize;
+                        out.indexes.push(i as u8);
+                        out.values.push(group[i]);
+                        sel &= sel - 1;
+                    }
+                }
+            }
+        } else {
+            // exotic M: reuse the mask path on gathered groups
+            let mut group = vec![0.0f32; p.m];
+            for c in 0..cols {
+                for g0 in (0..rows).step_by(p.m) {
+                    for i in 0..p.m {
+                        group[i] = w[(g0 + i) * cols + c];
+                    }
+                    let mask = prune_mask_flat(&group, p);
+                    for (i, &v) in group.iter().enumerate() {
+                        if mask[i] {
+                            out.values.push(v);
+                            out.indexes.push(i as u8);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// [`CompactNm::encode_t_into`] as an allocating convenience.
+    pub fn encode_t(w: &[f32], rows: usize, cols: usize, p: NmPattern) -> CompactNm {
+        let mut out = CompactNm::empty(p);
+        CompactNm::encode_t_into(w, rows, cols, p, &mut out);
+        out
     }
 
     /// Decode back to a dense (rows × cols) matrix with zeros.
@@ -138,6 +226,54 @@ mod tests {
         assert!(enc8.storage_bytes() < dense_fp16 / 2);
         let enc4 = CompactNm::encode(&w, 64, 64, NmPattern::P2_4);
         assert!(enc4.storage_bytes() > dense_fp16 / 2); // 2:4 pays indexes
+    }
+
+    #[test]
+    fn encode_into_reuses_buffers_and_matches_encode() {
+        let mut g = Gen::new(6);
+        let p = NmPattern::new(2, 8);
+        let w1 = g.vec_normal(4 * 16);
+        let w2 = g.vec_normal(4 * 16);
+        let mut enc = CompactNm::empty(p);
+        CompactNm::encode_into(&w1, 4, 16, p, &mut enc);
+        assert_eq!(enc, CompactNm::encode(&w1, 4, 16, p));
+        let cap_v = enc.values.capacity();
+        let cap_i = enc.indexes.capacity();
+        CompactNm::encode_into(&w2, 4, 16, p, &mut enc);
+        assert_eq!(enc, CompactNm::encode(&w2, 4, 16, p));
+        // same-size re-encode must not have grown the buffers
+        assert_eq!(enc.values.capacity(), cap_v);
+        assert_eq!(enc.indexes.capacity(), cap_i);
+    }
+
+    #[test]
+    fn encode_t_matches_explicit_transpose_encode() {
+        check("encode_t vs transpose", 50, |g| {
+            let (n, m) = g.nm_pattern();
+            let p = NmPattern::new(n, m);
+            let rows = g.usize_in(1, 3) * m; // K axis must be M-divisible
+            let cols = g.usize_in(1, 10);
+            let w = g.vec_normal(rows * cols);
+            // reference: materialize wᵀ, encode with groups along cols
+            let mut wt = vec![0.0f32; rows * cols];
+            for r in 0..rows {
+                for c in 0..cols {
+                    wt[c * rows + r] = w[r * cols + c];
+                }
+            }
+            let want = CompactNm::encode(&wt, cols, rows, p);
+            let got = CompactNm::encode_t(&w, rows, cols, p);
+            assert_eq!(got, want);
+            // decoding the transposed encoding gives w̃ᵀ of the
+            // Rows-axis prune — the w̃_FF contract
+            let pruned = crate::nm::prune_values(&w, rows, cols, p, crate::nm::PruneAxis::Rows);
+            let dec = got.decode();
+            for r in 0..rows {
+                for c in 0..cols {
+                    assert_eq!(dec[c * rows + r], pruned[r * cols + c]);
+                }
+            }
+        });
     }
 
     #[test]

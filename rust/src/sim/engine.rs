@@ -77,22 +77,76 @@ impl StepReport {
     }
 }
 
-/// Simulate one training iteration of `model` under `schedule`.
-pub fn simulate_step(
-    model: &Model,
-    schedule: &ModelSchedule,
-    cfg: &SatConfig,
-    mem: &MemConfig,
-) -> StepReport {
+/// Memory-independent simulation inputs of one stage of one weighted
+/// layer: everything `simulate_step` derives from (model, schedule,
+/// arch) alone. Bandwidth/overlap are applied later by [`finish_step`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StagePre {
+    pub stage: Stage,
+    /// STCE compute cycles of the stage MatMul.
+    pub compute: u64,
+    /// Off-chip traffic of the stage MatMul.
+    pub bytes: usize,
+    /// Inline SORE cycles (0 when pre-generated or dense).
+    pub sore_inline: u64,
+    /// WU only: WUVE optimizer compute cycles.
+    pub wuve_compute: u64,
+    /// WU only: optimizer traffic (FP32 masters + compute copies).
+    pub opt_bytes: usize,
+    /// WU only: full pre-generation SORE cycles (0 when not
+    /// pre-generating); the non-hidden tail is resolved against the
+    /// memory-dependent WUVE time in [`finish_step`].
+    pub pregen_sore: u64,
+    pub dense_macs: u64,
+    pub useful_macs: u64,
+}
+
+/// Memory-independent per-layer precomputation.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LayerPre {
+    pub name: String,
+    /// Elementwise companion pass (compute cycles, bytes) — the whole
+    /// cost for non-MatMul layers.
+    pub other_compute: u64,
+    pub other_bytes: usize,
+    /// FF/BP/WU MatMul inputs; empty for non-weighted layers.
+    pub stages: Vec<StagePre>,
+}
+
+/// The batched-simulation split (ROADMAP "batched single-pass
+/// simulation"): everything `simulate_step` computes that does NOT
+/// depend on [`MemConfig`] — per-layer MatMul shapes, STCE/SORE/WUVE
+/// cycle counts and memory-traffic volumes. Grid points that differ
+/// only in bandwidth/overlap share one `StepPrecomp` (the sweep engine
+/// caches it per schedule key) and pay only the cheap [`finish_step`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StepPrecomp {
+    pub model: String,
+    pub method: String,
+    /// (rows, cols, lanes, freq_mhz bits) of the [`SatConfig`] this was
+    /// computed under — [`finish_step`] debug-asserts the same arch is
+    /// applied, so a cache keyed too loosely cannot mix configurations.
+    pub arch: (usize, usize, usize, u64),
+    pub layers: Vec<LayerPre>,
+}
+
+fn arch_fingerprint(cfg: &SatConfig) -> (usize, usize, usize, u64) {
+    (cfg.rows, cfg.cols, cfg.lanes, cfg.freq_mhz.to_bits())
+}
+
+/// Walk `model` under `schedule` once, extracting every
+/// memory-independent quantity of the step simulation.
+pub fn precompute_step(model: &Model, schedule: &ModelSchedule, cfg: &SatConfig) -> StepPrecomp {
     let batch = schedule.batch;
-    let mut report = StepReport {
+    let mut pre = StepPrecomp {
         model: model.name.clone(),
         method: schedule.method.name().to_string(),
-        ..Default::default()
+        arch: arch_fingerprint(cfg),
+        layers: Vec::with_capacity(model.layers.len()),
     };
 
     for (idx, layer) in model.layers.iter().enumerate() {
-        let mut lt = LayerTime { name: layer.name.clone(), ..Default::default() };
+        let mut lp = LayerPre { name: layer.name.clone(), ..Default::default() };
 
         if layer.weight_elems() == 0 {
             // Non-MatMul layer: elementwise pass through the vector edge
@@ -103,10 +157,9 @@ pub fn simulate_step(
                 _ => 1,
             };
             let elems = layer.out_elems_per_item() * channels * batch;
-            let compute = 2 * (elems as u64) / cfg.cols as u64; // fwd+bwd
-            let bytes = memory::elementwise_bytes(layer, channels, batch);
-            lt.other = mem.combine(compute, mem.transfer_cycles(bytes, cfg));
-            report.layers.push(lt);
+            lp.other_compute = 2 * (elems as u64) / cfg.cols as u64; // fwd+bwd
+            lp.other_bytes = memory::elementwise_bytes(layer, channels, batch);
+            pre.layers.push(lp);
             continue;
         }
 
@@ -122,17 +175,24 @@ pub fn simulate_step(
         {
             let ff = layer.matmul(Stage::FF, batch).unwrap();
             let elems = ff.m * ff.n;
-            let compute = 3 * elems as u64 / cfg.cols as u64;
-            let bytes = 3 * 2 * elems * memory::FP16;
-            lt.other = mem.combine(compute, mem.transfer_cycles(bytes, cfg));
+            lp.other_compute = 3 * elems as u64 / cfg.cols as u64;
+            lp.other_bytes = 3 * 2 * elems * memory::FP16;
         }
 
         for sc in &ls.stages {
             let mm = layer.matmul(sc.stage, batch).unwrap();
             let timing = matmul_cycles(&mm, sc.sparse, sc.dataflow, cfg, true);
-            let bytes = memory::stage_bytes(&mm, welems, sc.sparse, sc.stage);
-            let mut cycles =
-                mem.combine(timing.cycles, mem.transfer_cycles(bytes, cfg));
+            let mut sp = StagePre {
+                stage: sc.stage,
+                compute: timing.cycles,
+                bytes: memory::stage_bytes(&mm, welems, sc.sparse, sc.stage),
+                sore_inline: 0,
+                wuve_compute: 0,
+                opt_bytes: 0,
+                pregen_sore: 0,
+                dense_macs: mm.macs(),
+                useful_macs: useful_macs(&mm, sc.sparse),
+            };
             // Inline SORE (Fig. 11(b) / SDGP in BP): the MatMul waits for
             // group generation of the tensor being pruned.
             if sc.sore_inline {
@@ -142,48 +202,82 @@ pub fn simulate_step(
                     }
                     _ => welems,
                 };
-                lt.sore += sore::reduce_tensor_cycles(
+                sp.sore_inline = sore::reduce_tensor_cycles(
                     pruned_elems,
                     sc.sparse.unwrap_or(schedule.pattern),
                     cfg,
                 );
             }
-            report.dense_macs += mm.macs();
-            report.useful_macs += useful_macs(&mm, sc.sparse);
-            match sc.stage {
+            if sc.stage == Stage::WU {
+                // WUVE runs after the dw MatMul; optimizer traffic
+                // (FP32 masters) rides the same overlap policy.
+                sp.wuve_compute = wuve::update_cycles_cfg(welems, cfg);
+                sp.opt_bytes = memory::optimizer_bytes(
+                    welems,
+                    ls.pregenerate.then_some(schedule.pattern),
+                );
+                // Pre-generated SORE is pipelined behind WUVE
+                // (Fig. 11(c)); only the non-hidden tail costs cycles.
+                if ls.pregenerate {
+                    sp.pregen_sore =
+                        sore::reduce_tensor_cycles(welems, schedule.pattern, cfg);
+                }
+            }
+            lp.stages.push(sp);
+        }
+        pre.layers.push(lp);
+    }
+    pre
+}
+
+/// Apply one memory configuration to a precomputed step: the only work
+/// left per (bandwidth, overlap) grid point — transfer-cycle conversion
+/// and the compute/transfer overlap combine.
+pub fn finish_step(pre: &StepPrecomp, cfg: &SatConfig, mem: &MemConfig) -> StepReport {
+    debug_assert_eq!(
+        pre.arch,
+        arch_fingerprint(cfg),
+        "finish_step applied under a different SatConfig than precompute_step"
+    );
+    let mut report = StepReport {
+        model: pre.model.clone(),
+        method: pre.method.clone(),
+        ..Default::default()
+    };
+    for lp in &pre.layers {
+        let mut lt = LayerTime { name: lp.name.clone(), ..Default::default() };
+        lt.other = mem.combine(lp.other_compute, mem.transfer_cycles(lp.other_bytes, cfg));
+        for sp in &lp.stages {
+            let cycles = mem.combine(sp.compute, mem.transfer_cycles(sp.bytes, cfg));
+            lt.sore += sp.sore_inline;
+            report.dense_macs += sp.dense_macs;
+            report.useful_macs += sp.useful_macs;
+            match sp.stage {
                 Stage::FF => lt.ff = cycles,
                 Stage::BP => lt.bp = cycles,
                 Stage::WU => {
-                    // WUVE runs after the dw MatMul; optimizer traffic
-                    // (FP32 masters) rides the same overlap policy.
-                    let wuve_c = wuve::update_cycles_cfg(welems, cfg);
-                    let opt_bytes = memory::optimizer_bytes(
-                        welems,
-                        ls.pregenerate.then_some(schedule.pattern),
-                    );
-                    lt.wuve = mem
-                        .combine(wuve_c, mem.transfer_cycles(opt_bytes, cfg));
-                    // Pre-generated SORE is pipelined behind WUVE
-                    // (Fig. 11(c)); only the non-hidden tail costs cycles.
-                    if ls.pregenerate {
-                        let sore_c = sore::reduce_tensor_cycles(
-                            welems,
-                            schedule.pattern,
-                            cfg,
-                        );
-                        lt.sore += sore_c.saturating_sub(lt.wuve);
-                    }
+                    lt.wuve =
+                        mem.combine(sp.wuve_compute, mem.transfer_cycles(sp.opt_bytes, cfg));
+                    lt.sore += sp.pregen_sore.saturating_sub(lt.wuve);
                     lt.wu = cycles;
-                    cycles = 0; // consumed above
-                    let _ = cycles;
                 }
             }
         }
         report.layers.push(lt);
     }
-
     report.total_cycles = report.layers.iter().map(|l| l.total()).sum();
     report
+}
+
+/// Simulate one training iteration of `model` under `schedule`
+/// (single-shot composition of [`precompute_step`] + [`finish_step`]).
+pub fn simulate_step(
+    model: &Model,
+    schedule: &ModelSchedule,
+    cfg: &SatConfig,
+    mem: &MemConfig,
+) -> StepReport {
+    finish_step(&precompute_step(model, schedule, cfg), cfg, mem)
 }
 
 /// Convenience: schedule + simulate in one call.
@@ -337,6 +431,31 @@ mod tests {
         assert_eq!(dense.dense_macs, bdwp.dense_macs);
         assert_eq!(dense.useful_macs, dense.dense_macs);
         assert!(bdwp.useful_macs < bdwp.dense_macs);
+    }
+
+    #[test]
+    fn precompute_plus_finish_is_exactly_simulate_step() {
+        // the batched-simulation split must be invisible: one precomp,
+        // many memory configs, each identical to the monolithic path
+        use crate::sched::rwg_schedule;
+        let cfg = SatConfig::paper_default();
+        for model in ["resnet9", "tiny_cnn", "vit"] {
+            let m = zoo::model_by_name(model).unwrap();
+            for method in [Method::Dense, Method::Sdgp, Method::Bdwp] {
+                let s = rwg_schedule(&m, method, NmPattern::P2_8, &cfg);
+                let pre = precompute_step(&m, &s, &cfg);
+                for bw in [12.8, 25.6, 102.4] {
+                    for overlap in [true, false] {
+                        let mem = MemConfig { bandwidth_gbs: bw, overlap };
+                        assert_eq!(
+                            finish_step(&pre, &cfg, &mem),
+                            simulate_step(&m, &s, &cfg, &mem),
+                            "{model} {method} bw={bw} overlap={overlap}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

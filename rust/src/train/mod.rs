@@ -21,7 +21,7 @@ pub mod native;
 pub mod tta;
 
 pub use backend::{compare_specs, open_backend, Backend, BackendKind, PjrtBackend, TrainSpec};
-pub use native::NativeBackend;
+pub use native::{NativeBackend, SparseCompute};
 
 use anyhow::Context;
 
@@ -70,11 +70,26 @@ pub struct TrainOptions {
     /// Use the scanned K-steps-per-dispatch executable.
     pub use_chunk: bool,
     pub seed: u64,
+    /// Native backend: compute-skipping kernels for weight-pruned
+    /// stages (`--sparse-compute auto|on|off`). Result-identical either
+    /// way; PJRT ignores it (XLA owns its kernels).
+    pub sparse_compute: SparseCompute,
+    /// Native backend: matmul worker threads (`--threads N`, 0 = auto).
+    /// Never changes results, only wall-clock.
+    pub threads: usize,
 }
 
 impl Default for TrainOptions {
     fn default() -> Self {
-        TrainOptions { steps: 200, lr: 0.05, eval_every: 0, use_chunk: false, seed: 1 }
+        TrainOptions {
+            steps: 200,
+            lr: 0.05,
+            eval_every: 0,
+            use_chunk: false,
+            seed: 1,
+            sparse_compute: SparseCompute::Auto,
+            threads: 0,
+        }
     }
 }
 

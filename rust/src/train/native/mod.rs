@@ -23,6 +23,18 @@
 //! the same channel-minor im2col as the Python side, so M ≤ C_i groups
 //! always fall within the input channels of one kernel tap.
 //!
+//! **Execution** (this is where the engine differs from a naive
+//! reference): weight-pruning stages can run on compute-skipping
+//! kernels ([`sparse_ops`]) fed by per-step *pre-generated*
+//! [`CompactNm`] encodings — the paper's "pre-generation of N:M sparse
+//! weights" dataflow optimization — so a 2:8 FF/BP MatMul executes
+//! ~N/M of the dense MACs instead of multiplying masked zeros. The
+//! [`SparseCompute`] knob (`--sparse-compute auto|on|off`) selects the
+//! path; results are exactly equal either way, per element, because the
+//! sparse kernels keep the dense kernels' ascending accumulation order.
+//! All matmuls run through the row-blocked threaded driver ([`par`]),
+//! which is bit-identical across worker counts by construction.
+//!
 //! The engine walks the [`crate::models::zoo`] layer graphs directly
 //! (the tiny MLP/CNN convergence stand-ins), trains with momentum-SGD
 //! and decoupled weight decay (WUVE semantics, mirroring `model.py`),
@@ -30,12 +42,19 @@
 //! un-skips the algorithm tier from a fresh clone.
 
 pub mod ops;
+pub mod par;
+pub mod sparse_ops;
+
+use std::fmt;
+use std::str::FromStr;
 
 use anyhow::{anyhow, bail, ensure};
 
 use crate::models::zoo::Model;
 use crate::models::{LayerKind, Stage};
-use crate::nm::{prune_mask, prune_values, prune_values_into, Method, NmPattern, PruneAxis};
+use crate::nm::{
+    prune_mask, prune_values, prune_values_into, CompactNm, Method, NmPattern, PruneAxis,
+};
 use crate::train::backend::{Backend, TrainSpec};
 use crate::train::{dataset_for, TrainCurve, TrainOptions};
 use crate::util::Pcg32;
@@ -51,6 +70,52 @@ pub const SRSTE_LAMBDA: f32 = 2e-4;
 /// PCG stream for weight init, distinct from the dataset stream so the
 /// same seed drives both without correlation.
 const WEIGHT_STREAM: u64 = 0x5EED;
+
+/// Whether the native engine executes weight-pruned MatMuls on the
+/// compact compute-skipping kernels ([`sparse_ops`]) or on the dense
+/// kernels over masked weights. Numerically the two paths are exactly
+/// equal; the knob exists for A/B benchmarking and as an escape hatch.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum SparseCompute {
+    /// Sparse kernels whenever the method prunes the stage AND skipping
+    /// pays clearly (sparsity > 50% — the same threshold the RWG uses
+    /// for pre-generation, §V-B). The default.
+    #[default]
+    Auto,
+    /// Sparse kernels for every weight-pruned stage, any pattern.
+    On,
+    /// Always the dense kernels over masked weights.
+    Off,
+}
+
+impl SparseCompute {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SparseCompute::Auto => "auto",
+            SparseCompute::On => "on",
+            SparseCompute::Off => "off",
+        }
+    }
+}
+
+impl fmt::Display for SparseCompute {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for SparseCompute {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<SparseCompute, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(SparseCompute::Auto),
+            "on" => Ok(SparseCompute::On),
+            "off" => Ok(SparseCompute::Off),
+            other => Err(format!("unknown sparse-compute mode {other:?} (auto|on|off)")),
+        }
+    }
+}
 
 /// w̃_FF — the forward-pass weights of `method` for a `(k × f)` matrix:
 /// N:M groups along the K (input) axis for SR-STE/BDWP, untouched
@@ -84,6 +149,11 @@ struct Param {
     mb: Vec<f32>,
     /// Layer admitted to N:M pruning (sparse_ok && M-divisible).
     nm_ok: bool,
+    /// Pre-generated compact w̃_FFᵀ / w̃_BP for the current step's
+    /// weights (the W2E buffer contents, re-encoded once per step when
+    /// the compact compute path is active; buffers reused across steps).
+    enc_ff: CompactNm,
+    enc_bp: CompactNm,
 }
 
 /// One node of the lowered compute graph (a zoo layer after im2col /
@@ -96,12 +166,21 @@ enum Node {
     GlobalAvg { h: usize, w: usize, c: usize },
 }
 
-/// Per-node forward state kept for the backward pass.
-enum Trace {
-    Linear { x: Vec<f32>, z: Vec<f32> },
-    Conv { cols: Vec<f32>, z: Vec<f32> },
-    MaxPool { arg: Vec<u32> },
-    GlobalAvg,
+/// Per-node scratch buffers, allocated once and reused every step — the
+/// forward trace and the backward gradients live here instead of being
+/// re-allocated per op (hot-loop allocation churn).
+#[derive(Default)]
+struct NodeBufs {
+    /// Forward output activation (the next node's input).
+    a: Vec<f32>,
+    /// Pre-activation (kept for the ReLU backward).
+    z: Vec<f32>,
+    /// Conv im2col matrix (kept for the WU product).
+    cols: Vec<f32>,
+    /// Maxpool winner offsets.
+    arg: Vec<u32>,
+    /// Gradient w.r.t. this node's INPUT (flows to the previous node).
+    dx: Vec<f32>,
 }
 
 /// Activation shape while lowering the layer graph.
@@ -121,8 +200,21 @@ pub struct NativeNet {
     pub sample_elems: usize,
     method: Method,
     pattern: NmPattern,
-    /// Scratch for the per-step w̃/g̃ prunes (hot-loop allocation reuse).
+    /// Compute-path selection for weight-pruned stages.
+    pub sparse: SparseCompute,
+    /// Worker threads for the row-blocked matmul driver (0 = auto:
+    /// serial for tiny matmuls, [`par::AUTO_MAX_WORKERS`]-capped
+    /// otherwise). Never affects results, only wall-clock.
+    pub threads: usize,
+    /// Scratch for the per-step w̃/g̃ prunes on the masked-dense path.
     scratch: Vec<f32>,
+    /// Per-node activation/gradient buffers, reused across steps.
+    arena: Vec<NodeBufs>,
+    /// Weight/bias gradient scratch, reused across layers and steps.
+    dw: Vec<f32>,
+    db: Vec<f32>,
+    /// Conv BP column-gradient scratch.
+    dcols: Vec<f32>,
 }
 
 impl NativeNet {
@@ -159,7 +251,7 @@ impl NativeNet {
                         wo,
                     };
                     let param = params.len();
-                    params.push(init_param(&mut rng, geom.k(), co, nm_ok));
+                    params.push(init_param(&mut rng, geom.k(), co, nm_ok, pattern));
                     nodes.push(Node::Conv { param, geom, relu: true });
                     shape = Some(Shape::Img { h: ho, w: wo, c: co });
                 }
@@ -181,7 +273,7 @@ impl NativeNet {
                     let want = Shape::Flat(fi);
                     check_shape(&layer.name, shape, want)?;
                     let param = params.len();
-                    params.push(init_param(&mut rng, fi, fo, nm_ok));
+                    params.push(init_param(&mut rng, fi, fo, nm_ok, pattern));
                     nodes.push(Node::Linear { param, fi, fo, relu: true });
                     shape = Some(Shape::Flat(fo));
                 }
@@ -222,6 +314,7 @@ impl NativeNet {
             Some(Node::Linear { fi, .. }) => *fi,
             _ => bail!("model {} starts with an unsupported layer", model.name),
         };
+        let arena = (0..nodes.len()).map(|_| NodeBufs::default()).collect();
         Ok(NativeNet {
             nodes,
             params,
@@ -230,8 +323,133 @@ impl NativeNet {
             sample_elems,
             method,
             pattern,
+            sparse: SparseCompute::default(),
+            threads: 0,
             scratch: Vec::new(),
+            arena,
+            dw: Vec::new(),
+            db: Vec::new(),
+            dcols: Vec::new(),
         })
+    }
+
+    /// Whether the knob admits compact kernels at this pattern.
+    fn knob_allows(&self) -> bool {
+        match self.sparse {
+            SparseCompute::Off => false,
+            SparseCompute::On => true,
+            SparseCompute::Auto => self.pattern.sparsity() > 0.5,
+        }
+    }
+
+    /// FF runs on compact kernels (method prunes FF weights + knob).
+    fn ff_compact(&self) -> bool {
+        self.method.stage_sparse(Stage::FF) && self.knob_allows()
+    }
+
+    /// BP runs on compact kernels — weight-pruning BP methods only
+    /// (SDGP prunes *gradients*, which have no pre-generable encoding,
+    /// so it always takes the masked-dense path).
+    fn bp_compact(&self) -> bool {
+        matches!(self.method, Method::Sdwp | Method::Bdwp) && self.knob_allows()
+    }
+
+    /// Per-step weight pre-generation: encode w̃_FFᵀ / w̃_BP of every
+    /// pruned layer ONCE into the params' reusable compact buffers
+    /// (instead of re-masking per matmul) — the paper's pre-generation
+    /// dataflow optimization in software. No-op when the compact path
+    /// is off.
+    fn pregenerate(&mut self, with_bp: bool) {
+        let ff = self.ff_compact();
+        let bp = self.bp_compact() && with_bp;
+        if !ff && !bp {
+            return;
+        }
+        let pattern = self.pattern;
+        for (i, p) in self.params.iter_mut().enumerate() {
+            if !p.nm_ok {
+                continue;
+            }
+            if ff {
+                CompactNm::encode_t_into(&p.w, p.rows, p.cols, pattern, &mut p.enc_ff);
+            }
+            // the first weighted node (always param 0) has no upstream
+            // layer, so its backward never computes dx and its w̃_BP
+            // encoding would never be read — skip the encode
+            if bp && i > 0 {
+                CompactNm::encode_into(&p.w, p.rows, p.cols, pattern, &mut p.enc_bp);
+            }
+        }
+    }
+
+    /// Worker count for one matmul (explicit `threads`, or auto-gated
+    /// on the work size). Result-neutral by the [`par`] contract.
+    fn workers(&self, out_rows: usize, macs: u64) -> usize {
+        par::resolve_workers(self.threads, out_rows, macs)
+    }
+
+    /// FF product `z = input · w̃_FF` for one weighted layer: compact
+    /// compute-skipping kernel when active, masked-dense otherwise.
+    fn ff_matmul(
+        &self,
+        p: &Param,
+        input: &[f32],
+        rows: usize,
+        k: usize,
+        f: usize,
+        scratch: &mut Vec<f32>,
+        z: &mut Vec<f32>,
+    ) {
+        let workers = self.workers(rows, (rows * k * f) as u64);
+        if p.nm_ok && self.ff_compact() {
+            par::spmm_ff_into(input, &p.enc_ff, rows, k, f, workers, z);
+        } else {
+            let w = self.ff_w(p, scratch);
+            par::matmul_into(input, w, rows, k, f, workers, z);
+        }
+    }
+
+    /// Forward pass over the arena (shared by training and eval): fills
+    /// each node's `a`/`z`/`cols`/`arg`; `arena[last].a` are the logits.
+    fn forward(&self, x: &[f32], arena: &mut [NodeBufs], scratch: &mut Vec<f32>) {
+        let batch = self.batch;
+        for ni in 0..self.nodes.len() {
+            let (done, rest) = arena.split_at_mut(ni);
+            let cur = &mut rest[0];
+            let input: &[f32] = if ni == 0 { x } else { &done[ni - 1].a };
+            match self.nodes[ni] {
+                Node::Linear { param, fi, fo, relu } => {
+                    let p = &self.params[param];
+                    self.ff_matmul(p, input, batch, fi, fo, scratch, &mut cur.z);
+                    ops::add_bias(&mut cur.z, &p.b);
+                    if relu {
+                        ops::relu_into(&cur.z, &mut cur.a);
+                    } else {
+                        cur.a.clear();
+                        cur.a.extend_from_slice(&cur.z);
+                    }
+                }
+                Node::Conv { param, geom, relu } => {
+                    let p = &self.params[param];
+                    ops::im2col_into(input, batch, &geom, &mut cur.cols);
+                    let NodeBufs { cols, z, a, .. } = cur;
+                    self.ff_matmul(p, cols, geom.rows(batch), geom.k(), geom.co, scratch, z);
+                    ops::add_bias(z, &p.b);
+                    if relu {
+                        ops::relu_into(z, a);
+                    } else {
+                        a.clear();
+                        a.extend_from_slice(z);
+                    }
+                }
+                Node::MaxPool { h, w, c, factor } => {
+                    ops::maxpool_into(input, batch, h, w, c, factor, &mut cur.a, &mut cur.arg);
+                }
+                Node::GlobalAvg { h, w, c } => {
+                    ops::global_avg_into(input, batch, h, w, c, &mut cur.a);
+                }
+            }
+        }
     }
 
     /// One momentum-SGD training step over `(x, y)`; returns the loss.
@@ -240,98 +458,67 @@ impl NativeNet {
         let batch = self.batch;
         assert_eq!(x.len(), batch * self.sample_elems, "x shape mismatch");
         assert_eq!(y.len(), batch * self.classes, "y shape mismatch");
+        // w̃ pre-generation: once per step, before any stage reads it
+        self.pregenerate(true);
+        let mut arena = std::mem::take(&mut self.arena);
         let mut scratch = std::mem::take(&mut self.scratch);
+        let mut dw = std::mem::take(&mut self.dw);
+        let mut db = std::mem::take(&mut self.db);
+        let mut dcols = std::mem::take(&mut self.dcols);
 
-        // ---- forward, tracing what the backward pass needs ----
-        let mut h = x.to_vec();
-        let mut traces: Vec<Trace> = Vec::with_capacity(self.nodes.len());
-        for ni in 0..self.nodes.len() {
-            let node = self.nodes[ni];
-            match node {
-                Node::Linear { param, fi, fo, relu } => {
-                    let p = &self.params[param];
-                    let w = self.ff_w(p, &mut scratch);
-                    let mut z = ops::matmul(&h, w, batch, fi, fo);
-                    ops::add_bias(&mut z, &p.b);
-                    let a = if relu { ops::relu(&z) } else { z.clone() };
-                    traces.push(Trace::Linear { x: h, z });
-                    h = a;
-                }
-                Node::Conv { param, geom, relu } => {
-                    let p = &self.params[param];
-                    let cols = ops::im2col(&h, batch, &geom);
-                    let w = self.ff_w(p, &mut scratch);
-                    let mut z = ops::matmul(&cols, w, geom.rows(batch), geom.k(), geom.co);
-                    ops::add_bias(&mut z, &p.b);
-                    let a = if relu { ops::relu(&z) } else { z.clone() };
-                    traces.push(Trace::Conv { cols, z });
-                    h = a;
-                }
-                Node::MaxPool { h: ph, w: pw, c, factor } => {
-                    let (out, arg) = ops::maxpool(&h, batch, ph, pw, c, factor);
-                    traces.push(Trace::MaxPool { arg });
-                    h = out;
-                }
-                Node::GlobalAvg { h: gh, w: gw, c } => {
-                    h = ops::global_avg(&h, batch, gh, gw, c);
-                    traces.push(Trace::GlobalAvg);
-                }
-            }
-        }
-
-        let (loss, mut dh) = ops::softmax_xent(&h, y, batch, self.classes);
+        self.forward(x, &mut arena, &mut scratch);
+        let n = self.nodes.len();
+        let (loss, mut dl) = ops::softmax_xent(&arena[n - 1].a, y, batch, self.classes);
 
         // ---- backward + immediate parameter update ----
-        for ni in (0..self.nodes.len()).rev() {
-            let node = self.nodes[ni];
-            let trace = traces.pop().expect("trace per node");
-            match (node, trace) {
-                (Node::Linear { param, fi, fo, relu }, Trace::Linear { x, z }) => {
+        for ni in (0..n).rev() {
+            let (left, next) = arena.split_at_mut(ni + 1);
+            let (prev, curs) = left.split_at_mut(ni);
+            let cur = &mut curs[0];
+            // gradient w.r.t. this node's output
+            let dh: &mut Vec<f32> = if ni + 1 == n { &mut dl } else { &mut next[0].dx };
+            let input: &[f32] = if ni == 0 { x } else { &prev[ni - 1].a };
+            match self.nodes[ni] {
+                Node::Linear { param, fi, fo, relu } => {
                     if relu {
-                        ops::relu_backward(&mut dh, &z);
+                        ops::relu_backward(dh, &cur.z);
                     }
-                    let rows = batch;
-                    let dx = if ni > 0 {
-                        Some(self.bp_dx(param, &dh, rows, fi, fo, &mut scratch))
-                    } else {
-                        None
-                    };
-                    let dw = ops::matmul_at(&x, &dh, rows, fi, fo);
-                    let db = ops::bias_grad(&dh, fo);
-                    self.update(param, dw, db, lr);
-                    if let Some(dx) = dx {
-                        dh = dx;
+                    if ni > 0 {
+                        self.bp_matmul(param, dh, batch, fi, fo, &mut scratch, &mut cur.dx);
                     }
+                    let workers = self.workers(fi, (batch * fi * fo) as u64);
+                    par::matmul_at_into(input, dh, batch, fi, fo, workers, &mut dw);
+                    ops::bias_grad_into(dh, fo, &mut db);
+                    self.update(param, &mut dw, &db, lr);
                 }
-                (Node::Conv { param, geom, relu }, Trace::Conv { cols, z }) => {
+                Node::Conv { param, geom, relu } => {
                     if relu {
-                        ops::relu_backward(&mut dh, &z);
+                        ops::relu_backward(dh, &cur.z);
                     }
                     let (rows, k) = (geom.rows(batch), geom.k());
-                    let dx = if ni > 0 {
-                        let dcols = self.bp_dx(param, &dh, rows, k, geom.co, &mut scratch);
-                        Some(ops::col2im(&dcols, batch, &geom))
-                    } else {
-                        None
-                    };
-                    let dw = ops::matmul_at(&cols, &dh, rows, k, geom.co);
-                    let db = ops::bias_grad(&dh, geom.co);
-                    self.update(param, dw, db, lr);
-                    if let Some(dx) = dx {
-                        dh = dx;
+                    if ni > 0 {
+                        self.bp_matmul(param, dh, rows, k, geom.co, &mut scratch, &mut dcols);
+                        ops::col2im_into(&dcols, batch, &geom, &mut cur.dx);
                     }
+                    let workers = self.workers(k, (rows * k * geom.co) as u64);
+                    par::matmul_at_into(&cur.cols, dh, rows, k, geom.co, workers, &mut dw);
+                    ops::bias_grad_into(dh, geom.co, &mut db);
+                    self.update(param, &mut dw, &db, lr);
                 }
-                (Node::MaxPool { h: ph, w: pw, c, factor }, Trace::MaxPool { arg }) => {
-                    dh = ops::maxpool_backward(&dh, &arg, batch, ph, pw, c, factor);
+                Node::MaxPool { h, w, c, factor } => {
+                    ops::maxpool_backward_into(dh, &cur.arg, batch, h, w, c, factor, &mut cur.dx);
                 }
-                (Node::GlobalAvg { h: gh, w: gw, c }, Trace::GlobalAvg) => {
-                    dh = ops::global_avg_backward(&dh, batch, gh, gw, c);
+                Node::GlobalAvg { h, w, c } => {
+                    ops::global_avg_backward_into(dh, batch, h, w, c, &mut cur.dx);
                 }
-                _ => unreachable!("trace kind always matches its node"),
             }
         }
 
+        self.arena = arena;
         self.scratch = scratch;
+        self.dw = dw;
+        self.db = db;
+        self.dcols = dcols;
         loss
     }
 
@@ -339,40 +526,22 @@ impl NativeNet {
     /// SR-STE/BDWP per Table II); returns `(loss, accuracy)` on a batch.
     pub fn eval(&mut self, x: &[f32], y: &[f32]) -> (f32, f32) {
         let batch = self.batch;
+        // weights moved since the last step's pre-generation
+        self.pregenerate(false);
+        let mut arena = std::mem::take(&mut self.arena);
         let mut scratch = std::mem::take(&mut self.scratch);
-        let mut h = x.to_vec();
-        for node in &self.nodes {
-            match *node {
-                Node::Linear { param, fi, fo, relu } => {
-                    let p = &self.params[param];
-                    let w = self.ff_w(p, &mut scratch);
-                    let mut z = ops::matmul(&h, w, batch, fi, fo);
-                    ops::add_bias(&mut z, &p.b);
-                    h = if relu { ops::relu(&z) } else { z };
-                }
-                Node::Conv { param, geom, relu } => {
-                    let p = &self.params[param];
-                    let cols = ops::im2col(&h, batch, &geom);
-                    let w = self.ff_w(p, &mut scratch);
-                    let mut z = ops::matmul(&cols, w, geom.rows(batch), geom.k(), geom.co);
-                    ops::add_bias(&mut z, &p.b);
-                    h = if relu { ops::relu(&z) } else { z };
-                }
-                Node::MaxPool { h: ph, w: pw, c, factor } => {
-                    h = ops::maxpool(&h, batch, ph, pw, c, factor).0;
-                }
-                Node::GlobalAvg { h: gh, w: gw, c } => {
-                    h = ops::global_avg(&h, batch, gh, gw, c);
-                }
-            }
-        }
+        self.forward(x, &mut arena, &mut scratch);
+        let h = &arena[self.nodes.len() - 1].a;
+        let (loss, _) = ops::softmax_xent(h, y, batch, self.classes);
+        let acc = ops::accuracy(h, y, batch, self.classes);
+        self.arena = arena;
         self.scratch = scratch;
-        let (loss, _) = ops::softmax_xent(&h, y, batch, self.classes);
-        (loss, ops::accuracy(&h, y, batch, self.classes))
+        (loss, acc)
     }
 
-    /// Forward-pass weights of one param: w̃_FF into the scratch buffer
-    /// when the (method, layer) pair prunes, the raw weights otherwise.
+    /// Forward-pass weights of one param on the masked-dense path:
+    /// w̃_FF into the scratch buffer when the (method, layer) pair
+    /// prunes, the raw weights otherwise.
     fn ff_w<'a>(&self, p: &'a Param, scratch: &'a mut Vec<f32>) -> &'a [f32] {
         if p.nm_ok && self.method.stage_sparse(Stage::FF) {
             prune_values_into(&p.w, p.rows, p.cols, self.pattern, PruneAxis::Rows, scratch);
@@ -383,9 +552,9 @@ impl NativeNet {
     }
 
     /// BP-stage input gradient `dx = dy · w̃ᵀ` with the method's
-    /// backward sparsity (Fig. 3): w̃_BP for SDWP/BDWP, pruned output
-    /// gradients for SDGP, dense otherwise.
-    fn bp_dx(
+    /// backward sparsity (Fig. 3): w̃_BP for SDWP/BDWP (compact kernel
+    /// when active), pruned output gradients for SDGP, dense otherwise.
+    fn bp_matmul(
         &self,
         param: usize,
         dy: &[f32],
@@ -393,27 +562,32 @@ impl NativeNet {
         k: usize,
         f: usize,
         scratch: &mut Vec<f32>,
-    ) -> Vec<f32> {
+        out: &mut Vec<f32>,
+    ) {
         let p = &self.params[param];
+        let workers = self.workers(rows, (rows * k * f) as u64);
         if p.nm_ok {
             match self.method {
+                Method::Sdwp | Method::Bdwp if self.bp_compact() => {
+                    return par::spmm_bt_into(dy, &p.enc_bp, rows, f, k, workers, out);
+                }
                 Method::Sdwp | Method::Bdwp => {
                     prune_values_into(&p.w, k, f, self.pattern, PruneAxis::Cols, scratch);
-                    return ops::matmul_bt(dy, scratch, rows, f, k);
+                    return par::matmul_bt_into(dy, scratch, rows, f, k, workers, out);
                 }
                 Method::Sdgp => {
                     prune_values_into(dy, rows, f, self.pattern, PruneAxis::Cols, scratch);
-                    return ops::matmul_bt(scratch, &p.w, rows, f, k);
+                    return par::matmul_bt_into(scratch, &p.w, rows, f, k, workers, out);
                 }
                 _ => {}
             }
         }
-        ops::matmul_bt(dy, &p.w, rows, f, k)
+        par::matmul_bt_into(dy, &p.w, rows, f, k, workers, out)
     }
 
     /// Momentum-SGD update with decoupled weight decay; SR-STE adds its
     /// sparse-refined term to the weight gradient first.
-    fn update(&mut self, param: usize, mut dw: Vec<f32>, db: Vec<f32>, lr: f32) {
+    fn update(&mut self, param: usize, dw: &mut [f32], db: &[f32], lr: f32) {
         let p = &mut self.params[param];
         if p.nm_ok && self.method == Method::SrSte {
             let mask = prune_mask(&p.w, p.rows, p.cols, self.pattern, PruneAxis::Rows);
@@ -423,12 +597,12 @@ impl NativeNet {
                 }
             }
         }
-        for ((w, m), &g) in p.w.iter_mut().zip(&mut p.mw).zip(&dw) {
+        for ((w, m), &g) in p.w.iter_mut().zip(&mut p.mw).zip(dw.iter()) {
             let g = g + WEIGHT_DECAY * *w;
             *m = MOMENTUM * *m + g;
             *w -= lr * *m;
         }
-        for ((b, m), &g) in p.b.iter_mut().zip(&mut p.mb).zip(&db) {
+        for ((b, m), &g) in p.b.iter_mut().zip(&mut p.mb).zip(db) {
             let g = g + WEIGHT_DECAY * *b;
             *m = MOMENTUM * *m + g;
             *b -= lr * *m;
@@ -444,7 +618,7 @@ fn check_shape(name: &str, got: Option<Shape>, want: Shape) -> anyhow::Result<()
     }
 }
 
-fn init_param(rng: &mut Pcg32, rows: usize, cols: usize, nm_ok: bool) -> Param {
+fn init_param(rng: &mut Pcg32, rows: usize, cols: usize, nm_ok: bool, p: NmPattern) -> Param {
     let scale = (6.0 / rows as f32).sqrt();
     let w: Vec<f32> = (0..rows * cols).map(|_| rng.uniform(-scale, scale)).collect();
     Param {
@@ -455,6 +629,8 @@ fn init_param(rng: &mut Pcg32, rows: usize, cols: usize, nm_ok: bool) -> Param {
         rows,
         cols,
         nm_ok,
+        enc_ff: CompactNm::empty(p),
+        enc_bp: CompactNm::empty(p),
     }
 }
 
@@ -477,6 +653,8 @@ pub fn train_spec(spec: &TrainSpec, opts: &TrainOptions) -> anyhow::Result<Train
     let model = crate::models::zoo::model_by_name(&spec.model)
         .ok_or_else(|| anyhow!("unknown model {:?}", spec.model))?;
     let mut net = NativeNet::build(&model, spec.method, spec.pattern, opts.seed)?;
+    net.sparse = opts.sparse_compute;
+    net.threads = opts.threads;
     let (ds, eval_ds) = dataset_for(family, 4096 + 1024, opts.seed).split_at(4096);
     ensure!(
         ds.feat_dim == net.sample_elems,
@@ -641,6 +819,25 @@ mod tests {
         assert_eq!(bp_weights(&w, k, f, P24, Method::SrSte), w);
     }
 
+    #[test]
+    fn sparse_compute_parses_and_gates() {
+        assert_eq!("ON".parse::<SparseCompute>().unwrap(), SparseCompute::On);
+        assert_eq!("auto".parse::<SparseCompute>().unwrap(), SparseCompute::Auto);
+        assert!("fast".parse::<SparseCompute>().is_err());
+        // auto admits 2:8 (75% sparse) but not 2:4 (50%)
+        let mut net = NativeNet::build(&micro_model(&[8, 8, 4], 4), Method::Bdwp, P28, 1).unwrap();
+        assert!(net.ff_compact() && net.bp_compact());
+        net.sparse = SparseCompute::Off;
+        assert!(!net.ff_compact() && !net.bp_compact());
+        let mut net = NativeNet::build(&micro_model(&[8, 8, 4], 4), Method::Bdwp, P24, 1).unwrap();
+        assert!(!net.ff_compact(), "auto must skip 50% patterns");
+        net.sparse = SparseCompute::On;
+        assert!(net.ff_compact() && net.bp_compact());
+        // SDGP prunes gradients: never on the compact path
+        let net = NativeNet::build(&micro_model(&[8, 8, 4], 4), Method::Sdgp, P28, 1).unwrap();
+        assert!(!net.ff_compact() && !net.bp_compact());
+    }
+
     /// `train_step` with lr = 0 leaves parameters untouched but fills
     /// the momentum buffers with g = dw + wd·w, so after one step the
     /// analytic gradient is recoverable as `mw - wd·w0`.
@@ -747,6 +944,49 @@ mod tests {
             if method == Method::Dense {
                 assert!(l1 < l0, "dense same-batch loss should drop ({l0} -> {l1})");
             }
+        }
+    }
+
+    #[test]
+    fn sparse_compute_paths_are_exactly_equal() {
+        // the compact kernels vs. masked-dense kernels, whole training
+        // trajectories, every weight-pruning method, both group axes
+        let model = micro_model(&[8, 8, 4], 4);
+        let mut g = Gen::new(12);
+        let (x, y) = onehot_batch(&mut g, 4, 8, 4);
+        for method in [Method::SrSte, Method::Sdwp, Method::Bdwp] {
+            for pattern in [P24, P28] {
+                let run = |sparse: SparseCompute| -> (Vec<f32>, Vec<Vec<f32>>) {
+                    // 2:8 exceeds every fc dim here except via 8-groups:
+                    // fi/fo = 8 divisible by 8 -> nm_ok holds
+                    let mut net = NativeNet::build(&model, method, pattern, 5).unwrap();
+                    net.sparse = sparse;
+                    let losses: Vec<f32> =
+                        (0..6).map(|_| net.train_step(&x, &y, 0.05)).collect();
+                    let ws = net.params.iter().map(|p| p.w.clone()).collect();
+                    (losses, ws)
+                };
+                let (l_on, w_on) = run(SparseCompute::On);
+                let (l_off, w_off) = run(SparseCompute::Off);
+                assert_eq!(l_on, l_off, "{method} {pattern} losses diverged");
+                assert_eq!(w_on, w_off, "{method} {pattern} weights diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn worker_count_never_changes_the_trajectory() {
+        let model = micro_model(&[8, 8, 4], 4);
+        let mut g = Gen::new(13);
+        let (x, y) = onehot_batch(&mut g, 4, 8, 4);
+        let run = |threads: usize| -> Vec<f32> {
+            let mut net = NativeNet::build(&model, Method::Bdwp, P28, 5).unwrap();
+            net.threads = threads;
+            (0..5).map(|_| net.train_step(&x, &y, 0.05)).collect()
+        };
+        let serial = run(1);
+        for threads in [2usize, 4] {
+            assert_eq!(run(threads), serial, "threads={threads}");
         }
     }
 

@@ -7,18 +7,14 @@
 //! counts and opt levels (the same contract the sweep engine gives its
 //! cycle reports).
 
-/// `x (rows × k) @ w (k × cols)` → `(rows × cols)`.
-///
-/// ikj loop order: each `x[i][kk]` broadcasts over a contiguous weight
-/// row, so the inner loop is a stride-1 AXPY that the compiler can
-/// vectorize without reordering the per-element sum (k ascending).
-pub fn matmul(x: &[f32], w: &[f32], rows: usize, k: usize, cols: usize) -> Vec<f32> {
-    assert_eq!(x.len(), rows * k, "x shape mismatch");
-    assert_eq!(w.len(), k * cols, "w shape mismatch");
-    let mut out = vec![0.0f32; rows * cols];
-    for i in 0..rows {
-        let xr = &x[i * k..(i + 1) * k];
-        let or = &mut out[i * cols..(i + 1) * cols];
+/// Row block of `x (rows × k) @ w (k × cols)`: computes output rows
+/// `row0 ..` for as many rows as `out` holds (`out.len() / cols`),
+/// reading the full `x`/`w`. This is the unit the threaded driver
+/// ([`super::par`]) tiles over — the serial [`matmul`] is the
+/// one-block special case, so both paths share one accumulation order.
+pub fn matmul_block(x: &[f32], w: &[f32], k: usize, cols: usize, row0: usize, out: &mut [f32]) {
+    for (i, or) in out.chunks_exact_mut(cols).enumerate() {
+        let xr = &x[(row0 + i) * k..(row0 + i + 1) * k];
         for (kk, &xv) in xr.iter().enumerate() {
             if xv == 0.0 {
                 continue;
@@ -29,19 +25,26 @@ pub fn matmul(x: &[f32], w: &[f32], rows: usize, k: usize, cols: usize) -> Vec<f
             }
         }
     }
+}
+
+/// `x (rows × k) @ w (k × cols)` → `(rows × cols)`.
+///
+/// ikj loop order: each `x[i][kk]` broadcasts over a contiguous weight
+/// row, so the inner loop is a stride-1 AXPY that the compiler can
+/// vectorize without reordering the per-element sum (k ascending).
+pub fn matmul(x: &[f32], w: &[f32], rows: usize, k: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(x.len(), rows * k, "x shape mismatch");
+    assert_eq!(w.len(), k * cols, "w shape mismatch");
+    let mut out = vec![0.0f32; rows * cols];
+    matmul_block(x, w, k, cols, 0, &mut out);
     out
 }
 
-/// `dy (rows × f) @ w (k × f)ᵀ` → `(rows × k)` — the BP-stage product
-/// `dx = dy · w̃ᵀ` without materializing the transpose: each output
-/// element is a dot product of two contiguous rows.
-pub fn matmul_bt(dy: &[f32], w: &[f32], rows: usize, f: usize, k: usize) -> Vec<f32> {
-    assert_eq!(dy.len(), rows * f, "dy shape mismatch");
-    assert_eq!(w.len(), k * f, "w shape mismatch");
-    let mut out = vec![0.0f32; rows * k];
-    for i in 0..rows {
-        let dr = &dy[i * f..(i + 1) * f];
-        let or = &mut out[i * k..(i + 1) * k];
+/// Row block of `dy (rows × f) @ w (k × f)ᵀ`: output rows `row0 ..`,
+/// each element a contiguous-row dot product (f ascending).
+pub fn matmul_bt_block(dy: &[f32], w: &[f32], f: usize, k: usize, row0: usize, out: &mut [f32]) {
+    for (i, or) in out.chunks_exact_mut(k).enumerate() {
+        let dr = &dy[(row0 + i) * f..(row0 + i + 1) * f];
         for (kk, o) in or.iter_mut().enumerate() {
             let wr = &w[kk * f..(kk + 1) * f];
             let mut acc = 0.0f32;
@@ -51,7 +54,48 @@ pub fn matmul_bt(dy: &[f32], w: &[f32], rows: usize, f: usize, k: usize) -> Vec<
             *o = acc;
         }
     }
+}
+
+/// `dy (rows × f) @ w (k × f)ᵀ` → `(rows × k)` — the BP-stage product
+/// `dx = dy · w̃ᵀ` without materializing the transpose: each output
+/// element is a dot product of two contiguous rows.
+pub fn matmul_bt(dy: &[f32], w: &[f32], rows: usize, f: usize, k: usize) -> Vec<f32> {
+    assert_eq!(dy.len(), rows * f, "dy shape mismatch");
+    assert_eq!(w.len(), k * f, "w shape mismatch");
+    let mut out = vec![0.0f32; rows * k];
+    matmul_bt_block(dy, w, f, k, 0, &mut out);
     out
+}
+
+/// Output-row block of `x (rows × k)ᵀ @ dy (rows × f)`: computes dw rows
+/// `kk0 ..` (the K axis), as many as `out` holds. The loop stays r-outer
+/// (one streaming pass over `dy` per block, accumulators resident), and
+/// per element the accumulation runs over batch rows in ascending order
+/// skipping zero activations — exactly the serial kernel's order, so any
+/// K-tiling is bit-identical.
+pub fn matmul_at_block(
+    x: &[f32],
+    dy: &[f32],
+    rows: usize,
+    k: usize,
+    f: usize,
+    kk0: usize,
+    out: &mut [f32],
+) {
+    let bk = out.len() / f;
+    for r in 0..rows {
+        let xr = &x[r * k + kk0..r * k + kk0 + bk];
+        let dr = &dy[r * f..(r + 1) * f];
+        for (i, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let or = &mut out[i * f..(i + 1) * f];
+            for (o, &d) in or.iter_mut().zip(dr) {
+                *o += xv * d;
+            }
+        }
+    }
 }
 
 /// `x (rows × k)ᵀ @ dy (rows × f)` → `(k × f)` — the WU-stage product
@@ -60,19 +104,7 @@ pub fn matmul_at(x: &[f32], dy: &[f32], rows: usize, k: usize, f: usize) -> Vec<
     assert_eq!(x.len(), rows * k, "x shape mismatch");
     assert_eq!(dy.len(), rows * f, "dy shape mismatch");
     let mut out = vec![0.0f32; k * f];
-    for r in 0..rows {
-        let xr = &x[r * k..(r + 1) * k];
-        let dr = &dy[r * f..(r + 1) * f];
-        for (kk, &xv) in xr.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let or = &mut out[kk * f..(kk + 1) * f];
-            for (o, &d) in or.iter_mut().zip(dr) {
-                *o += xv * d;
-            }
-        }
-    }
+    matmul_at_block(x, dy, rows, k, f, 0, &mut out);
     out
 }
 
@@ -87,18 +119,33 @@ pub fn add_bias(z: &mut [f32], bias: &[f32]) {
 
 /// Column sums of `dy (rows × f)` — the bias gradient.
 pub fn bias_grad(dy: &[f32], f: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; f];
+    let mut out = Vec::new();
+    bias_grad_into(dy, f, &mut out);
+    out
+}
+
+/// [`bias_grad`] into a reusable buffer.
+pub fn bias_grad_into(dy: &[f32], f: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(f, 0.0);
     for row in dy.chunks_exact(f) {
         for (o, &d) in out.iter_mut().zip(row) {
             *o += d;
         }
     }
-    out
 }
 
 /// `max(z, 0)` elementwise, as a new activation buffer.
 pub fn relu(z: &[f32]) -> Vec<f32> {
-    z.iter().map(|&v| if v > 0.0 { v } else { 0.0 }).collect()
+    let mut out = Vec::new();
+    relu_into(z, &mut out);
+    out
+}
+
+/// [`relu`] into a reusable buffer (hot-loop allocation reuse).
+pub fn relu_into(z: &[f32], out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(z.iter().map(|&v| if v > 0.0 { v } else { 0.0 }));
 }
 
 /// In-place ReLU backward: `dz[i] = 0` wherever `z[i] <= 0`.
@@ -196,9 +243,17 @@ impl ConvGeom {
 /// Lower `x (batch, h, w, ci)` to its im2col matrix
 /// `(batch·ho·wo, kh·kw·ci)`, zero-padding out-of-bounds taps.
 pub fn im2col(x: &[f32], batch: usize, g: &ConvGeom) -> Vec<f32> {
+    let mut cols = Vec::new();
+    im2col_into(x, batch, g, &mut cols);
+    cols
+}
+
+/// [`im2col`] into a reusable buffer.
+pub fn im2col_into(x: &[f32], batch: usize, g: &ConvGeom, cols: &mut Vec<f32>) {
     assert_eq!(x.len(), batch * g.h * g.w * g.ci, "input shape mismatch");
     let k = g.k();
-    let mut cols = vec![0.0f32; g.rows(batch) * k];
+    cols.clear();
+    cols.resize(g.rows(batch) * k, 0.0);
     let mut r = 0usize;
     for b in 0..batch {
         let xb = &x[b * g.h * g.w * g.ci..(b + 1) * g.h * g.w * g.ci];
@@ -221,15 +276,22 @@ pub fn im2col(x: &[f32], batch: usize, g: &ConvGeom) -> Vec<f32> {
             }
         }
     }
-    cols
 }
 
 /// Adjoint of [`im2col`]: scatter-add column gradients back onto the
 /// input image, `(batch·ho·wo, kh·kw·ci)` → `(batch, h, w, ci)`.
 pub fn col2im(dcols: &[f32], batch: usize, g: &ConvGeom) -> Vec<f32> {
+    let mut dx = Vec::new();
+    col2im_into(dcols, batch, g, &mut dx);
+    dx
+}
+
+/// [`col2im`] into a reusable buffer.
+pub fn col2im_into(dcols: &[f32], batch: usize, g: &ConvGeom, dx: &mut Vec<f32>) {
     let k = g.k();
     assert_eq!(dcols.len(), g.rows(batch) * k, "dcols shape mismatch");
-    let mut dx = vec![0.0f32; batch * g.h * g.w * g.ci];
+    dx.clear();
+    dx.resize(batch * g.h * g.w * g.ci, 0.0);
     let mut r = 0usize;
     for b in 0..batch {
         let xb = &mut dx[b * g.h * g.w * g.ci..(b + 1) * g.h * g.w * g.ci];
@@ -256,7 +318,6 @@ pub fn col2im(dcols: &[f32], batch: usize, g: &ConvGeom) -> Vec<f32> {
             }
         }
     }
-    dx
 }
 
 /// Non-overlapping `f × f` max pooling over NHWC, recording per output
@@ -270,11 +331,29 @@ pub fn maxpool(
     c: usize,
     f: usize,
 ) -> (Vec<f32>, Vec<u32>) {
+    let (mut out, mut arg) = (Vec::new(), Vec::new());
+    maxpool_into(x, batch, h, w, c, f, &mut out, &mut arg);
+    (out, arg)
+}
+
+/// [`maxpool`] into reusable buffers.
+pub fn maxpool_into(
+    x: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    f: usize,
+    out: &mut Vec<f32>,
+    arg: &mut Vec<u32>,
+) {
     assert_eq!(x.len(), batch * h * w * c, "input shape mismatch");
     assert!(h % f == 0 && w % f == 0, "pool factor must divide h and w");
     let (ho, wo) = (h / f, w / f);
-    let mut out = vec![0.0f32; batch * ho * wo * c];
-    let mut arg = vec![0u32; batch * ho * wo * c];
+    out.clear();
+    out.resize(batch * ho * wo * c, 0.0);
+    arg.clear();
+    arg.resize(batch * ho * wo * c, 0);
     for b in 0..batch {
         for oy in 0..ho {
             for ox in 0..wo {
@@ -297,7 +376,6 @@ pub fn maxpool(
             }
         }
     }
-    (out, arg)
 }
 
 /// Backward of [`maxpool`]: route each output gradient to the element
@@ -311,9 +389,26 @@ pub fn maxpool_backward(
     c: usize,
     f: usize,
 ) -> Vec<f32> {
+    let mut dx = Vec::new();
+    maxpool_backward_into(dy, arg, batch, h, w, c, f, &mut dx);
+    dx
+}
+
+/// [`maxpool_backward`] into a reusable buffer.
+pub fn maxpool_backward_into(
+    dy: &[f32],
+    arg: &[u32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    f: usize,
+    dx: &mut Vec<f32>,
+) {
     let (ho, wo) = (h / f, w / f);
     assert_eq!(dy.len(), batch * ho * wo * c, "dy shape mismatch");
-    let mut dx = vec![0.0f32; batch * h * w * c];
+    dx.clear();
+    dx.resize(batch * h * w * c, 0.0);
     for b in 0..batch {
         for oy in 0..ho {
             for ox in 0..wo {
@@ -326,14 +421,21 @@ pub fn maxpool_backward(
             }
         }
     }
-    dx
 }
 
 /// Global average pool NHWC → `(batch, c)`.
 pub fn global_avg(x: &[f32], batch: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    global_avg_into(x, batch, h, w, c, &mut out);
+    out
+}
+
+/// [`global_avg`] into a reusable buffer.
+pub fn global_avg_into(x: &[f32], batch: usize, h: usize, w: usize, c: usize, out: &mut Vec<f32>) {
     assert_eq!(x.len(), batch * h * w * c, "input shape mismatch");
     let inv = 1.0 / (h * w) as f32;
-    let mut out = vec![0.0f32; batch * c];
+    out.clear();
+    out.resize(batch * c, 0.0);
     for b in 0..batch {
         let or = &mut out[b * c..(b + 1) * c];
         for hw in 0..h * w {
@@ -346,14 +448,28 @@ pub fn global_avg(x: &[f32], batch: usize, h: usize, w: usize, c: usize) -> Vec<
             *o *= inv;
         }
     }
-    out
 }
 
 /// Backward of [`global_avg`]: broadcast `dy / (h·w)` over the window.
 pub fn global_avg_backward(dy: &[f32], batch: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let mut dx = Vec::new();
+    global_avg_backward_into(dy, batch, h, w, c, &mut dx);
+    dx
+}
+
+/// [`global_avg_backward`] into a reusable buffer.
+pub fn global_avg_backward_into(
+    dy: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    dx: &mut Vec<f32>,
+) {
     assert_eq!(dy.len(), batch * c, "dy shape mismatch");
     let inv = 1.0 / (h * w) as f32;
-    let mut dx = vec![0.0f32; batch * h * w * c];
+    dx.clear();
+    dx.resize(batch * h * w * c, 0.0);
     for b in 0..batch {
         let dr = &dy[b * c..(b + 1) * c];
         for hw in 0..h * w {
@@ -363,7 +479,6 @@ pub fn global_avg_backward(dy: &[f32], batch: usize, h: usize, w: usize, c: usiz
             }
         }
     }
-    dx
 }
 
 #[cfg(test)]

@@ -1,0 +1,252 @@
+//! Row-blocked multi-threaded driver for the native training kernels.
+//!
+//! Every native matmul variant (dense [`super::ops`] and compact-sparse
+//! [`super::sparse_ops`]) computes each output row independently with a
+//! fixed ascending accumulation order, so the only safe-and-fast
+//! parallel axis is the output-row axis: [`par_row_blocks`] splits the
+//! output into contiguous row blocks and runs one `std::thread::scope`
+//! worker per block. Because a block's rows are computed by exactly the
+//! same code path as the serial kernel, results are bit-identical for
+//! every worker count — the same determinism contract the sweep engine's
+//! [`crate::coordinator::jobs::run_queue`] gives its cycle reports, and
+//! the worker-count plumbing ([`crate::coordinator::jobs::default_workers`])
+//! is shared with it.
+
+use crate::coordinator::jobs;
+
+use super::ops;
+use super::sparse_ops;
+use crate::nm::CompactNm;
+
+/// Work (MAC count) below which `workers = 0` (auto) stays serial: the
+/// tiny-zoo training matmuls are far smaller than thread-spawn overhead,
+/// while the ResNet-shaped kernels of `benches/nm_kernels.rs` are far
+/// larger. ~4M MACs ≈ 1ms serial — roughly 20× a scoped-spawn fan-out.
+pub const AUTO_MIN_MACS: u64 = 1 << 22;
+
+/// Cap for auto-selected workers (diminishing returns past the memory
+/// bandwidth knee on the row-blocked kernels).
+pub const AUTO_MAX_WORKERS: usize = 8;
+
+/// Resolve a requested worker count against the actual work:
+/// * `requested == 0` (auto): serial below [`AUTO_MIN_MACS`], else
+///   [`jobs::default_workers`] capped at [`AUTO_MAX_WORKERS`];
+/// * `requested >= 1`: honored as given (tests pin 1/2/4 explicitly).
+///
+/// Always clamped to the number of output rows. The choice NEVER affects
+/// results — only wall-clock — so auto-selection is determinism-safe.
+pub fn resolve_workers(requested: usize, out_rows: usize, macs: u64) -> usize {
+    let w = match requested {
+        0 if macs < AUTO_MIN_MACS => 1,
+        0 => jobs::default_workers().min(AUTO_MAX_WORKERS),
+        n => n,
+    };
+    w.clamp(1, out_rows.max(1))
+}
+
+/// Split `out` (row-major, `cols` wide) into up to `workers` contiguous
+/// row blocks and run `body(first_row, block)` on each, one scoped
+/// thread per block (inline when a single block suffices). `body` must
+/// compute the block's rows exactly as the serial kernel would — then
+/// the result is independent of `workers` by construction.
+pub fn par_row_blocks<F>(out: &mut [f32], cols: usize, workers: usize, body: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert!(cols > 0 && out.len() % cols == 0);
+    let rows = out.len() / cols;
+    let workers = workers.clamp(1, rows.max(1));
+    if workers <= 1 {
+        body(0, out);
+        return;
+    }
+    let rows_per = (rows + workers - 1) / workers;
+    std::thread::scope(|scope| {
+        let body = &body;
+        let mut row0 = 0usize;
+        for block in out.chunks_mut(rows_per * cols) {
+            let first = row0;
+            row0 += block.len() / cols;
+            scope.spawn(move || body(first, block));
+        }
+    });
+}
+
+fn resize(out: &mut Vec<f32>, len: usize) {
+    out.clear();
+    out.resize(len, 0.0);
+}
+
+/// Threaded [`ops::matmul`] into a reusable buffer.
+pub fn matmul_into(
+    x: &[f32],
+    w: &[f32],
+    rows: usize,
+    k: usize,
+    cols: usize,
+    workers: usize,
+    out: &mut Vec<f32>,
+) {
+    assert_eq!(x.len(), rows * k, "x shape mismatch");
+    assert_eq!(w.len(), k * cols, "w shape mismatch");
+    resize(out, rows * cols);
+    par_row_blocks(out, cols, workers, |row0, block| {
+        ops::matmul_block(x, w, k, cols, row0, block);
+    });
+}
+
+/// Threaded [`ops::matmul_bt`] into a reusable buffer.
+pub fn matmul_bt_into(
+    dy: &[f32],
+    w: &[f32],
+    rows: usize,
+    f: usize,
+    k: usize,
+    workers: usize,
+    out: &mut Vec<f32>,
+) {
+    assert_eq!(dy.len(), rows * f, "dy shape mismatch");
+    assert_eq!(w.len(), k * f, "w shape mismatch");
+    resize(out, rows * k);
+    par_row_blocks(out, k, workers, |row0, block| {
+        ops::matmul_bt_block(dy, w, f, k, row0, block);
+    });
+}
+
+/// Threaded [`ops::matmul_at`] into a reusable buffer. The parallel axis
+/// is the OUTPUT row axis (the K dimension of `dw = xᵀ·dy`), not the
+/// batch axis: every output element keeps its serial batch-ascending
+/// accumulation order, so tiling stays bit-identical.
+pub fn matmul_at_into(
+    x: &[f32],
+    dy: &[f32],
+    rows: usize,
+    k: usize,
+    f: usize,
+    workers: usize,
+    out: &mut Vec<f32>,
+) {
+    assert_eq!(x.len(), rows * k, "x shape mismatch");
+    assert_eq!(dy.len(), rows * f, "dy shape mismatch");
+    resize(out, k * f);
+    par_row_blocks(out, f, workers, |kk0, block| {
+        ops::matmul_at_block(x, dy, rows, k, f, kk0, block);
+    });
+}
+
+/// Threaded [`sparse_ops::spmm_ff`] into a reusable buffer
+/// (`enc` = `CompactNm::encode_t*` of the (k × f) weight matrix).
+pub fn spmm_ff_into(
+    x: &[f32],
+    enc: &CompactNm,
+    rows: usize,
+    k: usize,
+    f: usize,
+    workers: usize,
+    out: &mut Vec<f32>,
+) {
+    assert_eq!(x.len(), rows * k, "x shape mismatch");
+    assert_eq!((enc.rows, enc.cols), (f, k), "encoding is not w̃_FFᵀ (f × k)");
+    resize(out, rows * f);
+    par_row_blocks(out, f, workers, |row0, block| {
+        sparse_ops::spmm_nt_block(x, k, enc, row0, block);
+    });
+}
+
+/// Threaded [`sparse_ops::spmm_bt`] into a reusable buffer
+/// (`enc` = `CompactNm::encode*` of the (k × f) weight matrix).
+pub fn spmm_bt_into(
+    dy: &[f32],
+    enc: &CompactNm,
+    rows: usize,
+    f: usize,
+    k: usize,
+    workers: usize,
+    out: &mut Vec<f32>,
+) {
+    assert_eq!(dy.len(), rows * f, "dy shape mismatch");
+    assert_eq!((enc.rows, enc.cols), (k, f), "encoding is not w̃_BP (k × f)");
+    resize(out, rows * k);
+    par_row_blocks(out, k, workers, |row0, block| {
+        sparse_ops::spmm_nt_block(dy, f, enc, row0, block);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nm::{prune_values, NmPattern, PruneAxis};
+    use crate::util::testkit::Gen;
+
+    #[test]
+    fn row_blocks_cover_everything_once() {
+        for rows in [1usize, 2, 7, 8, 33] {
+            for workers in [1usize, 2, 4, 16] {
+                let mut out = vec![0.0f32; rows * 3];
+                par_row_blocks(&mut out, 3, workers, |row0, block| {
+                    for (r, row) in block.chunks_exact_mut(3).enumerate() {
+                        for v in row.iter_mut() {
+                            *v += (row0 + r) as f32 + 1.0;
+                        }
+                    }
+                });
+                for r in 0..rows {
+                    assert_eq!(out[r * 3], r as f32 + 1.0, "rows={rows} workers={workers}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_matmuls_match_serial_bit_for_bit() {
+        let mut g = Gen::new(21);
+        let (rows, k, f) = (13, 8, 6);
+        let x = g.vec_normal(rows * k);
+        let w = g.vec_normal(k * f);
+        let dy = g.vec_normal(rows * f);
+        let want_mm = crate::train::native::ops::matmul(&x, &w, rows, k, f);
+        let want_bt = crate::train::native::ops::matmul_bt(&dy, &w, rows, f, k);
+        let want_at = crate::train::native::ops::matmul_at(&x, &dy, rows, k, f);
+        let mut buf = Vec::new();
+        for workers in [1usize, 2, 3, 4, 16] {
+            matmul_into(&x, &w, rows, k, f, workers, &mut buf);
+            assert_eq!(buf, want_mm, "matmul workers={workers}");
+            matmul_bt_into(&dy, &w, rows, f, k, workers, &mut buf);
+            assert_eq!(buf, want_bt, "matmul_bt workers={workers}");
+            matmul_at_into(&x, &dy, rows, k, f, workers, &mut buf);
+            assert_eq!(buf, want_at, "matmul_at workers={workers}");
+        }
+    }
+
+    #[test]
+    fn threaded_spmm_matches_masked_dense() {
+        let mut g = Gen::new(22);
+        let p = NmPattern::P2_8;
+        let (rows, k, f) = (9, 16, 8);
+        let x = g.vec_normal(rows * k);
+        let w = g.vec_normal(k * f);
+        let dy = g.vec_normal(rows * f);
+        let wff = prune_values(&w, k, f, p, PruneAxis::Rows);
+        let wbp = prune_values(&w, k, f, p, PruneAxis::Cols);
+        let want_ff = crate::train::native::ops::matmul(&x, &wff, rows, k, f);
+        let want_bt = crate::train::native::ops::matmul_bt(&dy, &wbp, rows, f, k);
+        let enc_ff = crate::nm::CompactNm::encode_t(&w, k, f, p);
+        let enc_bp = crate::nm::CompactNm::encode(&w, k, f, p);
+        let mut buf = Vec::new();
+        for workers in [1usize, 2, 4] {
+            spmm_ff_into(&x, &enc_ff, rows, k, f, workers, &mut buf);
+            assert_eq!(buf, want_ff, "spmm_ff workers={workers}");
+            spmm_bt_into(&dy, &enc_bp, rows, f, k, workers, &mut buf);
+            assert_eq!(buf, want_bt, "spmm_bt workers={workers}");
+        }
+    }
+
+    #[test]
+    fn worker_resolution_gates_small_work() {
+        assert_eq!(resolve_workers(0, 1024, AUTO_MIN_MACS - 1), 1);
+        assert!(resolve_workers(0, 1024, AUTO_MIN_MACS) >= 1);
+        assert_eq!(resolve_workers(3, 1024, 1), 3, "explicit counts are honored");
+        assert_eq!(resolve_workers(16, 4, 1), 4, "clamped to rows");
+        assert_eq!(resolve_workers(1, 0, 0), 1);
+    }
+}

@@ -1,0 +1,246 @@
+//! Compute-skipping matmuls over the [`CompactNm`] storage format —
+//! the software analogue of SAT's STCE value-serial sparse execution.
+//!
+//! The dense kernels in [`super::ops`] multiply the masked-out zeros of
+//! `w̃` on every step, so a 2:8 run still pays ~100% of dense FLOPs.
+//! These kernels walk only the kept values:
+//!
+//! * **`spmm_ff`** — `y = x · w̃_FF` from the compact encoding of
+//!   `w̃_FFᵀ` ([`CompactNm::encode_t_into`]): compact row c holds column
+//!   c of the (K × F) weight matrix group-by-group along K, so each
+//!   output element is a gather-dot over exactly `N/M · K` weights.
+//! * **`spmm_bt`** — `dx = dy · w̃_BPᵀ` from the compact encoding of
+//!   `w̃_BP` ([`CompactNm::encode_into`]): compact row kk holds row kk
+//!   of the weight matrix group-by-group along F. Neither the transpose
+//!   nor the zeros are ever materialized.
+//!
+//! Both shapes reduce to one core: `out = a · dec(enc)ᵀ`
+//! ([`spmm_nt_block`]), whose per-element accumulation order is the
+//! ascending reduction-axis order of the dense kernels — so results are
+//! exactly equal (`==`) to [`super::ops::matmul`] /
+//! [`super::ops::matmul_bt`] on the masked-dense weights, per element,
+//! independent of the row tiling and of the worker count the
+//! [`super::par`] driver splits rows across.
+//!
+//! Perf shape: the hot instantiations are monomorphized per (N, M)
+//! pattern with power-of-two M, so the intra-group gather index can be
+//! masked (`idx & (M-1)`) instead of bounds-checked, and rows are
+//! processed in tiles of 8 so eight independent accumulator chains hide
+//! the FP-add latency that a single k-ascending chain would expose.
+
+use crate::nm::CompactNm;
+
+/// Row block of `out = a · dec(enc)ᵀ`: `a` is `(rows × p)` row-major,
+/// `enc` encodes a `(q × p)` matrix with N:M groups along its contiguous
+/// p axis, and `out` holds rows `row0 ..` of the `(rows × q)` product —
+/// `out.len() / q` of them. The threaded driver tiles this block over
+/// the output rows; calling it once with the full output is the serial
+/// kernel.
+pub fn spmm_nt_block(a: &[f32], p_dim: usize, enc: &CompactNm, row0: usize, out: &mut [f32]) {
+    debug_assert_eq!(enc.cols, p_dim, "encoding reduction axis mismatch");
+    debug_assert_eq!(enc.cols % enc.pattern.m, 0);
+    match (enc.pattern.n, enc.pattern.m) {
+        (1, 4) => kernel::<1, 4>(a, p_dim, enc, row0, out),
+        (2, 4) => kernel::<2, 4>(a, p_dim, enc, row0, out),
+        (1, 8) => kernel::<1, 8>(a, p_dim, enc, row0, out),
+        (2, 8) => kernel::<2, 8>(a, p_dim, enc, row0, out),
+        (4, 8) => kernel::<4, 8>(a, p_dim, enc, row0, out),
+        (2, 16) => kernel::<2, 16>(a, p_dim, enc, row0, out),
+        (4, 16) => kernel::<4, 16>(a, p_dim, enc, row0, out),
+        (8, 16) => kernel::<8, 16>(a, p_dim, enc, row0, out),
+        _ => generic(a, p_dim, enc, row0, out),
+    }
+}
+
+/// One (N, M) instantiation: row tiles of 8, then 4, then single rows.
+/// The tile width only changes which independent output rows progress
+/// together — never the per-element order — so any split is exact.
+fn kernel<const N: usize, const M: usize>(
+    a: &[f32],
+    p_dim: usize,
+    enc: &CompactNm,
+    row0: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(M.is_power_of_two(), "masked gather needs power-of-two M");
+    let q = enc.rows;
+    let nnz = (enc.cols / M) * N;
+    let block_rows = out.len() / q;
+    let mut r = 0usize;
+    while r + 8 <= block_rows {
+        tile::<8, N, M>(a, p_dim, q, nnz, enc, row0 + r, &mut out[r * q..(r + 8) * q]);
+        r += 8;
+    }
+    while r + 4 <= block_rows {
+        tile::<4, N, M>(a, p_dim, q, nnz, enc, row0 + r, &mut out[r * q..(r + 4) * q]);
+        r += 4;
+    }
+    while r < block_rows {
+        tile::<1, N, M>(a, p_dim, q, nnz, enc, row0 + r, &mut out[r * q..(r + 1) * q]);
+        r += 1;
+    }
+}
+
+/// R input rows against the whole encoding: R independent accumulator
+/// chains per output column (ILP), one shared walk of the compact
+/// values/indexes (N values per M-group, k/f ascending within).
+#[inline(always)]
+fn tile<const R: usize, const N: usize, const M: usize>(
+    a: &[f32],
+    p_dim: usize,
+    q: usize,
+    nnz: usize,
+    enc: &CompactNm,
+    arow0: usize,
+    out: &mut [f32],
+) {
+    let rows: [&[f32]; R] =
+        core::array::from_fn(|t| &a[(arow0 + t) * p_dim..(arow0 + t + 1) * p_dim]);
+    for c in 0..q {
+        let vs = &enc.values[c * nnz..(c + 1) * nnz];
+        let ix = &enc.indexes[c * nnz..(c + 1) * nnz];
+        let mut acc = [0.0f32; R];
+        let mut kbase = 0usize;
+        for g in 0..nnz / N {
+            // fixed-size group windows: with idx masked below M the
+            // gather needs no per-access bounds check
+            let win: [&[f32; M]; R] = core::array::from_fn(|t| {
+                rows[t][kbase..kbase + M].try_into().expect("M-sized window")
+            });
+            for j in 0..N {
+                let idx = (ix[g * N + j] as usize) & (M - 1);
+                let v = vs[g * N + j];
+                for t in 0..R {
+                    acc[t] += win[t][idx] * v;
+                }
+            }
+            kbase += M;
+        }
+        for t in 0..R {
+            out[t * q + c] = acc[t];
+        }
+    }
+}
+
+/// Runtime-(n, m) fallback for patterns outside the monomorphized set
+/// (non-power-of-two or exotic M). Same order, bounds-checked gathers.
+fn generic(a: &[f32], p_dim: usize, enc: &CompactNm, row0: usize, out: &mut [f32]) {
+    let q = enc.rows;
+    let (n, m) = (enc.pattern.n, enc.pattern.m);
+    let nnz = (enc.cols / m) * n;
+    for (i, or) in out.chunks_exact_mut(q).enumerate() {
+        let ar = &a[(row0 + i) * p_dim..(row0 + i + 1) * p_dim];
+        for (c, o) in or.iter_mut().enumerate() {
+            let vs = &enc.values[c * nnz..(c + 1) * nnz];
+            let ix = &enc.indexes[c * nnz..(c + 1) * nnz];
+            let mut acc = 0.0f32;
+            for g in 0..nnz / n {
+                let aw = &ar[g * m..(g + 1) * m];
+                for j in 0..n {
+                    acc += aw[ix[g * n + j] as usize] * vs[g * n + j];
+                }
+            }
+            *o = acc;
+        }
+    }
+}
+
+/// `x (rows × k) · w̃_FF (k × f)` → `(rows × f)`, touching only the N of
+/// every M weights along K. `enc` must be the transposed-orientation
+/// encoding [`CompactNm::encode_t_into`] of the (k × f) weight matrix.
+/// Exactly equal to `ops::matmul(x, prune_values(w, Rows), ..)`.
+pub fn spmm_ff(x: &[f32], enc: &CompactNm, rows: usize, k: usize, f: usize) -> Vec<f32> {
+    assert_eq!(x.len(), rows * k, "x shape mismatch");
+    assert_eq!((enc.rows, enc.cols), (f, k), "encoding is not w̃_FFᵀ (f × k)");
+    let mut out = vec![0.0f32; rows * f];
+    spmm_nt_block(x, k, enc, 0, &mut out);
+    out
+}
+
+/// `dy (rows × f) · w̃_BP (k × f)ᵀ` → `(rows × k)` without materializing
+/// the transpose or the zeros. `enc` must be the contiguous-groups
+/// encoding [`CompactNm::encode_into`] of the (k × f) weight matrix.
+/// Exactly equal to `ops::matmul_bt(dy, prune_values(w, Cols), ..)`.
+pub fn spmm_bt(dy: &[f32], enc: &CompactNm, rows: usize, f: usize, k: usize) -> Vec<f32> {
+    assert_eq!(dy.len(), rows * f, "dy shape mismatch");
+    assert_eq!((enc.rows, enc.cols), (k, f), "encoding is not w̃_BP (k × f)");
+    let mut out = vec![0.0f32; rows * k];
+    spmm_nt_block(dy, f, enc, 0, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nm::{prune_values, NmPattern, PruneAxis};
+    use crate::train::native::ops;
+    use crate::util::testkit::{check, Gen};
+
+    #[test]
+    fn spmm_ff_equals_masked_dense_matmul() {
+        check("spmm_ff == masked dense", 40, |g| {
+            let (n, m) = g.nm_pattern();
+            let p = NmPattern::new(n, m);
+            let k = g.usize_in(1, 3) * m;
+            let f = g.usize_in(1, 12);
+            let rows = g.usize_in(1, 18); // crosses the 8/4/1 tile edges
+            let x = g.vec_normal(rows * k);
+            let w = g.vec_normal(k * f);
+            let enc = CompactNm::encode_t(&w, k, f, p);
+            let wff = prune_values(&w, k, f, p, PruneAxis::Rows);
+            assert_eq!(spmm_ff(&x, &enc, rows, k, f), ops::matmul(&x, &wff, rows, k, f));
+        });
+    }
+
+    #[test]
+    fn spmm_bt_equals_masked_dense_matmul_bt() {
+        check("spmm_bt == masked dense", 40, |g| {
+            let (n, m) = g.nm_pattern();
+            let p = NmPattern::new(n, m);
+            let k = g.usize_in(1, 12);
+            let f = g.usize_in(1, 3) * m;
+            let rows = g.usize_in(1, 18);
+            let dy = g.vec_normal(rows * f);
+            let w = g.vec_normal(k * f);
+            let enc = CompactNm::encode(&w, k, f, p);
+            let wbp = prune_values(&w, k, f, p, PruneAxis::Cols);
+            assert_eq!(spmm_bt(&dy, &enc, rows, f, k), ops::matmul_bt(&dy, &wbp, rows, f, k));
+        });
+    }
+
+    #[test]
+    fn generic_fallback_agrees_with_monomorphized_kernels() {
+        let mut g = Gen::new(31);
+        let p = NmPattern::P2_8;
+        let (rows, k, f) = (11, 16, 5);
+        let x = g.vec_normal(rows * k);
+        let w = g.vec_normal(k * f);
+        let enc = CompactNm::encode_t(&w, k, f, p);
+        let fast = spmm_ff(&x, &enc, rows, k, f);
+        let mut slow = vec![0.0f32; rows * f];
+        generic(&x, k, &enc, 0, &mut slow);
+        assert_eq!(fast, slow);
+    }
+
+    #[test]
+    fn non_power_of_two_m_takes_the_generic_path() {
+        // 2:6 is off the monomorphized set; correctness must hold
+        let mut g = Gen::new(32);
+        let p = NmPattern::new(2, 6);
+        let (rows, k, f) = (5, 12, 4);
+        let x = g.vec_normal(rows * k);
+        let w = g.vec_normal(k * f);
+        let enc = CompactNm::encode_t(&w, k, f, p);
+        let wff = prune_values(&w, k, f, p, PruneAxis::Rows);
+        assert_eq!(spmm_ff(&x, &enc, rows, k, f), ops::matmul(&x, &wff, rows, k, f));
+    }
+
+    #[test]
+    #[should_panic(expected = "w̃_FFᵀ")]
+    fn spmm_ff_rejects_wrong_orientation() {
+        let w = vec![0.0f32; 8 * 4];
+        let enc = CompactNm::encode(&w, 8, 4, NmPattern::P2_4); // BP orientation
+        let x = vec![0.0f32; 2 * 8];
+        let _ = spmm_ff(&x, &enc, 2, 8, 4);
+    }
+}

@@ -4,10 +4,11 @@
 
 use sat::arch::{ChipResources, SatConfig};
 use sat::models::{zoo, Stage};
-use sat::nm::{flops, CompactNm, Method, NmPattern};
+use sat::nm::{flops, prune_values, CompactNm, Method, NmPattern, PruneAxis};
 use sat::sched::{rwg_schedule, words};
 use sat::sim::engine::simulate_method;
 use sat::sim::memory::MemConfig;
+use sat::train::native::{ops, par};
 use sat::util::testkit::{check, Gen};
 
 fn random_cfg(g: &mut Gen) -> SatConfig {
@@ -103,6 +104,42 @@ fn schedule_words_roundtrip_everywhere() {
         let method = *g.pick(&Method::ALL);
         let s = rwg_schedule(&model, method, cfg.pattern, &cfg);
         assert!(words::verify_roundtrip(&s), "{method} {}", model.name);
+    });
+}
+
+#[test]
+fn spmm_kernels_bit_identical_to_masked_dense_across_workers() {
+    // The tentpole contract: the compute-skipping kernels are EXACTLY
+    // the dense kernels on masked weights, for random shapes × the
+    // paper's patterns × 1/2/4 workers (row-blocked tiling must never
+    // change the per-element accumulation order).
+    check("spmm == masked dense x workers", 40, |g| {
+        let (n, m) = *g.pick(&[(1usize, 4usize), (2, 4), (2, 8), (4, 8)]);
+        let p = NmPattern::new(n, m);
+        let k = g.usize_in(1, 4) * m;
+        let f = g.usize_in(1, 3) * m;
+        let rows = g.usize_in(1, 21); // crosses the 8/4/1 row-tile edges
+        let x = g.vec_normal(rows * k);
+        let dy = g.vec_normal(rows * f);
+        let w = g.vec_normal(k * f);
+        let enc_ff = CompactNm::encode_t(&w, k, f, p);
+        let enc_bp = CompactNm::encode(&w, k, f, p);
+        let wff = prune_values(&w, k, f, p, PruneAxis::Rows);
+        let wbp = prune_values(&w, k, f, p, PruneAxis::Cols);
+        let want_ff = ops::matmul(&x, &wff, rows, k, f);
+        let want_bt = ops::matmul_bt(&dy, &wbp, rows, f, k);
+        let mut got = Vec::new();
+        for workers in [1usize, 2, 4] {
+            par::spmm_ff_into(&x, &enc_ff, rows, k, f, workers, &mut got);
+            assert_eq!(got, want_ff, "spmm_ff {p} workers={workers}");
+            par::spmm_bt_into(&dy, &enc_bp, rows, f, k, workers, &mut got);
+            assert_eq!(got, want_bt, "spmm_bt {p} workers={workers}");
+            // the threaded dense drivers obey the same contract
+            par::matmul_into(&x, &wff, rows, k, f, workers, &mut got);
+            assert_eq!(got, want_ff, "matmul {p} workers={workers}");
+            par::matmul_at_into(&x, &dy, rows, k, f, workers, &mut got);
+            assert_eq!(got, ops::matmul_at(&x, &dy, rows, k, f), "matmul_at workers={workers}");
+        }
     });
 }
 

@@ -46,6 +46,10 @@ fn schedule_cache_computes_each_distinct_key_once() {
         r.meta.schedule_hits + r.meta.schedule_misses,
         r.rows.len() as u64
     );
+    // the step precomputation shares the same key space: bandwidth-only
+    // variants re-walk nothing (batched single-pass simulation)
+    assert_eq!(r.meta.precomp_misses, 18);
+    assert_eq!(r.meta.precomp_hits, 18);
 }
 
 #[test]
