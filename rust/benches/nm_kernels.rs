@@ -1,13 +1,25 @@
-//! N:M kernel microbench — the compute-skipping acceptance exhibit.
+//! N:M kernel microbench — the compute-skipping + packed-GEMM
+//! acceptance exhibit.
 //!
-//! Measures the native backend's compact sparse kernels (`spmm_ff`,
-//! `spmm_bt`) against the dense kernels on masked weights, over a
-//! ResNet-shaped (B,K)×(K,F) sweep (constant dense-MAC volume, depth
-//! shifting from wide-and-shallow to narrow-and-deep im2col shapes),
-//! plus the per-step `CompactNm` pre-generation (encode) cost and an
-//! end-to-end BDWP `NativeNet` step-time A/B with `--sparse-compute`
-//! on vs off.
+//! Three sections over a ResNet-shaped (B,K)×(K,F) sweep (constant
+//! dense-MAC volume, depth shifting from wide-and-shallow to
+//! narrow-and-deep im2col shapes):
 //!
+//! 1. **dense core** — the retained PR 3 scalar kernels
+//!    (`ops::matmul`/`matmul_bt`/`matmul_at`) vs the PR 4 packed
+//!    register-tiled GEMM drivers (`par::matmul_into` etc.), serial and
+//!    on the persistent pool. Acceptance: packed ≥ 1.5× legacy on the
+//!    256-class shapes of the grid.
+//! 2. **sparse core** — dense-on-masked-w̃ vs the compact serial oracle
+//!    (`sparse_ops::spmm_ff`/`spmm_bt`) vs the panel-packed pool
+//!    drivers, plus the per-step pre-generation (encode + pack) cost.
+//!    Acceptance: packed spmm no slower than the compact oracle at 2:8.
+//! 3. **dispatch** — one trivial 32-tile job dispatched via the legacy
+//!    per-call `thread::scope` spawn (`par::scoped_row_blocks`) vs the
+//!    parked worker pool, isolating the fan-out overhead the pool
+//!    removes from every step-loop matmul.
+//!
+//! Every timed kernel is parity-asserted against its oracle first.
 //! Emits `BENCH_nm_kernels.json` in the `sat bench-diff` row schema so
 //! CI can self-diff and archive it.
 //!
@@ -17,6 +29,8 @@
 use sat::models::zoo::Model;
 use sat::models::{Layer, LayerKind};
 use sat::nm::{prune_values, CompactNm, Method, NmPattern, PruneAxis};
+use sat::train::native::gemm::{self, PackedB};
+use sat::train::native::pool::{self, TileGrid};
 use sat::train::native::{ops, par, sparse_ops, NativeNet, SparseCompute};
 use sat::util::json;
 use sat::util::prng::Pcg32;
@@ -27,7 +41,7 @@ use sat::util::timer::{bench, Measurement};
 struct KernelRow {
     shape: String,
     kernel: &'static str,
-    pattern: NmPattern,
+    pattern: String,
     k: usize,
     f: usize,
     workers: usize,
@@ -40,7 +54,7 @@ impl KernelRow {
         json::Obj::new()
             .field_str("model", &self.shape)
             .field_str("method", self.kernel)
-            .field_str("pattern", &self.pattern.to_string())
+            .field_str("pattern", &self.pattern)
             .field_usize("rows", self.k)
             .field_usize("cols", self.f)
             .field_usize("lanes", self.workers)
@@ -85,12 +99,125 @@ fn main() -> anyhow::Result<()> {
     };
 
     let mut rows: Vec<KernelRow> = Vec::new();
+
+    // ---- 1. dense core: legacy scalar kernels vs packed GEMM ----
+    let mut packed_speedups_256 = Vec::new();
+    let mut dense_table = Table::new("dense GEMM core — PR 3 scalar kernels vs packed+pool")
+        .header(&[
+            "shape", "op", "legacy ms", "packed ms", "speedup", "packed mt ms", "mt speedup",
+        ]);
+    for &(b, k, f) in shapes {
+        let mut rng = Pcg32::new(0xD1CE + k as u64);
+        let x = vec_normal(&mut rng, b * k);
+        let w = vec_normal(&mut rng, k * f);
+        let dy = vec_normal(&mut rng, b * f);
+        let macs = (b * k * f) as u64;
+        let shape = format!("b{b}_k{k}_f{f}");
+        let mut pack = PackedB::default();
+        let mut buf = Vec::new();
+        // parity before timing: packed drivers == seed kernels, bit-exact
+        par::matmul_into(&x, &w, b, k, f, threaded_workers, &mut pack, &mut buf);
+        assert_eq!(buf, ops::matmul(&x, &w, b, k, f), "packed matmul != seed at {shape}");
+        par::matmul_bt_into(&dy, &w, b, f, k, threaded_workers, &mut pack, &mut buf);
+        assert_eq!(buf, ops::matmul_bt(&dy, &w, b, f, k), "packed bt != seed at {shape}");
+        par::matmul_at_into(&x, &dy, b, k, f, threaded_workers, &mut pack, &mut buf);
+        assert_eq!(buf, ops::matmul_at(&x, &dy, b, k, f), "packed at != seed at {shape}");
+
+        // reused pack/out scratch per case, captured by move — the
+        // production step loop amortizes these allocations the same way
+        // (NativeNet's per-net scratch), so the timed closure must too
+        let (x, w, dy) = (x.as_slice(), w.as_slice(), dy.as_slice());
+        type LegacyFn<'a> = Box<dyn FnMut() -> usize + 'a>;
+        type PackedFn<'a> = Box<dyn FnMut(usize) -> usize + 'a>;
+        let cases: Vec<(&'static str, LegacyFn<'_>, PackedFn<'_>)> = vec![
+            (
+                "matmul",
+                Box::new(|| ops::matmul(x, w, b, k, f).len()),
+                Box::new({
+                    let (mut pack, mut buf) = (PackedB::default(), Vec::new());
+                    move |ws| {
+                        par::matmul_into(x, w, b, k, f, ws, &mut pack, &mut buf);
+                        buf.len()
+                    }
+                }),
+            ),
+            (
+                "matmul_bt",
+                Box::new(|| ops::matmul_bt(dy, w, b, f, k).len()),
+                Box::new({
+                    let (mut pack, mut buf) = (PackedB::default(), Vec::new());
+                    move |ws| {
+                        par::matmul_bt_into(dy, w, b, f, k, ws, &mut pack, &mut buf);
+                        buf.len()
+                    }
+                }),
+            ),
+            (
+                "matmul_at",
+                Box::new(|| ops::matmul_at(x, dy, b, k, f).len()),
+                Box::new({
+                    let (mut pack, mut buf) = (PackedB::default(), Vec::new());
+                    move |ws| {
+                        par::matmul_at_into(x, dy, b, k, f, ws, &mut pack, &mut buf);
+                        buf.len()
+                    }
+                }),
+            ),
+        ];
+        for (op, mut legacy, mut packed) in cases {
+            let label = |kind: &str| format!("{op}/{kind} {shape}");
+            let leg = bench(&label("legacy"), warmup, iters, &mut legacy);
+            let pk1 = bench(&label("packed"), warmup, iters, || packed(1));
+            let pkm = bench(&label("packed_mt"), warmup, iters, || packed(threaded_workers));
+            let speedup = leg.mean_s / pk1.mean_s;
+            if f == 256 {
+                packed_speedups_256.push(speedup);
+            }
+            dense_table.row(&[
+                shape.clone(),
+                op.to_string(),
+                format!("{:.2}", leg.mean_s * 1e3),
+                format!("{:.2}", pk1.mean_s * 1e3),
+                format!("{speedup:.2}x"),
+                format!("{:.2}", pkm.mean_s * 1e3),
+                format!("{:.2}x", leg.mean_s / pkm.mean_s),
+            ]);
+            for (kind, workers, m) in
+                [("legacy", 1usize, leg), ("packed", 1, pk1), ("packed_mt", threaded_workers, pkm)]
+            {
+                rows.push(KernelRow {
+                    shape: shape.clone(),
+                    kernel: match (op, kind) {
+                        ("matmul", "legacy") => "dense_matmul_legacy",
+                        ("matmul", "packed") => "dense_matmul_packed",
+                        ("matmul", "packed_mt") => "dense_matmul_packed_mt",
+                        ("matmul_bt", "legacy") => "dense_bt_legacy",
+                        ("matmul_bt", "packed") => "dense_bt_packed",
+                        ("matmul_bt", "packed_mt") => "dense_bt_packed_mt",
+                        ("matmul_at", "legacy") => "dense_at_legacy",
+                        ("matmul_at", "packed") => "dense_at_packed",
+                        _ => "dense_at_packed_mt",
+                    },
+                    pattern: "dense".to_string(),
+                    k,
+                    f,
+                    workers,
+                    m,
+                    dense_macs: macs,
+                });
+            }
+        }
+    }
+    dense_table.print();
+
+    // ---- 2. sparse core: masked-dense vs compact oracle vs packed ----
     let mut ff_speedups_28 = Vec::new();
     let mut bt_speedups_28 = Vec::new();
+    let mut packed_vs_oracle_28 = Vec::new();
     let mut table = Table::new("N:M kernel sweep — dense (masked w̃) vs compute-skipping")
         .header(&[
-            "shape", "pattern", "dense FF ms", "spmm_ff ms", "FF speedup",
-            "dense BT ms", "spmm_bt ms", "BT speedup", "encode ms",
+            "shape", "pattern", "dense FF ms", "spmm_ff ms", "packed ff ms", "FF speedup",
+            "dense BT ms", "spmm_bt ms", "packed bt ms", "BT speedup", "pregen ms",
         ]);
 
     for &(b, k, f) in shapes {
@@ -105,17 +232,27 @@ fn main() -> anyhow::Result<()> {
             let wbp = prune_values(&w, k, f, p, PruneAxis::Cols);
             let enc_ff = CompactNm::encode_t(&w, k, f, p);
             let enc_bp = CompactNm::encode(&w, k, f, p);
-            // correctness pin before timing anything
+            let pk_ff = enc_ff.pack_panels(gemm::NR);
+            let pk_bp = enc_bp.pack_panels(gemm::NR);
+            // correctness pins before timing anything: compact oracle
+            // and packed-panel kernels == masked dense, bit-exact
+            let want_ff = ops::matmul(&x, &wff, b, k, f);
+            let want_bt = ops::matmul_bt(&dy, &wbp, b, f, k);
             assert_eq!(
                 sparse_ops::spmm_ff(&x, &enc_ff, b, k, f),
-                ops::matmul(&x, &wff, b, k, f),
+                want_ff,
                 "spmm_ff != masked dense at {shape} {p}"
             );
             assert_eq!(
                 sparse_ops::spmm_bt(&dy, &enc_bp, b, f, k),
-                ops::matmul_bt(&dy, &wbp, b, f, k),
+                want_bt,
                 "spmm_bt != masked dense at {shape} {p}"
             );
+            let mut buf = Vec::new();
+            par::spmm_ff_into(&x, &pk_ff, b, k, f, threaded_workers, &mut buf);
+            assert_eq!(buf, want_ff, "packed spmm_ff != masked dense at {shape} {p}");
+            par::spmm_bt_into(&dy, &pk_bp, b, f, k, threaded_workers, &mut buf);
+            assert_eq!(buf, want_bt, "packed spmm_bt != masked dense at {shape} {p}");
 
             let label = |kern: &str| format!("{kern} {shape} {p}");
             let dense_ff =
@@ -124,8 +261,12 @@ fn main() -> anyhow::Result<()> {
                 sparse_ops::spmm_ff(&x, &enc_ff, b, k, f)
             });
             let mut buf = Vec::new();
-            let spmm_ff_mt = bench(&label("spmm_ff/mt"), warmup, iters, || {
-                par::spmm_ff_into(&x, &enc_ff, b, k, f, threaded_workers, &mut buf);
+            let spmm_ff_pk = bench(&label("spmm_ff/packed"), warmup, iters, || {
+                par::spmm_ff_into(&x, &pk_ff, b, k, f, 1, &mut buf);
+                buf.len()
+            });
+            let spmm_ff_mt = bench(&label("spmm_ff/packed_mt"), warmup, iters, || {
+                par::spmm_ff_into(&x, &pk_ff, b, k, f, threaded_workers, &mut buf);
                 buf.len()
             });
             let dense_bt = bench(&label("matmul_bt(w̃_BP)"), warmup, iters, || {
@@ -135,48 +276,63 @@ fn main() -> anyhow::Result<()> {
                 sparse_ops::spmm_bt(&dy, &enc_bp, b, f, k)
             });
             let mut buf2 = Vec::new();
-            let spmm_bt_mt = bench(&label("spmm_bt/mt"), warmup, iters, || {
-                par::spmm_bt_into(&dy, &enc_bp, b, f, k, threaded_workers, &mut buf2);
+            let spmm_bt_pk = bench(&label("spmm_bt/packed"), warmup, iters, || {
+                par::spmm_bt_into(&dy, &pk_bp, b, f, k, 1, &mut buf2);
+                buf2.len()
+            });
+            let spmm_bt_mt = bench(&label("spmm_bt/packed_mt"), warmup, iters, || {
+                par::spmm_bt_into(&dy, &pk_bp, b, f, k, threaded_workers, &mut buf2);
                 buf2.len()
             });
             let mut enc_scratch = CompactNm::empty(p);
-            let encode = bench(&label("encode_t+encode"), warmup, iters, || {
+            let mut pk_scratch = sat::nm::PackedNm::empty(p);
+            let encode = bench(&label("encode+pack pregen"), warmup, iters, || {
+                // the full per-step pre-generation pass: both
+                // orientations, encode + panel pack
                 CompactNm::encode_t_into(&w, k, f, p, &mut enc_scratch);
-                let a = enc_scratch.nnz();
+                enc_scratch.pack_panels_into(gemm::NR, &mut pk_scratch);
+                let a = pk_scratch.values.len();
                 CompactNm::encode_into(&w, k, f, p, &mut enc_scratch);
-                a + enc_scratch.nnz()
+                enc_scratch.pack_panels_into(gemm::NR, &mut pk_scratch);
+                a + pk_scratch.values.len()
             });
 
-            let ff_speedup = dense_ff.mean_s / spmm_ff.mean_s;
-            let bt_speedup = dense_bt.mean_s / spmm_bt.mean_s;
+            let ff_speedup = dense_ff.mean_s / spmm_ff_pk.mean_s;
+            let bt_speedup = dense_bt.mean_s / spmm_bt_pk.mean_s;
             if p == NmPattern::P2_8 {
                 ff_speedups_28.push(ff_speedup);
                 bt_speedups_28.push(bt_speedup);
+                packed_vs_oracle_28.push(spmm_ff.mean_s / spmm_ff_pk.mean_s);
+                packed_vs_oracle_28.push(spmm_bt.mean_s / spmm_bt_pk.mean_s);
             }
             table.row(&[
                 shape.clone(),
                 p.to_string(),
                 format!("{:.2}", dense_ff.mean_s * 1e3),
                 format!("{:.2}", spmm_ff.mean_s * 1e3),
+                format!("{:.2}", spmm_ff_pk.mean_s * 1e3),
                 format!("{ff_speedup:.2}x"),
                 format!("{:.2}", dense_bt.mean_s * 1e3),
                 format!("{:.2}", spmm_bt.mean_s * 1e3),
+                format!("{:.2}", spmm_bt_pk.mean_s * 1e3),
                 format!("{bt_speedup:.2}x"),
                 format!("{:.2}", encode.mean_s * 1e3),
             ]);
             for (kernel, workers, m) in [
                 ("matmul_dense_ff", 1, dense_ff),
                 ("spmm_ff", 1, spmm_ff),
+                ("spmm_ff_packed", 1, spmm_ff_pk),
                 ("spmm_ff_mt", threaded_workers, spmm_ff_mt),
                 ("matmul_dense_bt", 1, dense_bt),
                 ("spmm_bt", 1, spmm_bt),
+                ("spmm_bt_packed", 1, spmm_bt_pk),
                 ("spmm_bt_mt", threaded_workers, spmm_bt_mt),
                 ("encode_pregen", 1, encode),
             ] {
                 rows.push(KernelRow {
                     shape: shape.clone(),
                     kernel,
-                    pattern: p,
+                    pattern: p.to_string(),
                     k,
                     f,
                     workers,
@@ -187,6 +343,43 @@ fn main() -> anyhow::Result<()> {
         }
     }
     table.print();
+
+    // ---- 3. dispatch: scoped spawn fan-out vs parked pool wake ----
+    let disp_iters = if quick { 50 } else { 200 };
+    let mut sink = vec![0.0f32; 32];
+    let disp_scoped = bench("dispatch/scoped", 5, disp_iters, || {
+        par::scoped_row_blocks(&mut sink, 1, threaded_workers, |row0, block| {
+            block[0] += row0 as f32;
+        });
+        sink[0]
+    });
+    let grid = TileGrid::new(32, 1, 8, 1); // one tile per participant
+    let disp_pool = bench("dispatch/pool", 5, disp_iters, || {
+        pool::run_tiles(&mut sink, &grid, threaded_workers, |mut tile| {
+            let r = tile.rows().start;
+            tile.row_mut(r)[0] += r as f32;
+        });
+        sink[0]
+    });
+    println!(
+        "dispatch overhead x{threaded_workers} workers: scoped spawn {:.1} us, \
+         persistent pool {:.1} us ({:.1}x cheaper)",
+        disp_scoped.mean_s * 1e6,
+        disp_pool.mean_s * 1e6,
+        disp_scoped.mean_s / disp_pool.mean_s,
+    );
+    for (kernel, m) in [("dispatch_scoped", disp_scoped), ("dispatch_pool", disp_pool)] {
+        rows.push(KernelRow {
+            shape: "dispatch32".into(),
+            kernel,
+            pattern: "dense".into(),
+            k: 32,
+            f: 1,
+            workers: threaded_workers,
+            m,
+            dense_macs: 0,
+        });
+    }
 
     // ---- end-to-end: BDWP NativeNet step time, sparse-compute A/B ----
     let (dims, e2e_batch, e2e_steps): (&[usize], usize, usize) =
@@ -238,10 +431,17 @@ fn main() -> anyhow::Result<()> {
         threaded_workers, on_mt * 1e3, off / on_mt,
     );
 
+    let packed_geo = geomean(&packed_speedups_256);
     let ff_geo = geomean(&ff_speedups_28);
     let bt_geo = geomean(&bt_speedups_28);
+    let oracle_geo = geomean(&packed_vs_oracle_28);
     println!(
-        "ACCEPTANCE spmm_ff speedup vs dense(masked) at 2:8: geomean {ff_geo:.2}x \
+        "ACCEPTANCE packed GEMM vs PR 3 kernels on the 256-class grid: geomean \
+         {packed_geo:.2}x (target >= 1.5x)"
+    );
+    println!(
+        "ACCEPTANCE packed spmm vs compact oracle at 2:8: geomean {oracle_geo:.2}x \
+         (target >= 1x); spmm_ff vs dense(masked) geomean {ff_geo:.2}x \
          (target >= 2x); spmm_bt geomean {bt_geo:.2}x"
     );
 
@@ -253,6 +453,8 @@ fn main() -> anyhow::Result<()> {
             &json::Obj::new()
                 .field_bool("quick", quick)
                 .field_usize("iters", iters)
+                .field_f64("packed_gemm_geomean_speedup_f256", packed_geo)
+                .field_f64("packed_spmm_vs_oracle_geomean_2_8", oracle_geo)
                 .field_f64("ff_geomean_speedup_2_8", ff_geo)
                 .field_f64("bt_geomean_speedup_2_8", bt_geo)
                 .field_f64("e2e_step_ms_dense_path", off * 1e3)

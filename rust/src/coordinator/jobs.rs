@@ -3,10 +3,14 @@
 //! Exhibits like Fig. 17 sweep dozens of (array, bandwidth, method)
 //! points; each simulation is independent, so the coordinator runs them
 //! on `std::thread` workers (tokio is not in the vendored set — and the
-//! jobs are CPU-bound anyway).
+//! jobs are CPU-bound anyway). [`run_queue`] — the sweep engine's
+//! dispatcher — executes on the process-wide persistent pool shared
+//! with the native training backend
+//! ([`crate::train::native::pool::global`]); [`run_parallel`] keeps the
+//! original owned-job spawn form for callers that need `'static` jobs.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::{mpsc, Mutex};
 use std::thread;
 
 /// Run `jobs` across up to `workers` threads, preserving input order in
@@ -55,13 +59,20 @@ where
         .collect()
 }
 
-/// Dynamic work-queue sibling of [`run_parallel`]: `workers` scoped
-/// threads pull the next job index from a shared atomic counter, so a
+/// Dynamic work-queue sibling of [`run_parallel`]: up to `workers`
+/// runners pull the next job index from a shared atomic counter, so a
 /// handful of expensive jobs (resnet50 sims) cannot stall a statically
 /// assigned bucket while other workers sit idle. Results are returned in
 /// input order, making output independent of scheduling — the sweep
 /// engine's determinism contract. The closure is shared by reference
 /// (`Sync`), which lets callers close over caches without `Arc` plumbing.
+///
+/// Since PR 4 the runners are the persistent native-backend pool
+/// ([`crate::train::native::pool::global`]) instead of a per-call
+/// `thread::scope` fan-out — `sat sweep`, `sat exhibits` and the
+/// training matmuls all share one set of parked threads. Each runner
+/// claims its next index dynamically, so load balancing is unchanged;
+/// only the dispatch cost dropped.
 pub fn run_queue<T, F>(n: usize, workers: usize, job: F) -> Vec<T>
 where
     T: Send,
@@ -72,33 +83,28 @@ where
     }
     let workers = workers.max(1).min(n);
     let next = AtomicUsize::new(0);
-    let (tx, rx) = mpsc::channel::<(usize, T)>();
-    thread::scope(|scope| {
-        for _ in 0..workers {
-            let tx = tx.clone();
-            let next = &next;
-            let job = &job;
-            let _handle = scope.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                // A panicking job drops its tx clone on unwind; collection
-                // below reports the hole instead of deadlocking.
-                let _ = tx.send((i, job(i)));
-            });
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let runner = |_slot: usize| loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            break;
         }
-        drop(tx);
-        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
-        while let Ok((i, v)) = rx.recv() {
-            slots[i] = Some(v);
+        // A panicking job is caught here (not in the pool, which would
+        // lose the grid point) and leaves its slot empty; the runner
+        // keeps draining and collection below reports the hole by index.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(i)));
+        if let Ok(v) = result {
+            *slots[i].lock().unwrap() = Some(v);
         }
-        slots
-            .into_iter()
-            .enumerate()
-            .map(|(i, s)| s.unwrap_or_else(|| panic!("job {i} panicked")))
-            .collect()
-    })
+    };
+    crate::train::native::pool::global().run(workers, workers, &runner);
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| {
+            s.into_inner().unwrap().unwrap_or_else(|| panic!("job {i} panicked"))
+        })
+        .collect()
 }
 
 /// Reasonable default worker count.

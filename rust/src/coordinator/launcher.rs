@@ -40,7 +40,12 @@ SUBCOMMANDS
              [--backend native|pjrt --model tiny_mlp|tiny_cnn|...
               --method dense|srste|sdgp|sdwp|bdwp --pattern N:M
               --steps N --lr F --eval-every K --seed S --chunk
-              --sparse-compute auto|on|off --threads N
+              --sparse-compute auto|on|off
+              --threads N  matmul workers on the persistent pool;
+                           0 (default) = auto: serial for tiny matmuls,
+                           otherwise every core reported by
+                           std::thread::available_parallelism().
+                           Never changes results, only wall-clock.
               --artifact NAME --assert-decreasing]
   compare    train several methods on identical data (Fig. 4 protocol)
              [--backend native|pjrt --model mlp|cnn|vit --steps N

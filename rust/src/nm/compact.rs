@@ -178,6 +178,99 @@ impl CompactNm {
             *v = f16::quantize(*v);
         }
     }
+
+    /// Repack into `nr`-wide compute panels ([`PackedNm`]) — the layout
+    /// the packed spmm microkernels consume. Allocating convenience for
+    /// [`CompactNm::pack_panels_into`].
+    pub fn pack_panels(&self, nr: usize) -> PackedNm {
+        let mut out = PackedNm::empty(self.pattern);
+        self.pack_panels_into(nr, &mut out);
+        out
+    }
+
+    /// [`CompactNm::pack_panels`] into a caller-owned buffer (the
+    /// native backend re-packs every pruned layer once per optimizer
+    /// step right after `encode_into`/`encode_t_into`, so the hot loop
+    /// must not churn allocations).
+    ///
+    /// Layout: `ceil(rows / nr)` panels; within a panel, groups ascend
+    /// along the reduction axis and, per `(group, slot)` pair, the `nr`
+    /// compact rows' values/indexes sit CONSECUTIVELY — so a microkernel
+    /// producing `nr` output columns streams the panel at stride 1 and
+    /// reloads each input window once per group instead of once per
+    /// output column. Rows past the end pad with `(0.0, index 0)`,
+    /// which contribute exact zeros the kernels never store.
+    pub fn pack_panels_into(&self, nr: usize, out: &mut PackedNm) {
+        assert!(nr > 0, "panel width must be positive");
+        let nnz_row = (self.cols / self.pattern.m) * self.pattern.n;
+        out.pattern = self.pattern;
+        out.rows = self.rows;
+        out.cols = self.cols;
+        out.nr = nr;
+        let panels = (self.rows + nr - 1) / nr;
+        out.values.clear();
+        out.values.resize(panels * nnz_row * nr, 0.0);
+        out.indexes.clear();
+        out.indexes.resize(panels * nnz_row * nr, 0);
+        for p in 0..panels {
+            let base = p * nnz_row * nr;
+            let width = nr.min(self.rows - p * nr);
+            for c in 0..width {
+                let row = p * nr + c;
+                let src_v = &self.values[row * nnz_row..(row + 1) * nnz_row];
+                let src_i = &self.indexes[row * nnz_row..(row + 1) * nnz_row];
+                for s in 0..nnz_row {
+                    out.values[base + s * nr + c] = src_v[s];
+                    out.indexes[base + s * nr + c] = src_i[s];
+                }
+            }
+        }
+    }
+}
+
+/// [`CompactNm`] repacked into `nr`-wide compute panels (see
+/// [`CompactNm::pack_panels_into`] for the layout) — the sparse twin of
+/// the dense GEMM's packed B panels. Pure layout transform: decoding
+/// any panel column reproduces the compact row exactly, so the packed
+/// spmm kernels inherit the compact kernels' bit-exactness contract.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedNm {
+    pub pattern: NmPattern,
+    /// Compact rows (= output columns of the spmm).
+    pub rows: usize,
+    /// Dense reduction length (groups * M).
+    pub cols: usize,
+    /// Panel width (output columns per panel).
+    pub nr: usize,
+    /// `ceil(rows/nr)` panels of `cols/M * N * nr` values, grouped
+    /// `(group, slot)`-major with the `nr` lanes innermost.
+    pub values: Vec<f32>,
+    /// Intra-group indexes, same layout as `values`.
+    pub indexes: Vec<u8>,
+}
+
+impl PackedNm {
+    /// An empty packing ready for [`CompactNm::pack_panels_into`].
+    pub fn empty(p: NmPattern) -> PackedNm {
+        PackedNm { pattern: p, rows: 0, cols: 0, nr: 1, values: Vec::new(), indexes: Vec::new() }
+    }
+
+    /// Kept values per compact row.
+    pub fn nnz_row(&self) -> usize {
+        (self.cols / self.pattern.m) * self.pattern.n
+    }
+
+    /// Panel `p`'s values: `nnz_row() * nr` floats.
+    pub fn panel_values(&self, p: usize) -> &[f32] {
+        let len = self.nnz_row() * self.nr;
+        &self.values[p * len..(p + 1) * len]
+    }
+
+    /// Panel `p`'s indexes, same shape as [`PackedNm::panel_values`].
+    pub fn panel_indexes(&self, p: usize) -> &[u8] {
+        let len = self.nnz_row() * self.nr;
+        &self.indexes[p * len..(p + 1) * len]
+    }
 }
 
 #[cfg(test)]
@@ -271,6 +364,39 @@ mod tests {
             for r in 0..rows {
                 for c in 0..cols {
                     assert_eq!(dec[c * rows + r], pruned[r * cols + c]);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn pack_panels_roundtrips_the_compact_rows() {
+        check("pack_panels roundtrip", 40, |g| {
+            let (n, m) = g.nm_pattern();
+            let p = NmPattern::new(n, m);
+            let rows = g.usize_in(1, 19); // crosses ragged-panel edges
+            let cols = g.usize_in(1, 4) * m;
+            let w = g.vec_normal(rows * cols);
+            let enc = CompactNm::encode(&w, rows, cols, p);
+            let nr = *g.pick(&[1usize, 4, 8]);
+            let pk = enc.pack_panels(nr);
+            assert_eq!((pk.rows, pk.cols, pk.nr), (rows, cols, nr));
+            let nnz_row = pk.nnz_row();
+            for row in 0..rows {
+                let (pp, c) = (row / nr, row % nr);
+                for s in 0..nnz_row {
+                    assert_eq!(pk.panel_values(pp)[s * nr + c], enc.values[row * nnz_row + s]);
+                    assert_eq!(pk.panel_indexes(pp)[s * nr + c], enc.indexes[row * nnz_row + s]);
+                }
+            }
+            // padding lanes are exact zeros with index 0
+            if rows % nr != 0 {
+                let last = pk.values.len() / (nnz_row * nr) - 1;
+                for s in 0..nnz_row {
+                    for c in rows % nr..nr {
+                        assert_eq!(pk.panel_values(last)[s * nr + c], 0.0);
+                        assert_eq!(pk.panel_indexes(last)[s * nr + c], 0);
+                    }
                 }
             }
         });

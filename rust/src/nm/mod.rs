@@ -11,7 +11,7 @@ pub mod flops;
 pub mod pattern;
 pub mod prune;
 
-pub use compact::CompactNm;
+pub use compact::{CompactNm, PackedNm};
 pub use flops::Method;
 pub use pattern::NmPattern;
 pub use prune::{prune_mask, prune_values, prune_values_into, PruneAxis};

@@ -74,8 +74,10 @@ pub struct TrainOptions {
     /// stages (`--sparse-compute auto|on|off`). Result-identical either
     /// way; PJRT ignores it (XLA owns its kernels).
     pub sparse_compute: SparseCompute,
-    /// Native backend: matmul worker threads (`--threads N`, 0 = auto).
-    /// Never changes results, only wall-clock.
+    /// Native backend: matmul workers on the persistent pool
+    /// (`--threads N`; 0 = auto — serial for tiny matmuls, otherwise
+    /// `std::thread::available_parallelism()`, which is exactly the
+    /// pool's capacity). Never changes results, only wall-clock.
     pub threads: usize,
 }
 

@@ -1,0 +1,350 @@
+//! Packed, register-tiled GEMM core for the native training backend.
+//!
+//! The PR 3 kernels in [`super::ops`] are scalar row loops over an
+//! unpacked B operand: `matmul` re-reads every weight row once per
+//! output row, `matmul_bt` reduces each output element down a single
+//! accumulator chain (FP-add latency bound), and `matmul_at` streams
+//! `dy` once per K-row block. This module rebuilds all three around the
+//! classic packed-panel GEMM structure:
+//!
+//! * **[`PackedB`]** — the B operand repacked once per call into
+//!   contiguous `Kc × `[`NR`] column panels (`Kc` = the full reduction
+//!   length; see below), so the microkernel streams B at stride 1
+//!   regardless of the original orientation ([`pack_b_into`] for
+//!   row-major B, [`pack_bt_into`] for the transposed operand of
+//!   `matmul_bt` — the transpose is paid once during packing, never in
+//!   the inner loop). One packed image is shared by every row block and
+//!   every pool worker of the dispatch.
+//! * **register-tiled microkernels** — `MR×`[`NR`] output tiles
+//!   (`MR ∈ {8, 4, 1}`, the same cadence as the sparse row tiles) hold
+//!   `MR·NR` accumulators in registers across the whole reduction:
+//!   each B panel line is loaded once per row *tile* instead of once
+//!   per row, and `matmul_bt` gets `MR·NR` independent accumulator
+//!   chains instead of one.
+//!
+//! **Bit-exactness contract.** Every output element accumulates its
+//! products in full-reduction ascending order — k for `matmul`, f for
+//! `matmul_bt`, batch row for `matmul_at` — with the seed kernels'
+//! zero-activation skip preserved where they have it (`matmul`,
+//! `matmul_at`; `matmul_bt` has none). Tiling only changes which
+//! *independent* elements progress together, so results are `==` the
+//! [`super::ops`] kernels per element for every tile split and worker
+//! count (property-tested in `tests/properties.rs` against the retained
+//! seed kernels). This is also why `Kc` is pinned to the full reduction
+//! length: a shorter Kc with spilled partial sums would keep the
+//! ascending order, but the register-resident full-K walk is both the
+//! fastest shape at these sizes (K ≤ ~4.6k: one panel is L2-resident)
+//! and trivially order-exact.
+
+use super::pool::TileOut;
+
+/// Packed panel width (output columns per panel). Eight f32 lanes — one
+/// AVX/NEON-width line the autovectorizer can keep in a register.
+pub const NR: usize = 8;
+
+/// Max register-tile height (output rows per microkernel call).
+pub const MR: usize = 8;
+
+/// The B operand of one GEMM, repacked into `ceil(n / NR)` contiguous
+/// panels of `k × NR` (tail panel zero-padded on the right). Reused
+/// across calls via [`pack_b_into`] / [`pack_bt_into`] — the native
+/// engine keeps one scratch `PackedB` per net, so the step loop packs
+/// without allocating.
+#[derive(Default)]
+pub struct PackedB {
+    /// Reduction length (rows of the packed operand).
+    pub k: usize,
+    /// Output columns (pre-padding).
+    pub n: usize,
+    data: Vec<f32>,
+}
+
+impl PackedB {
+    pub fn panels(&self) -> usize {
+        (self.n + NR - 1) / NR
+    }
+
+    /// Panel `p`: `k` lines of `NR` consecutive output columns.
+    fn panel(&self, p: usize) -> &[f32] {
+        &self.data[p * self.k * NR..(p + 1) * self.k * NR]
+    }
+
+    fn reset(&mut self, k: usize, n: usize) {
+        self.k = k;
+        self.n = n;
+        self.data.clear();
+        self.data.resize(self.panels() * k * NR, 0.0);
+    }
+}
+
+/// Pack row-major `b (k × n)` — the layout of `w` in `x @ w`.
+pub fn pack_b_into(b: &[f32], k: usize, n: usize, out: &mut PackedB) {
+    assert_eq!(b.len(), k * n, "b shape mismatch");
+    out.reset(k, n);
+    for p in 0..out.panels() {
+        let j0 = p * NR;
+        let w = NR.min(n - j0);
+        let dst = &mut out.data[p * k * NR..(p + 1) * k * NR];
+        for kk in 0..k {
+            dst[kk * NR..kk * NR + w].copy_from_slice(&b[kk * n + j0..kk * n + j0 + w]);
+        }
+    }
+}
+
+/// Pack the TRANSPOSE of row-major `b (rows × cols)`: the effective
+/// operand is `bᵀ (cols × rows)` — reduction along `cols`, output
+/// columns along `rows` — which is how `matmul_bt` consumes `w (k × f)`
+/// (`dy · wᵀ` reduces over f and emits k columns).
+pub fn pack_bt_into(b: &[f32], rows: usize, cols: usize, out: &mut PackedB) {
+    assert_eq!(b.len(), rows * cols, "b shape mismatch");
+    out.reset(cols, rows);
+    for p in 0..out.panels() {
+        let j0 = p * NR;
+        let w = NR.min(rows - j0);
+        let dst = &mut out.data[p * cols * NR..(p + 1) * cols * NR];
+        // source row j0+j of b becomes packed column j: stride-NR writes
+        // down the panel, one contiguous read per source row
+        for j in 0..w {
+            let src = &b[(j0 + j) * cols..(j0 + j + 1) * cols];
+            for (kk, &v) in src.iter().enumerate() {
+                dst[kk * NR + j] = v;
+            }
+        }
+    }
+}
+
+/// `R × NR` microkernel over row-major A rows `arow0 .. arow0+R`
+/// against one packed panel: `R·NR` register accumulators, reduction
+/// index ascending, optional seed-kernel zero-skip on the A value.
+#[inline(always)]
+fn mk_rm<const R: usize, const SKIP: bool>(
+    a: &[f32],
+    red: usize,
+    panel: &[f32],
+    arow0: usize,
+) -> [[f32; NR]; R] {
+    let rows: [&[f32]; R] =
+        core::array::from_fn(|t| &a[(arow0 + t) * red..(arow0 + t + 1) * red]);
+    let mut acc = [[0.0f32; NR]; R];
+    for (kk, bs) in panel.chunks_exact(NR).enumerate() {
+        let bs: &[f32; NR] = bs.try_into().expect("NR-sized panel line");
+        for t in 0..R {
+            let xv = rows[t][kk];
+            if SKIP && xv == 0.0 {
+                continue;
+            }
+            for j in 0..NR {
+                acc[t][j] += xv * bs[j];
+            }
+        }
+    }
+    acc
+}
+
+/// `R × NR` microkernel for the A-transposed product (`matmul_at`):
+/// output rows are K-axis columns of `x (red × ktot)`, so the A reads
+/// are `x[r*ktot + kk0 .. +R]` — contiguous across the tile's rows for
+/// each reduction step `r`. Always skips zero activations (the seed
+/// `matmul_at` contract).
+#[inline(always)]
+fn mk_cm<const R: usize>(
+    x: &[f32],
+    ktot: usize,
+    panel: &[f32],
+    kk0: usize,
+) -> [[f32; NR]; R] {
+    let mut acc = [[0.0f32; NR]; R];
+    for (r, bs) in panel.chunks_exact(NR).enumerate() {
+        let bs: &[f32; NR] = bs.try_into().expect("NR-sized panel line");
+        let xs = &x[r * ktot + kk0..r * ktot + kk0 + R];
+        for t in 0..R {
+            let xv = xs[t];
+            if xv == 0.0 {
+                continue;
+            }
+            for j in 0..NR {
+                acc[t][j] += xv * bs[j];
+            }
+        }
+    }
+    acc
+}
+
+/// Write an `R × NR` accumulator tile into the output shard: rows
+/// `r .. r+R`, panel `p` (clipped to the tile's column range). Shared
+/// with the panel-packed sparse kernels ([`super::sparse_ops`]), which
+/// produce the same accumulator shape.
+#[inline(always)]
+pub(super) fn store<const R: usize>(out: &mut TileOut<'_>, r: usize, p: usize, acc: &[[f32; NR]; R]) {
+    let (c0, c1) = (out.cols().start, out.cols().end);
+    let j0 = p * NR;
+    let nw = NR.min(c1 - j0);
+    for (t, accr) in acc.iter().enumerate() {
+        out.row_mut(r + t)[j0 - c0..j0 - c0 + nw].copy_from_slice(&accr[..nw]);
+    }
+}
+
+/// One output tile of `a (m × red) @ packed(B)`: 8/4/1 row tiles ×
+/// NR panels, each computed by [`mk_rm`]. `SKIP` selects the seed
+/// zero-activation skip (`matmul`: yes, `matmul_bt`: no).
+pub fn gemm_rm_tile<const SKIP: bool>(a: &[f32], red: usize, pb: &PackedB, mut out: TileOut<'_>) {
+    debug_assert_eq!(pb.k, red, "packed reduction mismatch");
+    let (r1, c0, c1) = (out.rows().end, out.cols().start, out.cols().end);
+    debug_assert!(c0 % NR == 0, "tile columns must start on a panel boundary");
+    let (p0, p1) = (c0 / NR, (c1 + NR - 1) / NR);
+    let mut r = out.rows().start;
+    while r < r1 {
+        let left = r1 - r;
+        if left >= 8 {
+            for p in p0..p1 {
+                let acc = mk_rm::<8, SKIP>(a, red, pb.panel(p), r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 8;
+        } else if left >= 4 {
+            for p in p0..p1 {
+                let acc = mk_rm::<4, SKIP>(a, red, pb.panel(p), r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 4;
+        } else {
+            for p in p0..p1 {
+                let acc = mk_rm::<1, SKIP>(a, red, pb.panel(p), r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 1;
+        }
+    }
+}
+
+/// One output tile of `x (red × ktot)ᵀ @ packed(dy)` — the `matmul_at`
+/// WU product. Output rows live on the K axis; reduction runs over the
+/// `red` batch rows in ascending order with the seed zero-skip.
+pub fn gemm_at_tile(x: &[f32], ktot: usize, red: usize, pb: &PackedB, mut out: TileOut<'_>) {
+    debug_assert_eq!(pb.k, red, "packed reduction mismatch");
+    let (r1, c0, c1) = (out.rows().end, out.cols().start, out.cols().end);
+    debug_assert!(c0 % NR == 0, "tile columns must start on a panel boundary");
+    let (p0, p1) = (c0 / NR, (c1 + NR - 1) / NR);
+    let mut r = out.rows().start;
+    while r < r1 {
+        let left = r1 - r;
+        if left >= 8 {
+            for p in p0..p1 {
+                let acc = mk_cm::<8>(x, ktot, pb.panel(p), r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 8;
+        } else if left >= 4 {
+            for p in p0..p1 {
+                let acc = mk_cm::<4>(x, ktot, pb.panel(p), r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 4;
+        } else {
+            for p in p0..p1 {
+                let acc = mk_cm::<1>(x, ktot, pb.panel(p), r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::native::pool::{run_tiles, TileGrid};
+    use crate::train::native::{ops, par};
+    use crate::util::testkit::Gen;
+
+    fn packed_matmul(x: &[f32], w: &[f32], rows: usize, k: usize, cols: usize) -> Vec<f32> {
+        let mut pb = PackedB::default();
+        pack_b_into(w, k, cols, &mut pb);
+        let mut out = vec![0.0f32; rows * cols];
+        let grid = TileGrid::new(rows, cols, par::TILE_ROWS, par::TILE_COLS);
+        run_tiles(&mut out, &grid, 1, |tile| gemm_rm_tile::<true>(x, k, &pb, tile));
+        out
+    }
+
+    #[test]
+    fn pack_b_lays_out_full_and_ragged_panels() {
+        let (k, n) = (3usize, 11usize); // 2 panels: widths 8 and 3
+        let b: Vec<f32> = (0..k * n).map(|i| i as f32).collect();
+        let mut pb = PackedB::default();
+        pack_b_into(&b, k, n, &mut pb);
+        assert_eq!((pb.k, pb.n, pb.panels()), (k, n, 2));
+        // panel 0, line kk=1, lane 2 == b[1][2]
+        assert_eq!(pb.panel(0)[NR + 2], b[n + 2]);
+        // panel 1 holds columns 8..11 then zero padding
+        assert_eq!(pb.panel(1)[0..3], b[8..11]);
+        assert_eq!(pb.panel(1)[3..NR], [0.0; 5]);
+    }
+
+    #[test]
+    fn pack_bt_is_pack_of_the_explicit_transpose() {
+        let mut g = Gen::new(2);
+        let (rows, cols) = (10usize, 7usize);
+        let b = g.vec_normal(rows * cols);
+        let mut bt = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                bt[c * rows + r] = b[r * cols + c];
+            }
+        }
+        let (mut via_t, mut direct) = (PackedB::default(), PackedB::default());
+        pack_b_into(&bt, cols, rows, &mut via_t);
+        pack_bt_into(&b, rows, cols, &mut direct);
+        assert_eq!((direct.k, direct.n), (cols, rows));
+        assert_eq!(via_t.data, direct.data);
+    }
+
+    #[test]
+    fn packed_matmul_equals_seed_kernel_bit_for_bit() {
+        let mut g = Gen::new(3);
+        // shapes crossing the 8/4/1 row-tile and ragged-panel edges
+        for (rows, k, cols) in [(1usize, 1usize, 1usize), (7, 5, 9), (13, 16, 8), (33, 12, 21)] {
+            let x = g.vec_normal(rows * k);
+            let w = g.vec_normal(k * cols);
+            assert_eq!(
+                packed_matmul(&x, &w, rows, k, cols),
+                ops::matmul(&x, &w, rows, k, cols),
+                "rows={rows} k={k} cols={cols}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_skip_matches_seed_on_relu_sparse_inputs() {
+        let mut g = Gen::new(4);
+        let (rows, k, cols) = (9usize, 12usize, 10usize);
+        let mut x = g.vec_normal(rows * k);
+        for v in x.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0; // post-ReLU style activations
+            }
+        }
+        let w = g.vec_normal(k * cols);
+        assert_eq!(packed_matmul(&x, &w, rows, k, cols), ops::matmul(&x, &w, rows, k, cols));
+    }
+
+    #[test]
+    fn packed_bt_and_at_equal_seed_kernels() {
+        let mut g = Gen::new(5);
+        let (rows, k, f) = (11usize, 9usize, 14usize);
+        let dy = g.vec_normal(rows * f);
+        let w = g.vec_normal(k * f);
+        let x = g.vec_normal(rows * k);
+        let mut pb = PackedB::default();
+        pack_bt_into(&w, k, f, &mut pb);
+        let mut out = vec![0.0f32; rows * k];
+        let grid = TileGrid::new(rows, k, par::TILE_ROWS, par::TILE_COLS);
+        run_tiles(&mut out, &grid, 1, |tile| gemm_rm_tile::<false>(&dy, f, &pb, tile));
+        assert_eq!(out, ops::matmul_bt(&dy, &w, rows, f, k));
+
+        pack_b_into(&dy, rows, f, &mut pb);
+        let mut dw = vec![0.0f32; k * f];
+        let grid = TileGrid::new(k, f, par::TILE_ROWS, par::TILE_COLS);
+        run_tiles(&mut dw, &grid, 1, |tile| gemm_at_tile(&x, k, rows, &pb, tile));
+        assert_eq!(dw, ops::matmul_at(&x, &dy, rows, k, f));
+    }
+}

@@ -32,8 +32,12 @@
 //! [`SparseCompute`] knob (`--sparse-compute auto|on|off`) selects the
 //! path; results are exactly equal either way, per element, because the
 //! sparse kernels keep the dense kernels' ascending accumulation order.
-//! All matmuls run through the row-blocked threaded driver ([`par`]),
-//! which is bit-identical across worker counts by construction.
+//! All matmuls run through the packed dispatch layer ([`par`]): B
+//! operands are repacked per call into register-tile panels
+//! ([`gemm`]), pre-generated sparse weights are panel-packed once per
+//! step ([`crate::nm::CompactNm::pack_panels_into`]), and parallel work
+//! is tiled over the persistent worker pool ([`pool`]) — bit-identical
+//! across worker counts by construction.
 //!
 //! The engine walks the [`crate::models::zoo`] layer graphs directly
 //! (the tiny MLP/CNN convergence stand-ins), trains with momentum-SGD
@@ -41,8 +45,10 @@
 //! and needs neither artifacts nor the `pjrt` feature — this is what
 //! un-skips the algorithm tier from a fresh clone.
 
+pub mod gemm;
 pub mod ops;
 pub mod par;
+pub mod pool;
 pub mod sparse_ops;
 
 use std::fmt;
@@ -53,12 +59,14 @@ use anyhow::{anyhow, bail, ensure};
 use crate::models::zoo::Model;
 use crate::models::{LayerKind, Stage};
 use crate::nm::{
-    prune_mask, prune_values, prune_values_into, CompactNm, Method, NmPattern, PruneAxis,
+    prune_mask, prune_values, prune_values_into, CompactNm, Method, NmPattern, PackedNm,
+    PruneAxis,
 };
 use crate::train::backend::{Backend, TrainSpec};
 use crate::train::{dataset_for, TrainCurve, TrainOptions};
 use crate::util::Pcg32;
 
+use gemm::PackedB;
 use ops::ConvGeom;
 
 /// Momentum-SGD hyperparameters, pinned to `model.py` (WUVE semantics).
@@ -154,6 +162,11 @@ struct Param {
     /// the compact compute path is active; buffers reused across steps).
     enc_ff: CompactNm,
     enc_bp: CompactNm,
+    /// Panel-packed views of `enc_ff`/`enc_bp` — the layout the packed
+    /// spmm microkernels consume, re-packed in the same per-step
+    /// pre-generation pass (buffers reused across steps).
+    pk_ff: PackedNm,
+    pk_bp: PackedNm,
 }
 
 /// One node of the lowered compute graph (a zoo layer after im2col /
@@ -202,12 +215,16 @@ pub struct NativeNet {
     pattern: NmPattern,
     /// Compute-path selection for weight-pruned stages.
     pub sparse: SparseCompute,
-    /// Worker threads for the row-blocked matmul driver (0 = auto:
-    /// serial for tiny matmuls, [`par::AUTO_MAX_WORKERS`]-capped
-    /// otherwise). Never affects results, only wall-clock.
+    /// Worker threads for the pool-tiled matmul drivers (0 = auto:
+    /// serial for tiny matmuls, the whole machine — the pool's
+    /// capacity — otherwise). Never affects results, only wall-clock.
     pub threads: usize,
     /// Scratch for the per-step w̃/g̃ prunes on the masked-dense path.
     scratch: Vec<f32>,
+    /// Packed-B panel scratch for the dense GEMM drivers, reused across
+    /// every matmul of every step (each call re-packs its operand once
+    /// and shares the image across all tiles and pool workers).
+    pack: PackedB,
     /// Per-node activation/gradient buffers, reused across steps.
     arena: Vec<NodeBufs>,
     /// Weight/bias gradient scratch, reused across layers and steps.
@@ -326,6 +343,7 @@ impl NativeNet {
             sparse: SparseCompute::default(),
             threads: 0,
             scratch: Vec::new(),
+            pack: PackedB::default(),
             arena,
             dw: Vec::new(),
             db: Vec::new(),
@@ -372,24 +390,27 @@ impl NativeNet {
             }
             if ff {
                 CompactNm::encode_t_into(&p.w, p.rows, p.cols, pattern, &mut p.enc_ff);
+                p.enc_ff.pack_panels_into(gemm::NR, &mut p.pk_ff);
             }
             // the first weighted node (always param 0) has no upstream
             // layer, so its backward never computes dx and its w̃_BP
             // encoding would never be read — skip the encode
             if bp && i > 0 {
                 CompactNm::encode_into(&p.w, p.rows, p.cols, pattern, &mut p.enc_bp);
+                p.enc_bp.pack_panels_into(gemm::NR, &mut p.pk_bp);
             }
         }
     }
 
     /// Worker count for one matmul (explicit `threads`, or auto-gated
     /// on the work size). Result-neutral by the [`par`] contract.
-    fn workers(&self, out_rows: usize, macs: u64) -> usize {
-        par::resolve_workers(self.threads, out_rows, macs)
+    fn workers(&self, macs: u64) -> usize {
+        par::resolve_workers(self.threads, macs)
     }
 
-    /// FF product `z = input · w̃_FF` for one weighted layer: compact
-    /// compute-skipping kernel when active, masked-dense otherwise.
+    /// FF product `z = input · w̃_FF` for one weighted layer: packed
+    /// compute-skipping kernel when active, packed masked-dense GEMM
+    /// otherwise.
     fn ff_matmul(
         &self,
         p: &Param,
@@ -398,20 +419,27 @@ impl NativeNet {
         k: usize,
         f: usize,
         scratch: &mut Vec<f32>,
+        pack: &mut PackedB,
         z: &mut Vec<f32>,
     ) {
-        let workers = self.workers(rows, (rows * k * f) as u64);
+        let workers = self.workers((rows * k * f) as u64);
         if p.nm_ok && self.ff_compact() {
-            par::spmm_ff_into(input, &p.enc_ff, rows, k, f, workers, z);
+            par::spmm_ff_into(input, &p.pk_ff, rows, k, f, workers, z);
         } else {
             let w = self.ff_w(p, scratch);
-            par::matmul_into(input, w, rows, k, f, workers, z);
+            par::matmul_into(input, w, rows, k, f, workers, pack, z);
         }
     }
 
     /// Forward pass over the arena (shared by training and eval): fills
     /// each node's `a`/`z`/`cols`/`arg`; `arena[last].a` are the logits.
-    fn forward(&self, x: &[f32], arena: &mut [NodeBufs], scratch: &mut Vec<f32>) {
+    fn forward(
+        &self,
+        x: &[f32],
+        arena: &mut [NodeBufs],
+        scratch: &mut Vec<f32>,
+        pack: &mut PackedB,
+    ) {
         let batch = self.batch;
         for ni in 0..self.nodes.len() {
             let (done, rest) = arena.split_at_mut(ni);
@@ -420,7 +448,7 @@ impl NativeNet {
             match self.nodes[ni] {
                 Node::Linear { param, fi, fo, relu } => {
                     let p = &self.params[param];
-                    self.ff_matmul(p, input, batch, fi, fo, scratch, &mut cur.z);
+                    self.ff_matmul(p, input, batch, fi, fo, scratch, pack, &mut cur.z);
                     ops::add_bias(&mut cur.z, &p.b);
                     if relu {
                         ops::relu_into(&cur.z, &mut cur.a);
@@ -433,7 +461,7 @@ impl NativeNet {
                     let p = &self.params[param];
                     ops::im2col_into(input, batch, &geom, &mut cur.cols);
                     let NodeBufs { cols, z, a, .. } = cur;
-                    self.ff_matmul(p, cols, geom.rows(batch), geom.k(), geom.co, scratch, z);
+                    self.ff_matmul(p, cols, geom.rows(batch), geom.k(), geom.co, scratch, pack, z);
                     ops::add_bias(z, &p.b);
                     if relu {
                         ops::relu_into(z, a);
@@ -462,11 +490,12 @@ impl NativeNet {
         self.pregenerate(true);
         let mut arena = std::mem::take(&mut self.arena);
         let mut scratch = std::mem::take(&mut self.scratch);
+        let mut pack = std::mem::take(&mut self.pack);
         let mut dw = std::mem::take(&mut self.dw);
         let mut db = std::mem::take(&mut self.db);
         let mut dcols = std::mem::take(&mut self.dcols);
 
-        self.forward(x, &mut arena, &mut scratch);
+        self.forward(x, &mut arena, &mut scratch, &mut pack);
         let n = self.nodes.len();
         let (loss, mut dl) = ops::softmax_xent(&arena[n - 1].a, y, batch, self.classes);
 
@@ -484,10 +513,11 @@ impl NativeNet {
                         ops::relu_backward(dh, &cur.z);
                     }
                     if ni > 0 {
-                        self.bp_matmul(param, dh, batch, fi, fo, &mut scratch, &mut cur.dx);
+                        self.bp_matmul(param, dh, batch, fi, fo, &mut scratch, &mut pack,
+                                       &mut cur.dx);
                     }
-                    let workers = self.workers(fi, (batch * fi * fo) as u64);
-                    par::matmul_at_into(input, dh, batch, fi, fo, workers, &mut dw);
+                    let workers = self.workers((batch * fi * fo) as u64);
+                    par::matmul_at_into(input, dh, batch, fi, fo, workers, &mut pack, &mut dw);
                     ops::bias_grad_into(dh, fo, &mut db);
                     self.update(param, &mut dw, &db, lr);
                 }
@@ -497,11 +527,13 @@ impl NativeNet {
                     }
                     let (rows, k) = (geom.rows(batch), geom.k());
                     if ni > 0 {
-                        self.bp_matmul(param, dh, rows, k, geom.co, &mut scratch, &mut dcols);
+                        self.bp_matmul(param, dh, rows, k, geom.co, &mut scratch, &mut pack,
+                                       &mut dcols);
                         ops::col2im_into(&dcols, batch, &geom, &mut cur.dx);
                     }
-                    let workers = self.workers(k, (rows * k * geom.co) as u64);
-                    par::matmul_at_into(&cur.cols, dh, rows, k, geom.co, workers, &mut dw);
+                    let workers = self.workers((rows * k * geom.co) as u64);
+                    par::matmul_at_into(&cur.cols, dh, rows, k, geom.co, workers, &mut pack,
+                                        &mut dw);
                     ops::bias_grad_into(dh, geom.co, &mut db);
                     self.update(param, &mut dw, &db, lr);
                 }
@@ -516,6 +548,7 @@ impl NativeNet {
 
         self.arena = arena;
         self.scratch = scratch;
+        self.pack = pack;
         self.dw = dw;
         self.db = db;
         self.dcols = dcols;
@@ -530,12 +563,14 @@ impl NativeNet {
         self.pregenerate(false);
         let mut arena = std::mem::take(&mut self.arena);
         let mut scratch = std::mem::take(&mut self.scratch);
-        self.forward(x, &mut arena, &mut scratch);
+        let mut pack = std::mem::take(&mut self.pack);
+        self.forward(x, &mut arena, &mut scratch, &mut pack);
         let h = &arena[self.nodes.len() - 1].a;
         let (loss, _) = ops::softmax_xent(h, y, batch, self.classes);
         let acc = ops::accuracy(h, y, batch, self.classes);
         self.arena = arena;
         self.scratch = scratch;
+        self.pack = pack;
         (loss, acc)
     }
 
@@ -552,8 +587,9 @@ impl NativeNet {
     }
 
     /// BP-stage input gradient `dx = dy · w̃ᵀ` with the method's
-    /// backward sparsity (Fig. 3): w̃_BP for SDWP/BDWP (compact kernel
-    /// when active), pruned output gradients for SDGP, dense otherwise.
+    /// backward sparsity (Fig. 3): w̃_BP for SDWP/BDWP (packed compact
+    /// kernel when active), pruned output gradients for SDGP, dense
+    /// otherwise.
     fn bp_matmul(
         &self,
         param: usize,
@@ -562,27 +598,28 @@ impl NativeNet {
         k: usize,
         f: usize,
         scratch: &mut Vec<f32>,
+        pack: &mut PackedB,
         out: &mut Vec<f32>,
     ) {
         let p = &self.params[param];
-        let workers = self.workers(rows, (rows * k * f) as u64);
+        let workers = self.workers((rows * k * f) as u64);
         if p.nm_ok {
             match self.method {
                 Method::Sdwp | Method::Bdwp if self.bp_compact() => {
-                    return par::spmm_bt_into(dy, &p.enc_bp, rows, f, k, workers, out);
+                    return par::spmm_bt_into(dy, &p.pk_bp, rows, f, k, workers, out);
                 }
                 Method::Sdwp | Method::Bdwp => {
                     prune_values_into(&p.w, k, f, self.pattern, PruneAxis::Cols, scratch);
-                    return par::matmul_bt_into(dy, scratch, rows, f, k, workers, out);
+                    return par::matmul_bt_into(dy, scratch, rows, f, k, workers, pack, out);
                 }
                 Method::Sdgp => {
                     prune_values_into(dy, rows, f, self.pattern, PruneAxis::Cols, scratch);
-                    return par::matmul_bt_into(scratch, &p.w, rows, f, k, workers, out);
+                    return par::matmul_bt_into(scratch, &p.w, rows, f, k, workers, pack, out);
                 }
                 _ => {}
             }
         }
-        par::matmul_bt_into(dy, &p.w, rows, f, k, workers, out)
+        par::matmul_bt_into(dy, &p.w, rows, f, k, workers, pack, out)
     }
 
     /// Momentum-SGD update with decoupled weight decay; SR-STE adds its
@@ -631,6 +668,8 @@ fn init_param(rng: &mut Pcg32, rows: usize, cols: usize, nm_ok: bool, p: NmPatte
         nm_ok,
         enc_ff: CompactNm::empty(p),
         enc_bp: CompactNm::empty(p),
+        pk_ff: PackedNm::empty(p),
+        pk_bp: PackedNm::empty(p),
     }
 }
 

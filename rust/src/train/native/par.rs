@@ -1,55 +1,183 @@
-//! Row-blocked multi-threaded driver for the native training kernels.
+//! Dispatch layer for the native training kernels: worker resolution +
+//! the packed, pool-tiled drivers every matmul in the step loop runs on.
 //!
-//! Every native matmul variant (dense [`super::ops`] and compact-sparse
-//! [`super::sparse_ops`]) computes each output row independently with a
-//! fixed ascending accumulation order, so the only safe-and-fast
-//! parallel axis is the output-row axis: [`par_row_blocks`] splits the
-//! output into contiguous row blocks and runs one `std::thread::scope`
-//! worker per block. Because a block's rows are computed by exactly the
-//! same code path as the serial kernel, results are bit-identical for
-//! every worker count — the same determinism contract the sweep engine's
-//! [`crate::coordinator::jobs::run_queue`] gives its cycle reports, and
-//! the worker-count plumbing ([`crate::coordinator::jobs::default_workers`])
-//! is shared with it.
+//! PR 3's version of this module tiled the scalar kernels over output
+//! ROW blocks with a fresh `std::thread::scope` per call. PR 4 rebuilds
+//! it on two pieces:
+//!
+//! * the packed register-tiled GEMM core ([`super::gemm`]) and the
+//!   panel-packed sparse kernels ([`super::sparse_ops::spmm_panel_tile`]),
+//!   which replace the scalar unpacked-B kernels on the hot path (the
+//!   originals stay in [`super::ops`]/[`super::sparse_ops`] as the
+//!   oracle these drivers are property-tested against);
+//! * the persistent worker pool ([`super::pool`]), which replaces the
+//!   per-call spawn fan-out with a parked-thread dispatch and splits
+//!   each output over a static 2D [`TILE_ROWS`]`×`[`TILE_COLS`] tile
+//!   grid instead of row blocks only.
+//!
+//! The determinism contract is unchanged and still load-bearing: every
+//! output element keeps the serial kernels' full-reduction ascending
+//! accumulation order, tiles write disjoint output regions, and the
+//! tile grid depends only on the output shape — so results are
+//! bit-identical for every worker count and exactly equal to the seed
+//! kernels (asserted across methods × patterns × worker counts in
+//! `tests/properties.rs` and `tests/native_train.rs`).
 
-use crate::coordinator::jobs;
-
-use super::ops;
+use super::gemm::{self, PackedB};
+use super::pool::{self, TileGrid};
 use super::sparse_ops;
-use crate::nm::CompactNm;
+use crate::nm::PackedNm;
 
-/// Work (MAC count) below which `workers = 0` (auto) stays serial: the
-/// tiny-zoo training matmuls are far smaller than thread-spawn overhead,
-/// while the ResNet-shaped kernels of `benches/nm_kernels.rs` are far
-/// larger. ~4M MACs ≈ 1ms serial — roughly 20× a scoped-spawn fan-out.
-pub const AUTO_MIN_MACS: u64 = 1 << 22;
+/// Tile height of the parallel 2D grid (a multiple of the microkernel's
+/// 8-row cadence; 8 microkernel tiles per grid tile).
+pub const TILE_ROWS: usize = 64;
 
-/// Cap for auto-selected workers (diminishing returns past the memory
-/// bandwidth knee on the row-blocked kernels).
-pub const AUTO_MAX_WORKERS: usize = 8;
+/// Tile width of the parallel 2D grid (a multiple of [`gemm::NR`]; 16
+/// packed panels per grid tile).
+pub const TILE_COLS: usize = 128;
+
+/// Work (MAC count) below which `workers = 0` (auto) stays serial.
+/// Dispatch on the parked pool costs single-digit microseconds (vs a
+/// ~20× larger scoped-spawn fan-out before PR 4 — see the
+/// `dispatch_pool`/`dispatch_scoped` rows of `benches/nm_kernels.rs`),
+/// so the break-even moved down: ~0.5M MACs ≈ 0.1ms serial.
+pub const AUTO_MIN_MACS: u64 = 1 << 19;
 
 /// Resolve a requested worker count against the actual work:
-/// * `requested == 0` (auto): serial below [`AUTO_MIN_MACS`], else
-///   [`jobs::default_workers`] capped at [`AUTO_MAX_WORKERS`];
-/// * `requested >= 1`: honored as given (tests pin 1/2/4 explicitly).
+/// * `requested == 0` (auto): serial below [`AUTO_MIN_MACS`], else the
+///   machine — [`std::thread::available_parallelism`], which is exactly
+///   the capacity of the shared [`pool::global`] pool (the one meaning
+///   of `--threads 0` everywhere);
+/// * `requested >= 1`: honored as given (tests pin 1/2/4/8 explicitly;
+///   the pool clamps participation to its capacity and the tile count
+///   at dispatch).
 ///
-/// Always clamped to the number of output rows. The choice NEVER affects
-/// results — only wall-clock — so auto-selection is determinism-safe.
-pub fn resolve_workers(requested: usize, out_rows: usize, macs: u64) -> usize {
-    let w = match requested {
+/// The choice NEVER affects results — only wall-clock — so
+/// auto-selection is determinism-safe.
+pub fn resolve_workers(requested: usize, macs: u64) -> usize {
+    match requested {
         0 if macs < AUTO_MIN_MACS => 1,
-        0 => jobs::default_workers().min(AUTO_MAX_WORKERS),
+        0 => pool::global().parallelism(),
         n => n,
-    };
-    w.clamp(1, out_rows.max(1))
+    }
 }
 
-/// Split `out` (row-major, `cols` wide) into up to `workers` contiguous
-/// row blocks and run `body(first_row, block)` on each, one scoped
-/// thread per block (inline when a single block suffices). `body` must
-/// compute the block's rows exactly as the serial kernel would — then
-/// the result is independent of `workers` by construction.
-pub fn par_row_blocks<F>(out: &mut [f32], cols: usize, workers: usize, body: F)
+fn resize(out: &mut Vec<f32>, len: usize) {
+    out.clear();
+    out.resize(len, 0.0);
+}
+
+/// Packed `x (rows × k) @ w (k × cols)` into a reusable buffer —
+/// bit-identical to [`super::ops::matmul`]. `pack` is the caller's
+/// reusable panel scratch; the operand is packed once per call and
+/// shared by every tile and worker.
+pub fn matmul_into(
+    x: &[f32],
+    w: &[f32],
+    rows: usize,
+    k: usize,
+    cols: usize,
+    workers: usize,
+    pack: &mut PackedB,
+    out: &mut Vec<f32>,
+) {
+    assert_eq!(x.len(), rows * k, "x shape mismatch");
+    assert_eq!(w.len(), k * cols, "w shape mismatch");
+    resize(out, rows * cols);
+    gemm::pack_b_into(w, k, cols, pack);
+    let (pack, grid) = (&*pack, TileGrid::new(rows, cols, TILE_ROWS, TILE_COLS));
+    pool::run_tiles(out, &grid, workers, |tile| gemm::gemm_rm_tile::<true>(x, k, pack, tile));
+}
+
+/// Packed `dy (rows × f) @ w (k × f)ᵀ` into a reusable buffer —
+/// bit-identical to [`super::ops::matmul_bt`]. The transpose is paid
+/// once in [`gemm::pack_bt_into`], never in the inner loop.
+pub fn matmul_bt_into(
+    dy: &[f32],
+    w: &[f32],
+    rows: usize,
+    f: usize,
+    k: usize,
+    workers: usize,
+    pack: &mut PackedB,
+    out: &mut Vec<f32>,
+) {
+    assert_eq!(dy.len(), rows * f, "dy shape mismatch");
+    assert_eq!(w.len(), k * f, "w shape mismatch");
+    resize(out, rows * k);
+    gemm::pack_bt_into(w, k, f, pack);
+    let (pack, grid) = (&*pack, TileGrid::new(rows, k, TILE_ROWS, TILE_COLS));
+    pool::run_tiles(out, &grid, workers, |tile| gemm::gemm_rm_tile::<false>(dy, f, pack, tile));
+}
+
+/// Packed `x (rows × k)ᵀ @ dy (rows × f)` into a reusable buffer —
+/// bit-identical to [`super::ops::matmul_at`]. The parallel axes are
+/// the OUTPUT axes (K × F of `dw = xᵀ·dy`); every element keeps the
+/// serial batch-ascending accumulation order.
+pub fn matmul_at_into(
+    x: &[f32],
+    dy: &[f32],
+    rows: usize,
+    k: usize,
+    f: usize,
+    workers: usize,
+    pack: &mut PackedB,
+    out: &mut Vec<f32>,
+) {
+    assert_eq!(x.len(), rows * k, "x shape mismatch");
+    assert_eq!(dy.len(), rows * f, "dy shape mismatch");
+    resize(out, k * f);
+    gemm::pack_b_into(dy, rows, f, pack);
+    let (pack, grid) = (&*pack, TileGrid::new(k, f, TILE_ROWS, TILE_COLS));
+    pool::run_tiles(out, &grid, workers, |tile| gemm::gemm_at_tile(x, k, rows, pack, tile));
+}
+
+/// Panel-packed [`sparse_ops::spmm_ff`] into a reusable buffer
+/// (`pnm` = `CompactNm::encode_t*` of the (k × f) weight matrix,
+/// panel-packed by [`crate::nm::CompactNm::pack_panels_into`]).
+pub fn spmm_ff_into(
+    x: &[f32],
+    pnm: &PackedNm,
+    rows: usize,
+    k: usize,
+    f: usize,
+    workers: usize,
+    out: &mut Vec<f32>,
+) {
+    assert_eq!(x.len(), rows * k, "x shape mismatch");
+    assert_eq!((pnm.rows, pnm.cols), (f, k), "packing is not w̃_FFᵀ (f × k)");
+    assert_eq!(pnm.nr, gemm::NR, "panel width mismatch (pack with gemm::NR)");
+    resize(out, rows * f);
+    let grid = TileGrid::new(rows, f, TILE_ROWS, TILE_COLS);
+    pool::run_tiles(out, &grid, workers, |tile| sparse_ops::spmm_panel_tile(x, k, pnm, tile));
+}
+
+/// Panel-packed [`sparse_ops::spmm_bt`] into a reusable buffer
+/// (`pnm` = panel-packed `CompactNm::encode*` of the (k × f) weights).
+pub fn spmm_bt_into(
+    dy: &[f32],
+    pnm: &PackedNm,
+    rows: usize,
+    f: usize,
+    k: usize,
+    workers: usize,
+    out: &mut Vec<f32>,
+) {
+    assert_eq!(dy.len(), rows * f, "dy shape mismatch");
+    assert_eq!((pnm.rows, pnm.cols), (k, f), "packing is not w̃_BP (k × f)");
+    assert_eq!(pnm.nr, gemm::NR, "panel width mismatch (pack with gemm::NR)");
+    resize(out, rows * k);
+    let grid = TileGrid::new(rows, k, TILE_ROWS, TILE_COLS);
+    pool::run_tiles(out, &grid, workers, |tile| sparse_ops::spmm_panel_tile(dy, f, pnm, tile));
+}
+
+/// The PR 3 dispatcher: split `out` into up to `workers` contiguous
+/// row blocks and run `body(first_row, block)` on each, one freshly
+/// spawned `std::thread::scope` thread per block. Retained for two
+/// jobs only: (a) the `dispatch_scoped` baseline of the pool-vs-spawn
+/// microbench in `benches/nm_kernels.rs`, and (b) an independent
+/// oracle driver in tests. Hot paths use the pool drivers above.
+pub fn scoped_row_blocks<F>(out: &mut [f32], cols: usize, workers: usize, body: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
 {
@@ -72,118 +200,18 @@ where
     });
 }
 
-fn resize(out: &mut Vec<f32>, len: usize) {
-    out.clear();
-    out.resize(len, 0.0);
-}
-
-/// Threaded [`ops::matmul`] into a reusable buffer.
-pub fn matmul_into(
-    x: &[f32],
-    w: &[f32],
-    rows: usize,
-    k: usize,
-    cols: usize,
-    workers: usize,
-    out: &mut Vec<f32>,
-) {
-    assert_eq!(x.len(), rows * k, "x shape mismatch");
-    assert_eq!(w.len(), k * cols, "w shape mismatch");
-    resize(out, rows * cols);
-    par_row_blocks(out, cols, workers, |row0, block| {
-        ops::matmul_block(x, w, k, cols, row0, block);
-    });
-}
-
-/// Threaded [`ops::matmul_bt`] into a reusable buffer.
-pub fn matmul_bt_into(
-    dy: &[f32],
-    w: &[f32],
-    rows: usize,
-    f: usize,
-    k: usize,
-    workers: usize,
-    out: &mut Vec<f32>,
-) {
-    assert_eq!(dy.len(), rows * f, "dy shape mismatch");
-    assert_eq!(w.len(), k * f, "w shape mismatch");
-    resize(out, rows * k);
-    par_row_blocks(out, k, workers, |row0, block| {
-        ops::matmul_bt_block(dy, w, f, k, row0, block);
-    });
-}
-
-/// Threaded [`ops::matmul_at`] into a reusable buffer. The parallel axis
-/// is the OUTPUT row axis (the K dimension of `dw = xᵀ·dy`), not the
-/// batch axis: every output element keeps its serial batch-ascending
-/// accumulation order, so tiling stays bit-identical.
-pub fn matmul_at_into(
-    x: &[f32],
-    dy: &[f32],
-    rows: usize,
-    k: usize,
-    f: usize,
-    workers: usize,
-    out: &mut Vec<f32>,
-) {
-    assert_eq!(x.len(), rows * k, "x shape mismatch");
-    assert_eq!(dy.len(), rows * f, "dy shape mismatch");
-    resize(out, k * f);
-    par_row_blocks(out, f, workers, |kk0, block| {
-        ops::matmul_at_block(x, dy, rows, k, f, kk0, block);
-    });
-}
-
-/// Threaded [`sparse_ops::spmm_ff`] into a reusable buffer
-/// (`enc` = `CompactNm::encode_t*` of the (k × f) weight matrix).
-pub fn spmm_ff_into(
-    x: &[f32],
-    enc: &CompactNm,
-    rows: usize,
-    k: usize,
-    f: usize,
-    workers: usize,
-    out: &mut Vec<f32>,
-) {
-    assert_eq!(x.len(), rows * k, "x shape mismatch");
-    assert_eq!((enc.rows, enc.cols), (f, k), "encoding is not w̃_FFᵀ (f × k)");
-    resize(out, rows * f);
-    par_row_blocks(out, f, workers, |row0, block| {
-        sparse_ops::spmm_nt_block(x, k, enc, row0, block);
-    });
-}
-
-/// Threaded [`sparse_ops::spmm_bt`] into a reusable buffer
-/// (`enc` = `CompactNm::encode*` of the (k × f) weight matrix).
-pub fn spmm_bt_into(
-    dy: &[f32],
-    enc: &CompactNm,
-    rows: usize,
-    f: usize,
-    k: usize,
-    workers: usize,
-    out: &mut Vec<f32>,
-) {
-    assert_eq!(dy.len(), rows * f, "dy shape mismatch");
-    assert_eq!((enc.rows, enc.cols), (k, f), "encoding is not w̃_BP (k × f)");
-    resize(out, rows * k);
-    par_row_blocks(out, k, workers, |row0, block| {
-        sparse_ops::spmm_nt_block(dy, f, enc, row0, block);
-    });
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nm::{prune_values, NmPattern, PruneAxis};
+    use crate::nm::{prune_values, CompactNm, NmPattern, PruneAxis};
     use crate::util::testkit::Gen;
 
     #[test]
-    fn row_blocks_cover_everything_once() {
+    fn scoped_row_blocks_cover_everything_once() {
         for rows in [1usize, 2, 7, 8, 33] {
             for workers in [1usize, 2, 4, 16] {
                 let mut out = vec![0.0f32; rows * 3];
-                par_row_blocks(&mut out, 3, workers, |row0, block| {
+                scoped_row_blocks(&mut out, 3, workers, |row0, block| {
                     for (r, row) in block.chunks_exact_mut(3).enumerate() {
                         for v in row.iter_mut() {
                             *v += (row0 + r) as f32 + 1.0;
@@ -198,28 +226,29 @@ mod tests {
     }
 
     #[test]
-    fn threaded_matmuls_match_serial_bit_for_bit() {
+    fn packed_drivers_match_seed_kernels_bit_for_bit() {
         let mut g = Gen::new(21);
-        let (rows, k, f) = (13, 8, 6);
+        // rows/cols chosen to cross grid-tile, row-tile and panel edges
+        let (rows, k, f) = (70, 19, 131);
         let x = g.vec_normal(rows * k);
         let w = g.vec_normal(k * f);
         let dy = g.vec_normal(rows * f);
         let want_mm = crate::train::native::ops::matmul(&x, &w, rows, k, f);
         let want_bt = crate::train::native::ops::matmul_bt(&dy, &w, rows, f, k);
         let want_at = crate::train::native::ops::matmul_at(&x, &dy, rows, k, f);
-        let mut buf = Vec::new();
+        let (mut buf, mut pack) = (Vec::new(), PackedB::default());
         for workers in [1usize, 2, 3, 4, 16] {
-            matmul_into(&x, &w, rows, k, f, workers, &mut buf);
+            matmul_into(&x, &w, rows, k, f, workers, &mut pack, &mut buf);
             assert_eq!(buf, want_mm, "matmul workers={workers}");
-            matmul_bt_into(&dy, &w, rows, f, k, workers, &mut buf);
+            matmul_bt_into(&dy, &w, rows, f, k, workers, &mut pack, &mut buf);
             assert_eq!(buf, want_bt, "matmul_bt workers={workers}");
-            matmul_at_into(&x, &dy, rows, k, f, workers, &mut buf);
+            matmul_at_into(&x, &dy, rows, k, f, workers, &mut pack, &mut buf);
             assert_eq!(buf, want_at, "matmul_at workers={workers}");
         }
     }
 
     #[test]
-    fn threaded_spmm_matches_masked_dense() {
+    fn packed_spmm_drivers_match_masked_dense() {
         let mut g = Gen::new(22);
         let p = NmPattern::P2_8;
         let (rows, k, f) = (9, 16, 8);
@@ -230,23 +259,26 @@ mod tests {
         let wbp = prune_values(&w, k, f, p, PruneAxis::Cols);
         let want_ff = crate::train::native::ops::matmul(&x, &wff, rows, k, f);
         let want_bt = crate::train::native::ops::matmul_bt(&dy, &wbp, rows, f, k);
-        let enc_ff = crate::nm::CompactNm::encode_t(&w, k, f, p);
-        let enc_bp = crate::nm::CompactNm::encode(&w, k, f, p);
+        let pk_ff = CompactNm::encode_t(&w, k, f, p).pack_panels(gemm::NR);
+        let pk_bp = CompactNm::encode(&w, k, f, p).pack_panels(gemm::NR);
         let mut buf = Vec::new();
         for workers in [1usize, 2, 4] {
-            spmm_ff_into(&x, &enc_ff, rows, k, f, workers, &mut buf);
+            spmm_ff_into(&x, &pk_ff, rows, k, f, workers, &mut buf);
             assert_eq!(buf, want_ff, "spmm_ff workers={workers}");
-            spmm_bt_into(&dy, &enc_bp, rows, f, k, workers, &mut buf);
+            spmm_bt_into(&dy, &pk_bp, rows, f, k, workers, &mut buf);
             assert_eq!(buf, want_bt, "spmm_bt workers={workers}");
         }
     }
 
     #[test]
     fn worker_resolution_gates_small_work() {
-        assert_eq!(resolve_workers(0, 1024, AUTO_MIN_MACS - 1), 1);
-        assert!(resolve_workers(0, 1024, AUTO_MIN_MACS) >= 1);
-        assert_eq!(resolve_workers(3, 1024, 1), 3, "explicit counts are honored");
-        assert_eq!(resolve_workers(16, 4, 1), 4, "clamped to rows");
-        assert_eq!(resolve_workers(1, 0, 0), 1);
+        assert_eq!(resolve_workers(0, AUTO_MIN_MACS - 1), 1, "tiny work stays serial");
+        assert_eq!(
+            resolve_workers(0, AUTO_MIN_MACS),
+            crate::train::native::pool::global().parallelism(),
+            "auto == the machine == the pool"
+        );
+        assert_eq!(resolve_workers(3, 1), 3, "explicit counts are honored");
+        assert_eq!(resolve_workers(1, 0), 1);
     }
 }

@@ -1,0 +1,481 @@
+//! Persistent worker pool for the native training kernels.
+//!
+//! PR 3's [`super::par`] driver paid a fresh `std::thread::scope` spawn
+//! fan-out on EVERY parallel matmul — roughly 20× the cost of a small
+//! step-loop matmul itself (see `AUTO_MIN_MACS` there). This module
+//! replaces that per-call spawn with one process-wide pool of
+//! **long-lived parked threads**: dispatching a kernel is a mutex
+//! publish + condvar wake (single-digit microseconds), so the threaded
+//! path starts paying off on far smaller matmuls.
+//!
+//! Work is described as a flat list of **tiles** — for the GEMM drivers
+//! a 2D m×n grid over the output matrix ([`TileGrid`]) — and divided by
+//! a work-stealing-free static partition: participant `w` of `P` runs
+//! tiles `w, w+P, w+2P, …` in ascending order. The map is deterministic
+//! and, because every tile writes a disjoint output region computed by
+//! exactly the serial kernel's code path, results are bit-identical for
+//! every worker count — the same contract [`super::par`] has always
+//! promised and [`crate::coordinator::sweep`] relies on.
+//!
+//! The caller participates as worker 0 (no handoff latency when the
+//! pool is busy or the work is small), and [`NativePool::run`] only
+//! returns once every participant has finished its tiles, so borrowed
+//! job closures never outlive the dispatch (see the safety notes on
+//! [`NativePool::run`]). `sat train`, `sat compare` and the sweep
+//! engine's [`crate::coordinator::jobs::run_queue`] all share the one
+//! [`global`] pool sized to [`std::thread::available_parallelism`].
+//!
+//! This module is the crate's only `unsafe` island (the crate-level
+//! lint stays `deny`): two well-scoped uses — the lifetime erasure of
+//! the dispatched job reference, and the disjoint output-tile shards
+//! handed to kernels through [`TileOut`] — each with the soundness
+//! argument spelled out inline.
+#![allow(unsafe_code)]
+
+use std::cell::Cell;
+use std::marker::PhantomData;
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+
+/// A job published to the pool: a borrowed tile closure whose lifetime
+/// has been erased for storage in the (necessarily `'static`) shared
+/// state. Soundness: [`NativePool::run`] does not return until every
+/// participant has decremented `remaining`, which each does only after
+/// its last call through `f`; the reference is cleared before `run`
+/// returns, and non-participating epochs never observe it.
+#[derive(Clone, Copy)]
+struct Job {
+    f: &'static (dyn Fn(usize) + Sync),
+    n_tiles: usize,
+    participants: usize,
+}
+
+struct State {
+    /// Bumped once per dispatch; workers use it to tell "new job" from
+    /// a spurious wake of the same epoch.
+    epoch: u64,
+    job: Option<Job>,
+    /// Spawned participants still running the current epoch's tiles.
+    remaining: usize,
+    /// A tile panicked somewhere (re-raised on the dispatching thread).
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between dispatches.
+    work: Condvar,
+    /// The dispatcher parks here until `remaining == 0`.
+    done: Condvar,
+}
+
+/// A pool of parked worker threads executing tile jobs on demand.
+///
+/// Construct private pools in tests with [`NativePool::new`]; real code
+/// uses the shared [`global`] instance.
+pub struct NativePool {
+    shared: Arc<Shared>,
+    handles: Vec<thread::JoinHandle<()>>,
+    /// Mutual exclusion between dispatchers: one job in flight at a
+    /// time. `try_lock` + inline fallback keeps nested dispatch (a tile
+    /// job that itself calls [`NativePool::run`]) deadlock-free.
+    run_lock: Mutex<()>,
+    /// Spawned threads + the participating caller.
+    parallelism: usize,
+}
+
+thread_local! {
+    /// Set inside pool worker threads so nested dispatch from a tile
+    /// job degrades to inline execution instead of deadlocking on
+    /// `run_lock` / starving the (busy) workers.
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+impl NativePool {
+    /// Pool with `parallelism`-way capacity: `parallelism - 1` spawned
+    /// threads plus the dispatching caller (worker 0).
+    pub fn new(parallelism: usize) -> NativePool {
+        let parallelism = parallelism.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..parallelism)
+            .map(|index| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("sat-pool-{index}"))
+                    .spawn(move || worker_loop(&shared, index))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        NativePool { shared, handles, run_lock: Mutex::new(()), parallelism }
+    }
+
+    /// Total parallel capacity (spawned workers + the caller).
+    pub fn parallelism(&self) -> usize {
+        self.parallelism
+    }
+
+    /// Run `job(t)` for every tile `t in 0..n_tiles`, splitting tiles
+    /// across up to `workers` participants (clamped to the pool's
+    /// capacity and the tile count). The partition is static — tile `t`
+    /// runs on participant `t % participants`, each participant walking
+    /// its tiles in ascending order — so the execution set is
+    /// deterministic; tiles must write disjoint state (the [`TileOut`]
+    /// contract), which makes results independent of `workers`.
+    ///
+    /// Falls back to inline serial execution when a single participant
+    /// suffices, when called from inside a pool worker, or when another
+    /// dispatch is already in flight — all three keep the exact same
+    /// tile order semantics (tiles are order-independent by contract).
+    ///
+    /// Panics (after all participants have quiesced — never leaving a
+    /// dangling job) if any tile panicked.
+    pub fn run(&self, workers: usize, n_tiles: usize, job: &(dyn Fn(usize) + Sync)) {
+        let participants = workers.max(1).min(n_tiles).min(self.parallelism);
+        if participants <= 1 || IN_POOL_WORKER.with(|f| f.get()) {
+            for t in 0..n_tiles {
+                job(t);
+            }
+            return;
+        }
+        let Ok(_guard) = self.run_lock.try_lock() else {
+            // another dispatch in flight (or a nested one on this
+            // thread): run inline rather than queueing
+            for t in 0..n_tiles {
+                job(t);
+            }
+            return;
+        };
+        // SAFETY: the erased reference is only reachable through
+        // `State.job`, which is cleared below before `run` returns, and
+        // every worker that copied it decrements `remaining` after its
+        // final use — `run` blocks on `remaining == 0` first. Hence no
+        // use of `f` can outlive the borrow this call holds.
+        let f: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), _>(job) };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch += 1;
+            st.job = Some(Job { f, n_tiles, participants });
+            st.remaining = participants - 1;
+            st.panicked = false;
+            self.shared.work.notify_all();
+        }
+        // the caller is participant 0
+        let mine = catch_unwind(AssertUnwindSafe(|| {
+            let mut t = 0;
+            while t < n_tiles {
+                job(t);
+                t += participants;
+            }
+        }));
+        let panicked = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.remaining > 0 {
+                st = self.shared.done.wait(st).unwrap();
+            }
+            st.job = None;
+            st.panicked
+        };
+        if let Err(payload) = mine {
+            std::panic::resume_unwind(payload);
+        }
+        assert!(!panicked, "a pool worker panicked while executing a tile job");
+    }
+}
+
+impl Drop for NativePool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, index: usize) {
+    IN_POOL_WORKER.with(|f| f.set(true));
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                match st.job {
+                    Some(job) if st.epoch != seen => {
+                        seen = st.epoch;
+                        break job;
+                    }
+                    _ => st = shared.work.wait(st).unwrap(),
+                }
+            }
+        };
+        if index >= job.participants {
+            continue; // not part of this dispatch; epoch recorded above
+        }
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            let mut t = index;
+            while t < job.n_tiles {
+                (job.f)(t);
+                t += job.participants;
+            }
+        }));
+        let mut st = shared.state.lock().unwrap();
+        if res.is_err() {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// The process-wide pool every native-backend dispatch shares, lazily
+/// sized to [`std::thread::available_parallelism`] — the one source of
+/// truth `--threads 0` resolves against (see
+/// [`super::par::resolve_workers`]).
+pub fn global() -> &'static NativePool {
+    static POOL: OnceLock<NativePool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        NativePool::new(thread::available_parallelism().map(|n| n.get()).unwrap_or(4))
+    })
+}
+
+/// Static 2D tiling of a `rows × cols` row-major output matrix into
+/// `tile_rows × tile_cols` blocks (ragged tails included). The grid
+/// geometry depends only on the matrix shape — never on the worker
+/// count — so the tile set a kernel executes is identical for every
+/// `--threads` value.
+#[derive(Clone, Copy, Debug)]
+pub struct TileGrid {
+    pub rows: usize,
+    pub cols: usize,
+    pub tile_rows: usize,
+    pub tile_cols: usize,
+}
+
+impl TileGrid {
+    pub fn new(rows: usize, cols: usize, tile_rows: usize, tile_cols: usize) -> TileGrid {
+        TileGrid { rows, cols, tile_rows: tile_rows.max(1), tile_cols: tile_cols.max(1) }
+    }
+
+    fn row_tiles(&self) -> usize {
+        (self.rows + self.tile_rows - 1) / self.tile_rows
+    }
+
+    fn col_tiles(&self) -> usize {
+        (self.cols + self.tile_cols - 1) / self.tile_cols
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        if self.rows == 0 || self.cols == 0 {
+            return 0;
+        }
+        self.row_tiles() * self.col_tiles()
+    }
+
+    /// Half-open `(rows, cols)` ranges of tile `t` (row-major tile id).
+    pub fn tile(&self, t: usize) -> (Range<usize>, Range<usize>) {
+        let ct = self.col_tiles();
+        let (bi, bj) = (t / ct, t % ct);
+        let r0 = bi * self.tile_rows;
+        let c0 = bj * self.tile_cols;
+        (r0..(r0 + self.tile_rows).min(self.rows), c0..(c0 + self.tile_cols).min(self.cols))
+    }
+}
+
+/// Mutable view of ONE tile of a shared row-major output matrix — the
+/// write surface handed to each tile kernel. Different tiles of one
+/// dispatch alias the same allocation but cover disjoint `(row, col)`
+/// ranges by [`TileGrid`] construction, so handing one `TileOut` to
+/// each participant is sound; within a tile, [`TileOut::row_mut`]
+/// borrows `&mut self`, so safe code cannot hold two overlapping
+/// segments either.
+pub struct TileOut<'a> {
+    base: *mut f32,
+    /// Full row stride of the underlying matrix (its column count).
+    stride: usize,
+    rows: Range<usize>,
+    cols: Range<usize>,
+    _borrow: PhantomData<&'a mut [f32]>,
+}
+
+impl TileOut<'_> {
+    /// Output rows this tile covers.
+    pub fn rows(&self) -> Range<usize> {
+        self.rows.clone()
+    }
+
+    /// Output columns this tile covers.
+    pub fn cols(&self) -> Range<usize> {
+        self.cols.clone()
+    }
+
+    /// The tile's segment of output row `r` (absolute row index): the
+    /// `cols()` slice of that row, `cols().len()` long.
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        assert!(self.rows.contains(&r), "row {r} outside tile rows {:?}", self.rows);
+        // SAFETY: in-bounds of the underlying matrix by construction
+        // (`r < grid.rows`, `cols.end <= stride`); aliasing is excluded
+        // across tiles by grid disjointness and within the tile by the
+        // `&mut self` receiver.
+        unsafe {
+            std::slice::from_raw_parts_mut(
+                self.base.add(r * self.stride + self.cols.start),
+                self.cols.len(),
+            )
+        }
+    }
+}
+
+/// `*mut f32` that may cross thread boundaries: the pointee is a
+/// caller-owned `&mut [f32]` partitioned into disjoint tiles.
+#[derive(Clone, Copy)]
+struct SyncPtr(*mut f32);
+// SAFETY: only ever dereferenced through disjoint `TileOut` shards
+// while the owning `&mut [f32]` borrow is pinned by `run_tiles`.
+unsafe impl Send for SyncPtr {}
+unsafe impl Sync for SyncPtr {}
+
+/// Run `kernel` over every tile of `grid`, dispatching on the
+/// [`global`] pool with up to `workers` participants. `out` must be the
+/// full `grid.rows × grid.cols` row-major matrix; each invocation
+/// receives the [`TileOut`] shard for one tile. Tiles must depend only
+/// on their own shard (they do: every kernel computes its outputs from
+/// immutable inputs), which makes the result independent of `workers`.
+pub fn run_tiles<K>(out: &mut [f32], grid: &TileGrid, workers: usize, kernel: K)
+where
+    K: Fn(TileOut<'_>) + Sync,
+{
+    assert_eq!(out.len(), grid.rows * grid.cols, "output/grid shape mismatch");
+    let n_tiles = grid.n_tiles();
+    if n_tiles == 0 {
+        return;
+    }
+    let base = SyncPtr(out.as_mut_ptr());
+    let job = |t: usize| {
+        let (rows, cols) = grid.tile(t);
+        kernel(TileOut { base: base.0, stride: grid.cols, rows, cols, _borrow: PhantomData });
+    };
+    global().run(workers, n_tiles, &job);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_tiles_partition_the_matrix_exactly_once() {
+        for (rows, cols, tr, tc) in
+            [(1usize, 1usize, 8usize, 8usize), (7, 5, 2, 3), (64, 96, 32, 32), (33, 17, 8, 8)]
+        {
+            let grid = TileGrid::new(rows, cols, tr, tc);
+            let mut seen = vec![0u32; rows * cols];
+            for t in 0..grid.n_tiles() {
+                let (rr, cc) = grid.tile(t);
+                assert!(!rr.is_empty() && !cc.is_empty(), "degenerate tile {t}");
+                for r in rr {
+                    for c in cc.clone() {
+                        seen[r * cols + c] += 1;
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&n| n == 1), "{rows}x{cols}/{tr}x{tc} not a partition");
+        }
+    }
+
+    #[test]
+    fn pool_writes_every_tile_for_every_worker_count() {
+        let pool = NativePool::new(4);
+        for n_tiles in [1usize, 3, 8, 41] {
+            for workers in [1usize, 2, 4, 16] {
+                let hits: Vec<Mutex<u32>> = (0..n_tiles).map(|_| Mutex::new(0)).collect();
+                pool.run(workers, n_tiles, &|t| *hits[t].lock().unwrap() += 1);
+                assert!(
+                    hits.iter().all(|h| *h.lock().unwrap() == 1),
+                    "tiles={n_tiles} workers={workers}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn run_tiles_matches_serial_for_any_worker_count() {
+        let grid = TileGrid::new(37, 23, 8, 8);
+        let fill = |out: &mut Vec<f32>, workers: usize| {
+            out.clear();
+            out.resize(grid.rows * grid.cols, 0.0);
+            run_tiles(out, &grid, workers, |mut tile| {
+                for r in tile.rows() {
+                    let c0 = tile.cols().start;
+                    for (i, v) in tile.row_mut(r).iter_mut().enumerate() {
+                        *v = (r * grid.cols + c0 + i) as f32;
+                    }
+                }
+            });
+        };
+        let (mut want, mut got) = (Vec::new(), Vec::new());
+        fill(&mut want, 1);
+        for workers in [2usize, 3, 8] {
+            fill(&mut got, workers);
+            assert_eq!(got, want, "workers={workers}");
+        }
+        assert_eq!(want[5 * 23 + 7], (5 * 23 + 7) as f32);
+    }
+
+    #[test]
+    fn nested_dispatch_degrades_to_inline_instead_of_deadlocking() {
+        let outer: Vec<Mutex<u32>> = (0..4).map(|_| Mutex::new(0)).collect();
+        global().run(4, 4, &|t| {
+            // a tile job that dispatches again — must run inline
+            let inner: Vec<Mutex<u32>> = (0..3).map(|_| Mutex::new(0)).collect();
+            global().run(2, 3, &|u| *inner[u].lock().unwrap() += 1);
+            assert!(inner.iter().all(|h| *h.lock().unwrap() == 1));
+            *outer[t].lock().unwrap() += 1;
+        });
+        assert!(outer.iter().all(|h| *h.lock().unwrap() == 1));
+    }
+
+    #[test]
+    fn tile_panic_propagates_without_hanging_the_pool() {
+        let pool = NativePool::new(3);
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(3, 8, &|t| assert!(t != 5, "boom"));
+        }));
+        assert!(res.is_err(), "panic must propagate");
+        // the pool must still be usable after a panicked dispatch
+        let hits: Vec<Mutex<u32>> = (0..6).map(|_| Mutex::new(0)).collect();
+        pool.run(3, 6, &|t| *hits[t].lock().unwrap() += 1);
+        assert!(hits.iter().all(|h| *h.lock().unwrap() == 1));
+    }
+
+    #[test]
+    fn global_pool_reports_machine_parallelism() {
+        let p = global().parallelism();
+        assert!(p >= 1);
+        assert_eq!(
+            p,
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            "--threads 0 contract: pool capacity == available_parallelism"
+        );
+    }
+}

@@ -28,7 +28,21 @@
 //! processed in tiles of 8 so eight independent accumulator chains hide
 //! the FP-add latency that a single k-ascending chain would expose.
 
-use crate::nm::CompactNm;
+//! **Packed panels (PR 4).** The tiled kernels above walk the compact
+//! encoding column-by-column, so every input-row M-window is re-gathered
+//! once per output column. [`spmm_panel_tile`] consumes the
+//! [`PackedNm`] panel repacking ([`CompactNm::pack_panels_into`])
+//! instead: per group, the window loads once per row tile and feeds
+//! [`super::gemm::NR`] output columns whose values/indexes stream at
+//! stride 1 — the same B-panel reuse the packed dense GEMM gets, with
+//! the identical `(group, slot)`-ascending per-element order. The
+//! original kernels stay as the serial oracle the packed ones are
+//! property-tested against.
+
+use crate::nm::{CompactNm, PackedNm};
+
+use super::gemm::{store, NR};
+use super::pool::TileOut;
 
 /// Row block of `out = a · dec(enc)ᵀ`: `a` is `(rows × p)` row-major,
 /// `enc` encodes a `(q × p)` matrix with N:M groups along its contiguous
@@ -145,6 +159,133 @@ fn generic(a: &[f32], p_dim: usize, enc: &CompactNm, row0: usize, out: &mut [f32
     }
 }
 
+/// One output tile of `out = a · dec(enc)ᵀ` over the PANEL-PACKED
+/// encoding: `a` is `(rows × p_dim)` row-major, `pnm` packs a
+/// `(q × p_dim)` compact matrix into [`NR`]-wide panels, and the tile
+/// covers `out.rows() × out.cols()` of the `(rows × q)` product.
+/// Per-element accumulation order is identical to [`spmm_nt_block`]
+/// (groups ascending, kept slots ascending within each group), so the
+/// packed path is `==` the compact oracle — and therefore `==` the
+/// masked-dense kernels — per element.
+pub fn spmm_panel_tile(a: &[f32], p_dim: usize, pnm: &PackedNm, out: TileOut<'_>) {
+    debug_assert_eq!(pnm.cols, p_dim, "encoding reduction axis mismatch");
+    debug_assert_eq!(pnm.nr, NR, "panel width must match the GEMM panel width");
+    match (pnm.pattern.n, pnm.pattern.m) {
+        (1, 4) => panel_kernel::<1, 4>(a, p_dim, pnm, out),
+        (2, 4) => panel_kernel::<2, 4>(a, p_dim, pnm, out),
+        (1, 8) => panel_kernel::<1, 8>(a, p_dim, pnm, out),
+        (2, 8) => panel_kernel::<2, 8>(a, p_dim, pnm, out),
+        (4, 8) => panel_kernel::<4, 8>(a, p_dim, pnm, out),
+        (2, 16) => panel_kernel::<2, 16>(a, p_dim, pnm, out),
+        (4, 16) => panel_kernel::<4, 16>(a, p_dim, pnm, out),
+        (8, 16) => panel_kernel::<8, 16>(a, p_dim, pnm, out),
+        _ => panel_generic(a, p_dim, pnm, out),
+    }
+}
+
+/// One (N, M) instantiation of the panel kernel: 8/4/1 row tiles ×
+/// NR-column panels, the same cadence as the packed dense GEMM.
+fn panel_kernel<const N: usize, const M: usize>(
+    a: &[f32],
+    p_dim: usize,
+    pnm: &PackedNm,
+    mut out: TileOut<'_>,
+) {
+    debug_assert!(M.is_power_of_two(), "masked gather needs power-of-two M");
+    let (r1, c0, c1) = (out.rows().end, out.cols().start, out.cols().end);
+    debug_assert!(c0 % NR == 0, "tile columns must start on a panel boundary");
+    let (p0, p1) = (c0 / NR, (c1 + NR - 1) / NR);
+    let mut r = out.rows().start;
+    while r < r1 {
+        let left = r1 - r;
+        if left >= 8 {
+            for p in p0..p1 {
+                let acc = panel_mk::<8, N, M>(a, p_dim, pnm, p, r);
+                store::<8>(&mut out, r, p, &acc);
+            }
+            r += 8;
+        } else if left >= 4 {
+            for p in p0..p1 {
+                let acc = panel_mk::<4, N, M>(a, p_dim, pnm, p, r);
+                store::<4>(&mut out, r, p, &acc);
+            }
+            r += 4;
+        } else {
+            for p in p0..p1 {
+                let acc = panel_mk::<1, N, M>(a, p_dim, pnm, p, r);
+                store::<1>(&mut out, r, p, &acc);
+            }
+            r += 1;
+        }
+    }
+}
+
+/// R input rows × one NR-column panel: per group, load each row's
+/// M-window ONCE and gather it into all NR columns' accumulators while
+/// the panel's values/indexes stream contiguously.
+#[inline(always)]
+fn panel_mk<const R: usize, const N: usize, const M: usize>(
+    a: &[f32],
+    p_dim: usize,
+    pnm: &PackedNm,
+    panel: usize,
+    arow0: usize,
+) -> [[f32; NR]; R] {
+    let rows: [&[f32]; R] =
+        core::array::from_fn(|t| &a[(arow0 + t) * p_dim..(arow0 + t + 1) * p_dim]);
+    let vals = pnm.panel_values(panel);
+    let idxs = pnm.panel_indexes(panel);
+    let mut acc = [[0.0f32; NR]; R];
+    let mut kbase = 0usize;
+    let groups = pnm.cols / M;
+    for g in 0..groups {
+        let wins: [&[f32; M]; R] = core::array::from_fn(|t| {
+            rows[t][kbase..kbase + M].try_into().expect("M-sized window")
+        });
+        for j in 0..N {
+            let lane0 = (g * N + j) * NR;
+            let vs: &[f32; NR] = vals[lane0..lane0 + NR].try_into().expect("NR lane");
+            let ixs: &[u8; NR] = idxs[lane0..lane0 + NR].try_into().expect("NR lane");
+            for t in 0..R {
+                for c in 0..NR {
+                    acc[t][c] += wins[t][(ixs[c] as usize) & (M - 1)] * vs[c];
+                }
+            }
+        }
+        kbase += M;
+    }
+    acc
+}
+
+/// Runtime-(n, m) fallback over the panel packing (non-power-of-two or
+/// exotic M): single-row walk, bounds-checked gathers, same order.
+fn panel_generic(a: &[f32], p_dim: usize, pnm: &PackedNm, mut out: TileOut<'_>) {
+    let (n, m) = (pnm.pattern.n, pnm.pattern.m);
+    let (c0, c1) = (out.cols().start, out.cols().end);
+    let (p0, p1) = (c0 / NR, (c1 + NR - 1) / NR);
+    let groups = pnm.cols / m;
+    for r in out.rows() {
+        let ar = &a[r * p_dim..(r + 1) * p_dim];
+        for p in p0..p1 {
+            let vals = pnm.panel_values(p);
+            let idxs = pnm.panel_indexes(p);
+            let j0 = p * NR;
+            let nw = NR.min(c1 - j0);
+            let mut acc = [0.0f32; NR];
+            for g in 0..groups {
+                let aw = &ar[g * m..(g + 1) * m];
+                for j in 0..n {
+                    let lane0 = (g * n + j) * NR;
+                    for c in 0..nw {
+                        acc[c] += aw[idxs[lane0 + c] as usize] * vals[lane0 + c];
+                    }
+                }
+            }
+            out.row_mut(r)[j0 - c0..j0 - c0 + nw].copy_from_slice(&acc[..nw]);
+        }
+    }
+}
+
 /// `x (rows × k) · w̃_FF (k × f)` → `(rows × f)`, touching only the N of
 /// every M weights along K. `enc` must be the transposed-orientation
 /// encoding [`CompactNm::encode_t_into`] of the (k × f) weight matrix.
@@ -233,6 +374,44 @@ mod tests {
         let enc = CompactNm::encode_t(&w, k, f, p);
         let wff = prune_values(&w, k, f, p, PruneAxis::Rows);
         assert_eq!(spmm_ff(&x, &enc, rows, k, f), ops::matmul(&x, &wff, rows, k, f));
+    }
+
+    #[test]
+    fn panel_kernels_equal_the_compact_oracle() {
+        use crate::train::native::pool::{run_tiles, TileGrid};
+        check("packed spmm == compact oracle", 40, |g| {
+            let (n, m) = g.nm_pattern();
+            let p = NmPattern::new(n, m);
+            let k = g.usize_in(1, 3) * m;
+            let f = g.usize_in(1, 19); // crosses ragged-panel edges
+            let rows = g.usize_in(1, 18); // crosses the 8/4/1 tile edges
+            let x = g.vec_normal(rows * k);
+            let w = g.vec_normal(k * f);
+            let enc = CompactNm::encode_t(&w, k, f, p);
+            let pnm = enc.pack_panels(NR);
+            let want = spmm_ff(&x, &enc, rows, k, f);
+            let mut got = vec![0.0f32; rows * f];
+            let grid = TileGrid::new(rows, f, 8, NR * 2);
+            run_tiles(&mut got, &grid, 1, |tile| spmm_panel_tile(&x, k, &pnm, tile));
+            assert_eq!(got, want, "{p} rows={rows} k={k} f={f}");
+        });
+    }
+
+    #[test]
+    fn panel_generic_fallback_handles_exotic_m() {
+        use crate::train::native::pool::{run_tiles, TileGrid};
+        let mut g = Gen::new(33);
+        let p = NmPattern::new(2, 6); // off the monomorphized set
+        let (rows, k, f) = (7, 12, 9);
+        let x = g.vec_normal(rows * k);
+        let w = g.vec_normal(k * f);
+        let enc = CompactNm::encode_t(&w, k, f, p);
+        let pnm = enc.pack_panels(NR);
+        let want = spmm_ff(&x, &enc, rows, k, f);
+        let mut got = vec![0.0f32; rows * f];
+        let grid = TileGrid::new(rows, f, 8, NR);
+        run_tiles(&mut got, &grid, 1, |tile| spmm_panel_tile(&x, k, &pnm, tile));
+        assert_eq!(got, want);
     }
 
     #[test]

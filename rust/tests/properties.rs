@@ -8,7 +8,8 @@ use sat::nm::{flops, prune_values, CompactNm, Method, NmPattern, PruneAxis};
 use sat::sched::{rwg_schedule, words};
 use sat::sim::engine::simulate_method;
 use sat::sim::memory::MemConfig;
-use sat::train::native::{ops, par};
+use sat::train::native::gemm::{self, PackedB};
+use sat::train::native::{ops, par, sparse_ops};
 use sat::util::testkit::{check, Gen};
 
 fn random_cfg(g: &mut Gen) -> SatConfig {
@@ -109,10 +110,11 @@ fn schedule_words_roundtrip_everywhere() {
 
 #[test]
 fn spmm_kernels_bit_identical_to_masked_dense_across_workers() {
-    // The tentpole contract: the compute-skipping kernels are EXACTLY
-    // the dense kernels on masked weights, for random shapes × the
-    // paper's patterns × 1/2/4 workers (row-blocked tiling must never
-    // change the per-element accumulation order).
+    // The PR 3/4 tentpole contract: the compute-skipping kernels —
+    // compact oracle AND packed-panel pool drivers — are EXACTLY the
+    // dense kernels on masked weights, for random shapes × the paper's
+    // patterns × 1/2/4/8 workers (neither the panel packing nor the 2D
+    // pool tiling may ever change the per-element accumulation order).
     check("spmm == masked dense x workers", 40, |g| {
         let (n, m) = *g.pick(&[(1usize, 4usize), (2, 4), (2, 8), (4, 8)]);
         let p = NmPattern::new(n, m);
@@ -124,21 +126,62 @@ fn spmm_kernels_bit_identical_to_masked_dense_across_workers() {
         let w = g.vec_normal(k * f);
         let enc_ff = CompactNm::encode_t(&w, k, f, p);
         let enc_bp = CompactNm::encode(&w, k, f, p);
+        let pk_ff = enc_ff.pack_panels(gemm::NR);
+        let pk_bp = enc_bp.pack_panels(gemm::NR);
         let wff = prune_values(&w, k, f, p, PruneAxis::Rows);
         let wbp = prune_values(&w, k, f, p, PruneAxis::Cols);
         let want_ff = ops::matmul(&x, &wff, rows, k, f);
         let want_bt = ops::matmul_bt(&dy, &wbp, rows, f, k);
-        let mut got = Vec::new();
-        for workers in [1usize, 2, 4] {
-            par::spmm_ff_into(&x, &enc_ff, rows, k, f, workers, &mut got);
+        // the serial compact oracles agree with the masked-dense kernels
+        assert_eq!(sparse_ops::spmm_ff(&x, &enc_ff, rows, k, f), want_ff, "oracle ff {p}");
+        assert_eq!(sparse_ops::spmm_bt(&dy, &enc_bp, rows, f, k), want_bt, "oracle bt {p}");
+        let (mut got, mut pack) = (Vec::new(), PackedB::default());
+        for workers in [1usize, 2, 4, 8] {
+            par::spmm_ff_into(&x, &pk_ff, rows, k, f, workers, &mut got);
             assert_eq!(got, want_ff, "spmm_ff {p} workers={workers}");
-            par::spmm_bt_into(&dy, &enc_bp, rows, f, k, workers, &mut got);
+            par::spmm_bt_into(&dy, &pk_bp, rows, f, k, workers, &mut got);
             assert_eq!(got, want_bt, "spmm_bt {p} workers={workers}");
-            // the threaded dense drivers obey the same contract
-            par::matmul_into(&x, &wff, rows, k, f, workers, &mut got);
+            // the packed dense drivers obey the same contract
+            par::matmul_into(&x, &wff, rows, k, f, workers, &mut pack, &mut got);
             assert_eq!(got, want_ff, "matmul {p} workers={workers}");
-            par::matmul_at_into(&x, &dy, rows, k, f, workers, &mut got);
+            par::matmul_at_into(&x, &dy, rows, k, f, workers, &mut pack, &mut got);
             assert_eq!(got, ops::matmul_at(&x, &dy, rows, k, f), "matmul_at workers={workers}");
+        }
+    });
+}
+
+#[test]
+fn packed_gemm_bit_identical_to_seed_kernels_across_workers() {
+    // The PR 4 tentpole contract, dense half: the packed register-tiled
+    // GEMM drivers equal the retained PR 3 scalar kernels `==`-exactly
+    // for random shapes (crossing every grid-tile / row-tile / panel
+    // edge) × 1/2/4/8 workers, including ReLU-style zero-heavy inputs
+    // (the seed kernels' zero-activation skip must be preserved).
+    check("packed gemm == seed kernels x workers", 30, |g| {
+        let rows = g.usize_in(1, 80);
+        let k = g.usize_in(1, 24);
+        let f = g.usize_in(1, 140);
+        let mut x = g.vec_normal(rows * k);
+        if g.bool() {
+            for v in x.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0; // post-ReLU activations exercise the skip
+                }
+            }
+        }
+        let w = g.vec_normal(k * f);
+        let dy = g.vec_normal(rows * f);
+        let want_mm = ops::matmul(&x, &w, rows, k, f);
+        let want_bt = ops::matmul_bt(&dy, &w, rows, f, k);
+        let want_at = ops::matmul_at(&x, &dy, rows, k, f);
+        let (mut got, mut pack) = (Vec::new(), PackedB::default());
+        for workers in [1usize, 2, 4, 8] {
+            par::matmul_into(&x, &w, rows, k, f, workers, &mut pack, &mut got);
+            assert_eq!(got, want_mm, "matmul {rows}x{k}x{f} workers={workers}");
+            par::matmul_bt_into(&dy, &w, rows, f, k, workers, &mut pack, &mut got);
+            assert_eq!(got, want_bt, "matmul_bt {rows}x{k}x{f} workers={workers}");
+            par::matmul_at_into(&x, &dy, rows, k, f, workers, &mut pack, &mut got);
+            assert_eq!(got, want_at, "matmul_at {rows}x{k}x{f} workers={workers}");
         }
     });
 }
