@@ -43,8 +43,11 @@ fn main() {
         for ls in &sched.layers {
             let layer = &model.layers[ls.layer_index];
             for sc in &ls.stages {
-                let mm = layer.matmul(sc.stage, model.batch).unwrap();
-                cycles += matmul_cycles(&mm, sc.sparse, sc.dataflow, &cfg, false).cycles;
+                for mm in layer.stage_matmuls(sc.stage, model.batch) {
+                    // same gating as sim::engine: N:M on weight operands only
+                    let sp = if mm.weight_is_rhs { sc.sparse } else { None };
+                    cycles += matmul_cycles(&mm, sp, sc.dataflow, &cfg, false).cycles;
+                }
             }
         }
         // compare matmul-only cycles against the same sum with interleave
@@ -52,8 +55,10 @@ fn main() {
         for ls in &sched.layers {
             let layer = &model.layers[ls.layer_index];
             for sc in &ls.stages {
-                let mm = layer.matmul(sc.stage, model.batch).unwrap();
-                on += matmul_cycles(&mm, sc.sparse, sc.dataflow, &cfg, true).cycles;
+                for mm in layer.stage_matmuls(sc.stage, model.batch) {
+                    let sp = if mm.weight_is_rhs { sc.sparse } else { None };
+                    on += matmul_cycles(&mm, sp, sc.dataflow, &cfg, true).cycles;
+                }
             }
         }
         t.row(&["A1: interleave mapping OFF (MatMul cycles only)".into(),

@@ -220,13 +220,21 @@ fn main() -> anyhow::Result<()> {
             "dense BT ms", "spmm_bt ms", "packed bt ms", "BT speedup", "pregen ms",
         ]);
 
-    for &(b, k, f) in shapes {
+    // ResNet im2col shapes + the ViT attention-projection shape: one
+    // (batch·tokens) × dim × dim product of the zoo `vit` block
+    // (rows = 8·64 tokens, dim 384) — the weight MatMul the native
+    // attention op routes through the same spmm kernels.
+    let mut sparse_shapes: Vec<(String, usize, usize, usize)> = shapes
+        .iter()
+        .map(|&(b, k, f)| (format!("b{b}_k{k}_f{f}"), b, k, f))
+        .collect();
+    sparse_shapes.push(("attnproj_r512_d384".to_string(), 512, 384, 384));
+    for (shape, b, k, f) in sparse_shapes {
         let mut rng = Pcg32::new(0xBE7C + k as u64);
         let x = vec_normal(&mut rng, b * k);
         let w = vec_normal(&mut rng, k * f);
         let dy = vec_normal(&mut rng, b * f);
         let macs = (b * k * f) as u64;
-        let shape = format!("b{b}_k{k}_f{f}");
         for &p in patterns {
             let wff = prune_values(&w, k, f, p, PruneAxis::Rows);
             let wbp = prune_values(&w, k, f, p, PruneAxis::Cols);

@@ -78,7 +78,7 @@ fn step_flops_bytes(model: &Model, batch: usize) -> (f64, f64) {
     let mut bytes = 0.0;
     for layer in &model.layers {
         for &s in &Stage::ALL {
-            if let Some(mm) = layer.matmul(s, batch) {
+            for mm in layer.stage_matmuls(s, batch) {
                 flops += mm.flops() as f64;
                 // FP16 operands + output, streamed once
                 bytes += 2.0 * (mm.m * mm.k + mm.k * mm.n + mm.m * mm.n) as f64;

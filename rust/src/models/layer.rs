@@ -48,13 +48,20 @@ impl MatMulShape {
     }
 }
 
-/// Layer kinds; only Conv and Linear carry MatMuls (the ≥84% of Fig. 2).
+/// Layer kinds; Conv, Linear and Attention carry MatMuls (the ≥84% of
+/// Fig. 2).
 #[derive(Clone, Copy, PartialEq, Debug)]
 pub enum LayerKind {
     /// 2-D convolution, NHWC × HWIO, square kernel/stride/pad.
     Conv { kh: usize, kw: usize, ci: usize, co: usize, stride: usize, pad: usize },
     /// Fully connected `fi → fo`; `tokens` multiplies the batch (ViT).
     Linear { fi: usize, fo: usize, tokens: usize },
+    /// Single-head self-attention over `tokens` tokens of width `dim`:
+    /// four weight projections (Q/K/V/output, each `dim × dim`, all
+    /// N:M-eligible) plus the score (`q·kᵀ`) and context (`p·v`)
+    /// products, which are data×data and therefore dense by nature.
+    /// A multi-MatMul layer: enumerate with [`Layer::stage_matmuls`].
+    Attention { dim: usize, tokens: usize },
     /// Non-MatMul memory-bound ops, charged by element count.
     Pool { factor: usize },
     Norm,
@@ -88,8 +95,22 @@ impl Layer {
         }
     }
 
+    /// ALL the MatMuls a stage of this layer executes (im2col form,
+    /// Fig. 1(c)–(e)): one for conv/linear, several for attention
+    /// (projections + the score/context data products), empty for
+    /// non-MatMul layers. This is the API the simulator, the RWG and
+    /// the FLOP accounting walk; [`Layer::matmul`] remains the
+    /// single-MatMul special case.
+    pub fn stage_matmuls(&self, stage: Stage, batch: usize) -> Vec<MatMulShape> {
+        if let LayerKind::Attention { dim, tokens } = self.kind {
+            return attention_stage_matmuls(dim, tokens, stage, batch);
+        }
+        self.matmul(stage, batch).into_iter().collect()
+    }
+
     /// The layer's MatMul for a given stage and batch size (im2col form,
-    /// Fig. 1(c)–(e)), or `None` for non-MatMul layers.
+    /// Fig. 1(c)–(e)), or `None` for non-MatMul layers and for
+    /// multi-MatMul layers (attention — use [`Layer::stage_matmuls`]).
     pub fn matmul(&self, stage: Stage, batch: usize) -> Option<MatMulShape> {
         match self.kind {
             LayerKind::Conv { kh, kw, ci, co, .. } => {
@@ -122,6 +143,7 @@ impl Layer {
         match self.kind {
             LayerKind::Conv { kh, kw, ci, co, .. } => kh * kw * ci * co,
             LayerKind::Linear { fi, fo, .. } => fi * fo,
+            LayerKind::Attention { dim, .. } => 4 * dim * dim,
             _ => 0,
         }
     }
@@ -133,6 +155,7 @@ impl Layer {
         match self.kind {
             LayerKind::Conv { co, .. } => ho * wo * co,
             LayerKind::Linear { fo, tokens, .. } => fo * tokens,
+            LayerKind::Attention { dim, tokens } => dim * tokens,
             LayerKind::Pool { .. } | LayerKind::Norm | LayerKind::Act
             | LayerKind::Add => ho * wo, // caller scales by channels
         }
@@ -144,8 +167,51 @@ impl Layer {
         match self.kind {
             LayerKind::Conv { ci, co, .. } => ci % m == 0 && co % m == 0,
             LayerKind::Linear { fi, fo, .. } => fi % m == 0 && fo % m == 0,
+            LayerKind::Attention { dim, .. } => dim % m == 0,
             _ => true,
         }
+    }
+}
+
+/// The per-stage MatMul inventory of one single-head attention block —
+/// the ONE source of truth shared by the layer IR
+/// ([`Layer::stage_matmuls`]) and the native engine's attention op
+/// (`train::native::ops::Attention::matmul_shapes`), so the simulator
+/// prices exactly the products the engine executes and the two can
+/// never drift.
+pub fn attention_stage_matmuls(
+    dim: usize,
+    tokens: usize,
+    stage: Stage,
+    batch: usize,
+) -> Vec<MatMulShape> {
+    let rows = batch * tokens;
+    let w = |m: usize, k: usize, n: usize| MatMulShape { m, k, n, weight_is_rhs: true };
+    let d = |m: usize, k: usize, n: usize| MatMulShape { m, k, n, weight_is_rhs: false };
+    match stage {
+        // q/k/v projections, scores q·kᵀ, context p·v, out proj
+        Stage::FF => vec![
+            w(rows, dim, dim),
+            w(rows, dim, dim),
+            w(rows, dim, dim),
+            d(rows, dim, tokens),
+            d(rows, tokens, dim),
+            w(rows, dim, dim),
+        ],
+        // dc = dy·w̃oᵀ; dp = dc·vᵀ; dv = pᵀ·dc; dq = ds·k;
+        // dk = dsᵀ·q; dx contributions through w̃q/w̃k/w̃v
+        Stage::BP => vec![
+            w(rows, dim, dim),
+            d(rows, dim, tokens),
+            d(rows, tokens, dim),
+            d(rows, tokens, dim),
+            d(rows, tokens, dim),
+            w(rows, dim, dim),
+            w(rows, dim, dim),
+            w(rows, dim, dim),
+        ],
+        // dwq / dwk / dwv / dwo — data×data like every WU
+        Stage::WU => vec![d(dim, rows, dim); 4],
     }
 }
 
@@ -211,6 +277,38 @@ mod tests {
     fn divisibility_gates_sparsity() {
         assert!(conv(64, 64, 8, 1).divisible_by(8));
         assert!(!conv(3, 64, 8, 1).divisible_by(8)); // first conv: Ci=3
+    }
+
+    #[test]
+    fn attention_stage_matmuls_cover_projections_and_data_products() {
+        let l = Layer {
+            name: "attn".into(),
+            kind: LayerKind::Attention { dim: 64, tokens: 16 },
+            h: 1,
+            w: 1,
+            sparse_ok: true,
+        };
+        // multi-MatMul layers have no single `matmul`
+        assert!(l.matmul(Stage::FF, 4).is_none());
+        assert_eq!(l.weight_elems(), 4 * 64 * 64);
+        assert!(l.divisible_by(8) && !l.divisible_by(48));
+        let ff = l.stage_matmuls(Stage::FF, 4);
+        assert_eq!(ff.len(), 6);
+        assert_eq!(ff.iter().filter(|m| m.weight_is_rhs).count(), 4);
+        // every projection is rows×dim×dim with rows = batch·tokens
+        for mm in ff.iter().filter(|m| m.weight_is_rhs) {
+            assert_eq!((mm.m, mm.k, mm.n), (4 * 16, 64, 64));
+        }
+        // FF+BP+WU together move exactly 3× the FF (inference) volume —
+        // the Fig. 1 stage balance generalizes to the attention block
+        let macs = |s: Stage| l.stage_matmuls(s, 4).iter().map(|m| m.macs()).sum::<u64>();
+        assert_eq!(
+            macs(Stage::FF) + macs(Stage::BP) + macs(Stage::WU),
+            3 * macs(Stage::FF)
+        );
+        // conv/linear layers: stage_matmuls is exactly the single matmul
+        let c = conv(8, 16, 8, 1);
+        assert_eq!(c.stage_matmuls(Stage::BP, 4), vec![c.matmul(Stage::BP, 4).unwrap()]);
     }
 
     #[test]

@@ -9,5 +9,5 @@
 pub mod layer;
 pub mod zoo;
 
-pub use layer::{Layer, LayerKind, MatMulShape, Stage};
+pub use layer::{attention_stage_matmuls, Layer, LayerKind, MatMulShape, Stage};
 pub use zoo::{model_by_name, Model, PAPER_MODELS};

@@ -26,12 +26,13 @@ impl Model {
         self.layers.iter().map(|l| l.weight_elems()).sum()
     }
 
-    /// All (layer index, stage, matmul) triples at this model's batch.
+    /// All (layer index, stage, matmul) triples at this model's batch —
+    /// multi-MatMul layers (attention) contribute one triple per MatMul.
     pub fn matmuls(&self, batch: usize) -> Vec<(usize, Stage, crate::models::MatMulShape)> {
         let mut out = Vec::new();
         for (i, l) in self.layers.iter().enumerate() {
             for &s in &Stage::ALL {
-                if let Some(mm) = l.matmul(s, batch) {
+                for mm in l.stage_matmuls(s, batch) {
                     out.push((i, s, mm));
                 }
             }
@@ -53,6 +54,7 @@ impl Model {
             .find_map(|l| match l.kind {
                 LayerKind::Conv { co, .. } => Some(co),
                 LayerKind::Linear { fo, .. } => Some(fo),
+                LayerKind::Attention { dim, .. } => Some(dim),
                 _ => None,
             })
             .unwrap_or(0)
@@ -66,6 +68,7 @@ impl Model {
             .find_map(|l| match l.kind {
                 LayerKind::Conv { ci, .. } => Some(l.h * l.w * ci),
                 LayerKind::Linear { fi, tokens, .. } => Some(fi * tokens),
+                LayerKind::Attention { dim, tokens } => Some(dim * tokens),
                 _ => None,
             })
             .unwrap_or(0)
@@ -175,22 +178,24 @@ pub fn vgg19() -> Model {
     }
 }
 
-/// ViT-Small-ish on CIFAR-100: patch 4, dim 384, depth 7, heads 6, mlp 4×
-/// (a common CIFAR ViT configuration).
+/// ViT-Small-ish on CIFAR-100: patch 4, dim 384, depth 7, mlp 4× (a
+/// common CIFAR ViT configuration, single-head attention blocks, no
+/// class token — the head pools over the 64 patch tokens).
 pub fn vit() -> Model {
     let dim = 384;
-    let tokens = (32 / 4) * (32 / 4) + 1; // 65 with class token
-    let mut layers = vec![linear("patch_embed", 4 * 4 * 3, dim, tokens - 1, false)];
+    let tokens = (32 / 4) * (32 / 4); // 64 patch tokens
+    let mut layers = vec![linear("patch_embed", 4 * 4 * 3, dim, tokens, false)];
     for b in 0..7 {
         layers.push(Layer {
             name: format!("blk{b}.norm1"),
             kind: LayerKind::Norm,
             h: 1, w: 1, sparse_ok: false,
         });
-        layers.push(linear(&format!("blk{b}.qkv"), dim, 3 * dim, tokens, true));
-        // attention score/context matmuls are data×data: dense by nature,
-        // modelled as two Linear-like data matmuls via tokens scaling
-        layers.push(linear(&format!("blk{b}.proj"), dim, dim, tokens, true));
+        layers.push(Layer {
+            name: format!("blk{b}.attn"),
+            kind: LayerKind::Attention { dim, tokens },
+            h: 1, w: 1, sparse_ok: true,
+        });
         layers.push(Layer {
             name: format!("blk{b}.norm2"),
             kind: LayerKind::Norm,
@@ -331,17 +336,27 @@ pub fn tiny_cnn() -> Model {
     }
 }
 
+/// The tiny ViT convergence stand-in: one transformer block (single-head
+/// attention + post-norms + 2× MLP) over 16 tokens of width 64, mean
+/// token pooling into the classifier head. The dense embed stand-in for
+/// the patch projection is the paper's "first layer dense" exclusion.
 pub fn tiny_vit() -> Model {
-    let dim = 64;
+    let (dim, tokens) = (64, 16);
     Model {
         name: "tiny_vit".into(),
         dataset: "clusters".into(),
         batch: 32,
         layers: vec![
-            linear("qkv", dim, 3 * dim, 16, true),
-            linear("proj", dim, dim, 16, true),
-            linear("mlp1", dim, 128, 16, true),
-            linear("mlp2", 128, dim, 16, true),
+            linear("embed", dim, dim, tokens, false),
+            Layer {
+                name: "attn".into(),
+                kind: LayerKind::Attention { dim, tokens },
+                h: 1, w: 1, sparse_ok: true,
+            },
+            Layer { name: "norm1".into(), kind: LayerKind::Norm, h: 1, w: 1, sparse_ok: false },
+            linear("mlp1", dim, 128, tokens, true),
+            linear("mlp2", 128, dim, tokens, true),
+            Layer { name: "norm2".into(), kind: LayerKind::Norm, h: 1, w: 1, sparse_ok: false },
             linear("head", dim, 8, 1, true),
         ],
         epochs: 1,
@@ -422,10 +437,12 @@ mod tests {
     #[test]
     fn vit_inference_macs_plausible() {
         // Paper: ViT on CIFAR-100 dense inference = 6.43e8 (MAC count).
+        // Attention layers contribute multiple MatMuls per stage, so the
+        // inventory walks stage_matmuls.
         let macs: u64 = vit()
             .layers
             .iter()
-            .filter_map(|l| l.matmul(Stage::FF, 1))
+            .flat_map(|l| l.stage_matmuls(Stage::FF, 1))
             .map(|mm| mm.macs())
             .sum();
         let e8 = macs as f64 / 1e8;

@@ -115,17 +115,20 @@ pub fn train_flops(
     for layer in &model.layers {
         let layer_sparse = layer.sparse_ok && layer.divisible_by(pattern.m);
         for &stage in &Stage::ALL {
-            let Some(mm) = layer.matmul(stage, batch) else { continue };
-            let sparse = layer_sparse && method.stage_sparse(stage);
-            let flops = if sparse {
-                (mm.flops() as f64 * pattern.density()) as u64
-            } else {
-                mm.flops()
-            };
-            match stage {
-                Stage::FF => out.ff += flops,
-                Stage::BP => out.bp += flops,
-                Stage::WU => out.wu += flops,
+            for mm in layer.stage_matmuls(stage, batch) {
+                // N:M only ever applies to weight operands: attention's
+                // score/context products (and every WU) stay dense.
+                let sparse = mm.weight_is_rhs && layer_sparse && method.stage_sparse(stage);
+                let flops = if sparse {
+                    (mm.flops() as f64 * pattern.density()) as u64
+                } else {
+                    mm.flops()
+                };
+                match stage {
+                    Stage::FF => out.ff += flops,
+                    Stage::BP => out.bp += flops,
+                    Stage::WU => out.wu += flops,
+                }
             }
         }
     }
@@ -136,15 +139,17 @@ pub fn train_flops(
 pub fn inference_flops(model: &Model, method: Method, pattern: NmPattern) -> u64 {
     let mut total = 0u64;
     for layer in &model.layers {
-        let Some(mm) = layer.matmul(Stage::FF, 1) else { continue };
-        let sparse = layer.sparse_ok
-            && layer.divisible_by(pattern.m)
-            && method.inference_sparse();
-        total += if sparse {
-            (mm.flops() as f64 * pattern.density()) as u64
-        } else {
-            mm.flops()
-        };
+        for mm in layer.stage_matmuls(Stage::FF, 1) {
+            let sparse = mm.weight_is_rhs
+                && layer.sparse_ok
+                && layer.divisible_by(pattern.m)
+                && method.inference_sparse();
+            total += if sparse {
+                (mm.flops() as f64 * pattern.density()) as u64
+            } else {
+                mm.flops()
+            };
+        }
     }
     total
 }

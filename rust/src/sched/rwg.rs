@@ -85,24 +85,36 @@ pub fn rwg_schedule(
             && (method.stage_sparse(Stage::FF) || method.stage_sparse(Stage::BP));
         let mut stages = Vec::with_capacity(3);
         for &stage in &Stage::ALL {
-            let mm = layer
-                .matmul(stage, model.batch)
-                .expect("weighted layers always have matmuls");
+            let mms = layer.stage_matmuls(stage, model.batch);
+            debug_assert!(!mms.is_empty(), "weighted layers always have matmuls");
             let sparse = if layer_sparse && method.stage_sparse(stage) {
                 Some(pattern)
             } else {
                 None
             };
-            let (dataflow, timing) = best_dataflow(&mm, sparse, cfg);
+            // Per-MatMul dataflow selection; the stage's configuration
+            // word carries the dominant (largest-MAC) MatMul's choice.
+            // N:M applies only to weight operands — attention's
+            // score/context products run dense even in sparse stages.
+            let mut predicted = 0u64;
+            let mut dominant = (0u64, Dataflow::WS);
+            for mm in &mms {
+                let mm_sparse = if mm.weight_is_rhs { sparse } else { None };
+                let (df, timing) = best_dataflow(mm, mm_sparse, cfg);
+                predicted += timing.cycles;
+                if mm.macs() > dominant.0 {
+                    dominant = (mm.macs(), df);
+                }
+            }
             // SDGP prunes *gradients*: they only exist during BP, so SORE
             // must run inline there (Fig. 12's SDGP row).
             let sore_inline = sparse.is_some() && !pregenerate;
             stages.push(StageConfig {
                 stage,
                 sparse,
-                dataflow,
+                dataflow: dominant.1,
                 sore_inline,
-                predicted_cycles: timing.cycles,
+                predicted_cycles: predicted,
             });
         }
         layers.push(LayerSchedule {

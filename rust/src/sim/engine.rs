@@ -9,7 +9,7 @@ use crate::arch::SatConfig;
 use crate::models::{LayerKind, Model, Stage};
 use crate::sched::ModelSchedule;
 use crate::sim::memory::{self, MemConfig};
-use crate::sim::stce::{matmul_cycles, useful_macs};
+use crate::sim::stce::{best_dataflow, matmul_cycles, useful_macs};
 use crate::sim::{sore, wuve};
 
 /// Per-layer cycle breakdown of one training iteration.
@@ -173,40 +173,57 @@ pub fn precompute_step(model: &Model, schedule: &ModelSchedule, cfg: &SatConfig)
         // output through the vector edge, plus their DRAM traffic.
         // This is what keeps MatMul at "up to 84%" (Fig. 2), not 100%.
         {
-            let ff = layer.matmul(Stage::FF, batch).unwrap();
-            let elems = ff.m * ff.n;
+            let elems = layer.out_elems_per_item() * batch;
             lp.other_compute = 3 * elems as u64 / cfg.cols as u64;
             lp.other_bytes = 3 * 2 * elems * memory::FP16;
         }
 
         for sc in &ls.stages {
-            let mm = layer.matmul(sc.stage, batch).unwrap();
-            let timing = matmul_cycles(&mm, sc.sparse, sc.dataflow, cfg, true);
+            let mms = layer.stage_matmuls(sc.stage, batch);
             let mut sp = StagePre {
                 stage: sc.stage,
-                compute: timing.cycles,
-                bytes: memory::stage_bytes(&mm, welems, sc.sparse, sc.stage),
+                compute: 0,
+                bytes: 0,
                 sore_inline: 0,
                 wuve_compute: 0,
                 opt_bytes: 0,
                 pregen_sore: 0,
-                dense_macs: mm.macs(),
-                useful_macs: useful_macs(&mm, sc.sparse),
+                dense_macs: 0,
+                useful_macs: 0,
             };
-            // Inline SORE (Fig. 11(b) / SDGP in BP): the MatMul waits for
-            // group generation of the tensor being pruned.
-            if sc.sore_inline {
-                let pruned_elems = match sc.stage {
-                    Stage::BP if schedule.method == crate::nm::Method::Sdgp => {
-                        mm.m * mm.k // the dy tensor
-                    }
-                    _ => welems,
+            for mm in &mms {
+                // N:M applies to weight operands only: attention's
+                // score/context products stay dense inside sparse stages.
+                let mm_sparse = if mm.weight_is_rhs { sc.sparse } else { None };
+                // Single-MatMul layers execute the schedule word's
+                // dataflow; multi-MatMul (attention) stages re-derive the
+                // per-product argmin the RWG summed (deterministic, and
+                // identical to the word for the dominant product).
+                let dataflow = if mms.len() == 1 {
+                    sc.dataflow
+                } else {
+                    best_dataflow(mm, mm_sparse, cfg).0
                 };
-                sp.sore_inline = sore::reduce_tensor_cycles(
-                    pruned_elems,
-                    sc.sparse.unwrap_or(schedule.pattern),
-                    cfg,
-                );
+                let timing = matmul_cycles(mm, mm_sparse, dataflow, cfg, true);
+                sp.compute += timing.cycles;
+                sp.bytes += memory::mm_stage_bytes(mm, mm_sparse);
+                sp.dense_macs += mm.macs();
+                sp.useful_macs += useful_macs(mm, mm_sparse);
+                // Inline SORE (Fig. 11(b) / SDGP in BP): the MatMul waits
+                // for group generation of the tensor being pruned.
+                if sc.sore_inline && mm.weight_is_rhs {
+                    let pruned_elems = match sc.stage {
+                        Stage::BP if schedule.method == crate::nm::Method::Sdgp => {
+                            mm.m * mm.k // the dy tensor
+                        }
+                        _ => mm.k * mm.n, // this product's weight matrix
+                    };
+                    sp.sore_inline += sore::reduce_tensor_cycles(
+                        pruned_elems,
+                        sc.sparse.unwrap_or(schedule.pattern),
+                        cfg,
+                    );
+                }
             }
             if sc.stage == Stage::WU {
                 // WUVE runs after the dw MatMul; optimizer traffic

@@ -3,7 +3,7 @@
 //! all on-chip buffers to overlap the data transfer and computation").
 
 use crate::arch::SatConfig;
-use crate::models::{Layer, MatMulShape, Stage};
+use crate::models::{Layer, MatMulShape};
 use crate::nm::NmPattern;
 
 /// Bytes per element on the FP16 compute path.
@@ -51,29 +51,25 @@ pub fn weight_bytes(elems: usize, sparse: Option<NmPattern>) -> usize {
     }
 }
 
-/// Off-chip traffic of one stage of one weighted layer (FP16 activations
-/// and gradients; weights per `sparse`).
+/// Off-chip traffic of ONE MatMul of a training stage (FP16 activations
+/// and gradients; the weight operand per `sparse`).
 ///
-/// * FF: load x (m×k) + w̃_FF, store y (m×n)
-/// * BP: load dy (m×k) + w̃_BP, store dx (m×n)
-/// * WU: load x (k_mm×... both data operands), store dw; the optimizer
-///   traffic (FP32 masters + momentum read/write) is charged separately
-///   via [`optimizer_bytes`].
-pub fn stage_bytes(
-    mm: &MatMulShape,
-    weight_elems: usize,
-    sparse: Option<NmPattern>,
-    stage: Stage,
-) -> usize {
+/// * weight MatMuls (FF/BP products against w̃): load lhs (m×k) +
+///   w̃ (k×n compact when sparse), store out (m×n);
+/// * data×data MatMuls (every WU product, attention's score/context
+///   products): both operands FP16, store out. The WU optimizer traffic
+///   (FP32 masters + momentum read/write) is charged separately via
+///   [`optimizer_bytes`].
+///
+/// Multi-MatMul layers (attention) sum this per product — for
+/// conv/linear it reduces to exactly the former per-stage formula.
+pub fn mm_stage_bytes(mm: &MatMulShape, sparse: Option<NmPattern>) -> usize {
     let lhs = mm.m * mm.k * FP16;
     let out = mm.m * mm.n * FP16;
-    match stage {
-        Stage::FF | Stage::BP => lhs + weight_bytes(weight_elems, sparse) + out,
-        Stage::WU => {
-            // both operands are data tensors; output is the dw tensor
-            let rhs = mm.k * mm.n * FP16;
-            lhs + rhs + out.min(weight_elems * FP16)
-        }
+    if mm.weight_is_rhs {
+        lhs + weight_bytes(mm.k * mm.n, sparse) + out
+    } else {
+        lhs + mm.k * mm.n * FP16 + out
     }
 }
 
@@ -135,10 +131,21 @@ mod tests {
     }
 
     #[test]
-    fn stage_bytes_ff_counts_all_three_tensors() {
+    fn mm_stage_bytes_counts_all_three_tensors() {
+        // weight product (FF/BP): lhs + dense weights + out
         let mm = MatMulShape { m: 64, k: 128, n: 32, weight_is_rhs: true };
-        let b = stage_bytes(&mm, 128 * 32, None, Stage::FF);
+        let b = mm_stage_bytes(&mm, None);
         assert_eq!(b, (64 * 128 + 128 * 32 + 64 * 32) * FP16);
+        // sparse weights travel compact
+        let s = mm_stage_bytes(&mm, Some(NmPattern::P2_8));
+        assert!(s < b);
+        // data×data product (WU / attention scores): all FP16
+        let wu = MatMulShape { m: 128, k: 64, n: 32, weight_is_rhs: false };
+        assert_eq!(
+            mm_stage_bytes(&wu, Some(NmPattern::P2_8)),
+            (128 * 64 + 64 * 32 + 128 * 32) * FP16,
+            "sparse never applies to data operands"
+        );
     }
 
     #[test]

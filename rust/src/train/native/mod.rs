@@ -1,5 +1,5 @@
-//! Pure-Rust training backend: dense/conv forward + hand-written
-//! backward passes with bidirectional N:M weight pruning (BDWP).
+//! Pure-Rust training backend: an op-graph engine with bidirectional
+//! N:M weight pruning (BDWP) across the MLP, CNN and ViT families.
 //!
 //! This is the dependency-free twin of `python/compile/model.py`: every
 //! training stage of every method gets exactly the sparsity the paper's
@@ -20,11 +20,23 @@
 //! Grouping (Fig. 5): forward groups run along the K axis of the
 //! `(K, F)` weight matrix ([`PruneAxis::Rows`]); backward groups run
 //! along the F axis ([`PruneAxis::Cols`]). Convolutions lower through
-//! the same channel-minor im2col as the Python side, so M ≤ C_i groups
-//! always fall within the input channels of one kernel tap.
+//! the same channel-minor im2col as the Python side; attention's four
+//! projections are plain `(dim × dim)` weight MatMuls, so both axes
+//! apply to them unchanged.
 //!
-//! **Execution** (this is where the engine differs from a naive
-//! reference): weight-pruning stages can run on compute-skipping
+//! **Architecture** (PR 5): the engine is a *tape of boxed ops* — a
+//! [`NativeNet`] holds `Vec<Box<dyn ops::Op>>` plus a flat [`ops::Param`]
+//! table and a per-node activation/gradient arena; `train_step` walks
+//! the tape forward, then backward in reverse, handing each op the
+//! shared [`ops::Exec`] scratch. All N:M masking and the per-step
+//! pre-generation of compact w̃ encodings live in one place —
+//! [`ops::SparseMatmul`] — which every weight MatMul (linear, conv, and
+//! the four attention projections) routes through. The op set is open:
+//! adding a layer kind = implementing [`ops::Op`] in one file plus a
+//! lowering arm in [`NativeNet::build`] (see `ops/attention.rs` and
+//! `ops/layernorm.rs`, the ViT block ops added this way).
+//!
+//! **Execution**: weight-pruning stages can run on compute-skipping
 //! kernels ([`sparse_ops`]) fed by per-step *pre-generated*
 //! [`CompactNm`] encodings — the paper's "pre-generation of N:M sparse
 //! weights" dataflow optimization — so a 2:8 FF/BP MatMul executes
@@ -38,12 +50,6 @@
 //! step ([`crate::nm::CompactNm::pack_panels_into`]), and parallel work
 //! is tiled over the persistent worker pool ([`pool`]) — bit-identical
 //! across worker counts by construction.
-//!
-//! The engine walks the [`crate::models::zoo`] layer graphs directly
-//! (the tiny MLP/CNN convergence stand-ins), trains with momentum-SGD
-//! and decoupled weight decay (WUVE semantics, mirroring `model.py`),
-//! and needs neither artifacts nor the `pjrt` feature — this is what
-//! un-skips the algorithm tier from a fresh clone.
 
 pub mod gemm;
 pub mod ops;
@@ -57,17 +63,14 @@ use std::str::FromStr;
 use anyhow::{anyhow, bail, ensure};
 
 use crate::models::zoo::Model;
-use crate::models::{LayerKind, Stage};
-use crate::nm::{
-    prune_mask, prune_values, prune_values_into, CompactNm, Method, NmPattern, PackedNm,
-    PruneAxis,
-};
+use crate::models::{LayerKind, MatMulShape, Stage};
+use crate::nm::{prune_values, CompactNm, Method, NmPattern, PruneAxis};
 use crate::train::backend::{Backend, TrainSpec};
 use crate::train::{dataset_for, TrainCurve, TrainOptions};
 use crate::util::Pcg32;
 
-use gemm::PackedB;
-use ops::ConvGeom;
+use ops::tensor::ConvGeom;
+use ops::{Exec, Op, Param, SparseMatmul};
 
 /// Momentum-SGD hyperparameters, pinned to `model.py` (WUVE semantics).
 pub const MOMENTUM: f32 = 0.9;
@@ -145,54 +148,14 @@ pub fn bp_weights(w: &[f32], k: usize, f: usize, pattern: NmPattern, method: Met
     }
 }
 
-/// One weighted layer's parameters plus momentum state.
-struct Param {
-    /// Weights, row-major `(rows × cols)` = `(K × F)`.
-    w: Vec<f32>,
-    b: Vec<f32>,
-    rows: usize,
-    cols: usize,
-    /// Momentum buffers (the optimizer state WUVE holds on-chip).
-    mw: Vec<f32>,
-    mb: Vec<f32>,
-    /// Layer admitted to N:M pruning (sparse_ok && M-divisible).
-    nm_ok: bool,
-    /// Pre-generated compact w̃_FFᵀ / w̃_BP for the current step's
-    /// weights (the W2E buffer contents, re-encoded once per step when
-    /// the compact compute path is active; buffers reused across steps).
-    enc_ff: CompactNm,
-    enc_bp: CompactNm,
-    /// Panel-packed views of `enc_ff`/`enc_bp` — the layout the packed
-    /// spmm microkernels consume, re-packed in the same per-step
-    /// pre-generation pass (buffers reused across steps).
-    pk_ff: PackedNm,
-    pk_bp: PackedNm,
-}
-
-/// One node of the lowered compute graph (a zoo layer after im2col /
-/// flatten decisions are made).
-#[derive(Clone, Copy, Debug)]
-enum Node {
-    Linear { param: usize, fi: usize, fo: usize, relu: bool },
-    Conv { param: usize, geom: ConvGeom, relu: bool },
-    MaxPool { h: usize, w: usize, c: usize, factor: usize },
-    GlobalAvg { h: usize, w: usize, c: usize },
-}
-
-/// Per-node scratch buffers, allocated once and reused every step — the
-/// forward trace and the backward gradients live here instead of being
-/// re-allocated per op (hot-loop allocation churn).
+/// Per-node activation/gradient slots, allocated once and reused every
+/// step — the inter-op contract of the tape (everything op-internal,
+/// like pre-activations or attention probabilities, lives in the ops).
 #[derive(Default)]
-struct NodeBufs {
-    /// Forward output activation (the next node's input).
+struct Slot {
+    /// Forward output activation (the next op's input).
     a: Vec<f32>,
-    /// Pre-activation (kept for the ReLU backward).
-    z: Vec<f32>,
-    /// Conv im2col matrix (kept for the WU product).
-    cols: Vec<f32>,
-    /// Maxpool winner offsets.
-    arg: Vec<u32>,
-    /// Gradient w.r.t. this node's INPUT (flows to the previous node).
+    /// Gradient w.r.t. this op's INPUT (flows to the previous op).
     dx: Vec<f32>,
 }
 
@@ -201,11 +164,14 @@ struct NodeBufs {
 enum Shape {
     Img { h: usize, w: usize, c: usize },
     Flat(usize),
+    /// Token stream `(tokens, dim)` — the ViT activation layout.
+    Tok { tokens: usize, dim: usize },
 }
 
-/// A zoo model lowered to trainable form under one (method, pattern).
+/// A zoo model lowered to trainable form under one (method, pattern):
+/// the op tape, the flat param table, and the reusable buffers.
 pub struct NativeNet {
-    nodes: Vec<Node>,
+    tape: Vec<Box<dyn Op>>,
     params: Vec<Param>,
     pub batch: usize,
     pub classes: usize,
@@ -219,25 +185,16 @@ pub struct NativeNet {
     /// serial for tiny matmuls, the whole machine — the pool's
     /// capacity — otherwise). Never affects results, only wall-clock.
     pub threads: usize,
-    /// Scratch for the per-step w̃/g̃ prunes on the masked-dense path.
-    scratch: Vec<f32>,
-    /// Packed-B panel scratch for the dense GEMM drivers, reused across
-    /// every matmul of every step (each call re-packs its operand once
-    /// and shares the image across all tiles and pool workers).
-    pack: PackedB,
-    /// Per-node activation/gradient buffers, reused across steps.
-    arena: Vec<NodeBufs>,
-    /// Weight/bias gradient scratch, reused across layers and steps.
-    dw: Vec<f32>,
-    db: Vec<f32>,
-    /// Conv BP column-gradient scratch.
-    dcols: Vec<f32>,
+    /// Per-op activation/gradient slots, reused across steps.
+    arena: Vec<Slot>,
+    /// Shared per-step execution scratch (lr is stamped per call).
+    exec: Exec,
 }
 
 impl NativeNet {
     /// Lower `model` for training. Fails with a clear message on graphs
-    /// the native backend does not cover (attention/norm layers, token
-    /// dimensions — i.e. anything beyond the tiny MLP/CNN stand-ins).
+    /// the native backend does not cover (residual adds, bare Act
+    /// layers, shape mismatches).
     pub fn build(
         model: &Model,
         method: Method,
@@ -245,11 +202,18 @@ impl NativeNet {
         seed: u64,
     ) -> anyhow::Result<NativeNet> {
         let mut rng = Pcg32::with_stream(seed, WEIGHT_STREAM);
-        let mut nodes = Vec::new();
+        let mut tape: Vec<Box<dyn Op>> = Vec::new();
         let mut params: Vec<Param> = Vec::new();
         let mut shape: Option<Shape> = None;
-        for layer in &model.layers {
+        // the last conv/linear layer is the classifier head: no ReLU
+        let last_weighted = model
+            .layers
+            .iter()
+            .rposition(|l| matches!(l.kind, LayerKind::Conv { .. } | LayerKind::Linear { .. }))
+            .ok_or_else(|| anyhow!("model {} has no conv/linear head", model.name))?;
+        for (li, layer) in model.layers.iter().enumerate() {
             let nm_ok = layer.sparse_ok && layer.divisible_by(pattern.m) && !pattern.is_dense();
+            let relu = li != last_weighted;
             match layer.kind {
                 LayerKind::Conv { kh, kw, ci, co, stride, pad } => {
                     let want = Shape::Img { h: layer.h, w: layer.w, c: ci };
@@ -268,56 +232,77 @@ impl NativeNet {
                         wo,
                     };
                     let param = params.len();
-                    params.push(init_param(&mut rng, geom.k(), co, nm_ok, pattern));
-                    nodes.push(Node::Conv { param, geom, relu: true });
+                    params.push(Param::init(&mut rng, geom.k(), co, nm_ok, pattern));
+                    tape.push(Box::new(ops::Conv::new(param, geom, relu)));
                     shape = Some(Shape::Img { h: ho, w: wo, c: co });
                 }
                 LayerKind::Linear { fi, fo, tokens } => {
-                    if tokens != 1 {
-                        bail!(
-                            "{}: token dimension ({tokens}) is not supported by the \
-                             native backend (tiny MLP/CNN configs only)",
-                            layer.name
-                        );
-                    }
-                    // conv stack -> classifier head: global average pool
-                    if let Some(Shape::Img { h, w, c }) = shape {
-                        if h * w > 1 {
-                            nodes.push(Node::GlobalAvg { h, w, c });
+                    if tokens == 1 {
+                        // image / token stream -> flat classifier head
+                        match shape {
+                            Some(Shape::Img { h, w, c }) => {
+                                if h * w > 1 {
+                                    tape.push(Box::new(ops::GlobalAvg { h, w, c }));
+                                }
+                                shape = Some(Shape::Flat(c));
+                            }
+                            Some(Shape::Tok { tokens: t, dim }) => {
+                                tape.push(Box::new(ops::TokenPool { tokens: t, dim }));
+                                shape = Some(Shape::Flat(dim));
+                            }
+                            _ => {}
                         }
-                        shape = Some(Shape::Flat(c));
+                        check_shape(&layer.name, shape, Shape::Flat(fi))?;
+                    } else {
+                        check_shape(&layer.name, shape, Shape::Tok { tokens, dim: fi })?;
                     }
-                    let want = Shape::Flat(fi);
-                    check_shape(&layer.name, shape, want)?;
                     let param = params.len();
-                    params.push(init_param(&mut rng, fi, fo, nm_ok, pattern));
-                    nodes.push(Node::Linear { param, fi, fo, relu: true });
-                    shape = Some(Shape::Flat(fo));
+                    params.push(Param::init(&mut rng, fi, fo, nm_ok, pattern));
+                    tape.push(Box::new(ops::Linear::new(param, fi, fo, tokens, relu)));
+                    shape = Some(if tokens == 1 {
+                        Shape::Flat(fo)
+                    } else {
+                        Shape::Tok { tokens, dim: fo }
+                    });
+                }
+                LayerKind::Attention { dim, tokens } => {
+                    check_shape(&layer.name, shape, Shape::Tok { tokens, dim })?;
+                    let first = params.len();
+                    // wq, wk, wv, wo — four shared-helper weight tensors
+                    for _ in 0..4 {
+                        params.push(Param::init(&mut rng, dim, dim, nm_ok, pattern));
+                    }
+                    tape.push(Box::new(ops::Attention::new(first, dim, tokens)));
+                    shape = Some(Shape::Tok { tokens, dim });
+                }
+                LayerKind::Norm => {
+                    let (dim, tokens) = match shape {
+                        Some(Shape::Tok { tokens, dim }) => (dim, tokens),
+                        Some(Shape::Flat(d)) => (d, 1),
+                        other => bail!(
+                            "{}: norm needs a token/flat input, graph produces {other:?}",
+                            layer.name
+                        ),
+                    };
+                    let param = params.len();
+                    params.push(Param::norm_init(dim, pattern));
+                    tape.push(Box::new(ops::LayerNorm::new(param, dim, tokens)));
                 }
                 LayerKind::Pool { factor } => match shape {
                     Some(Shape::Img { h, w, c }) if h % factor == 0 && w % factor == 0 => {
-                        nodes.push(Node::MaxPool { h, w, c, factor });
+                        tape.push(Box::new(ops::MaxPool::new(h, w, c, factor)));
                         shape = Some(Shape::Img { h: h / factor, w: w / factor, c });
                     }
                     other => {
                         bail!("{}: pool needs a divisible image input, got {other:?}", layer.name)
                     }
                 },
-                LayerKind::Norm | LayerKind::Act | LayerKind::Add => bail!(
-                    "{}: layer kind {:?} is not supported by the native backend \
-                     (tiny MLP/CNN configs only)",
+                LayerKind::Act | LayerKind::Add => bail!(
+                    "{}: layer kind {:?} is not supported by the native backend",
                     layer.name,
                     layer.kind
                 ),
             }
-        }
-        // no activation after the classifier head
-        match nodes.iter_mut().rev().find_map(|n| match n {
-            Node::Linear { relu, .. } | Node::Conv { relu, .. } => Some(relu),
-            _ => None,
-        }) {
-            Some(relu) => *relu = false,
-            None => bail!("model {} has no weighted layers", model.name),
         }
         let classes = match shape {
             Some(Shape::Flat(c)) => c,
@@ -326,14 +311,26 @@ impl NativeNet {
                 model.name
             ),
         };
-        let sample_elems = match nodes.first() {
-            Some(Node::Conv { geom, .. }) => geom.h * geom.w * geom.ci,
-            Some(Node::Linear { fi, .. }) => *fi,
-            _ => bail!("model {} starts with an unsupported layer", model.name),
+        let sample_elems = model
+            .layers
+            .first()
+            .map(|l| match l.kind {
+                LayerKind::Conv { ci, .. } => l.h * l.w * ci,
+                LayerKind::Linear { fi, tokens, .. } => fi * tokens,
+                LayerKind::Attention { dim, tokens } => dim * tokens,
+                _ => 0,
+            })
+            .filter(|&n| n > 0)
+            .ok_or_else(|| anyhow!("model {} starts with an unsupported layer", model.name))?;
+        let arena = (0..tape.len()).map(|_| Slot::default()).collect();
+        let sm = SparseMatmul {
+            method,
+            pattern,
+            sparse: SparseCompute::default(),
+            threads: 0,
         };
-        let arena = (0..nodes.len()).map(|_| NodeBufs::default()).collect();
         Ok(NativeNet {
-            nodes,
+            tape,
             params,
             batch: model.batch,
             classes,
@@ -342,46 +339,76 @@ impl NativeNet {
             pattern,
             sparse: SparseCompute::default(),
             threads: 0,
-            scratch: Vec::new(),
-            pack: PackedB::default(),
             arena,
-            dw: Vec::new(),
-            db: Vec::new(),
-            dcols: Vec::new(),
+            exec: Exec {
+                batch: model.batch,
+                lr: 0.0,
+                sm,
+                scratch: Vec::new(),
+                pack: gemm::PackedB::default(),
+                dw: Vec::new(),
+                db: Vec::new(),
+            },
         })
     }
 
-    /// Whether the knob admits compact kernels at this pattern.
-    fn knob_allows(&self) -> bool {
-        match self.sparse {
-            SparseCompute::Off => false,
-            SparseCompute::On => true,
-            SparseCompute::Auto => self.pattern.sparsity() > 0.5,
+    /// The masking/compute policy under the net's current knobs.
+    fn sm(&self) -> SparseMatmul {
+        SparseMatmul {
+            method: self.method,
+            pattern: self.pattern,
+            sparse: self.sparse,
+            threads: self.threads,
         }
     }
 
-    /// FF runs on compact kernels (method prunes FF weights + knob).
-    fn ff_compact(&self) -> bool {
-        self.method.stage_sparse(Stage::FF) && self.knob_allows()
+    /// Op names in tape order (introspection for tests/docs).
+    pub fn op_names(&self) -> Vec<&'static str> {
+        self.tape.iter().map(|op| op.name()).collect()
     }
 
-    /// BP runs on compact kernels — weight-pruning BP methods only
-    /// (SDGP prunes *gradients*, which have no pre-generable encoding,
-    /// so it always takes the masked-dense path).
-    fn bp_compact(&self) -> bool {
-        matches!(self.method, Method::Sdwp | Method::Bdwp) && self.knob_allows()
+    /// Number of parameter tensors in the table.
+    pub fn n_params(&self) -> usize {
+        self.params.len()
     }
 
-    /// Per-step weight pre-generation: encode w̃_FFᵀ / w̃_BP of every
-    /// pruned layer ONCE into the params' reusable compact buffers
-    /// (instead of re-masking per matmul) — the paper's pre-generation
-    /// dataflow optimization in software. No-op when the compact path
-    /// is off.
+    /// Read one parameter tensor (introspection for tests/diagnostics).
+    pub fn param(&self, i: usize) -> &Param {
+        &self.params[i]
+    }
+
+    /// Mutate one parameter tensor (finite-difference probes in tests).
+    pub fn param_mut(&mut self, i: usize) -> &mut Param {
+        &mut self.params[i]
+    }
+
+    /// The MatMuls the tape executes in one `stage` — the engine-side
+    /// inventory that must agree with the model IR's
+    /// [`crate::models::Layer::stage_matmuls`] (property-tested).
+    pub fn stage_matmuls(&self, stage: Stage) -> Vec<MatMulShape> {
+        self.tape.iter().flat_map(|op| op.matmul_shapes(stage, self.batch)).collect()
+    }
+
+    /// Per-step weight pre-generation: encode w̃_FFᵀ of every pruned
+    /// tensor — and w̃_BP of exactly the tensors some op's backward will
+    /// read ([`Op::bp_encode_slots`]) — ONCE into the params' reusable
+    /// compact buffers (instead of re-masking per matmul): the paper's
+    /// pre-generation dataflow optimization in software. No-op when the
+    /// compact path is off.
     fn pregenerate(&mut self, with_bp: bool) {
-        let ff = self.ff_compact();
-        let bp = self.bp_compact() && with_bp;
+        let sm = self.sm();
+        let ff = sm.ff_compact();
+        let bp = sm.bp_compact() && with_bp;
         if !ff && !bp {
             return;
+        }
+        let mut bp_slot = vec![false; self.params.len()];
+        if bp {
+            for (ni, op) in self.tape.iter().enumerate() {
+                for s in op.bp_encode_slots(ni > 0) {
+                    bp_slot[s] = true;
+                }
+            }
         }
         let pattern = self.pattern;
         for (i, p) in self.params.iter_mut().enumerate() {
@@ -392,166 +419,51 @@ impl NativeNet {
                 CompactNm::encode_t_into(&p.w, p.rows, p.cols, pattern, &mut p.enc_ff);
                 p.enc_ff.pack_panels_into(gemm::NR, &mut p.pk_ff);
             }
-            // the first weighted node (always param 0) has no upstream
-            // layer, so its backward never computes dx and its w̃_BP
-            // encoding would never be read — skip the encode
-            if bp && i > 0 {
+            if bp && bp_slot[i] {
                 CompactNm::encode_into(&p.w, p.rows, p.cols, pattern, &mut p.enc_bp);
                 p.enc_bp.pack_panels_into(gemm::NR, &mut p.pk_bp);
             }
         }
     }
 
-    /// Worker count for one matmul (explicit `threads`, or auto-gated
-    /// on the work size). Result-neutral by the [`par`] contract.
-    fn workers(&self, macs: u64) -> usize {
-        par::resolve_workers(self.threads, macs)
-    }
-
-    /// FF product `z = input · w̃_FF` for one weighted layer: packed
-    /// compute-skipping kernel when active, packed masked-dense GEMM
-    /// otherwise.
-    fn ff_matmul(
-        &self,
-        p: &Param,
-        input: &[f32],
-        rows: usize,
-        k: usize,
-        f: usize,
-        scratch: &mut Vec<f32>,
-        pack: &mut PackedB,
-        z: &mut Vec<f32>,
-    ) {
-        let workers = self.workers((rows * k * f) as u64);
-        if p.nm_ok && self.ff_compact() {
-            par::spmm_ff_into(input, &p.pk_ff, rows, k, f, workers, z);
-        } else {
-            let w = self.ff_w(p, scratch);
-            par::matmul_into(input, w, rows, k, f, workers, pack, z);
-        }
-    }
-
     /// Forward pass over the arena (shared by training and eval): fills
-    /// each node's `a`/`z`/`cols`/`arg`; `arena[last].a` are the logits.
-    fn forward(
-        &self,
-        x: &[f32],
-        arena: &mut [NodeBufs],
-        scratch: &mut Vec<f32>,
-        pack: &mut PackedB,
-    ) {
-        let batch = self.batch;
-        for ni in 0..self.nodes.len() {
-            let (done, rest) = arena.split_at_mut(ni);
-            let cur = &mut rest[0];
+    /// each slot's `a`; `arena[last].a` are the logits.
+    fn forward(&mut self, x: &[f32], lr: f32) {
+        self.exec.lr = lr;
+        self.exec.sm = self.sm();
+        let mut tape = std::mem::take(&mut self.tape);
+        for (ni, op) in tape.iter_mut().enumerate() {
+            let (done, rest) = self.arena.split_at_mut(ni);
             let input: &[f32] = if ni == 0 { x } else { &done[ni - 1].a };
-            match self.nodes[ni] {
-                Node::Linear { param, fi, fo, relu } => {
-                    let p = &self.params[param];
-                    self.ff_matmul(p, input, batch, fi, fo, scratch, pack, &mut cur.z);
-                    ops::add_bias(&mut cur.z, &p.b);
-                    if relu {
-                        ops::relu_into(&cur.z, &mut cur.a);
-                    } else {
-                        cur.a.clear();
-                        cur.a.extend_from_slice(&cur.z);
-                    }
-                }
-                Node::Conv { param, geom, relu } => {
-                    let p = &self.params[param];
-                    ops::im2col_into(input, batch, &geom, &mut cur.cols);
-                    let NodeBufs { cols, z, a, .. } = cur;
-                    self.ff_matmul(p, cols, geom.rows(batch), geom.k(), geom.co, scratch, pack, z);
-                    ops::add_bias(z, &p.b);
-                    if relu {
-                        ops::relu_into(z, a);
-                    } else {
-                        a.clear();
-                        a.extend_from_slice(z);
-                    }
-                }
-                Node::MaxPool { h, w, c, factor } => {
-                    ops::maxpool_into(input, batch, h, w, c, factor, &mut cur.a, &mut cur.arg);
-                }
-                Node::GlobalAvg { h, w, c } => {
-                    ops::global_avg_into(input, batch, h, w, c, &mut cur.a);
-                }
-            }
+            op.forward_into(input, &self.params, &mut self.exec, &mut rest[0].a);
         }
+        self.tape = tape;
     }
 
     /// One momentum-SGD training step over `(x, y)`; returns the loss.
-    /// `x` is `batch × sample_elems` (NHWC for images), `y` one-hot.
+    /// `x` is `batch × sample_elems` (NHWC for images, token-major for
+    /// token streams), `y` one-hot.
     pub fn train_step(&mut self, x: &[f32], y: &[f32], lr: f32) -> f32 {
         let batch = self.batch;
         assert_eq!(x.len(), batch * self.sample_elems, "x shape mismatch");
         assert_eq!(y.len(), batch * self.classes, "y shape mismatch");
         // w̃ pre-generation: once per step, before any stage reads it
         self.pregenerate(true);
-        let mut arena = std::mem::take(&mut self.arena);
-        let mut scratch = std::mem::take(&mut self.scratch);
-        let mut pack = std::mem::take(&mut self.pack);
-        let mut dw = std::mem::take(&mut self.dw);
-        let mut db = std::mem::take(&mut self.db);
-        let mut dcols = std::mem::take(&mut self.dcols);
-
-        self.forward(x, &mut arena, &mut scratch, &mut pack);
-        let n = self.nodes.len();
-        let (loss, mut dl) = ops::softmax_xent(&arena[n - 1].a, y, batch, self.classes);
-
-        // ---- backward + immediate parameter update ----
-        for ni in (0..n).rev() {
-            let (left, next) = arena.split_at_mut(ni + 1);
+        self.forward(x, lr);
+        let n = self.tape.len();
+        let (loss, mut dl) =
+            ops::tensor::softmax_xent(&self.arena[n - 1].a, y, batch, self.classes);
+        // ---- backward + immediate parameter update, tape reversed ----
+        let mut tape = std::mem::take(&mut self.tape);
+        for (ni, op) in tape.iter_mut().enumerate().rev() {
+            let (left, next) = self.arena.split_at_mut(ni + 1);
             let (prev, curs) = left.split_at_mut(ni);
-            let cur = &mut curs[0];
-            // gradient w.r.t. this node's output
-            let dh: &mut Vec<f32> = if ni + 1 == n { &mut dl } else { &mut next[0].dx };
+            // gradient w.r.t. this op's output
+            let dy: &mut [f32] = if ni + 1 == n { &mut dl } else { &mut next[0].dx };
             let input: &[f32] = if ni == 0 { x } else { &prev[ni - 1].a };
-            match self.nodes[ni] {
-                Node::Linear { param, fi, fo, relu } => {
-                    if relu {
-                        ops::relu_backward(dh, &cur.z);
-                    }
-                    if ni > 0 {
-                        self.bp_matmul(param, dh, batch, fi, fo, &mut scratch, &mut pack,
-                                       &mut cur.dx);
-                    }
-                    let workers = self.workers((batch * fi * fo) as u64);
-                    par::matmul_at_into(input, dh, batch, fi, fo, workers, &mut pack, &mut dw);
-                    ops::bias_grad_into(dh, fo, &mut db);
-                    self.update(param, &mut dw, &db, lr);
-                }
-                Node::Conv { param, geom, relu } => {
-                    if relu {
-                        ops::relu_backward(dh, &cur.z);
-                    }
-                    let (rows, k) = (geom.rows(batch), geom.k());
-                    if ni > 0 {
-                        self.bp_matmul(param, dh, rows, k, geom.co, &mut scratch, &mut pack,
-                                       &mut dcols);
-                        ops::col2im_into(&dcols, batch, &geom, &mut cur.dx);
-                    }
-                    let workers = self.workers((rows * k * geom.co) as u64);
-                    par::matmul_at_into(&cur.cols, dh, rows, k, geom.co, workers, &mut pack,
-                                        &mut dw);
-                    ops::bias_grad_into(dh, geom.co, &mut db);
-                    self.update(param, &mut dw, &db, lr);
-                }
-                Node::MaxPool { h, w, c, factor } => {
-                    ops::maxpool_backward_into(dh, &cur.arg, batch, h, w, c, factor, &mut cur.dx);
-                }
-                Node::GlobalAvg { h, w, c } => {
-                    ops::global_avg_backward_into(dh, batch, h, w, c, &mut cur.dx);
-                }
-            }
+            op.backward_into(input, dy, ni > 0, &mut self.params, &mut self.exec, &mut curs[0].dx);
         }
-
-        self.arena = arena;
-        self.scratch = scratch;
-        self.pack = pack;
-        self.dw = dw;
-        self.db = db;
-        self.dcols = dcols;
+        self.tape = tape;
         loss
     }
 
@@ -561,89 +473,11 @@ impl NativeNet {
         let batch = self.batch;
         // weights moved since the last step's pre-generation
         self.pregenerate(false);
-        let mut arena = std::mem::take(&mut self.arena);
-        let mut scratch = std::mem::take(&mut self.scratch);
-        let mut pack = std::mem::take(&mut self.pack);
-        self.forward(x, &mut arena, &mut scratch, &mut pack);
-        let h = &arena[self.nodes.len() - 1].a;
-        let (loss, _) = ops::softmax_xent(h, y, batch, self.classes);
-        let acc = ops::accuracy(h, y, batch, self.classes);
-        self.arena = arena;
-        self.scratch = scratch;
-        self.pack = pack;
+        self.forward(x, 0.0);
+        let h = &self.arena[self.tape.len() - 1].a;
+        let (loss, _) = ops::tensor::softmax_xent(h, y, batch, self.classes);
+        let acc = ops::tensor::accuracy(h, y, batch, self.classes);
         (loss, acc)
-    }
-
-    /// Forward-pass weights of one param on the masked-dense path:
-    /// w̃_FF into the scratch buffer when the (method, layer) pair
-    /// prunes, the raw weights otherwise.
-    fn ff_w<'a>(&self, p: &'a Param, scratch: &'a mut Vec<f32>) -> &'a [f32] {
-        if p.nm_ok && self.method.stage_sparse(Stage::FF) {
-            prune_values_into(&p.w, p.rows, p.cols, self.pattern, PruneAxis::Rows, scratch);
-            scratch
-        } else {
-            &p.w
-        }
-    }
-
-    /// BP-stage input gradient `dx = dy · w̃ᵀ` with the method's
-    /// backward sparsity (Fig. 3): w̃_BP for SDWP/BDWP (packed compact
-    /// kernel when active), pruned output gradients for SDGP, dense
-    /// otherwise.
-    fn bp_matmul(
-        &self,
-        param: usize,
-        dy: &[f32],
-        rows: usize,
-        k: usize,
-        f: usize,
-        scratch: &mut Vec<f32>,
-        pack: &mut PackedB,
-        out: &mut Vec<f32>,
-    ) {
-        let p = &self.params[param];
-        let workers = self.workers((rows * k * f) as u64);
-        if p.nm_ok {
-            match self.method {
-                Method::Sdwp | Method::Bdwp if self.bp_compact() => {
-                    return par::spmm_bt_into(dy, &p.pk_bp, rows, f, k, workers, out);
-                }
-                Method::Sdwp | Method::Bdwp => {
-                    prune_values_into(&p.w, k, f, self.pattern, PruneAxis::Cols, scratch);
-                    return par::matmul_bt_into(dy, scratch, rows, f, k, workers, pack, out);
-                }
-                Method::Sdgp => {
-                    prune_values_into(dy, rows, f, self.pattern, PruneAxis::Cols, scratch);
-                    return par::matmul_bt_into(scratch, &p.w, rows, f, k, workers, pack, out);
-                }
-                _ => {}
-            }
-        }
-        par::matmul_bt_into(dy, &p.w, rows, f, k, workers, pack, out)
-    }
-
-    /// Momentum-SGD update with decoupled weight decay; SR-STE adds its
-    /// sparse-refined term to the weight gradient first.
-    fn update(&mut self, param: usize, dw: &mut [f32], db: &[f32], lr: f32) {
-        let p = &mut self.params[param];
-        if p.nm_ok && self.method == Method::SrSte {
-            let mask = prune_mask(&p.w, p.rows, p.cols, self.pattern, PruneAxis::Rows);
-            for ((g, &keep), &w) in dw.iter_mut().zip(&mask).zip(&p.w) {
-                if !keep {
-                    *g += SRSTE_LAMBDA * w;
-                }
-            }
-        }
-        for ((w, m), &g) in p.w.iter_mut().zip(&mut p.mw).zip(dw.iter()) {
-            let g = g + WEIGHT_DECAY * *w;
-            *m = MOMENTUM * *m + g;
-            *w -= lr * *m;
-        }
-        for ((b, m), &g) in p.b.iter_mut().zip(&mut p.mb).zip(db) {
-            let g = g + WEIGHT_DECAY * *b;
-            *m = MOMENTUM * *m + g;
-            *b -= lr * *m;
-        }
     }
 }
 
@@ -652,24 +486,6 @@ fn check_shape(name: &str, got: Option<Shape>, want: Shape) -> anyhow::Result<()
         None => Ok(()), // first layer fixes the input shape
         Some(s) if s == want => Ok(()),
         Some(s) => Err(anyhow!("{name}: expects {want:?} input, graph produces {s:?}")),
-    }
-}
-
-fn init_param(rng: &mut Pcg32, rows: usize, cols: usize, nm_ok: bool, p: NmPattern) -> Param {
-    let scale = (6.0 / rows as f32).sqrt();
-    let w: Vec<f32> = (0..rows * cols).map(|_| rng.uniform(-scale, scale)).collect();
-    Param {
-        mw: vec![0.0; w.len()],
-        mb: vec![0.0; cols],
-        b: vec![0.0; cols],
-        w,
-        rows,
-        cols,
-        nm_ok,
-        enc_ff: CompactNm::empty(p),
-        enc_bp: CompactNm::empty(p),
-        pk_ff: PackedNm::empty(p),
-        pk_bp: PackedNm::empty(p),
     }
 }
 
@@ -686,7 +502,7 @@ pub fn train_spec(spec: &TrainSpec, opts: &TrainOptions) -> anyhow::Result<Train
     ensure!(
         matches!(family, "mlp" | "cnn" | "vit"),
         "no synthetic dataset mapping for {:?}; the native backend trains \
-         the tiny_* convergence stand-ins (tiny_mlp, tiny_cnn)",
+         the tiny_* convergence stand-ins (tiny_mlp, tiny_cnn, tiny_vit)",
         spec.model
     );
     let model = crate::models::zoo::model_by_name(&spec.model)
@@ -797,16 +613,9 @@ mod tests {
     #[test]
     fn builds_tiny_mlp_graph() {
         let net = NativeNet::build(&zoo::tiny_mlp(), Method::Bdwp, P28, 1).unwrap();
-        assert_eq!(net.nodes.len(), 3);
-        assert_eq!(net.params.len(), 3);
+        assert_eq!(net.op_names(), ["linear", "linear", "linear"]);
+        assert_eq!(net.n_params(), 3);
         assert_eq!((net.batch, net.classes, net.sample_elems), (64, 8, 32));
-        // relu on hidden layers only
-        match (net.nodes[0], net.nodes[2]) {
-            (Node::Linear { relu: r0, .. }, Node::Linear { relu: r2, .. }) => {
-                assert!(r0 && !r2);
-            }
-            other => panic!("unexpected nodes {other:?}"),
-        }
         // every tiny_mlp layer is M-divisible and sparse_ok
         assert!(net.params.iter().all(|p| p.nm_ok));
     }
@@ -814,17 +623,10 @@ mod tests {
     #[test]
     fn builds_tiny_cnn_with_global_avg_before_head() {
         let net = NativeNet::build(&zoo::tiny_cnn(), Method::Bdwp, P28, 1).unwrap();
-        let kinds: Vec<&'static str> = net
-            .nodes
-            .iter()
-            .map(|n| match n {
-                Node::Conv { .. } => "conv",
-                Node::MaxPool { .. } => "pool",
-                Node::GlobalAvg { .. } => "gap",
-                Node::Linear { .. } => "linear",
-            })
-            .collect();
-        assert_eq!(kinds, ["conv", "conv", "pool", "conv", "pool", "gap", "linear"]);
+        assert_eq!(
+            net.op_names(),
+            ["conv", "conv", "maxpool", "conv", "maxpool", "gap", "linear"]
+        );
         assert_eq!(net.classes, 8);
         assert_eq!(net.sample_elems, 8 * 8 * 8);
         // first conv excluded from N:M (paper §VI-A)
@@ -833,11 +635,39 @@ mod tests {
     }
 
     #[test]
-    fn rejects_models_beyond_the_tiny_zoo() {
-        let err = NativeNet::build(&zoo::vit(), Method::Dense, P28, 1).unwrap_err();
+    fn builds_tiny_vit_with_attention_norms_and_token_pool() {
+        let net = NativeNet::build(&zoo::tiny_vit(), Method::Bdwp, P28, 1).unwrap();
+        assert_eq!(
+            net.op_names(),
+            ["linear", "attention", "layernorm", "linear", "linear", "layernorm",
+             "tokenpool", "linear"]
+        );
+        // embed + 4 attention projections + γ/β + 2 mlps + γ/β + head
+        assert_eq!(net.n_params(), 10);
+        assert_eq!((net.batch, net.classes, net.sample_elems), (32, 8, 16 * 64));
+        // embed is the dense first layer; all four projections prune
+        assert!(!net.params[0].nm_ok, "embed dense (first layer)");
+        assert!(net.params[1..5].iter().all(|p| p.nm_ok), "q/k/v/o prune");
+        assert!(!net.params[5].nm_ok, "norm γ never pruned");
+    }
+
+    #[test]
+    fn rejects_unsupported_layer_kinds_cleanly() {
+        let mut m = micro_model(&[8, 8], 4);
+        m.layers.push(Layer {
+            name: "res".into(),
+            kind: LayerKind::Add,
+            h: 1,
+            w: 1,
+            sparse_ok: false,
+        });
+        let err = NativeNet::build(&m, Method::Dense, P28, 1).unwrap_err();
         assert!(err.to_string().contains("not supported"), "{err}");
-        let err = NativeNet::build(&zoo::tiny_vit(), Method::Dense, P28, 1).unwrap_err();
-        assert!(err.to_string().contains("token"), "{err}");
+        // shape mismatches fail loudly too
+        let mut bad = micro_model(&[8, 4], 4);
+        bad.layers.push(linear_layer("fc9", 16, 4)); // wants 16, gets 4
+        let err = NativeNet::build(&bad, Method::Dense, P28, 1).unwrap_err();
+        assert!(err.to_string().contains("expects"), "{err}");
     }
 
     #[test]
@@ -865,16 +695,16 @@ mod tests {
         assert!("fast".parse::<SparseCompute>().is_err());
         // auto admits 2:8 (75% sparse) but not 2:4 (50%)
         let mut net = NativeNet::build(&micro_model(&[8, 8, 4], 4), Method::Bdwp, P28, 1).unwrap();
-        assert!(net.ff_compact() && net.bp_compact());
+        assert!(net.sm().ff_compact() && net.sm().bp_compact());
         net.sparse = SparseCompute::Off;
-        assert!(!net.ff_compact() && !net.bp_compact());
+        assert!(!net.sm().ff_compact() && !net.sm().bp_compact());
         let mut net = NativeNet::build(&micro_model(&[8, 8, 4], 4), Method::Bdwp, P24, 1).unwrap();
-        assert!(!net.ff_compact(), "auto must skip 50% patterns");
+        assert!(!net.sm().ff_compact(), "auto must skip 50% patterns");
         net.sparse = SparseCompute::On;
-        assert!(net.ff_compact() && net.bp_compact());
+        assert!(net.sm().ff_compact() && net.sm().bp_compact());
         // SDGP prunes gradients: never on the compact path
         let net = NativeNet::build(&micro_model(&[8, 8, 4], 4), Method::Sdgp, P28, 1).unwrap();
-        assert!(!net.ff_compact() && !net.bp_compact());
+        assert!(!net.sm().ff_compact() && !net.sm().bp_compact());
     }
 
     /// `train_step` with lr = 0 leaves parameters untouched but fills
@@ -1041,5 +871,32 @@ mod tests {
         let (loss, acc) = net.eval(&x, &y);
         assert!(loss < 0.5, "memorizing 4 samples should drive loss down, got {loss}");
         assert!(acc >= 0.75, "acc {acc}");
+    }
+
+    #[test]
+    fn tape_matmul_inventory_matches_model_ir() {
+        // the engine-side Op::matmul_shapes must agree with the layer
+        // IR's stage_matmuls for every family, per stage, in MAC volume
+        for name in ["tiny_mlp", "tiny_cnn", "tiny_vit"] {
+            let model = zoo::model_by_name(name).unwrap();
+            let net = NativeNet::build(&model, Method::Bdwp, P28, 1).unwrap();
+            for stage in Stage::ALL {
+                let tape: u64 =
+                    net.stage_matmuls(stage).iter().map(|m| m.macs()).sum();
+                let ir: u64 = model
+                    .layers
+                    .iter()
+                    .flat_map(|l| l.stage_matmuls(stage, model.batch))
+                    .map(|m| m.macs())
+                    .sum();
+                assert_eq!(tape, ir, "{name} {stage:?} MAC inventory diverged");
+            }
+        }
+        // tiny_vit attention: exact shape-by-shape agreement
+        let model = zoo::tiny_vit();
+        let net = NativeNet::build(&model, Method::Bdwp, P28, 1).unwrap();
+        let attn_ir: Vec<_> = model.layers[1].stage_matmuls(Stage::FF, model.batch);
+        let attn_tape = net.tape[1].matmul_shapes(Stage::FF, model.batch);
+        assert_eq!(attn_ir, attn_tape);
     }
 }

@@ -1,0 +1,220 @@
+//! Single-head self-attention op with all four projections routed
+//! through the shared bidirectional N:M masking helper.
+
+use crate::models::{attention_stage_matmuls, MatMulShape, Stage};
+
+use super::{sgd_update, tensor, Exec, Op, Param};
+
+/// `y = softmax(q·kᵀ/√d) · v · w̃o + bo` with `q/k/v = x·w̃{q,k,v} + b`
+/// over `tokens` tokens of width `dim`, per batch sample.
+///
+/// Execution split (mirrors [`crate::models::Layer::stage_matmuls`]):
+///
+/// * the four projections are weight MatMuls over the full
+///   `(batch·tokens) × dim` row block — they run on the packed pool
+///   drivers through [`super::SparseMatmul`], so BDWP/SDWP masking and
+///   the compact compute-skipping kernels apply to them exactly as to
+///   any linear layer (FF groups along K, BP groups along F);
+/// * the score (`q·kᵀ`) and context (`p·v`) products are data×data —
+///   dense by nature, per-sample `tokens × tokens` blocks executed on
+///   the serial seed kernels (they sit far below the pool's auto-gate).
+///
+/// Backward is hand-written (finite-difference checked in
+/// `tests/native_train.rs`); every w̃ is read before its param updates,
+/// preserving the pre-generation contract.
+pub struct Attention {
+    /// Owned param slots in engine order: wq, wk, wv, wo.
+    params: [usize; 4],
+    pub dim: usize,
+    pub tokens: usize,
+    // ---- forward state (read by backward) ----
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Raw scaled scores (scratch; probabilities are what backward reads).
+    s: Vec<f32>,
+    /// Softmax probabilities, `(batch·tokens) × tokens` per sample.
+    p: Vec<f32>,
+    /// Context `p · v` — the output projection's input.
+    c: Vec<f32>,
+    // ---- backward scratch ----
+    dc: Vec<f32>,
+    dp: Vec<f32>,
+    dq: Vec<f32>,
+    dk: Vec<f32>,
+    dv: Vec<f32>,
+    tmp: Vec<f32>,
+}
+
+impl Attention {
+    pub fn new(first_param: usize, dim: usize, tokens: usize) -> Attention {
+        Attention {
+            params: [first_param, first_param + 1, first_param + 2, first_param + 3],
+            dim,
+            tokens,
+            q: Vec::new(),
+            k: Vec::new(),
+            v: Vec::new(),
+            s: Vec::new(),
+            p: Vec::new(),
+            c: Vec::new(),
+            dc: Vec::new(),
+            dp: Vec::new(),
+            dq: Vec::new(),
+            dk: Vec::new(),
+            dv: Vec::new(),
+            tmp: Vec::new(),
+        }
+    }
+
+    fn rows(&self, batch: usize) -> usize {
+        batch * self.tokens
+    }
+
+    fn scale(&self) -> f32 {
+        1.0 / (self.dim as f32).sqrt()
+    }
+}
+
+fn zeroed(buf: &mut Vec<f32>, len: usize) {
+    buf.clear();
+    buf.resize(len, 0.0);
+}
+
+impl Op for Attention {
+    fn name(&self) -> &'static str {
+        "attention"
+    }
+
+    fn out_len(&self, batch: usize) -> usize {
+        self.rows(batch) * self.dim
+    }
+
+    fn param_slots(&self) -> &[usize] {
+        &self.params
+    }
+
+    /// wo's w̃_BP feeds the context gradient regardless of `need_dx`;
+    /// the q/k/v encodings are only read for the input gradient.
+    fn bp_encode_slots(&self, need_dx: bool) -> Vec<usize> {
+        if need_dx {
+            self.params.to_vec()
+        } else {
+            vec![self.params[3]]
+        }
+    }
+
+    /// By construction the same table as `LayerKind::Attention`'s —
+    /// both sides call [`crate::models::attention_stage_matmuls`].
+    fn matmul_shapes(&self, stage: Stage, batch: usize) -> Vec<MatMulShape> {
+        attention_stage_matmuls(self.dim, self.tokens, stage, batch)
+    }
+
+    fn forward_into(&mut self, x: &[f32], params: &[Param], ex: &mut Exec, out: &mut Vec<f32>) {
+        let (d, t) = (self.dim, self.tokens);
+        let batch = ex.batch;
+        let rows = self.rows(batch);
+        debug_assert_eq!(x.len(), rows * d, "attention input shape mismatch");
+        let sm = ex.sm;
+        let [pq, pk, pv, po] = self.params;
+        // q/k/v projections — shared-helper weight matmuls + bias
+        sm.ff(&params[pq], x, rows, d, d, &mut ex.scratch, &mut ex.pack, &mut self.q);
+        tensor::add_bias(&mut self.q, &params[pq].b);
+        sm.ff(&params[pk], x, rows, d, d, &mut ex.scratch, &mut ex.pack, &mut self.k);
+        tensor::add_bias(&mut self.k, &params[pk].b);
+        sm.ff(&params[pv], x, rows, d, d, &mut ex.scratch, &mut ex.pack, &mut self.v);
+        tensor::add_bias(&mut self.v, &params[pv].b);
+        // scores s = q·kᵀ/√d per sample (t × t blocks, data×data)
+        zeroed(&mut self.s, batch * t * t);
+        for b in 0..batch {
+            let qb = &self.q[b * t * d..(b + 1) * t * d];
+            let kb = &self.k[b * t * d..(b + 1) * t * d];
+            let sb = &mut self.s[b * t * t..(b + 1) * t * t];
+            tensor::matmul_bt_block(qb, kb, d, t, 0, sb);
+        }
+        let scale = self.scale();
+        for v in &mut self.s {
+            *v *= scale;
+        }
+        // probabilities + context c = p·v
+        tensor::softmax_rows_into(&self.s, t, &mut self.p);
+        zeroed(&mut self.c, rows * d);
+        for b in 0..batch {
+            let pb = &self.p[b * t * t..(b + 1) * t * t];
+            let vb = &self.v[b * t * d..(b + 1) * t * d];
+            let cb = &mut self.c[b * t * d..(b + 1) * t * d];
+            tensor::matmul_block(pb, vb, t, d, 0, cb);
+        }
+        // output projection
+        sm.ff(&params[po], &self.c, rows, d, d, &mut ex.scratch, &mut ex.pack, out);
+        tensor::add_bias(out, &params[po].b);
+    }
+
+    fn backward_into(
+        &mut self,
+        x: &[f32],
+        dy: &mut [f32],
+        need_dx: bool,
+        params: &mut [Param],
+        ex: &mut Exec,
+        dx: &mut Vec<f32>,
+    ) {
+        let (d, t) = (self.dim, self.tokens);
+        let batch = ex.batch;
+        let rows = self.rows(batch);
+        let sm = ex.sm;
+        let [pq, pk, pv, po] = self.params;
+        // output projection: dwo = cᵀ·dy, then dc = dy·w̃oᵀ BEFORE the
+        // wo update (bp must read this step's pre-update weights)
+        sm.wu(&self.c, dy, rows, d, d, &mut ex.pack, &mut ex.dw);
+        tensor::bias_grad_into(dy, d, &mut ex.db);
+        sm.bp(&params[po], dy, rows, d, d, &mut ex.scratch, &mut ex.pack, &mut self.dc);
+        sgd_update(&mut params[po], &mut ex.dw, &ex.db, ex.lr, sm.method, sm.pattern);
+        // dp = dc·vᵀ and dv = pᵀ·dc, per sample
+        zeroed(&mut self.dp, batch * t * t);
+        zeroed(&mut self.dv, rows * d);
+        for b in 0..batch {
+            let dcb = &self.dc[b * t * d..(b + 1) * t * d];
+            let vb = &self.v[b * t * d..(b + 1) * t * d];
+            let pb = &self.p[b * t * t..(b + 1) * t * t];
+            tensor::matmul_bt_block(dcb, vb, d, t, 0, &mut self.dp[b * t * t..(b + 1) * t * t]);
+            tensor::matmul_at_block(pb, dcb, t, t, d, 0, &mut self.dv[b * t * d..(b + 1) * t * d]);
+        }
+        // softmax backward folds the 1/√d score scale in
+        let scale = self.scale();
+        tensor::softmax_rows_backward(&mut self.dp, &self.p, t, scale);
+        // dq = ds·k, dk = dsᵀ·q, per sample
+        zeroed(&mut self.dq, rows * d);
+        zeroed(&mut self.dk, rows * d);
+        for b in 0..batch {
+            let dsb = &self.dp[b * t * t..(b + 1) * t * t];
+            let qb = &self.q[b * t * d..(b + 1) * t * d];
+            let kb = &self.k[b * t * d..(b + 1) * t * d];
+            tensor::matmul_block(dsb, kb, t, d, 0, &mut self.dq[b * t * d..(b + 1) * t * d]);
+            tensor::matmul_at_block(dsb, qb, t, t, d, 0, &mut self.dk[b * t * d..(b + 1) * t * d]);
+        }
+        // dx = dq·w̃qᵀ + dk·w̃kᵀ + dv·w̃vᵀ, accumulated in q/k/v order
+        // (before the q/k/v updates, same pre-update contract as wo)
+        if need_dx {
+            sm.bp(&params[pq], &self.dq, rows, d, d, &mut ex.scratch, &mut ex.pack, dx);
+            sm.bp(&params[pk], &self.dk, rows, d, d, &mut ex.scratch, &mut ex.pack, &mut self.tmp);
+            for (o, &g) in dx.iter_mut().zip(&self.tmp) {
+                *o += g;
+            }
+            sm.bp(&params[pv], &self.dv, rows, d, d, &mut ex.scratch, &mut ex.pack, &mut self.tmp);
+            for (o, &g) in dx.iter_mut().zip(&self.tmp) {
+                *o += g;
+            }
+        }
+        // WU + update for the three input projections
+        sm.wu(x, &self.dq, rows, d, d, &mut ex.pack, &mut ex.dw);
+        tensor::bias_grad_into(&self.dq, d, &mut ex.db);
+        sgd_update(&mut params[pq], &mut ex.dw, &ex.db, ex.lr, sm.method, sm.pattern);
+        sm.wu(x, &self.dk, rows, d, d, &mut ex.pack, &mut ex.dw);
+        tensor::bias_grad_into(&self.dk, d, &mut ex.db);
+        sgd_update(&mut params[pk], &mut ex.dw, &ex.db, ex.lr, sm.method, sm.pattern);
+        sm.wu(x, &self.dv, rows, d, d, &mut ex.pack, &mut ex.dw);
+        tensor::bias_grad_into(&self.dv, d, &mut ex.db);
+        sgd_update(&mut params[pv], &mut ex.dw, &ex.db, ex.lr, sm.method, sm.pattern);
+    }
+}

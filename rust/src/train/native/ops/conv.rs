@@ -1,0 +1,97 @@
+//! im2col convolution op (NHWC × HWIO).
+
+use crate::models::{MatMulShape, Stage};
+
+use super::tensor::ConvGeom;
+use super::{sgd_update, tensor, Exec, Op, Param};
+
+/// `y = relu?(im2col(x) · w̃_FF + b)` — the conv lowered to the same
+/// `(rows × k) · (k × co)` product the paper's Fig. 1 uses, with the
+/// channel-minor K layout keeping M ≤ C_i groups inside one kernel tap.
+pub struct Conv {
+    param: [usize; 1],
+    pub geom: ConvGeom,
+    pub relu: bool,
+    /// im2col matrix (kept for the WU product).
+    cols: Vec<f32>,
+    /// Pre-activation, kept for the ReLU backward.
+    z: Vec<f32>,
+    /// BP column-gradient scratch (col2im input).
+    dcols: Vec<f32>,
+}
+
+impl Conv {
+    pub fn new(param: usize, geom: ConvGeom, relu: bool) -> Conv {
+        Conv { param: [param], geom, relu, cols: Vec::new(), z: Vec::new(), dcols: Vec::new() }
+    }
+}
+
+impl Op for Conv {
+    fn name(&self) -> &'static str {
+        "conv"
+    }
+
+    fn out_len(&self, batch: usize) -> usize {
+        self.geom.rows(batch) * self.geom.co
+    }
+
+    fn param_slots(&self) -> &[usize] {
+        &self.param
+    }
+
+    fn matmul_shapes(&self, stage: Stage, batch: usize) -> Vec<MatMulShape> {
+        vec![super::weight_matmul_shapes(
+            stage,
+            self.geom.rows(batch),
+            self.geom.k(),
+            self.geom.co,
+        )]
+    }
+
+    fn forward_into(&mut self, x: &[f32], params: &[Param], ex: &mut Exec, out: &mut Vec<f32>) {
+        let p = &params[self.param[0]];
+        let (rows, k) = (self.geom.rows(ex.batch), self.geom.k());
+        tensor::im2col_into(x, ex.batch, &self.geom, &mut self.cols);
+        let sm = ex.sm;
+        sm.ff(p, &self.cols, rows, k, self.geom.co, &mut ex.scratch, &mut ex.pack, &mut self.z);
+        tensor::add_bias(&mut self.z, &p.b);
+        if self.relu {
+            tensor::relu_into(&self.z, out);
+        } else {
+            out.clear();
+            out.extend_from_slice(&self.z);
+        }
+    }
+
+    fn backward_into(
+        &mut self,
+        _x: &[f32],
+        dy: &mut [f32],
+        need_dx: bool,
+        params: &mut [Param],
+        ex: &mut Exec,
+        dx: &mut Vec<f32>,
+    ) {
+        if self.relu {
+            tensor::relu_backward(dy, &self.z);
+        }
+        let (rows, k, co) = (self.geom.rows(ex.batch), self.geom.k(), self.geom.co);
+        let sm = ex.sm;
+        if need_dx {
+            sm.bp(
+                &params[self.param[0]],
+                dy,
+                rows,
+                k,
+                co,
+                &mut ex.scratch,
+                &mut ex.pack,
+                &mut self.dcols,
+            );
+            tensor::col2im_into(&self.dcols, ex.batch, &self.geom, dx);
+        }
+        sm.wu(&self.cols, dy, rows, k, co, &mut ex.pack, &mut ex.dw);
+        tensor::bias_grad_into(dy, co, &mut ex.db);
+        sgd_update(&mut params[self.param[0]], &mut ex.dw, &ex.db, ex.lr, sm.method, sm.pattern);
+    }
+}

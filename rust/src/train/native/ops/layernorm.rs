@@ -1,0 +1,144 @@
+//! Layer normalization op (forward + full backward).
+
+use super::{sgd_update, Exec, Op, Param};
+
+/// Numerical-stability epsilon inside the √(σ² + ε).
+pub const LN_EPS: f32 = 1e-5;
+
+/// `y = γ ∘ (x − μ)/√(σ² + ε) + β` with per-row statistics over the
+/// feature axis — the transformer-block norm. The gain γ lives in its
+/// param's `w` (a `1 × dim` tensor, never N:M-pruned), the shift β in
+/// its `b`, so the shared optimizer update applies unchanged.
+///
+/// Backward (full, not the frozen-stats approximation):
+/// `dx = inv · (dŷ − mean(dŷ) − x̂ ∘ mean(dŷ ∘ x̂))` with `dŷ = dy ∘ γ`,
+/// plus `dγ = Σ_rows dy ∘ x̂` and `dβ = Σ_rows dy` — finite-difference
+/// checked in `tests/native_train.rs`.
+pub struct LayerNorm {
+    param: [usize; 1],
+    pub dim: usize,
+    /// Row multiplier (tokens; 1 for flat inputs).
+    pub tokens: usize,
+    /// Normalized activations x̂ of the forward pass.
+    xhat: Vec<f32>,
+    /// Per-row 1/√(σ² + ε).
+    inv: Vec<f32>,
+}
+
+impl LayerNorm {
+    pub fn new(param: usize, dim: usize, tokens: usize) -> LayerNorm {
+        LayerNorm { param: [param], dim, tokens, xhat: Vec::new(), inv: Vec::new() }
+    }
+
+    fn rows(&self, batch: usize) -> usize {
+        batch * self.tokens
+    }
+}
+
+impl Op for LayerNorm {
+    fn name(&self) -> &'static str {
+        "layernorm"
+    }
+
+    fn out_len(&self, batch: usize) -> usize {
+        self.rows(batch) * self.dim
+    }
+
+    fn param_slots(&self) -> &[usize] {
+        &self.param
+    }
+
+    /// γ/β are never N:M-pruned, so no w̃_BP encoding is ever needed.
+    fn bp_encode_slots(&self, _need_dx: bool) -> Vec<usize> {
+        Vec::new()
+    }
+
+    fn forward_into(&mut self, x: &[f32], params: &[Param], ex: &mut Exec, out: &mut Vec<f32>) {
+        let d = self.dim;
+        let rows = self.rows(ex.batch);
+        debug_assert_eq!(x.len(), rows * d, "layernorm input shape mismatch");
+        let p = &params[self.param[0]];
+        let (gamma, beta) = (&p.w, &p.b);
+        let inv_d = 1.0 / d as f32;
+        self.xhat.clear();
+        self.xhat.resize(rows * d, 0.0);
+        self.inv.clear();
+        self.inv.reserve(rows);
+        out.clear();
+        out.resize(rows * d, 0.0);
+        for r in 0..rows {
+            let xr = &x[r * d..(r + 1) * d];
+            let mut sum = 0.0f32;
+            for &v in xr {
+                sum += v;
+            }
+            let mean = sum * inv_d;
+            let mut var = 0.0f32;
+            for &v in xr {
+                let c = v - mean;
+                var += c * c;
+            }
+            let inv = 1.0 / (var * inv_d + LN_EPS).sqrt();
+            self.inv.push(inv);
+            let xh = &mut self.xhat[r * d..(r + 1) * d];
+            let or = &mut out[r * d..(r + 1) * d];
+            for j in 0..d {
+                let h = (xr[j] - mean) * inv;
+                xh[j] = h;
+                or[j] = gamma[j] * h + beta[j];
+            }
+        }
+    }
+
+    fn backward_into(
+        &mut self,
+        _x: &[f32],
+        dy: &mut [f32],
+        need_dx: bool,
+        params: &mut [Param],
+        ex: &mut Exec,
+        dx: &mut Vec<f32>,
+    ) {
+        let d = self.dim;
+        let rows = self.rows(ex.batch);
+        let inv_d = 1.0 / d as f32;
+        let sm = ex.sm;
+        // dγ / dβ — column sums over all rows, ascending
+        ex.dw.clear();
+        ex.dw.resize(d, 0.0);
+        ex.db.clear();
+        ex.db.resize(d, 0.0);
+        for r in 0..rows {
+            let dr = &dy[r * d..(r + 1) * d];
+            let xh = &self.xhat[r * d..(r + 1) * d];
+            for j in 0..d {
+                ex.dw[j] += dr[j] * xh[j];
+                ex.db[j] += dr[j];
+            }
+        }
+        if need_dx {
+            let gamma = &params[self.param[0]].w;
+            dx.clear();
+            dx.resize(rows * d, 0.0);
+            for r in 0..rows {
+                let dr = &dy[r * d..(r + 1) * d];
+                let xh = &self.xhat[r * d..(r + 1) * d];
+                let inv = self.inv[r];
+                let (mut m1, mut m2) = (0.0f32, 0.0f32);
+                for j in 0..d {
+                    let dh = dr[j] * gamma[j];
+                    m1 += dh;
+                    m2 += dh * xh[j];
+                }
+                m1 *= inv_d;
+                m2 *= inv_d;
+                let ox = &mut dx[r * d..(r + 1) * d];
+                for j in 0..d {
+                    let dh = dr[j] * gamma[j];
+                    ox[j] = inv * (dh - m1 - xh[j] * m2);
+                }
+            }
+        }
+        sgd_update(&mut params[self.param[0]], &mut ex.dw, &ex.db, ex.lr, sm.method, sm.pattern);
+    }
+}

@@ -1,0 +1,92 @@
+//! Fully-connected op (`fi → fo`, optionally over a token axis).
+
+use crate::models::{MatMulShape, Stage};
+
+use super::{sgd_update, tensor, Exec, Op, Param};
+
+/// `y = relu?(x · w̃_FF + b)` over `batch · tokens` rows.
+pub struct Linear {
+    param: [usize; 1],
+    pub fi: usize,
+    pub fo: usize,
+    /// Token multiplier of the row axis (1 for flat inputs).
+    pub tokens: usize,
+    pub relu: bool,
+    /// Pre-activation, kept for the ReLU backward.
+    z: Vec<f32>,
+}
+
+impl Linear {
+    pub fn new(param: usize, fi: usize, fo: usize, tokens: usize, relu: bool) -> Linear {
+        Linear { param: [param], fi, fo, tokens, relu, z: Vec::new() }
+    }
+
+    fn rows(&self, batch: usize) -> usize {
+        batch * self.tokens
+    }
+}
+
+impl Op for Linear {
+    fn name(&self) -> &'static str {
+        "linear"
+    }
+
+    fn out_len(&self, batch: usize) -> usize {
+        self.rows(batch) * self.fo
+    }
+
+    fn param_slots(&self) -> &[usize] {
+        &self.param
+    }
+
+    fn matmul_shapes(&self, stage: Stage, batch: usize) -> Vec<MatMulShape> {
+        vec![super::weight_matmul_shapes(stage, self.rows(batch), self.fi, self.fo)]
+    }
+
+    fn forward_into(&mut self, x: &[f32], params: &[Param], ex: &mut Exec, out: &mut Vec<f32>) {
+        let rows = self.rows(ex.batch);
+        let p = &params[self.param[0]];
+        let sm = ex.sm;
+        sm.ff(p, x, rows, self.fi, self.fo, &mut ex.scratch, &mut ex.pack, &mut self.z);
+        tensor::add_bias(&mut self.z, &p.b);
+        if self.relu {
+            tensor::relu_into(&self.z, out);
+        } else {
+            out.clear();
+            out.extend_from_slice(&self.z);
+        }
+    }
+
+    fn backward_into(
+        &mut self,
+        x: &[f32],
+        dy: &mut [f32],
+        need_dx: bool,
+        params: &mut [Param],
+        ex: &mut Exec,
+        dx: &mut Vec<f32>,
+    ) {
+        let rows = self.rows(ex.batch);
+        if self.relu {
+            tensor::relu_backward(dy, &self.z);
+        }
+        let sm = ex.sm;
+        if need_dx {
+            // dx before the update: w̃_BP must come from this step's
+            // pre-update weights (the pre-generation contract)
+            sm.bp(
+                &params[self.param[0]],
+                dy,
+                rows,
+                self.fi,
+                self.fo,
+                &mut ex.scratch,
+                &mut ex.pack,
+                dx,
+            );
+        }
+        sm.wu(x, dy, rows, self.fi, self.fo, &mut ex.pack, &mut ex.dw);
+        tensor::bias_grad_into(dy, self.fo, &mut ex.db);
+        sgd_update(&mut params[self.param[0]], &mut ex.dw, &ex.db, ex.lr, sm.method, sm.pattern);
+    }
+}

@@ -1,0 +1,355 @@
+//! The op graph of the native training engine.
+//!
+//! PR 2–4 hard-wired the engine as a closed `Node` enum with one
+//! forward `match` and one backward `match`; extending the model family
+//! meant editing both loops and the scratch plumbing around them. This
+//! module replaces that with an open op set:
+//!
+//! * **[`Op`]** — one node of the lowered compute graph. An op owns its
+//!   saved forward state (pre-activations, im2col matrices, attention
+//!   probabilities, …), exposes shape inference ([`Op::out_len`]) and
+//!   its MatMul inventory ([`Op::matmul_shapes`], which must agree with
+//!   [`crate::models::Layer::stage_matmuls`] — property-tested), and
+//!   implements `forward_into` / `backward_into` against the shared
+//!   execution context.
+//! * **[`SparseMatmul`]** — the bidirectional N:M masking +
+//!   pre-generation policy, hoisted out of the engine so that EVERY op
+//!   with a weight MatMul (linear, conv, and all four attention
+//!   projections) routes through one implementation of the Fig. 3
+//!   method table: w̃_FF on the forward product, w̃_BP (or SDGP's
+//!   pruned gradients) on the backward product, compact
+//!   compute-skipping kernels when the pre-generated encodings are
+//!   active. Bit-identity with the PR 2–4 engine is preserved: same
+//!   packed GEMM core, same ascending accumulation order, same pool
+//!   dispatch, same auto-gating.
+//! * **[`Exec`]** — the per-net scratch the ops share (packed-B panel
+//!   scratch, masked-prune scratch, weight/bias gradient buffers), so
+//!   the step loop stays allocation-free after warm-up.
+//!
+//! Adding an op = one file implementing [`Op`] + a lowering arm in
+//! `NativeNet::build`. [`attention::Attention`] and
+//! [`layernorm::LayerNorm`] (the ViT block) are the first ops added
+//! this way; see the README's "Op-graph architecture" section.
+
+pub mod attention;
+pub mod conv;
+pub mod layernorm;
+pub mod linear;
+pub mod pool;
+pub mod tensor;
+
+pub use attention::Attention;
+pub use conv::Conv;
+pub use layernorm::LayerNorm;
+pub use linear::Linear;
+pub use pool::{GlobalAvg, MaxPool, TokenPool};
+// The tensor primitives keep their historical `ops::matmul` paths.
+pub use tensor::*;
+
+use crate::models::{MatMulShape, Stage};
+use crate::nm::{
+    prune_mask, prune_values_into, CompactNm, Method, NmPattern, PackedNm, PruneAxis,
+};
+use crate::util::Pcg32;
+
+use super::gemm::PackedB;
+use super::par;
+use super::{SparseCompute, MOMENTUM, SRSTE_LAMBDA, WEIGHT_DECAY};
+
+/// One weighted tensor (a projection matrix, conv filter bank, or a
+/// layer-norm gain) plus its bias, momentum state, and the reusable
+/// compact/panel encodings of the per-step w̃ pre-generation.
+pub struct Param {
+    /// Weights, row-major `(rows × cols)` = `(K × F)`.
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub rows: usize,
+    pub cols: usize,
+    /// Momentum buffers (the optimizer state WUVE holds on-chip).
+    pub mw: Vec<f32>,
+    pub mb: Vec<f32>,
+    /// Tensor admitted to N:M pruning (sparse_ok && M-divisible).
+    pub nm_ok: bool,
+    /// Pre-generated compact w̃_FFᵀ / w̃_BP for the current step's
+    /// weights (the W2E buffer contents, re-encoded once per step when
+    /// the compact compute path is active; buffers reused across steps).
+    pub enc_ff: CompactNm,
+    pub enc_bp: CompactNm,
+    /// Panel-packed views of `enc_ff`/`enc_bp` — the layout the packed
+    /// spmm microkernels consume, re-packed in the same per-step
+    /// pre-generation pass (buffers reused across steps).
+    pub pk_ff: PackedNm,
+    pub pk_bp: PackedNm,
+}
+
+impl Param {
+    /// Uniform ±√(6/rows) init (pinned to `model.py`), zero bias.
+    pub fn init(rng: &mut Pcg32, rows: usize, cols: usize, nm_ok: bool, p: NmPattern) -> Param {
+        let scale = (6.0 / rows as f32).sqrt();
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.uniform(-scale, scale)).collect();
+        Param::from_weights(w, rows, cols, nm_ok, p)
+    }
+
+    /// Layer-norm gain/shift: γ = 1, β = 0 — consumes no RNG stream, so
+    /// inserting norms never perturbs the init of downstream layers.
+    pub fn norm_init(dim: usize, p: NmPattern) -> Param {
+        Param::from_weights(vec![1.0; dim], 1, dim, false, p)
+    }
+
+    fn from_weights(w: Vec<f32>, rows: usize, cols: usize, nm_ok: bool, p: NmPattern) -> Param {
+        Param {
+            mw: vec![0.0; w.len()],
+            mb: vec![0.0; cols],
+            b: vec![0.0; cols],
+            w,
+            rows,
+            cols,
+            nm_ok,
+            enc_ff: CompactNm::empty(p),
+            enc_bp: CompactNm::empty(p),
+            pk_ff: PackedNm::empty(p),
+            pk_bp: PackedNm::empty(p),
+        }
+    }
+}
+
+/// The shared FF/BP N:M masking + compute-path policy — Fig. 3 as a
+/// value. Copy-cheap; the engine rebuilds it from its knobs each step.
+#[derive(Clone, Copy)]
+pub struct SparseMatmul {
+    pub method: Method,
+    pub pattern: NmPattern,
+    /// Compute-path selection for weight-pruned stages.
+    pub sparse: SparseCompute,
+    /// Worker threads (0 = auto); never affects results.
+    pub threads: usize,
+}
+
+impl SparseMatmul {
+    /// Whether the knob admits compact kernels at this pattern.
+    pub fn knob_allows(&self) -> bool {
+        match self.sparse {
+            SparseCompute::Off => false,
+            SparseCompute::On => true,
+            SparseCompute::Auto => self.pattern.sparsity() > 0.5,
+        }
+    }
+
+    /// FF runs on compact kernels (method prunes FF weights + knob).
+    pub fn ff_compact(&self) -> bool {
+        self.method.stage_sparse(Stage::FF) && self.knob_allows()
+    }
+
+    /// BP runs on compact kernels — weight-pruning BP methods only
+    /// (SDGP prunes *gradients*, which have no pre-generable encoding,
+    /// so it always takes the masked-dense path).
+    pub fn bp_compact(&self) -> bool {
+        matches!(self.method, Method::Sdwp | Method::Bdwp) && self.knob_allows()
+    }
+
+    /// Worker count for one matmul (explicit `threads`, or auto-gated
+    /// on the work size). Result-neutral by the [`par`] contract.
+    pub fn workers(&self, macs: u64) -> usize {
+        par::resolve_workers(self.threads, macs)
+    }
+
+    /// Forward-pass weights of one param on the masked-dense path:
+    /// w̃_FF into the scratch buffer when the (method, tensor) pair
+    /// prunes, the raw weights otherwise.
+    pub fn ff_w<'a>(&self, p: &'a Param, scratch: &'a mut Vec<f32>) -> &'a [f32] {
+        if p.nm_ok && self.method.stage_sparse(Stage::FF) {
+            prune_values_into(&p.w, p.rows, p.cols, self.pattern, PruneAxis::Rows, scratch);
+            scratch
+        } else {
+            &p.w
+        }
+    }
+
+    /// FF product `out = input · w̃_FF` for one `(k × f)` weight tensor:
+    /// packed compute-skipping kernel when active, packed masked-dense
+    /// GEMM otherwise.
+    #[allow(clippy::too_many_arguments)]
+    pub fn ff(
+        &self,
+        p: &Param,
+        input: &[f32],
+        rows: usize,
+        k: usize,
+        f: usize,
+        scratch: &mut Vec<f32>,
+        pack: &mut PackedB,
+        out: &mut Vec<f32>,
+    ) {
+        let workers = self.workers((rows * k * f) as u64);
+        if p.nm_ok && self.ff_compact() {
+            par::spmm_ff_into(input, &p.pk_ff, rows, k, f, workers, out);
+        } else {
+            let w = self.ff_w(p, scratch);
+            par::matmul_into(input, w, rows, k, f, workers, pack, out);
+        }
+    }
+
+    /// BP-stage input gradient `out = dy · w̃ᵀ` with the method's
+    /// backward sparsity (Fig. 3): w̃_BP for SDWP/BDWP (packed compact
+    /// kernel when active), pruned output gradients for SDGP, dense
+    /// otherwise. Always reads the CURRENT weights — ops must call this
+    /// before updating `p`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn bp(
+        &self,
+        p: &Param,
+        dy: &[f32],
+        rows: usize,
+        k: usize,
+        f: usize,
+        scratch: &mut Vec<f32>,
+        pack: &mut PackedB,
+        out: &mut Vec<f32>,
+    ) {
+        let workers = self.workers((rows * k * f) as u64);
+        if p.nm_ok {
+            match self.method {
+                Method::Sdwp | Method::Bdwp if self.bp_compact() => {
+                    return par::spmm_bt_into(dy, &p.pk_bp, rows, f, k, workers, out);
+                }
+                Method::Sdwp | Method::Bdwp => {
+                    prune_values_into(&p.w, k, f, self.pattern, PruneAxis::Cols, scratch);
+                    return par::matmul_bt_into(dy, scratch, rows, f, k, workers, pack, out);
+                }
+                Method::Sdgp => {
+                    prune_values_into(dy, rows, f, self.pattern, PruneAxis::Cols, scratch);
+                    return par::matmul_bt_into(scratch, &p.w, rows, f, k, workers, pack, out);
+                }
+                _ => {}
+            }
+        }
+        par::matmul_bt_into(dy, &p.w, rows, f, k, workers, pack, out)
+    }
+
+    /// WU product `out = inputᵀ · dy` — dense for every method
+    /// (Algorithm 1 line 9), on the packed pool driver.
+    pub fn wu(
+        &self,
+        input: &[f32],
+        dy: &[f32],
+        rows: usize,
+        k: usize,
+        f: usize,
+        pack: &mut PackedB,
+        out: &mut Vec<f32>,
+    ) {
+        let workers = self.workers((rows * k * f) as u64);
+        par::matmul_at_into(input, dy, rows, k, f, workers, pack, out);
+    }
+}
+
+/// Momentum-SGD update with decoupled weight decay; SR-STE adds its
+/// sparse-refined term to the weight gradient first. One shared
+/// implementation for every parameterized op.
+pub fn sgd_update(
+    p: &mut Param,
+    dw: &mut [f32],
+    db: &[f32],
+    lr: f32,
+    method: Method,
+    pattern: NmPattern,
+) {
+    if p.nm_ok && method == Method::SrSte {
+        let mask = prune_mask(&p.w, p.rows, p.cols, pattern, PruneAxis::Rows);
+        for ((g, &keep), &w) in dw.iter_mut().zip(&mask).zip(&p.w) {
+            if !keep {
+                *g += SRSTE_LAMBDA * w;
+            }
+        }
+    }
+    for ((w, m), &g) in p.w.iter_mut().zip(&mut p.mw).zip(dw.iter()) {
+        let g = g + WEIGHT_DECAY * *w;
+        *m = MOMENTUM * *m + g;
+        *w -= lr * *m;
+    }
+    for ((b, m), &g) in p.b.iter_mut().zip(&mut p.mb).zip(db) {
+        let g = g + WEIGHT_DECAY * *b;
+        *m = MOMENTUM * *m + g;
+        *b -= lr * *m;
+    }
+}
+
+/// The shared execution context of one training/eval pass: the masking
+/// policy plus every scratch buffer the ops reuse across steps.
+pub struct Exec {
+    pub batch: usize,
+    pub lr: f32,
+    pub sm: SparseMatmul,
+    /// Masked-dense prune scratch (w̃/g̃ on the non-compact path).
+    pub scratch: Vec<f32>,
+    /// Packed-B panel scratch shared by every dense GEMM of the step.
+    pub pack: PackedB,
+    /// Weight/bias gradient scratch, reused across ops and steps.
+    pub dw: Vec<f32>,
+    pub db: Vec<f32>,
+}
+
+/// One node of the lowered compute graph.
+///
+/// Contract: `forward_into` fills `out` (and whatever internal state the
+/// backward needs); `backward_into` consumes the gradient w.r.t. its
+/// output in `dy` (mutably — ReLU masking happens in place), writes the
+/// gradient w.r.t. its input into `dx` iff `need_dx`, computes its
+/// weight gradients into the shared scratch, and applies the optimizer
+/// update to its own params — reading every weight BEFORE updating it,
+/// so the pre-generated encodings (encoded from the step's pre-update
+/// weights) and the masked-dense path stay exactly interchangeable.
+pub trait Op {
+    fn name(&self) -> &'static str;
+
+    /// Output activation length at batch size `batch`.
+    fn out_len(&self, batch: usize) -> usize;
+
+    /// Slots in the engine's param table owned by this op.
+    fn param_slots(&self) -> &[usize] {
+        &[]
+    }
+
+    /// Owned slots whose w̃_BP encoding the backward pass will read —
+    /// the per-op half of the pre-generation set. Default: all owned
+    /// params when the op must produce `dx`, none otherwise (the first
+    /// op of a net never back-propagates into the input).
+    fn bp_encode_slots(&self, need_dx: bool) -> Vec<usize> {
+        if need_dx {
+            self.param_slots().to_vec()
+        } else {
+            Vec::new()
+        }
+    }
+
+    /// The MatMuls this op executes in one stage — the native twin of
+    /// [`crate::models::Layer::stage_matmuls`], property-tested to
+    /// agree with it so the simulator prices exactly what the engine
+    /// runs. Parameter-free ops return none.
+    fn matmul_shapes(&self, _stage: Stage, _batch: usize) -> Vec<MatMulShape> {
+        Vec::new()
+    }
+
+    fn forward_into(&mut self, x: &[f32], params: &[Param], ex: &mut Exec, out: &mut Vec<f32>);
+
+    #[allow(clippy::too_many_arguments)]
+    fn backward_into(
+        &mut self,
+        x: &[f32],
+        dy: &mut [f32],
+        need_dx: bool,
+        params: &mut [Param],
+        ex: &mut Exec,
+        dx: &mut Vec<f32>,
+    );
+}
+
+/// Single-MatMul helper for [`Op::matmul_shapes`] implementations:
+/// the (FF, BP, WU) shapes of one `(k × f)` weight product at `rows`.
+pub(crate) fn weight_matmul_shapes(stage: Stage, rows: usize, k: usize, f: usize) -> MatMulShape {
+    match stage {
+        Stage::FF => MatMulShape { m: rows, k, n: f, weight_is_rhs: true },
+        Stage::BP => MatMulShape { m: rows, k: f, n: k, weight_is_rhs: true },
+        Stage::WU => MatMulShape { m: k, k: rows, n: f, weight_is_rhs: false },
+    }
+}

@@ -1,0 +1,120 @@
+//! Parameter-free spatial/token reduction ops.
+
+use super::{tensor, Exec, Op, Param};
+
+/// Non-overlapping `factor × factor` max pooling over NHWC.
+pub struct MaxPool {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub factor: usize,
+    /// Winner offsets of the forward pass (backward scatter routes).
+    arg: Vec<u32>,
+}
+
+impl MaxPool {
+    pub fn new(h: usize, w: usize, c: usize, factor: usize) -> MaxPool {
+        MaxPool { h, w, c, factor, arg: Vec::new() }
+    }
+}
+
+impl Op for MaxPool {
+    fn name(&self) -> &'static str {
+        "maxpool"
+    }
+
+    fn out_len(&self, batch: usize) -> usize {
+        batch * (self.h / self.factor) * (self.w / self.factor) * self.c
+    }
+
+    fn forward_into(&mut self, x: &[f32], _params: &[Param], ex: &mut Exec, out: &mut Vec<f32>) {
+        tensor::maxpool_into(x, ex.batch, self.h, self.w, self.c, self.factor, out, &mut self.arg);
+    }
+
+    fn backward_into(
+        &mut self,
+        _x: &[f32],
+        dy: &mut [f32],
+        need_dx: bool,
+        _params: &mut [Param],
+        ex: &mut Exec,
+        dx: &mut Vec<f32>,
+    ) {
+        if need_dx {
+            tensor::maxpool_backward_into(
+                dy, &self.arg, ex.batch, self.h, self.w, self.c, self.factor, dx,
+            );
+        }
+    }
+}
+
+/// Global average pool NHWC → `(batch, c)` (conv stack → classifier).
+pub struct GlobalAvg {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl Op for GlobalAvg {
+    fn name(&self) -> &'static str {
+        "gap"
+    }
+
+    fn out_len(&self, batch: usize) -> usize {
+        batch * self.c
+    }
+
+    fn forward_into(&mut self, x: &[f32], _params: &[Param], ex: &mut Exec, out: &mut Vec<f32>) {
+        tensor::global_avg_into(x, ex.batch, self.h, self.w, self.c, out);
+    }
+
+    fn backward_into(
+        &mut self,
+        _x: &[f32],
+        dy: &mut [f32],
+        need_dx: bool,
+        _params: &mut [Param],
+        ex: &mut Exec,
+        dx: &mut Vec<f32>,
+    ) {
+        if need_dx {
+            tensor::global_avg_backward_into(dy, ex.batch, self.h, self.w, self.c, dx);
+        }
+    }
+}
+
+/// Mean pool over the token axis, `(batch·tokens, dim)` → `(batch, dim)`
+/// — the ViT head's sequence reduction. Exactly a [`GlobalAvg`] with a
+/// `tokens × 1` window, and implemented on the same kernels.
+pub struct TokenPool {
+    pub tokens: usize,
+    pub dim: usize,
+}
+
+impl Op for TokenPool {
+    fn name(&self) -> &'static str {
+        "tokenpool"
+    }
+
+    fn out_len(&self, batch: usize) -> usize {
+        batch * self.dim
+    }
+
+    fn forward_into(&mut self, x: &[f32], _params: &[Param], ex: &mut Exec, out: &mut Vec<f32>) {
+        tensor::global_avg_into(x, ex.batch, self.tokens, 1, self.dim, out);
+    }
+
+    fn backward_into(
+        &mut self,
+        _x: &[f32],
+        dy: &mut [f32],
+        need_dx: bool,
+        _params: &mut [Param],
+        ex: &mut Exec,
+        dx: &mut Vec<f32>,
+    ) {
+        if need_dx {
+            tensor::global_avg_backward_into(dy, ex.batch, self.tokens, 1, self.dim, dx);
+        }
+    }
+}

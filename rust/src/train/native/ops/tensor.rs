@@ -1,4 +1,5 @@
-//! Dense f32 tensor primitives for the native training backend.
+//! Dense f32 tensor primitives for the native training backend — the
+//! kernel substrate the [`super::Op`] implementations are built from.
 //!
 //! Everything operates on flat row-major slices with explicit shapes —
 //! the same (B, K) × (K, F) MatMul currency as the rest of the stack.
@@ -9,9 +10,10 @@
 
 /// Row block of `x (rows × k) @ w (k × cols)`: computes output rows
 /// `row0 ..` for as many rows as `out` holds (`out.len() / cols`),
-/// reading the full `x`/`w`. This is the unit the threaded driver
-/// ([`super::par`]) tiles over — the serial [`matmul`] is the
-/// one-block special case, so both paths share one accumulation order.
+/// reading the full `x`/`w`, ACCUMULATING into `out` (callers zero it).
+/// This is the unit the threaded driver ([`super::super::par`]) tiles
+/// over — the serial [`matmul`] is the one-block special case, so both
+/// paths share one accumulation order.
 pub fn matmul_block(x: &[f32], w: &[f32], k: usize, cols: usize, row0: usize, out: &mut [f32]) {
     for (i, or) in out.chunks_exact_mut(cols).enumerate() {
         let xr = &x[(row0 + i) * k..(row0 + i + 1) * k];
@@ -183,6 +185,47 @@ pub fn softmax_xent(logits: &[f32], y: &[f32], batch: usize, classes: usize) -> 
         }
     }
     (loss * inv_b, dl)
+}
+
+/// Row-wise softmax of `s (rows × width)` into a reusable buffer
+/// (max-subtracted, ascending-index accumulation — the attention
+/// probability pass).
+pub fn softmax_rows_into(s: &[f32], width: usize, out: &mut Vec<f32>) {
+    debug_assert!(width > 0 && s.len() % width == 0);
+    out.clear();
+    out.reserve(s.len());
+    for row in s.chunks_exact(width) {
+        let zmax = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let base = out.len();
+        let mut sum = 0.0f32;
+        for &z in row {
+            let e = (z - zmax).exp();
+            sum += e;
+            out.push(e);
+        }
+        let inv = 1.0 / sum;
+        for v in &mut out[base..base + width] {
+            *v *= inv;
+        }
+    }
+}
+
+/// Backward of a row-wise softmax with a post-scale: given probabilities
+/// `p` and upstream `dp` (both `rows × width`), writes
+/// `ds = p ∘ (dp − Σ_j dp∘p) · scale` in place over `dp` — the score
+/// gradient of the attention block (the `scale` undoes the pre-softmax
+/// `1/√d` scoring scale in the same pass).
+pub fn softmax_rows_backward(dp: &mut [f32], p: &[f32], width: usize, scale: f32) {
+    debug_assert_eq!(dp.len(), p.len());
+    for (dr, pr) in dp.chunks_exact_mut(width).zip(p.chunks_exact(width)) {
+        let mut dot = 0.0f32;
+        for (&d, &pv) in dr.iter().zip(pr) {
+            dot += d * pv;
+        }
+        for (d, &pv) in dr.iter_mut().zip(pr) {
+            *d = pv * (*d - dot) * scale;
+        }
+    }
 }
 
 /// Fraction of rows whose argmax logit matches the one-hot label.
@@ -566,6 +609,51 @@ mod tests {
             let (dn, _) = softmax_xent(&lp, &y, b, c);
             let num = (up - dn) / (2.0 * eps);
             assert!((num - dl[i]).abs() < 1e-3, "i={i}: {num} vs {}", dl[i]);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_normalizes_and_matches_xent_probabilities() {
+        let mut g = Gen::new(17);
+        let (rows, w) = (5, 7);
+        let s = g.vec_normal(rows * w);
+        let mut p = Vec::new();
+        softmax_rows_into(&s, w, &mut p);
+        for row in p.chunks_exact(w) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "row sums to {sum}");
+            assert!(row.iter().all(|&v| v > 0.0));
+        }
+        // argmax preserved
+        for (sr, pr) in s.chunks_exact(w).zip(p.chunks_exact(w)) {
+            assert_eq!(argmax(sr), argmax(pr));
+        }
+    }
+
+    #[test]
+    fn softmax_rows_backward_matches_finite_difference() {
+        let mut g = Gen::new(18);
+        let w = 6;
+        let s = g.vec_normal(w);
+        let dy = g.vec_normal(w);
+        let scale = 0.5f32;
+        let loss = |s: &[f32]| -> f32 {
+            let mut p = Vec::new();
+            softmax_rows_into(&(s.iter().map(|&v| v * scale).collect::<Vec<_>>()), w, &mut p);
+            p.iter().zip(&dy).map(|(a, b)| a * b).sum()
+        };
+        let mut p = Vec::new();
+        softmax_rows_into(&(s.iter().map(|&v| v * scale).collect::<Vec<_>>()), w, &mut p);
+        let mut ds = dy.clone();
+        softmax_rows_backward(&mut ds, &p, w, scale);
+        let eps = 1e-2f32;
+        for i in 0..w {
+            let mut up = s.clone();
+            up[i] += eps;
+            let mut dn = s.clone();
+            dn[i] -= eps;
+            let num = (loss(&up) - loss(&dn)) / (2.0 * eps);
+            assert!((num - ds[i]).abs() < 2e-3, "i={i}: {num} vs {}", ds[i]);
         }
     }
 
