@@ -18,20 +18,29 @@
 //!    per-call `thread::scope` spawn (`par::scoped_row_blocks`) vs the
 //!    parked worker pool, isolating the fan-out overhead the pool
 //!    removes from every step-loop matmul.
+//! 4. **kernel sets** — every set [`simd::available_sets`] reports on
+//!    this host (scalar always; AVX2/NEON when detected) on the packed
+//!    dense, spmm and per-sample attention-shaped products, serial, so
+//!    the rows isolate the microkernel gain from pool scaling.
+//!    Acceptance: SIMD ≥ 3x scalar geomean on the f=256 dense shapes;
+//!    `--min-simd-speedup X` turns the dense + spmm f=256 geomeans
+//!    into hard asserts (CI pins 2.0; skipped with a note when only
+//!    the scalar set is available).
 //!
 //! Every timed kernel is parity-asserted against its oracle first.
 //! Emits `BENCH_nm_kernels.json` in the `sat bench-diff` row schema so
 //! CI can self-diff and archive it.
 //!
 //! Run: `cargo bench --bench nm_kernels` (add `-- --quick` for the CI
-//! smoke grid, `-- --out FILE` to change the report path).
+//! smoke grid, `-- --out FILE` to change the report path,
+//! `-- --min-simd-speedup X` to gate the kernel-set geomeans).
 
 use sat::models::zoo::Model;
 use sat::models::{Layer, LayerKind};
 use sat::nm::{prune_values, CompactNm, Method, NmPattern, PruneAxis};
 use sat::train::native::gemm::{self, PackedB};
 use sat::train::native::pool::{self, TileGrid};
-use sat::train::native::{ops, par, sparse_ops, NativeNet, SparseCompute};
+use sat::train::native::{ops, par, simd, sparse_ops, NativeNet, SparseCompute};
 use sat::util::json;
 use sat::util::prng::Pcg32;
 use sat::util::stats::geomean;
@@ -40,7 +49,7 @@ use sat::util::timer::{bench, Measurement};
 
 struct KernelRow {
     shape: String,
-    kernel: &'static str,
+    kernel: String,
     pattern: String,
     k: usize,
     f: usize,
@@ -53,7 +62,7 @@ impl KernelRow {
     fn json(&self) -> String {
         json::Obj::new()
             .field_str("model", &self.shape)
-            .field_str("method", self.kernel)
+            .field_str("method", &self.kernel)
             .field_str("pattern", &self.pattern)
             .field_usize("rows", self.k)
             .field_usize("cols", self.f)
@@ -83,6 +92,11 @@ fn main() -> anyhow::Result<()> {
         .position(|a| a == "--out")
         .and_then(|i| argv.get(i + 1).cloned())
         .unwrap_or_else(|| "BENCH_nm_kernels.json".to_string());
+    let min_simd_speedup: Option<f64> = argv
+        .iter()
+        .position(|a| a == "--min-simd-speedup")
+        .and_then(|i| argv.get(i + 1))
+        .map(|v| v.parse().expect("--min-simd-speedup takes a number"));
     let threaded_workers = 4usize;
     let (warmup, iters) = if quick { (1, 3) } else { (2, 7) };
     // ResNet-ish im2col shapes (B·Ho·Wo, kh·kw·Ci, Co), constant dense
@@ -197,7 +211,8 @@ fn main() -> anyhow::Result<()> {
                         ("matmul_at", "legacy") => "dense_at_legacy",
                         ("matmul_at", "packed") => "dense_at_packed",
                         _ => "dense_at_packed_mt",
-                    },
+                    }
+                    .to_string(),
                     pattern: "dense".to_string(),
                     k,
                     f,
@@ -339,7 +354,7 @@ fn main() -> anyhow::Result<()> {
             ] {
                 rows.push(KernelRow {
                     shape: shape.clone(),
-                    kernel,
+                    kernel: kernel.to_string(),
                     pattern: p.to_string(),
                     k,
                     f,
@@ -379,7 +394,7 @@ fn main() -> anyhow::Result<()> {
     for (kernel, m) in [("dispatch_scoped", disp_scoped), ("dispatch_pool", disp_pool)] {
         rows.push(KernelRow {
             shape: "dispatch32".into(),
-            kernel,
+            kernel: kernel.to_string(),
             pattern: "dense".into(),
             k: 32,
             f: 1,
@@ -388,6 +403,163 @@ fn main() -> anyhow::Result<()> {
             dense_macs: 0,
         });
     }
+
+    // ---- 4. kernel sets: scalar vs SIMD on the packed drivers ----
+    // Serial (1 worker) so the rows isolate the microkernel gain; every
+    // set is parity-pinned `==` against the scalar set before timing
+    // (the no-FMA lane-parallel design makes exact equality the
+    // contract, not a tolerance).
+    let sets = simd::available_sets();
+    let mut simd_dense_speedups_256 = Vec::new();
+    let mut simd_spmm_speedups_256 = Vec::new();
+    let mut simd_table = Table::new("kernel sets — scalar vs SIMD packed drivers (serial)")
+        .header(&["shape", "op", "set", "ms", "vs scalar"]);
+    for &(b, k, f) in shapes {
+        let mut rng = Pcg32::new(0x51D0 + k as u64);
+        let x = vec_normal(&mut rng, b * k);
+        let w = vec_normal(&mut rng, k * f);
+        let dy = vec_normal(&mut rng, b * f);
+        let macs = (b * k * f) as u64;
+        let shape = format!("b{b}_k{k}_f{f}");
+        let p = NmPattern::P2_8;
+        let pk_ff = CompactNm::encode_t(&w, k, f, p).pack_panels(gemm::NR);
+        type DriveFn<'a> = Box<dyn FnMut(&simd::KernelSet) -> Vec<f32> + 'a>;
+        let ops_under_test: Vec<(&'static str, String, DriveFn<'_>)> = vec![
+            ("dense_matmul", "dense".to_string(), {
+                let (mut pack, mut buf) = (PackedB::default(), Vec::new());
+                let (x, w) = (x.as_slice(), w.as_slice());
+                Box::new(move |ks| {
+                    par::matmul_into_with(ks, x, w, b, k, f, 1, &mut pack, &mut buf);
+                    buf.clone()
+                })
+            }),
+            ("dense_bt", "dense".to_string(), {
+                let (mut pack, mut buf) = (PackedB::default(), Vec::new());
+                let (dy, w) = (dy.as_slice(), w.as_slice());
+                Box::new(move |ks| {
+                    par::matmul_bt_into_with(ks, dy, w, b, f, k, 1, &mut pack, &mut buf);
+                    buf.clone()
+                })
+            }),
+            ("spmm_ff", p.to_string(), {
+                let mut buf = Vec::new();
+                let (x, pk_ff) = (x.as_slice(), &pk_ff);
+                Box::new(move |ks| {
+                    par::spmm_ff_into_with(ks, x, pk_ff, b, k, f, 1, &mut buf);
+                    buf.clone()
+                })
+            }),
+        ];
+        for (op, pattern, mut drive) in ops_under_test {
+            let want = drive(&simd::SCALAR);
+            let mut scalar_ms = 0.0f64;
+            for ks in &sets {
+                assert_eq!(drive(ks), want, "{} != scalar at {op} {shape}", ks.name);
+                let m = bench(&format!("{op}/{} {shape}", ks.name), warmup, iters, || {
+                    drive(ks).len()
+                });
+                if ks.name == "scalar" {
+                    scalar_ms = m.mean_s;
+                }
+                let speedup = scalar_ms / m.mean_s;
+                if ks.name != "scalar" && f == 256 {
+                    if op == "spmm_ff" {
+                        simd_spmm_speedups_256.push(speedup);
+                    } else {
+                        simd_dense_speedups_256.push(speedup);
+                    }
+                }
+                simd_table.row(&[
+                    shape.clone(),
+                    op.to_string(),
+                    ks.name.to_string(),
+                    format!("{:.2}", m.mean_s * 1e3),
+                    format!("{speedup:.2}x"),
+                ]);
+                rows.push(KernelRow {
+                    shape: shape.clone(),
+                    kernel: format!("{op}_{}", ks.name),
+                    pattern: pattern.clone(),
+                    k,
+                    f,
+                    workers: 1,
+                    m,
+                    dense_macs: macs,
+                });
+            }
+        }
+    }
+    // per-sample attention-shaped products (ViT zoo block: tokens=64,
+    // dim=384, 8 samples) — the score/context loop the attention op
+    // runs on the active kernel set, same schema rows per set
+    {
+        let (t, d, ab) = (64usize, 384usize, 8usize);
+        let mut rng = Pcg32::new(0xA77E);
+        let q = vec_normal(&mut rng, ab * t * d);
+        let kmat = vec_normal(&mut rng, ab * t * d);
+        let pmat = vec_normal(&mut rng, ab * t * t);
+        let shape = format!("attn_t{t}_d{d}_b{ab}");
+        type AttnFn<'a> = Box<dyn FnMut(&simd::KernelSet) -> Vec<f32> + 'a>;
+        let attn_ops: Vec<(&'static str, usize, usize, AttnFn<'_>)> = vec![
+            ("attn_score", d, t, {
+                let (mut pack, mut buf, mut out) = (PackedB::default(), Vec::new(), Vec::new());
+                let (q, kmat) = (q.as_slice(), kmat.as_slice());
+                Box::new(move |ks| {
+                    out.clear();
+                    for s in 0..ab {
+                        let qb = &q[s * t * d..(s + 1) * t * d];
+                        let kb = &kmat[s * t * d..(s + 1) * t * d];
+                        par::matmul_bt_into_with(ks, qb, kb, t, d, t, 1, &mut pack, &mut buf);
+                        out.extend_from_slice(&buf);
+                    }
+                    out.clone()
+                })
+            }),
+            ("attn_context", t, d, {
+                let (mut pack, mut buf, mut out) = (PackedB::default(), Vec::new(), Vec::new());
+                let (pmat, v) = (pmat.as_slice(), kmat.as_slice());
+                Box::new(move |ks| {
+                    out.clear();
+                    for s in 0..ab {
+                        let pb = &pmat[s * t * t..(s + 1) * t * t];
+                        let vb = &v[s * t * d..(s + 1) * t * d];
+                        par::matmul_into_with(ks, pb, vb, t, t, d, 1, &mut pack, &mut buf);
+                        out.extend_from_slice(&buf);
+                    }
+                    out.clone()
+                })
+            }),
+        ];
+        for (op, rk, rf, mut drive) in attn_ops {
+            let want = drive(&simd::SCALAR);
+            let mut scalar_ms = 0.0f64;
+            for ks in &sets {
+                assert_eq!(drive(ks), want, "{} != scalar at {op}", ks.name);
+                let m = bench(&format!("{op}/{}", ks.name), warmup, iters, || drive(ks).len());
+                if ks.name == "scalar" {
+                    scalar_ms = m.mean_s;
+                }
+                simd_table.row(&[
+                    shape.clone(),
+                    op.to_string(),
+                    ks.name.to_string(),
+                    format!("{:.2}", m.mean_s * 1e3),
+                    format!("{:.2}x", scalar_ms / m.mean_s),
+                ]);
+                rows.push(KernelRow {
+                    shape: shape.clone(),
+                    kernel: format!("{op}_{}", ks.name),
+                    pattern: "dense".to_string(),
+                    k: rk,
+                    f: rf,
+                    workers: 1,
+                    m,
+                    dense_macs: (ab * t * d * t) as u64,
+                });
+            }
+        }
+    }
+    simd_table.print();
 
     // ---- end-to-end: BDWP NativeNet step time, sparse-compute A/B ----
     let (dims, e2e_batch, e2e_steps): (&[usize], usize, usize) =
@@ -452,6 +624,40 @@ fn main() -> anyhow::Result<()> {
          (target >= 1x); spmm_ff vs dense(masked) geomean {ff_geo:.2}x \
          (target >= 2x); spmm_bt geomean {bt_geo:.2}x"
     );
+    let simd_available = sets.iter().any(|ks| ks.name != "scalar");
+    let simd_dense_geo =
+        if simd_available { geomean(&simd_dense_speedups_256) } else { 0.0 };
+    let simd_spmm_geo =
+        if simd_available { geomean(&simd_spmm_speedups_256) } else { 0.0 };
+    if simd_available {
+        println!(
+            "ACCEPTANCE SIMD vs scalar kernel set ({}) on f=256 shapes: dense geomean \
+             {simd_dense_geo:.2}x (target >= 3x), spmm geomean {simd_spmm_geo:.2}x",
+            sets.last().unwrap().name,
+        );
+    } else {
+        println!("ACCEPTANCE SIMD vs scalar: no SIMD kernel set detected on this host");
+    }
+    if let Some(min) = min_simd_speedup {
+        if simd_available {
+            assert!(
+                simd_dense_geo >= min,
+                "SIMD dense f=256 geomean {simd_dense_geo:.2}x below the --min-simd-speedup \
+                 {min}x gate"
+            );
+            assert!(
+                simd_spmm_geo >= min,
+                "SIMD spmm f=256 geomean {simd_spmm_geo:.2}x below the --min-simd-speedup \
+                 {min}x gate"
+            );
+            println!("simd speedup gate OK (>= {min}x on the f=256 dense and spmm geomeans)");
+        } else {
+            println!(
+                "simd speedup gate SKIPPED: only the scalar kernel set is available on \
+                 this host"
+            );
+        }
+    }
 
     let doc = json::Obj::new()
         .field_str("schema", "sat-nm-kernels-v1")
@@ -461,7 +667,10 @@ fn main() -> anyhow::Result<()> {
             &json::Obj::new()
                 .field_bool("quick", quick)
                 .field_usize("iters", iters)
+                .field_str("kernel_set", simd::active().name)
                 .field_f64("packed_gemm_geomean_speedup_f256", packed_geo)
+                .field_f64("simd_dense_geomean_f256", simd_dense_geo)
+                .field_f64("simd_spmm_geomean_f256", simd_spmm_geo)
                 .field_f64("packed_spmm_vs_oracle_geomean_2_8", oracle_geo)
                 .field_f64("ff_geomean_speedup_2_8", ff_geo)
                 .field_f64("bt_geomean_speedup_2_8", bt_geo)

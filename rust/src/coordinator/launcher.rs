@@ -1,6 +1,6 @@
 //! Subcommand dispatch: maps the CLI onto the library.
 
-use anyhow::{anyhow, ensure};
+use anyhow::{anyhow, ensure, Context};
 
 use crate::arch::{power, ChipResources};
 use crate::coordinator::benchdiff;
@@ -48,7 +48,11 @@ SUBCOMMANDS
                            otherwise every core reported by
                            std::thread::available_parallelism().
                            Never changes results, only wall-clock.
-              --artifact NAME --assert-decreasing]
+              --artifact NAME --assert-decreasing
+              --dump-losses FILE  write one line per step:
+                           "STEP BITS LOSS" with BITS the f32 loss
+                           bit pattern in hex — `diff`-able across
+                           kernel sets / worker counts in CI]
   compare    train several methods on identical data (Fig. 4 protocol)
              [--backend native|pjrt --model mlp|cnn|vit --steps N
               --eval-every K --tta --sim-model M --target F
@@ -78,7 +82,7 @@ pub fn run(argv: &[String]) -> i32 {
         ]),
         Some("exhibits") => flags.push("jobs"),
         Some("train") => {
-            flags.extend_from_slice(&["backend", "sparse-compute", "threads"]);
+            flags.extend_from_slice(&["backend", "sparse-compute", "threads", "dump-losses"]);
             switches.push("assert-decreasing");
         }
         Some("compare") => {
@@ -375,6 +379,18 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             "loss did not decrease: {first} -> {last}"
         );
         println!("assert-decreasing OK: {first:.4} -> {last:.4}");
+    }
+    // bit-exact loss trajectory dump: the CI kernel-dispatch matrix
+    // `diff`s these files across SAT_KERNEL values, so each line
+    // carries the raw f32 bit pattern, not a rounded display
+    if let Some(path) = args.get("dump-losses") {
+        let mut body = String::new();
+        for (i, l) in curve.losses.iter().enumerate() {
+            body.push_str(&format!("{i} {:08x} {l:?}\n", l.to_bits()));
+        }
+        std::fs::write(path, body)
+            .with_context(|| format!("writing loss trajectory to {path:?}"))?;
+        println!("wrote {} loss lines to {path}", curve.losses.len());
     }
     Ok(())
 }

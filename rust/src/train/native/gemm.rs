@@ -65,7 +65,9 @@ impl PackedB {
     }
 
     /// Panel `p`: `k` lines of `NR` consecutive output columns.
-    fn panel(&self, p: usize) -> &[f32] {
+    /// Shared with the SIMD kernel sets ([`super::simd`]), which
+    /// consume the identical panel layout.
+    pub(super) fn panel(&self, p: usize) -> &[f32] {
         &self.data[p * self.k * NR..(p + 1) * self.k * NR]
     }
 

@@ -55,6 +55,7 @@ pub mod gemm;
 pub mod ops;
 pub mod par;
 pub mod pool;
+pub mod simd;
 pub mod sparse_ops;
 
 use std::fmt;

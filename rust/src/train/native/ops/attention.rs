@@ -2,6 +2,10 @@
 //! through the shared bidirectional N:M masking helper.
 
 use crate::models::{attention_stage_matmuls, MatMulShape, Stage};
+use crate::train::native::gemm::{self, PackedB};
+use crate::train::native::pool::{run_tiles, TileGrid};
+use crate::train::native::simd::KernelSet;
+use crate::train::native::{par, simd};
 
 use super::{sgd_update, tensor, Exec, Op, Param};
 
@@ -17,7 +21,11 @@ use super::{sgd_update, tensor, Exec, Op, Param};
 ///   any linear layer (FF groups along K, BP groups along F);
 /// * the score (`q·kᵀ`) and context (`p·v`) products are data×data —
 ///   dense by nature, per-sample `tokens × tokens` blocks executed on
-///   the serial seed kernels (they sit far below the pool's auto-gate).
+///   the packed tiles of the active [`simd::KernelSet`] (PR 6; they
+///   run serially — one sample sits far below the pool's auto-gate).
+///   Each element keeps the seed `tensor::*_block` kernels'
+///   full-reduction ascending accumulation order, so the rerouting is
+///   bit-exact by the [`gemm`] contract on every kernel set.
 ///
 /// Backward is hand-written (finite-difference checked in
 /// `tests/native_train.rs`); every w̃ is read before its param updates,
@@ -81,6 +89,57 @@ fn zeroed(buf: &mut Vec<f32>, len: usize) {
     buf.resize(len, 0.0);
 }
 
+/// `out = a (m × red) · b (n × red)ᵀ` for one sample on the packed
+/// tiles of `ks` — no zero-skip, the seed `matmul_bt` contract.
+fn bt_sample(
+    ks: &KernelSet,
+    a: &[f32],
+    b: &[f32],
+    red: usize,
+    m: usize,
+    n: usize,
+    pack: &mut PackedB,
+    out: &mut [f32],
+) {
+    gemm::pack_bt_into(b, n, red, pack);
+    let (pack, grid) = (&*pack, TileGrid::new(m, n, par::TILE_ROWS, par::TILE_COLS));
+    run_tiles(out, &grid, 1, |tile| (ks.gemm_rm_noskip)(a, red, pack, tile));
+}
+
+/// `out = a (m × red) · b (red × n)` for one sample on the packed
+/// tiles of `ks` — zero-skip on `a`, the seed `matmul` contract.
+fn mm_sample(
+    ks: &KernelSet,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    red: usize,
+    n: usize,
+    pack: &mut PackedB,
+    out: &mut [f32],
+) {
+    gemm::pack_b_into(b, red, n, pack);
+    let (pack, grid) = (&*pack, TileGrid::new(m, n, par::TILE_ROWS, par::TILE_COLS));
+    run_tiles(out, &grid, 1, |tile| (ks.gemm_rm_skip)(a, red, pack, tile));
+}
+
+/// `out = x (rows × k)ᵀ · dy (rows × f)` for one sample on the packed
+/// tiles of `ks` — zero-skip on `x`, the seed `matmul_at` contract.
+fn at_sample(
+    ks: &KernelSet,
+    x: &[f32],
+    dy: &[f32],
+    rows: usize,
+    k: usize,
+    f: usize,
+    pack: &mut PackedB,
+    out: &mut [f32],
+) {
+    gemm::pack_b_into(dy, rows, f, pack);
+    let (pack, grid) = (&*pack, TileGrid::new(k, f, par::TILE_ROWS, par::TILE_COLS));
+    run_tiles(out, &grid, 1, |tile| (ks.gemm_at)(x, k, rows, pack, tile));
+}
+
 impl Op for Attention {
     fn name(&self) -> &'static str {
         "attention"
@@ -125,12 +184,13 @@ impl Op for Attention {
         sm.ff(&params[pv], x, rows, d, d, &mut ex.scratch, &mut ex.pack, &mut self.v);
         tensor::add_bias(&mut self.v, &params[pv].b);
         // scores s = q·kᵀ/√d per sample (t × t blocks, data×data)
+        let ks = simd::active();
         zeroed(&mut self.s, batch * t * t);
         for b in 0..batch {
             let qb = &self.q[b * t * d..(b + 1) * t * d];
             let kb = &self.k[b * t * d..(b + 1) * t * d];
             let sb = &mut self.s[b * t * t..(b + 1) * t * t];
-            tensor::matmul_bt_block(qb, kb, d, t, 0, sb);
+            bt_sample(ks, qb, kb, d, t, t, &mut ex.pack, sb);
         }
         let scale = self.scale();
         for v in &mut self.s {
@@ -143,7 +203,7 @@ impl Op for Attention {
             let pb = &self.p[b * t * t..(b + 1) * t * t];
             let vb = &self.v[b * t * d..(b + 1) * t * d];
             let cb = &mut self.c[b * t * d..(b + 1) * t * d];
-            tensor::matmul_block(pb, vb, t, d, 0, cb);
+            mm_sample(ks, pb, vb, t, t, d, &mut ex.pack, cb);
         }
         // output projection
         sm.ff(&params[po], &self.c, rows, d, d, &mut ex.scratch, &mut ex.pack, out);
@@ -171,14 +231,15 @@ impl Op for Attention {
         sm.bp(&params[po], dy, rows, d, d, &mut ex.scratch, &mut ex.pack, &mut self.dc);
         sgd_update(&mut params[po], &mut ex.dw, &ex.db, ex.lr, sm.method, sm.pattern);
         // dp = dc·vᵀ and dv = pᵀ·dc, per sample
+        let ks = simd::active();
         zeroed(&mut self.dp, batch * t * t);
         zeroed(&mut self.dv, rows * d);
         for b in 0..batch {
             let dcb = &self.dc[b * t * d..(b + 1) * t * d];
             let vb = &self.v[b * t * d..(b + 1) * t * d];
             let pb = &self.p[b * t * t..(b + 1) * t * t];
-            tensor::matmul_bt_block(dcb, vb, d, t, 0, &mut self.dp[b * t * t..(b + 1) * t * t]);
-            tensor::matmul_at_block(pb, dcb, t, t, d, 0, &mut self.dv[b * t * d..(b + 1) * t * d]);
+            bt_sample(ks, dcb, vb, d, t, t, &mut ex.pack, &mut self.dp[b * t * t..(b + 1) * t * t]);
+            at_sample(ks, pb, dcb, t, t, d, &mut ex.pack, &mut self.dv[b * t * d..(b + 1) * t * d]);
         }
         // softmax backward folds the 1/√d score scale in
         let scale = self.scale();
@@ -190,8 +251,8 @@ impl Op for Attention {
             let dsb = &self.dp[b * t * t..(b + 1) * t * t];
             let qb = &self.q[b * t * d..(b + 1) * t * d];
             let kb = &self.k[b * t * d..(b + 1) * t * d];
-            tensor::matmul_block(dsb, kb, t, d, 0, &mut self.dq[b * t * d..(b + 1) * t * d]);
-            tensor::matmul_at_block(dsb, qb, t, t, d, 0, &mut self.dk[b * t * d..(b + 1) * t * d]);
+            mm_sample(ks, dsb, kb, t, t, d, &mut ex.pack, &mut self.dq[b * t * d..(b + 1) * t * d]);
+            at_sample(ks, dsb, qb, t, t, d, &mut ex.pack, &mut self.dk[b * t * d..(b + 1) * t * d]);
         }
         // dx = dq·w̃qᵀ + dk·w̃kᵀ + dv·w̃vᵀ, accumulated in q/k/v order
         // (before the q/k/v updates, same pre-update contract as wo)

@@ -22,10 +22,19 @@
 //! bit-identical for every worker count and exactly equal to the seed
 //! kernels (asserted across methods × patterns × worker counts in
 //! `tests/properties.rs` and `tests/native_train.rs`).
+//!
+//! **Kernel dispatch (PR 6).** Each driver runs its tiles on the
+//! process-global [`simd::KernelSet`] — AVX2/NEON when detected,
+//! scalar otherwise, `SAT_KERNEL` to force — through the `*_with`
+//! variants, which also take an explicit set so tests can drive every
+//! available path in one process. The set NEVER changes results (the
+//! [`simd`] parity contract: every SIMD kernel is `==` the scalar
+//! oracle per element), so dispatch is determinism-safe exactly like
+//! worker-count selection.
 
 use super::gemm::{self, PackedB};
 use super::pool::{self, TileGrid};
-use super::sparse_ops;
+use super::simd::{self, KernelSet};
 use crate::nm::PackedNm;
 
 /// Tile height of the parallel 2D grid (a multiple of the microkernel's
@@ -81,12 +90,29 @@ pub fn matmul_into(
     pack: &mut PackedB,
     out: &mut Vec<f32>,
 ) {
+    matmul_into_with(simd::active(), x, w, rows, k, cols, workers, pack, out)
+}
+
+/// [`matmul_into`] on an explicit kernel set (tests iterate
+/// [`simd::available_sets`] through these; production uses
+/// [`simd::active`]).
+pub fn matmul_into_with(
+    ks: &KernelSet,
+    x: &[f32],
+    w: &[f32],
+    rows: usize,
+    k: usize,
+    cols: usize,
+    workers: usize,
+    pack: &mut PackedB,
+    out: &mut Vec<f32>,
+) {
     assert_eq!(x.len(), rows * k, "x shape mismatch");
     assert_eq!(w.len(), k * cols, "w shape mismatch");
     resize(out, rows * cols);
     gemm::pack_b_into(w, k, cols, pack);
     let (pack, grid) = (&*pack, TileGrid::new(rows, cols, TILE_ROWS, TILE_COLS));
-    pool::run_tiles(out, &grid, workers, |tile| gemm::gemm_rm_tile::<true>(x, k, pack, tile));
+    pool::run_tiles(out, &grid, workers, |tile| (ks.gemm_rm_skip)(x, k, pack, tile));
 }
 
 /// Packed `dy (rows × f) @ w (k × f)ᵀ` into a reusable buffer —
@@ -102,12 +128,27 @@ pub fn matmul_bt_into(
     pack: &mut PackedB,
     out: &mut Vec<f32>,
 ) {
+    matmul_bt_into_with(simd::active(), dy, w, rows, f, k, workers, pack, out)
+}
+
+/// [`matmul_bt_into`] on an explicit kernel set.
+pub fn matmul_bt_into_with(
+    ks: &KernelSet,
+    dy: &[f32],
+    w: &[f32],
+    rows: usize,
+    f: usize,
+    k: usize,
+    workers: usize,
+    pack: &mut PackedB,
+    out: &mut Vec<f32>,
+) {
     assert_eq!(dy.len(), rows * f, "dy shape mismatch");
     assert_eq!(w.len(), k * f, "w shape mismatch");
     resize(out, rows * k);
     gemm::pack_bt_into(w, k, f, pack);
     let (pack, grid) = (&*pack, TileGrid::new(rows, k, TILE_ROWS, TILE_COLS));
-    pool::run_tiles(out, &grid, workers, |tile| gemm::gemm_rm_tile::<false>(dy, f, pack, tile));
+    pool::run_tiles(out, &grid, workers, |tile| (ks.gemm_rm_noskip)(dy, f, pack, tile));
 }
 
 /// Packed `x (rows × k)ᵀ @ dy (rows × f)` into a reusable buffer —
@@ -124,18 +165,47 @@ pub fn matmul_at_into(
     pack: &mut PackedB,
     out: &mut Vec<f32>,
 ) {
+    matmul_at_into_with(simd::active(), x, dy, rows, k, f, workers, pack, out)
+}
+
+/// [`matmul_at_into`] on an explicit kernel set.
+pub fn matmul_at_into_with(
+    ks: &KernelSet,
+    x: &[f32],
+    dy: &[f32],
+    rows: usize,
+    k: usize,
+    f: usize,
+    workers: usize,
+    pack: &mut PackedB,
+    out: &mut Vec<f32>,
+) {
     assert_eq!(x.len(), rows * k, "x shape mismatch");
     assert_eq!(dy.len(), rows * f, "dy shape mismatch");
     resize(out, k * f);
     gemm::pack_b_into(dy, rows, f, pack);
     let (pack, grid) = (&*pack, TileGrid::new(k, f, TILE_ROWS, TILE_COLS));
-    pool::run_tiles(out, &grid, workers, |tile| gemm::gemm_at_tile(x, k, rows, pack, tile));
+    pool::run_tiles(out, &grid, workers, |tile| (ks.gemm_at)(x, k, rows, pack, tile));
 }
 
-/// Panel-packed [`sparse_ops::spmm_ff`] into a reusable buffer
+/// Panel-packed [`super::sparse_ops::spmm_ff`] into a reusable buffer
 /// (`pnm` = `CompactNm::encode_t*` of the (k × f) weight matrix,
 /// panel-packed by [`crate::nm::CompactNm::pack_panels_into`]).
 pub fn spmm_ff_into(
+    x: &[f32],
+    pnm: &PackedNm,
+    rows: usize,
+    k: usize,
+    f: usize,
+    workers: usize,
+    out: &mut Vec<f32>,
+) {
+    spmm_ff_into_with(simd::active(), x, pnm, rows, k, f, workers, out)
+}
+
+/// [`spmm_ff_into`] on an explicit kernel set.
+pub fn spmm_ff_into_with(
+    ks: &KernelSet,
     x: &[f32],
     pnm: &PackedNm,
     rows: usize,
@@ -149,12 +219,26 @@ pub fn spmm_ff_into(
     assert_eq!(pnm.nr, gemm::NR, "panel width mismatch (pack with gemm::NR)");
     resize(out, rows * f);
     let grid = TileGrid::new(rows, f, TILE_ROWS, TILE_COLS);
-    pool::run_tiles(out, &grid, workers, |tile| sparse_ops::spmm_panel_tile(x, k, pnm, tile));
+    pool::run_tiles(out, &grid, workers, |tile| (ks.spmm_panel)(x, k, pnm, tile));
 }
 
-/// Panel-packed [`sparse_ops::spmm_bt`] into a reusable buffer
+/// Panel-packed [`super::sparse_ops::spmm_bt`] into a reusable buffer
 /// (`pnm` = panel-packed `CompactNm::encode*` of the (k × f) weights).
 pub fn spmm_bt_into(
+    dy: &[f32],
+    pnm: &PackedNm,
+    rows: usize,
+    f: usize,
+    k: usize,
+    workers: usize,
+    out: &mut Vec<f32>,
+) {
+    spmm_bt_into_with(simd::active(), dy, pnm, rows, f, k, workers, out)
+}
+
+/// [`spmm_bt_into`] on an explicit kernel set.
+pub fn spmm_bt_into_with(
+    ks: &KernelSet,
     dy: &[f32],
     pnm: &PackedNm,
     rows: usize,
@@ -168,7 +252,7 @@ pub fn spmm_bt_into(
     assert_eq!(pnm.nr, gemm::NR, "panel width mismatch (pack with gemm::NR)");
     resize(out, rows * k);
     let grid = TileGrid::new(rows, k, TILE_ROWS, TILE_COLS);
-    pool::run_tiles(out, &grid, workers, |tile| sparse_ops::spmm_panel_tile(dy, f, pnm, tile));
+    pool::run_tiles(out, &grid, workers, |tile| (ks.spmm_panel)(dy, f, pnm, tile));
 }
 
 /// The PR 3 dispatcher: split `out` into up to `workers` contiguous

@@ -25,11 +25,12 @@
 //! engine's [`crate::coordinator::jobs::run_queue`] all share the one
 //! [`global`] pool sized to [`std::thread::available_parallelism`].
 //!
-//! This module is the crate's only `unsafe` island (the crate-level
-//! lint stays `deny`): two well-scoped uses — the lifetime erasure of
-//! the dispatched job reference, and the disjoint output-tile shards
-//! handed to kernels through [`TileOut`] — each with the soundness
-//! argument spelled out inline.
+//! This module is one of the crate's two `unsafe` islands (the
+//! crate-level lint stays `deny`; the other is the `std::arch` SIMD
+//! kernels of [`super::simd`]): two well-scoped uses — the lifetime
+//! erasure of the dispatched job reference, and the disjoint
+//! output-tile shards handed to kernels through [`TileOut`] — each
+//! with the soundness argument spelled out inline.
 #![allow(unsafe_code)]
 
 use std::cell::Cell;

@@ -1,0 +1,375 @@
+//! AVX2 (`x86_64`) tile kernels — bit-identical to the scalar oracle.
+//!
+//! Each microkernel mirrors its scalar counterpart line for line:
+//! 8-row/4-row/1-row register tiles over [`NR`]-wide packed panels,
+//! ascending reduction order, the seed zero-activation skip where the
+//! oracle has it — only the inner `for j in 0..NR` lane loop becomes
+//! one `__m256` operation. Multiplication and addition stay SEPARATE
+//! instructions (`vmulps` + `vaddps`, never `vfmaddps`): FMA's single
+//! rounding would diverge from the scalar oracle's two roundings and
+//! break the crate-wide `==` contract (see the module header of
+//! [`super`]). The spmm kernel uses `vpgatherdd`-class index gathers
+//! (`_mm256_i32gather_ps`) with the same `idx & (M-1)` defensive mask
+//! as the scalar gather.
+//!
+//! This is the crate's second `unsafe` island (after
+//! [`crate::train::native::pool`]): every `unsafe` here is either a
+//! `#[target_feature]` call or a raw SIMD load/store whose bounds are
+//! established by the packing invariants spelled out at each site. The
+//! safe wrappers at the bottom are only ever reached through
+//! [`super::dispatch`], which verified `is_x86_feature_detected!`
+//! before exposing the set (debug-asserted again here).
+#![allow(unsafe_code)]
+
+use std::arch::x86_64::*;
+
+use crate::nm::PackedNm;
+use crate::train::native::gemm::{store, PackedB, NR};
+use crate::train::native::pool::TileOut;
+use crate::train::native::sparse_ops;
+
+/// `R × NR` dense microkernel (mirror of `gemm::mk_rm`): broadcast the
+/// A value, one 8-lane mul + add per panel line, reduction ascending.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn mk_rm<const R: usize, const SKIP: bool>(
+    a: &[f32],
+    red: usize,
+    panel: &[f32],
+    arow0: usize,
+) -> [[f32; NR]; R] {
+    let rows: [&[f32]; R] =
+        core::array::from_fn(|t| &a[(arow0 + t) * red..(arow0 + t + 1) * red]);
+    let mut acc = [_mm256_setzero_ps(); R];
+    for (kk, bs) in panel.chunks_exact(NR).enumerate() {
+        // SAFETY: chunks_exact(NR) guarantees NR contiguous f32s
+        let b = _mm256_loadu_ps(bs.as_ptr());
+        for t in 0..R {
+            let xv = rows[t][kk];
+            if SKIP && xv == 0.0 {
+                continue;
+            }
+            acc[t] = _mm256_add_ps(acc[t], _mm256_mul_ps(_mm256_set1_ps(xv), b));
+        }
+    }
+    spill(&acc)
+}
+
+/// `R × NR` A-transposed microkernel (mirror of `gemm::mk_cm`): A reads
+/// are contiguous across the row tile for each reduction step; always
+/// zero-skips (the seed `matmul_at` contract).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn mk_cm<const R: usize>(
+    x: &[f32],
+    ktot: usize,
+    panel: &[f32],
+    kk0: usize,
+) -> [[f32; NR]; R] {
+    let mut acc = [_mm256_setzero_ps(); R];
+    for (r, bs) in panel.chunks_exact(NR).enumerate() {
+        // SAFETY: chunks_exact(NR) guarantees NR contiguous f32s
+        let b = _mm256_loadu_ps(bs.as_ptr());
+        let xs = &x[r * ktot + kk0..r * ktot + kk0 + R];
+        for t in 0..R {
+            let xv = xs[t];
+            if xv == 0.0 {
+                continue;
+            }
+            acc[t] = _mm256_add_ps(acc[t], _mm256_mul_ps(_mm256_set1_ps(xv), b));
+        }
+    }
+    spill(&acc)
+}
+
+/// Spill `R` vector accumulators to the `[[f32; NR]; R]` shape
+/// [`store`] consumes (lane c of register t == scalar `acc[t][c]`).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn spill<const R: usize>(acc: &[__m256; R]) -> [[f32; NR]; R] {
+    let mut out = [[0.0f32; NR]; R];
+    for t in 0..R {
+        // SAFETY: out[t] is NR = 8 contiguous f32s
+        _mm256_storeu_ps(out[t].as_mut_ptr(), acc[t]);
+    }
+    out
+}
+
+/// 8/4/1 row cadence over the tile — the same driver loop as
+/// `gemm::gemm_rm_tile`, monomorphized per microkernel.
+#[target_feature(enable = "avx2")]
+unsafe fn rm_tile<const SKIP: bool>(a: &[f32], red: usize, pb: &PackedB, mut out: TileOut<'_>) {
+    debug_assert_eq!(pb.k, red, "packed reduction mismatch");
+    let (r1, c0, c1) = (out.rows().end, out.cols().start, out.cols().end);
+    debug_assert!(c0 % NR == 0, "tile columns must start on a panel boundary");
+    let (p0, p1) = (c0 / NR, (c1 + NR - 1) / NR);
+    let mut r = out.rows().start;
+    while r < r1 {
+        let left = r1 - r;
+        if left >= 8 {
+            for p in p0..p1 {
+                let acc = mk_rm::<8, SKIP>(a, red, pb.panel(p), r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 8;
+        } else if left >= 4 {
+            for p in p0..p1 {
+                let acc = mk_rm::<4, SKIP>(a, red, pb.panel(p), r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 4;
+        } else {
+            for p in p0..p1 {
+                let acc = mk_rm::<1, SKIP>(a, red, pb.panel(p), r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 1;
+        }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn at_tile(x: &[f32], ktot: usize, red: usize, pb: &PackedB, mut out: TileOut<'_>) {
+    debug_assert_eq!(pb.k, red, "packed reduction mismatch");
+    let (r1, c0, c1) = (out.rows().end, out.cols().start, out.cols().end);
+    debug_assert!(c0 % NR == 0, "tile columns must start on a panel boundary");
+    let (p0, p1) = (c0 / NR, (c1 + NR - 1) / NR);
+    let mut r = out.rows().start;
+    while r < r1 {
+        let left = r1 - r;
+        if left >= 8 {
+            for p in p0..p1 {
+                let acc = mk_cm::<8>(x, ktot, pb.panel(p), r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 8;
+        } else if left >= 4 {
+            for p in p0..p1 {
+                let acc = mk_cm::<4>(x, ktot, pb.panel(p), r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 4;
+        } else {
+            for p in p0..p1 {
+                let acc = mk_cm::<1>(x, ktot, pb.panel(p), r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 1;
+        }
+    }
+}
+
+/// `R` input rows × one NR-column panel of the N:M spmm (mirror of
+/// `sparse_ops::panel_mk`): per kept slot, load the NR packed values,
+/// zero-extend + mask the NR u8 intra-group indexes, and gather each
+/// row's M-window into all 8 column accumulators at once.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn panel_mk<const R: usize, const N: usize, const M: usize>(
+    a: &[f32],
+    p_dim: usize,
+    pnm: &PackedNm,
+    panel: usize,
+    arow0: usize,
+) -> [[f32; NR]; R] {
+    let rows: [&[f32]; R] =
+        core::array::from_fn(|t| &a[(arow0 + t) * p_dim..(arow0 + t + 1) * p_dim]);
+    let vals = pnm.panel_values(panel);
+    let idxs = pnm.panel_indexes(panel);
+    let mask = _mm256_set1_epi32((M - 1) as i32);
+    let mut acc = [_mm256_setzero_ps(); R];
+    let mut kbase = 0usize;
+    let groups = pnm.cols / M;
+    for g in 0..groups {
+        for j in 0..N {
+            let lane0 = (g * N + j) * NR;
+            // SAFETY: the panel packing stores exactly NR values + NR
+            // indexes per (group, slot), so lane0 + NR <= len for both
+            debug_assert!(lane0 + NR <= vals.len() && lane0 + NR <= idxs.len());
+            let vs = _mm256_loadu_ps(vals.as_ptr().add(lane0));
+            let ix8 = _mm_loadl_epi64(idxs.as_ptr().add(lane0) as *const __m128i);
+            let ix = _mm256_and_si256(_mm256_cvtepu8_epi32(ix8), mask);
+            for t in 0..R {
+                // SAFETY: kbase + M <= p_dim (cols is a multiple of M)
+                // and every masked index is < M, so the gather stays
+                // inside this row's M-window
+                debug_assert!(kbase + M <= rows[t].len());
+                let win = rows[t].as_ptr().add(kbase);
+                let gathered = _mm256_i32gather_ps::<4>(win, ix);
+                acc[t] = _mm256_add_ps(acc[t], _mm256_mul_ps(gathered, vs));
+            }
+        }
+        kbase += M;
+    }
+    spill(&acc)
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn spmm_tile<const N: usize, const M: usize>(
+    a: &[f32],
+    p_dim: usize,
+    pnm: &PackedNm,
+    mut out: TileOut<'_>,
+) {
+    debug_assert!(M.is_power_of_two(), "masked gather needs power-of-two M");
+    let (r1, c0, c1) = (out.rows().end, out.cols().start, out.cols().end);
+    debug_assert!(c0 % NR == 0, "tile columns must start on a panel boundary");
+    let (p0, p1) = (c0 / NR, (c1 + NR - 1) / NR);
+    let mut r = out.rows().start;
+    while r < r1 {
+        let left = r1 - r;
+        if left >= 8 {
+            for p in p0..p1 {
+                let acc = panel_mk::<8, N, M>(a, p_dim, pnm, p, r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 8;
+        } else if left >= 4 {
+            for p in p0..p1 {
+                let acc = panel_mk::<4, N, M>(a, p_dim, pnm, p, r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 4;
+        } else {
+            for p in p0..p1 {
+                let acc = panel_mk::<1, N, M>(a, p_dim, pnm, p, r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 1;
+        }
+    }
+}
+
+// ---- safe wrappers (the KernelSet entry points) ----
+//
+// SAFETY: these are only reachable through `dispatch`, which hands out
+// the AVX2 set strictly after `is_x86_feature_detected!("avx2")`
+// succeeded (or an explicit `SAT_KERNEL=avx2` override passed the same
+// check) — re-asserted here in debug builds.
+
+pub(super) fn gemm_rm_skip(a: &[f32], red: usize, pb: &PackedB, out: TileOut<'_>) {
+    debug_assert!(super::dispatch::have_avx2());
+    unsafe { rm_tile::<true>(a, red, pb, out) }
+}
+
+pub(super) fn gemm_rm_noskip(a: &[f32], red: usize, pb: &PackedB, out: TileOut<'_>) {
+    debug_assert!(super::dispatch::have_avx2());
+    unsafe { rm_tile::<false>(a, red, pb, out) }
+}
+
+pub(super) fn gemm_at(x: &[f32], ktot: usize, red: usize, pb: &PackedB, out: TileOut<'_>) {
+    debug_assert!(super::dispatch::have_avx2());
+    unsafe { at_tile(x, ktot, red, pb, out) }
+}
+
+/// Monomorphized per (N, M) like the scalar kernel; patterns outside
+/// the set (non-power-of-two M) fall back to the scalar generic path —
+/// same results by the parity contract, no gather to vectorize.
+pub(super) fn spmm_panel(a: &[f32], p_dim: usize, pnm: &PackedNm, out: TileOut<'_>) {
+    debug_assert!(super::dispatch::have_avx2());
+    debug_assert_eq!(pnm.cols, p_dim, "encoding reduction axis mismatch");
+    debug_assert_eq!(pnm.nr, NR, "panel width must match the GEMM panel width");
+    match (pnm.pattern.n, pnm.pattern.m) {
+        (1, 4) => unsafe { spmm_tile::<1, 4>(a, p_dim, pnm, out) },
+        (2, 4) => unsafe { spmm_tile::<2, 4>(a, p_dim, pnm, out) },
+        (1, 8) => unsafe { spmm_tile::<1, 8>(a, p_dim, pnm, out) },
+        (2, 8) => unsafe { spmm_tile::<2, 8>(a, p_dim, pnm, out) },
+        (4, 8) => unsafe { spmm_tile::<4, 8>(a, p_dim, pnm, out) },
+        (2, 16) => unsafe { spmm_tile::<2, 16>(a, p_dim, pnm, out) },
+        (4, 16) => unsafe { spmm_tile::<4, 16>(a, p_dim, pnm, out) },
+        (8, 16) => unsafe { spmm_tile::<8, 16>(a, p_dim, pnm, out) },
+        _ => sparse_ops::spmm_panel_tile(a, p_dim, pnm, out),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dispatch;
+    use crate::nm::{CompactNm, NmPattern};
+    use crate::train::native::gemm::{self, PackedB};
+    use crate::train::native::pool::{run_tiles, TileGrid};
+    use crate::train::native::{ops, sparse_ops};
+    use crate::util::testkit::Gen;
+
+    /// Run one kernel-set entry over a full output buffer, serially.
+    fn drive(
+        rows: usize,
+        cols: usize,
+        kernel: impl Fn(crate::train::native::pool::TileOut<'_>) + Sync,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; rows * cols];
+        let grid = TileGrid::new(rows, cols, 8, gemm::NR * 2); // cross tile edges
+        run_tiles(&mut out, &grid, 1, kernel);
+        out
+    }
+
+    #[test]
+    fn avx2_gemm_kernels_equal_scalar_bit_for_bit() {
+        if !dispatch::have_avx2() {
+            eprintln!("skipping: host has no AVX2");
+            return;
+        }
+        let mut g = Gen::new(61);
+        // shapes crossing the 8/4/1 row-tile and ragged-panel edges
+        for (rows, k, cols) in [(1usize, 1usize, 1usize), (7, 5, 9), (13, 16, 8), (33, 12, 21)] {
+            let mut x = g.vec_normal(rows * k);
+            if g.bool() {
+                for v in x.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0; // exercise the zero-skip branch
+                    }
+                }
+            }
+            let w = g.vec_normal(k * cols);
+            let dy = g.vec_normal(rows * cols);
+            let mut pb = PackedB::default();
+            gemm::pack_b_into(&w, k, cols, &mut pb);
+            let got = drive(rows, cols, |t| super::gemm_rm_skip(&x, k, &pb, t));
+            assert_eq!(got, ops::matmul(&x, &w, rows, k, cols), "rm {rows}x{k}x{cols}");
+            gemm::pack_bt_into(&w, k, cols, &mut pb);
+            let got = drive(rows, k, |t| super::gemm_rm_noskip(&dy, cols, &pb, t));
+            assert_eq!(got, ops::matmul_bt(&dy, &w, rows, cols, k), "bt {rows}x{k}x{cols}");
+            gemm::pack_b_into(&dy, rows, cols, &mut pb);
+            let got = drive(k, cols, |t| super::gemm_at(&x, k, rows, &pb, t));
+            assert_eq!(got, ops::matmul_at(&x, &dy, rows, k, cols), "at {rows}x{k}x{cols}");
+        }
+    }
+
+    #[test]
+    fn avx2_spmm_panel_equals_scalar_bit_for_bit() {
+        if !dispatch::have_avx2() {
+            eprintln!("skipping: host has no AVX2");
+            return;
+        }
+        let mut g = Gen::new(62);
+        for (n, m) in [(1usize, 4usize), (2, 4), (2, 8), (4, 8), (4, 16)] {
+            let p = NmPattern::new(n, m);
+            let (rows, k, f) = (13usize, 2 * m, 11usize);
+            let x = g.vec_normal(rows * k);
+            let w = g.vec_normal(k * f);
+            let enc = CompactNm::encode_t(&w, k, f, p);
+            let pnm = enc.pack_panels(gemm::NR);
+            let want = drive(rows, f, |t| sparse_ops::spmm_panel_tile(&x, k, &pnm, t));
+            let got = drive(rows, f, |t| super::spmm_panel(&x, k, &pnm, t));
+            assert_eq!(got, want, "{p}");
+        }
+    }
+
+    #[test]
+    fn exotic_pattern_takes_the_scalar_fallback() {
+        if !dispatch::have_avx2() {
+            eprintln!("skipping: host has no AVX2");
+            return;
+        }
+        let mut g = Gen::new(63);
+        let p = NmPattern::new(2, 6); // off the monomorphized set
+        let (rows, k, f) = (5usize, 12usize, 7usize);
+        let x = g.vec_normal(rows * k);
+        let w = g.vec_normal(k * f);
+        let enc = CompactNm::encode_t(&w, k, f, p);
+        let pnm = enc.pack_panels(gemm::NR);
+        let want = drive(rows, f, |t| sparse_ops::spmm_panel_tile(&x, k, &pnm, t));
+        let got = drive(rows, f, |t| super::spmm_panel(&x, k, &pnm, t));
+        assert_eq!(got, want);
+    }
+}

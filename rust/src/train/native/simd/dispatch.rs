@@ -1,0 +1,252 @@
+//! Kernel-set resolution: one process-global [`KernelSet`] picked by
+//! runtime feature detection, overridable with `SAT_KERNEL`.
+//!
+//! Resolution order (first available wins): `neon` (aarch64) →
+//! `avx2` (x86_64) → `scalar`. The override is read once — the set is
+//! cached in a `OnceLock`, so every dispatch after the first is a
+//! plain field load, and a forced-but-unavailable set panics with an
+//! actionable message at first use (the CI kernel-matrix job asserts
+//! this failure mode stays clean).
+
+use std::sync::OnceLock;
+
+use crate::nm::PackedNm;
+use crate::train::native::gemm::{self, PackedB};
+use crate::train::native::pool::TileOut;
+use crate::train::native::sparse_ops;
+
+/// Packed row-major GEMM tile kernel (`gemm_rm_tile` shape):
+/// `(a, red, packed_b, out_tile)`.
+pub type GemmRmFn = fn(&[f32], usize, &PackedB, TileOut<'_>);
+
+/// Packed A-transposed GEMM tile kernel (`gemm_at_tile` shape):
+/// `(x, ktot, red, packed_dy, out_tile)`.
+pub type GemmAtFn = fn(&[f32], usize, usize, &PackedB, TileOut<'_>);
+
+/// Panel spmm tile kernel (`spmm_panel_tile` shape):
+/// `(a, p_dim, packed_nm, out_tile)`.
+pub type SpmmPanelFn = fn(&[f32], usize, &PackedNm, TileOut<'_>);
+
+/// One complete set of tile kernels for the native backend's hot
+/// products. All sets compute bit-identical results (the module-level
+/// parity contract); they differ only in instruction selection.
+pub struct KernelSet {
+    /// `scalar`, `avx2` or `neon` — also the accepted `SAT_KERNEL`
+    /// values (plus `auto`, which means "detect").
+    pub name: &'static str,
+    /// Dense `a @ packed(B)` with the seed zero-activation skip
+    /// (`matmul` semantics).
+    pub gemm_rm_skip: GemmRmFn,
+    /// Dense `a @ packed(B)` without the skip (`matmul_bt` semantics).
+    pub gemm_rm_noskip: GemmRmFn,
+    /// `xᵀ @ packed(dy)` weight-update product (`matmul_at` semantics).
+    pub gemm_at: GemmAtFn,
+    /// N:M compute-skipping panel spmm over [`PackedNm`].
+    pub spmm_panel: SpmmPanelFn,
+}
+
+fn scalar_rm_skip(a: &[f32], red: usize, pb: &PackedB, out: TileOut<'_>) {
+    gemm::gemm_rm_tile::<true>(a, red, pb, out)
+}
+
+fn scalar_rm_noskip(a: &[f32], red: usize, pb: &PackedB, out: TileOut<'_>) {
+    gemm::gemm_rm_tile::<false>(a, red, pb, out)
+}
+
+/// The scalar oracle set: exactly the committed kernels of
+/// [`gemm`](crate::train::native::gemm) /
+/// [`sparse_ops`](crate::train::native::sparse_ops), re-exported as a
+/// `KernelSet` so tests can pin it explicitly.
+pub static SCALAR: KernelSet = KernelSet {
+    name: "scalar",
+    gemm_rm_skip: scalar_rm_skip,
+    gemm_rm_noskip: scalar_rm_noskip,
+    gemm_at: gemm::gemm_at_tile,
+    spmm_panel: sparse_ops::spmm_panel_tile,
+};
+
+#[cfg(target_arch = "x86_64")]
+pub static AVX2: KernelSet = KernelSet {
+    name: "avx2",
+    gemm_rm_skip: super::avx2::gemm_rm_skip,
+    gemm_rm_noskip: super::avx2::gemm_rm_noskip,
+    gemm_at: super::avx2::gemm_at,
+    spmm_panel: super::avx2::spmm_panel,
+};
+
+#[cfg(target_arch = "aarch64")]
+pub static NEON: KernelSet = KernelSet {
+    name: "neon",
+    gemm_rm_skip: super::neon::gemm_rm_skip,
+    gemm_rm_noskip: super::neon::gemm_rm_noskip,
+    gemm_at: super::neon::gemm_at,
+    spmm_panel: super::neon::spmm_panel,
+};
+
+/// Runtime AVX2 detection (false off `x86_64`).
+pub fn have_avx2() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Runtime NEON detection (false off `aarch64`).
+pub fn have_neon() -> bool {
+    #[cfg(target_arch = "aarch64")]
+    {
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+    #[cfg(not(target_arch = "aarch64"))]
+    {
+        false
+    }
+}
+
+fn pick(avx2: bool, neon: bool) -> &'static KernelSet {
+    #[cfg(target_arch = "aarch64")]
+    if neon {
+        return &NEON;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if avx2 {
+        return &AVX2;
+    }
+    let _ = (avx2, neon);
+    &SCALAR
+}
+
+/// Resolve a requested kernel-set name against detected features.
+/// Pure so tests can drive every (override × detection) cell without
+/// touching the environment: `requested = None` (or `auto`) detects,
+/// an explicit name is honored or refused — never silently downgraded
+/// (a forced path that silently fell back would defeat the CI matrix).
+pub fn resolve(
+    requested: Option<&str>,
+    avx2: bool,
+    neon: bool,
+) -> Result<&'static KernelSet, String> {
+    match requested {
+        None | Some("auto") | Some("") => Ok(pick(avx2, neon)),
+        Some("scalar") => Ok(&SCALAR),
+        Some("avx2") => {
+            #[cfg(target_arch = "x86_64")]
+            if avx2 {
+                return Ok(&AVX2);
+            }
+            Err(format!(
+                "SAT_KERNEL=avx2: AVX2 kernels are not available on this host \
+                 (arch {}, detected avx2={avx2}); unset SAT_KERNEL or force scalar",
+                std::env::consts::ARCH
+            ))
+        }
+        Some("neon") => {
+            #[cfg(target_arch = "aarch64")]
+            if neon {
+                return Ok(&NEON);
+            }
+            Err(format!(
+                "SAT_KERNEL=neon: NEON kernels are not available on this host \
+                 (arch {}, detected neon={neon}); unset SAT_KERNEL or force scalar",
+                std::env::consts::ARCH
+            ))
+        }
+        Some(other) => Err(format!(
+            "SAT_KERNEL={other:?} is not a kernel set (scalar|avx2|neon|auto)"
+        )),
+    }
+}
+
+/// The process-global kernel set: `SAT_KERNEL` override if set, else
+/// best detected, resolved once and cached. Panics (clearly) if the
+/// override names a set this host cannot run.
+pub fn active() -> &'static KernelSet {
+    static ACTIVE: OnceLock<&'static KernelSet> = OnceLock::new();
+    ACTIVE.get_or_init(|| {
+        let req = std::env::var("SAT_KERNEL").ok();
+        match resolve(req.as_deref(), have_avx2(), have_neon()) {
+            Ok(ks) => ks,
+            Err(e) => panic!("{e}"),
+        }
+    })
+}
+
+/// Every kernel set this host can actually run (scalar always, plus
+/// the detected SIMD set). Property tests iterate this to cover all
+/// in-process paths regardless of `SAT_KERNEL`.
+pub fn available_sets() -> Vec<&'static KernelSet> {
+    let mut sets: Vec<&'static KernelSet> = vec![&SCALAR];
+    #[cfg(target_arch = "x86_64")]
+    if have_avx2() {
+        sets.push(&AVX2);
+    }
+    #[cfg(target_arch = "aarch64")]
+    if have_neon() {
+        sets.push(&NEON);
+    }
+    sets
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_honors_explicit_scalar_override() {
+        // even with every feature detected, an explicit override wins
+        let ks = resolve(Some("scalar"), true, true).unwrap();
+        assert_eq!(ks.name, "scalar");
+    }
+
+    #[test]
+    fn resolve_falls_back_to_scalar_when_detection_fails() {
+        assert_eq!(resolve(None, false, false).unwrap().name, "scalar");
+        assert_eq!(resolve(Some("auto"), false, false).unwrap().name, "scalar");
+    }
+
+    #[test]
+    fn resolve_refuses_unavailable_sets_instead_of_downgrading() {
+        let err = resolve(Some("avx2"), false, false).unwrap_err();
+        assert!(err.contains("avx2"), "{err}");
+        let err = resolve(Some("neon"), false, false).unwrap_err();
+        assert!(err.contains("neon"), "{err}");
+    }
+
+    #[test]
+    fn resolve_rejects_unknown_names() {
+        let err = resolve(Some("avx512"), true, true).unwrap_err();
+        assert!(err.contains("not a kernel set"), "{err}");
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn detection_prefers_avx2_on_x86() {
+        assert_eq!(resolve(None, true, false).unwrap().name, "avx2");
+        assert_eq!(resolve(Some("avx2"), true, false).unwrap().name, "avx2");
+        // NEON can never resolve on x86_64, even if "detected"
+        assert!(resolve(Some("neon"), true, true).is_err());
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    #[test]
+    fn detection_prefers_neon_on_aarch64() {
+        assert_eq!(resolve(None, false, true).unwrap().name, "neon");
+        assert!(resolve(Some("avx2"), true, true).is_err());
+    }
+
+    #[test]
+    fn active_set_is_consistent_with_the_environment() {
+        // active() must agree with a fresh resolve of the same inputs
+        // (it is the same computation, cached) and never panic when
+        // SAT_KERNEL is unset or names an available set — the test
+        // processes in the CI kernel matrix run with it forced.
+        let req = std::env::var("SAT_KERNEL").ok();
+        let want = resolve(req.as_deref(), have_avx2(), have_neon())
+            .expect("SAT_KERNEL forced to a set this host cannot run");
+        assert_eq!(active().name, want.name);
+    }
+}

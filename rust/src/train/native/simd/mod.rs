@@ -1,0 +1,53 @@
+//! Runtime-dispatched SIMD microkernels for the native training
+//! backend — the software analogue of SAT's PE lanes.
+//!
+//! The packed register-tiled kernels of [`super::gemm`] and
+//! [`super::sparse_ops`] are written so the autovectorizer can keep one
+//! [`super::gemm::NR`]-wide panel line in a register, but at the
+//! default `x86-64` target that means 4-wide SSE2 and an overflowing
+//! XMM register file (an 8×8 f32 accumulator tile is the entire file).
+//! This module adds explicit `std::arch` paths — AVX2 on `x86_64`,
+//! NEON on `aarch64` — selected ONCE per process by
+//! [`dispatch::active`] via runtime feature detection
+//! (`is_x86_feature_detected!` / `is_aarch64_feature_detected!`) and
+//! overridable with `SAT_KERNEL=scalar|avx2|neon` for testing; forcing
+//! a set the host cannot run fails with a clear message instead of
+//! executing illegal instructions.
+//!
+//! **Parity contract.** The committed scalar kernels stay the oracle
+//! every SIMD path is property-tested against (`tests/properties.rs`,
+//! plus the in-module tests here):
+//!
+//! | product | scalar oracle | SIMD strategy | parity |
+//! |---|---|---|---|
+//! | packed dense GEMM (`rm`, skip on/off) | [`super::gemm::gemm_rm_tile`] | broadcast the A value over the NR=8 panel lanes; separate mul + add | exact `==` |
+//! | packed dense GEMM (`at`, WU) | [`super::gemm::gemm_at_tile`] | same, A reads contiguous across the row tile | exact `==` |
+//! | panel spmm (N:M compute-skip) | [`super::sparse_ops::spmm_panel_tile`] | 8-lane masked index gather per kept slot | exact `==` |
+//! | attention score/context | `ops::tensor::matmul*_block` | routed through the packed tiles above | exact `==` |
+//!
+//! No kernel in this module takes a tolerance-banded path. Every SIMD
+//! kernel vectorizes ACROSS the NR independent output columns
+//! (lane-parallel) and keeps each output element's reduction serial in
+//! the scalar order — there are no horizontal reductions to reorder a
+//! sum. Deliberately, none uses FMA either: a fused multiply-add
+//! rounds once where the scalar oracle's mul-then-add rounds twice, so
+//! `_mm256_fmadd_ps`/`vfmaq_f32` would break the `==` contract that
+//! every existing bit-identity test (and the cross-`SAT_KERNEL` CI
+//! trajectory diff) leans on. The speedup comes from 8-wide lanes and
+//! halved register pressure, not fusion. A future kernel that DOES
+//! reorder a reduction (horizontal sums, K-splitting) must document
+//! its error band in the table above and downgrade the affected
+//! property tests from `==` to banded compare.
+//!
+//! Patterns outside the monomorphized N:M set (non-power-of-two M)
+//! take the scalar generic fallback on every kernel set — identical
+//! results by construction.
+
+pub mod dispatch;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+pub use dispatch::{active, available_sets, resolve, KernelSet, SCALAR};

@@ -1,0 +1,278 @@
+//! NEON (`aarch64`) tile kernels — bit-identical to the scalar oracle.
+//!
+//! Same structure as the AVX2 module, split over two `float32x4_t`
+//! halves per [`NR`]-lane panel line. Multiplication and addition stay
+//! separate (`vmulq_f32` + `vaddq_f32`, never `vfmaq_f32`): fused
+//! contraction would diverge from the scalar oracle's per-element
+//! rounding (module-header parity contract). NEON has no index-gather
+//! instruction, so the spmm kernel gathers each row's M-window
+//! scalar-wise into a stack line and runs the multiply-accumulate
+//! vector-wide — the values/indexes still stream contiguously from the
+//! panel packing, and the (group, slot)-ascending order is untouched.
+//!
+//! Compile-gated to `aarch64`; CI keeps it honest with
+//! `cargo check --target aarch64-unknown-linux-gnu` even though the
+//! x86 runners never execute it.
+#![allow(unsafe_code)]
+
+use std::arch::aarch64::*;
+
+use crate::nm::PackedNm;
+use crate::train::native::gemm::{store, PackedB, NR};
+use crate::train::native::pool::TileOut;
+use crate::train::native::sparse_ops;
+
+/// `R × NR` dense microkernel (mirror of `gemm::mk_rm`), NR = 2×4 lanes.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn mk_rm<const R: usize, const SKIP: bool>(
+    a: &[f32],
+    red: usize,
+    panel: &[f32],
+    arow0: usize,
+) -> [[f32; NR]; R] {
+    let rows: [&[f32]; R] =
+        core::array::from_fn(|t| &a[(arow0 + t) * red..(arow0 + t + 1) * red]);
+    let mut lo = [vdupq_n_f32(0.0); R];
+    let mut hi = [vdupq_n_f32(0.0); R];
+    for (kk, bs) in panel.chunks_exact(NR).enumerate() {
+        // SAFETY: chunks_exact(NR) guarantees NR = 8 contiguous f32s
+        let b_lo = vld1q_f32(bs.as_ptr());
+        let b_hi = vld1q_f32(bs.as_ptr().add(4));
+        for t in 0..R {
+            let xv = rows[t][kk];
+            if SKIP && xv == 0.0 {
+                continue;
+            }
+            let xvv = vdupq_n_f32(xv);
+            lo[t] = vaddq_f32(lo[t], vmulq_f32(xvv, b_lo));
+            hi[t] = vaddq_f32(hi[t], vmulq_f32(xvv, b_hi));
+        }
+    }
+    spill(&lo, &hi)
+}
+
+/// `R × NR` A-transposed microkernel (mirror of `gemm::mk_cm`).
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn mk_cm<const R: usize>(
+    x: &[f32],
+    ktot: usize,
+    panel: &[f32],
+    kk0: usize,
+) -> [[f32; NR]; R] {
+    let mut lo = [vdupq_n_f32(0.0); R];
+    let mut hi = [vdupq_n_f32(0.0); R];
+    for (r, bs) in panel.chunks_exact(NR).enumerate() {
+        // SAFETY: chunks_exact(NR) guarantees NR = 8 contiguous f32s
+        let b_lo = vld1q_f32(bs.as_ptr());
+        let b_hi = vld1q_f32(bs.as_ptr().add(4));
+        let xs = &x[r * ktot + kk0..r * ktot + kk0 + R];
+        for t in 0..R {
+            let xv = xs[t];
+            if xv == 0.0 {
+                continue;
+            }
+            let xvv = vdupq_n_f32(xv);
+            lo[t] = vaddq_f32(lo[t], vmulq_f32(xvv, b_lo));
+            hi[t] = vaddq_f32(hi[t], vmulq_f32(xvv, b_hi));
+        }
+    }
+    spill(&lo, &hi)
+}
+
+/// Spill `R` register-pair accumulators into the [`store`] shape.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn spill<const R: usize>(lo: &[float32x4_t; R], hi: &[float32x4_t; R]) -> [[f32; NR]; R] {
+    let mut out = [[0.0f32; NR]; R];
+    for t in 0..R {
+        // SAFETY: out[t] is NR = 8 contiguous f32s
+        vst1q_f32(out[t].as_mut_ptr(), lo[t]);
+        vst1q_f32(out[t].as_mut_ptr().add(4), hi[t]);
+    }
+    out
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn rm_tile<const SKIP: bool>(a: &[f32], red: usize, pb: &PackedB, mut out: TileOut<'_>) {
+    debug_assert_eq!(pb.k, red, "packed reduction mismatch");
+    let (r1, c0, c1) = (out.rows().end, out.cols().start, out.cols().end);
+    debug_assert!(c0 % NR == 0, "tile columns must start on a panel boundary");
+    let (p0, p1) = (c0 / NR, (c1 + NR - 1) / NR);
+    let mut r = out.rows().start;
+    while r < r1 {
+        let left = r1 - r;
+        if left >= 8 {
+            for p in p0..p1 {
+                let acc = mk_rm::<8, SKIP>(a, red, pb.panel(p), r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 8;
+        } else if left >= 4 {
+            for p in p0..p1 {
+                let acc = mk_rm::<4, SKIP>(a, red, pb.panel(p), r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 4;
+        } else {
+            for p in p0..p1 {
+                let acc = mk_rm::<1, SKIP>(a, red, pb.panel(p), r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 1;
+        }
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn at_tile(x: &[f32], ktot: usize, red: usize, pb: &PackedB, mut out: TileOut<'_>) {
+    debug_assert_eq!(pb.k, red, "packed reduction mismatch");
+    let (r1, c0, c1) = (out.rows().end, out.cols().start, out.cols().end);
+    debug_assert!(c0 % NR == 0, "tile columns must start on a panel boundary");
+    let (p0, p1) = (c0 / NR, (c1 + NR - 1) / NR);
+    let mut r = out.rows().start;
+    while r < r1 {
+        let left = r1 - r;
+        if left >= 8 {
+            for p in p0..p1 {
+                let acc = mk_cm::<8>(x, ktot, pb.panel(p), r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 8;
+        } else if left >= 4 {
+            for p in p0..p1 {
+                let acc = mk_cm::<4>(x, ktot, pb.panel(p), r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 4;
+        } else {
+            for p in p0..p1 {
+                let acc = mk_cm::<1>(x, ktot, pb.panel(p), r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 1;
+        }
+    }
+}
+
+/// `R` input rows × one NR-column panel of the N:M spmm: scalar index
+/// gather into a stack line, vector multiply-accumulate, same
+/// (group, slot)-ascending order as the scalar kernel.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn panel_mk<const R: usize, const N: usize, const M: usize>(
+    a: &[f32],
+    p_dim: usize,
+    pnm: &PackedNm,
+    panel: usize,
+    arow0: usize,
+) -> [[f32; NR]; R] {
+    let rows: [&[f32]; R] =
+        core::array::from_fn(|t| &a[(arow0 + t) * p_dim..(arow0 + t + 1) * p_dim]);
+    let vals = pnm.panel_values(panel);
+    let idxs = pnm.panel_indexes(panel);
+    let mut lo = [vdupq_n_f32(0.0); R];
+    let mut hi = [vdupq_n_f32(0.0); R];
+    let mut kbase = 0usize;
+    let groups = pnm.cols / M;
+    for g in 0..groups {
+        for j in 0..N {
+            let lane0 = (g * N + j) * NR;
+            // SAFETY: the panel packing stores exactly NR values + NR
+            // indexes per (group, slot), so lane0 + NR <= len for both
+            let v_lo = vld1q_f32(vals.as_ptr().add(lane0));
+            let v_hi = vld1q_f32(vals.as_ptr().add(lane0 + 4));
+            let ixs: &[u8; NR] = idxs[lane0..lane0 + NR].try_into().expect("NR lane");
+            for t in 0..R {
+                let win: &[f32; M] =
+                    rows[t][kbase..kbase + M].try_into().expect("M-sized window");
+                let mut gath = [0.0f32; NR];
+                for c in 0..NR {
+                    gath[c] = win[(ixs[c] as usize) & (M - 1)];
+                }
+                let g_lo = vld1q_f32(gath.as_ptr());
+                let g_hi = vld1q_f32(gath.as_ptr().add(4));
+                lo[t] = vaddq_f32(lo[t], vmulq_f32(g_lo, v_lo));
+                hi[t] = vaddq_f32(hi[t], vmulq_f32(g_hi, v_hi));
+            }
+        }
+        kbase += M;
+    }
+    spill(&lo, &hi)
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn spmm_tile<const N: usize, const M: usize>(
+    a: &[f32],
+    p_dim: usize,
+    pnm: &PackedNm,
+    mut out: TileOut<'_>,
+) {
+    debug_assert!(M.is_power_of_two(), "masked gather needs power-of-two M");
+    let (r1, c0, c1) = (out.rows().end, out.cols().start, out.cols().end);
+    debug_assert!(c0 % NR == 0, "tile columns must start on a panel boundary");
+    let (p0, p1) = (c0 / NR, (c1 + NR - 1) / NR);
+    let mut r = out.rows().start;
+    while r < r1 {
+        let left = r1 - r;
+        if left >= 8 {
+            for p in p0..p1 {
+                let acc = panel_mk::<8, N, M>(a, p_dim, pnm, p, r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 8;
+        } else if left >= 4 {
+            for p in p0..p1 {
+                let acc = panel_mk::<4, N, M>(a, p_dim, pnm, p, r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 4;
+        } else {
+            for p in p0..p1 {
+                let acc = panel_mk::<1, N, M>(a, p_dim, pnm, p, r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 1;
+        }
+    }
+}
+
+// ---- safe wrappers (the KernelSet entry points) ----
+//
+// SAFETY: only reachable through `dispatch`, which hands out the NEON
+// set strictly after `is_aarch64_feature_detected!("neon")` succeeded.
+
+pub(super) fn gemm_rm_skip(a: &[f32], red: usize, pb: &PackedB, out: TileOut<'_>) {
+    debug_assert!(super::dispatch::have_neon());
+    unsafe { rm_tile::<true>(a, red, pb, out) }
+}
+
+pub(super) fn gemm_rm_noskip(a: &[f32], red: usize, pb: &PackedB, out: TileOut<'_>) {
+    debug_assert!(super::dispatch::have_neon());
+    unsafe { rm_tile::<false>(a, red, pb, out) }
+}
+
+pub(super) fn gemm_at(x: &[f32], ktot: usize, red: usize, pb: &PackedB, out: TileOut<'_>) {
+    debug_assert!(super::dispatch::have_neon());
+    unsafe { at_tile(x, ktot, red, pb, out) }
+}
+
+/// Monomorphized per (N, M); exotic patterns fall back to the scalar
+/// generic path, same as the AVX2 set.
+pub(super) fn spmm_panel(a: &[f32], p_dim: usize, pnm: &PackedNm, out: TileOut<'_>) {
+    debug_assert!(super::dispatch::have_neon());
+    debug_assert_eq!(pnm.cols, p_dim, "encoding reduction axis mismatch");
+    debug_assert_eq!(pnm.nr, NR, "panel width must match the GEMM panel width");
+    match (pnm.pattern.n, pnm.pattern.m) {
+        (1, 4) => unsafe { spmm_tile::<1, 4>(a, p_dim, pnm, out) },
+        (2, 4) => unsafe { spmm_tile::<2, 4>(a, p_dim, pnm, out) },
+        (1, 8) => unsafe { spmm_tile::<1, 8>(a, p_dim, pnm, out) },
+        (2, 8) => unsafe { spmm_tile::<2, 8>(a, p_dim, pnm, out) },
+        (4, 8) => unsafe { spmm_tile::<4, 8>(a, p_dim, pnm, out) },
+        (2, 16) => unsafe { spmm_tile::<2, 16>(a, p_dim, pnm, out) },
+        (4, 16) => unsafe { spmm_tile::<4, 16>(a, p_dim, pnm, out) },
+        (8, 16) => unsafe { spmm_tile::<8, 16>(a, p_dim, pnm, out) },
+        _ => sparse_ops::spmm_panel_tile(a, p_dim, pnm, out),
+    }
+}

@@ -9,7 +9,7 @@ use sat::sched::{rwg_schedule, words};
 use sat::sim::engine::simulate_method;
 use sat::sim::memory::MemConfig;
 use sat::train::native::gemm::{self, PackedB};
-use sat::train::native::{ops, par, sparse_ops};
+use sat::train::native::{ops, par, simd, sparse_ops};
 use sat::util::testkit::{check, Gen};
 
 fn random_cfg(g: &mut Gen) -> SatConfig {
@@ -182,6 +182,60 @@ fn packed_gemm_bit_identical_to_seed_kernels_across_workers() {
             assert_eq!(got, want_bt, "matmul_bt {rows}x{k}x{f} workers={workers}");
             par::matmul_at_into(&x, &dy, rows, k, f, workers, &mut pack, &mut got);
             assert_eq!(got, want_at, "matmul_at {rows}x{k}x{f} workers={workers}");
+        }
+    });
+}
+
+#[test]
+fn kernel_sets_bit_identical_across_patterns_and_workers() {
+    // The PR 6 tentpole contract: EVERY detected kernel set (scalar
+    // always; AVX2/NEON when the host has them) produces `==`-exact
+    // results on every packed driver, for random shapes × the paper's
+    // patterns × 1/2/4 workers. The SIMD kernels vectorize across the
+    // NR output lanes with separate mul+add — no FMA, no horizontal
+    // reduction — so the per-element accumulation order is the scalar
+    // order and exact equality is the contract, not a tolerance.
+    check("kernel sets == scalar x patterns x workers", 30, |g| {
+        let (n, m) = *g.pick(&[(1usize, 4usize), (2, 4), (2, 8), (4, 8)]);
+        let p = NmPattern::new(n, m);
+        let k = g.usize_in(1, 4) * m;
+        let f = g.usize_in(1, 3) * m;
+        let rows = g.usize_in(1, 21);
+        let mut x = g.vec_normal(rows * k);
+        if g.bool() {
+            for v in x.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0; // post-ReLU activations exercise the skip
+                }
+            }
+        }
+        let dy = g.vec_normal(rows * f);
+        let w = g.vec_normal(k * f);
+        let enc_ff = CompactNm::encode_t(&w, k, f, p);
+        let enc_bp = CompactNm::encode(&w, k, f, p);
+        let pk_ff = enc_ff.pack_panels(gemm::NR);
+        let pk_bp = enc_bp.pack_panels(gemm::NR);
+        let wff = prune_values(&w, k, f, p, PruneAxis::Rows);
+        let want_ff = ops::matmul(&x, &wff, rows, k, f);
+        let want_bt = ops::matmul_bt(&dy, &w, rows, f, k);
+        let want_at = ops::matmul_at(&x, &dy, rows, k, f);
+        let want_sbt =
+            ops::matmul_bt(&dy, &prune_values(&w, k, f, p, PruneAxis::Cols), rows, f, k);
+        let (mut got, mut pack) = (Vec::new(), PackedB::default());
+        for ks in simd::available_sets() {
+            for workers in [1usize, 2, 4] {
+                let tag = format!("{} {p} {rows}x{k}x{f} workers={workers}", ks.name);
+                par::matmul_into_with(ks, &x, &wff, rows, k, f, workers, &mut pack, &mut got);
+                assert_eq!(got, want_ff, "matmul {tag}");
+                par::matmul_bt_into_with(ks, &dy, &w, rows, f, k, workers, &mut pack, &mut got);
+                assert_eq!(got, want_bt, "matmul_bt {tag}");
+                par::matmul_at_into_with(ks, &x, &dy, rows, k, f, workers, &mut pack, &mut got);
+                assert_eq!(got, want_at, "matmul_at {tag}");
+                par::spmm_ff_into_with(ks, &x, &pk_ff, rows, k, f, workers, &mut got);
+                assert_eq!(got, want_ff, "spmm_ff {tag}");
+                par::spmm_bt_into_with(ks, &dy, &pk_bp, rows, f, k, workers, &mut got);
+                assert_eq!(got, want_sbt, "spmm_bt {tag}");
+            }
         }
     });
 }
