@@ -15,8 +15,19 @@ use anyhow::{anyhow, bail, Context};
 use crate::util::json::{self, Value};
 use crate::util::table::Table;
 
-/// Metrics a diff can run on (fields of each result row).
-pub const METRICS: &[&str] = &["total_cycles", "batch_ms", "runtime_gops"];
+/// Metrics a diff can run on (fields of each result row). The first
+/// three come from sweep reports; `hit_rate`/`p50_ms`/`p99_ms` come
+/// from `sat serve --selftest` reports (`sat-serve-selftest-v1`), whose
+/// rows reuse the sweep scenario-identity fields so no schema
+/// special-casing is needed here.
+pub const METRICS: &[&str] = &[
+    "total_cycles",
+    "batch_ms",
+    "runtime_gops",
+    "hit_rate",
+    "p50_ms",
+    "p99_ms",
+];
 
 /// One scenario present in both reports.
 #[derive(Clone, Debug)]
@@ -140,10 +151,11 @@ pub fn diff_texts(old: &str, new: &str, metric: &str) -> anyhow::Result<BenchDif
 }
 
 impl BenchDiff {
-    /// Direction of badness: cycles/time regress when they GROW,
-    /// throughput (GOPS) regresses when it SHRINKS.
+    /// Direction of badness: cycles/time/latency regress when they
+    /// GROW; throughput (GOPS) and cache hit rate regress when they
+    /// SHRINK.
     fn regression_sign(&self) -> f64 {
-        if self.metric == "runtime_gops" {
+        if matches!(self.metric.as_str(), "runtime_gops" | "hit_rate") {
             -1.0
         } else {
             1.0
@@ -310,6 +322,44 @@ mod tests {
         let new = crate::util::json::array(vec![row("vit", 25.6, 505)]);
         let diff = diff_texts(&old, &new, "total_cycles").unwrap();
         assert!((diff.rows[0].delta_pct() - 1.0).abs() < 1e-9);
+    }
+
+    fn serve_row(phase: &str, hit_rate: f64, p50: f64, p99: f64) -> String {
+        Obj::new()
+            .field_str("model", "serve")
+            .field_str("method", phase)
+            .field_str("pattern", "mixed")
+            .field_usize("rows", 4)
+            .field_usize("cols", 1)
+            .field_usize("lanes", 0)
+            .field_f64("freq_mhz", 0.0)
+            .field_f64("bandwidth_gbs", 0.0)
+            .field_bool("overlap", true)
+            .field_u64("total_cycles", 240)
+            .field_f64("batch_ms", 1200.0)
+            .field_f64("runtime_gops", 200.0)
+            .field_f64("hit_rate", hit_rate)
+            .field_f64("p50_ms", p50)
+            .field_f64("p99_ms", p99)
+            .finish()
+    }
+
+    #[test]
+    fn serve_selftest_metrics_diff_without_special_casing() {
+        let old = doc(vec![serve_row("mixed_j1", 0.90, 1.0, 8.0)]);
+        // Hit rate shrinking is the regression; p99 growing is.
+        let worse = doc(vec![serve_row("mixed_j1", 0.60, 1.0, 12.0)]);
+        let d = diff_texts(&old, &worse, "hit_rate").unwrap();
+        assert_eq!(d.regressions_above(5.0).len(), 1, "hit-rate drop must flag");
+        let d = diff_texts(&worse, &old, "hit_rate").unwrap();
+        assert!(
+            d.regressions_above(0.0).is_empty(),
+            "hit-rate growth must not flag"
+        );
+        let d = diff_texts(&old, &worse, "p99_ms").unwrap();
+        assert_eq!(d.regressions_above(5.0).len(), 1, "p99 growth must flag");
+        let d = diff_texts(&old, &old, "p50_ms").unwrap();
+        assert_eq!(d.max_regression_pct(), 0.0);
     }
 
     #[test]

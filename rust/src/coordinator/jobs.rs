@@ -73,6 +73,16 @@ where
 /// training matmuls all share one set of parked threads. Each runner
 /// claims its next index dynamically, so load balancing is unchanged;
 /// only the dispatch cost dropped.
+///
+/// Concurrency: the pool accepts one dispatch at a time, and `run_queue`
+/// historically assumed one logical client per process (the CLI). With
+/// `sat serve`, several requests call it concurrently; that is safe by
+/// construction, not by luck — a dispatcher that finds the pool busy
+/// (or is itself running on a pool worker) degrades to executing every
+/// job inline on its own thread (the `try_lock` fallback in `pool.rs`),
+/// so contending callers serialize nothing, deadlock never, and each
+/// caller's output stays bit-identical to its serial execution; the
+/// loser merely forgoes pool parallelism for that one call.
 pub fn run_queue<T, F>(n: usize, workers: usize, job: F) -> Vec<T>
 where
     T: Send,
@@ -184,6 +194,23 @@ mod tests {
             assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
         }
         assert!(run_queue(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn concurrent_run_queue_callers_get_identical_serial_results() {
+        // Two (or more) `sat serve` requests dispatch run_queue at the
+        // same time; whichever loses the pool's try_lock races degrades
+        // to inline execution. Every caller must still produce exactly
+        // the serial result, in order.
+        let want: Vec<usize> = (0..64).map(|i| i * i + 1).collect();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..3)
+                .map(|_| s.spawn(|| run_queue(64, 4, |i| i * i + 1)))
+                .collect();
+            for h in handles {
+                assert_eq!(h.join().unwrap(), want);
+            }
+        });
     }
 
     #[test]

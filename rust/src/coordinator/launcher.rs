@@ -7,6 +7,7 @@ use crate::coordinator::benchdiff;
 use crate::coordinator::cli::Args;
 use crate::coordinator::config::{RunConfig, CONFIG_FLAGS, CONFIG_SWITCHES};
 use crate::coordinator::jobs;
+use crate::coordinator::serve;
 use crate::coordinator::sweep::{self, SimBank, SweepSpec};
 use crate::models::zoo;
 use crate::nm::{Method, NmPattern};
@@ -61,8 +62,20 @@ SUBCOMMANDS
   verify     check the N:M golden contract; native checks run from a
              fresh clone, PJRT step goldens when artifacts exist
              [--backend native|pjrt|all]
-  bench-diff compare two sweep JSON reports, flag cycle regressions
-             [old.json new.json --threshold PCT --metric total_cycles]
+  serve      long-lived sweep/train service: line-delimited JSON
+             requests (sweep|compare|train|status|shutdown) over TCP or
+             a Unix socket; shared caches + in-flight dedupe across
+             requests, results streamed as they complete
+             [--addr HOST:PORT (default 127.0.0.1:4077) | --socket PATH]
+             selftest: in-process load generator, writes a bench-diff
+             JSON and hard-fails below the cache/dedupe gates
+             [--selftest --quick --clients N --requests N
+              --out BENCH_serve_selftest.json
+              --min-hit-rate F --min-joins N]
+  bench-diff compare two sweep JSON or serve-selftest reports, flag
+             metric regressions
+             [old.json new.json --threshold PCT --metric total_cycles|
+              batch_ms|runtime_gops|hit_rate|p50_ms|p99_ms]
   help       this text
 ";
 
@@ -93,6 +106,12 @@ pub fn run(argv: &[String]) -> i32 {
             switches.push("tta");
         }
         Some("verify") => flags.push("backend"),
+        Some("serve") => {
+            flags.extend_from_slice(&[
+                "addr", "socket", "clients", "requests", "out", "min-hit-rate", "min-joins",
+            ]);
+            switches.extend_from_slice(&["selftest", "quick"]);
+        }
         Some("bench-diff") => {
             flags.extend_from_slice(&["old", "new", "threshold", "metric"]);
             max_positionals = 2;
@@ -115,6 +134,7 @@ pub fn run(argv: &[String]) -> i32 {
         "train" => cmd_train(&args),
         "compare" => cmd_compare(&args),
         "verify" => cmd_verify(&args),
+        "serve" => cmd_serve(&args),
         "bench-diff" => cmd_bench_diff(&args),
         "help" | "" => {
             println!("{USAGE}");
@@ -545,6 +565,27 @@ fn cmd_verify(args: &Args) -> anyhow::Result<()> {
     }
     println!("verify OK: {checks} golden checks passed");
     Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    if args.has("selftest") {
+        return serve::selftest::run(&serve::SelftestOpts::from_args(args)?);
+    }
+    ensure!(
+        args.get("addr").is_none() || args.get("socket").is_none(),
+        "give --addr or --socket, not both"
+    );
+    let core = std::sync::Arc::new(serve::ServeCore::new());
+    let handle = match args.get("socket") {
+        Some(path) => serve::spawn_socket(core, path)?,
+        None => serve::spawn_tcp(core, args.get_or("addr", "127.0.0.1:4077"))?,
+    };
+    eprintln!(
+        "[serve] listening on {} — one JSON request per line; \
+         send {{\"cmd\":\"shutdown\"}} to stop",
+        handle.addr()
+    );
+    handle.join()
 }
 
 fn cmd_bench_diff(args: &Args) -> anyhow::Result<()> {

@@ -8,6 +8,7 @@ pub mod cli;
 pub mod jobs;
 pub mod config;
 pub mod launcher;
+pub mod serve;
 pub mod sweep;
 
 pub use cli::{Args, ParseError};

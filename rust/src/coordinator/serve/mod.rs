@@ -1,0 +1,33 @@
+//! `sat serve` — a long-lived sweep/train service.
+//!
+//! The one-shot CLI recomputes everything per invocation; this module
+//! promotes it to a daemon so the paper's amortization story (compute
+//! a schedule once, reuse it everywhere) holds at service scale:
+//!
+//! * [`protocol`] — the line-delimited JSON wire format: `sweep`,
+//!   `compare`, `train`, `status`, `shutdown` requests; `row`/`done`/
+//!   `train`/`status`/`ok`/`error` responses. Streamed scenario rows
+//!   are byte-identical to the one-shot `sat sweep` JSON sink.
+//! * [`state`] — the shared [`ServeCore`]: `SweepCaches` behind a
+//!   lock-coarse [`ShareMap`] result cache with in-flight dedupe (a
+//!   second identical scenario subscribes to the first's slot and runs
+//!   zero simulations), plus the counters `status` reports.
+//! * [`server`] — TCP/Unix-socket listeners, one handler thread per
+//!   connection, all requests sharing the one process-global worker
+//!   pool.
+//! * [`selftest`] — `sat serve --selftest`: an in-process load
+//!   generator that replays thousands of mixed-grid queries and emits
+//!   a bench-diff-schema `BENCH_serve_selftest.json` (cache hit rate,
+//!   p50/p99 latency, throughput vs. worker count) for CI gating.
+
+pub mod protocol;
+pub mod selftest;
+pub mod server;
+pub mod state;
+
+pub use protocol::{Cmd, Request, StreamStats, TrainRequest};
+pub use selftest::SelftestOpts;
+#[cfg(unix)]
+pub use server::spawn_unix;
+pub use server::{spawn_socket, spawn_tcp, Server, ServerHandle};
+pub use state::{FetchKind, ServeCore, ShareMap};

@@ -1,0 +1,614 @@
+//! Wire protocol for `sat serve`: line-delimited JSON requests and
+//! responses.
+//!
+//! Every request is one JSON object on one line. Fields mirror the CLI
+//! flags (`models`/`methods`/... are the same comma-separated lists
+//! `sat sweep` takes), so a request is mostly a re-spelling of an
+//! `sat sweep`/`train` invocation plus an `"id"` the server echoes on
+//! every response line belonging to that request.
+//!
+//! Requests:
+//!
+//! ```text
+//! {"id":"a1","cmd":"sweep","models":"resnet9","methods":"dense,bdwp",
+//!  "patterns":"2:8","arrays":"16x16","bandwidths":"25.6,102.4",
+//!  "overlap":true,"jobs":0}
+//! {"id":"a2","cmd":"compare","model":"resnet9","methods":"dense,bdwp",
+//!  "pattern":"2:8"}
+//! {"id":"a3","cmd":"train","model":"mlp","method":"bdwp","pattern":"2:8",
+//!  "steps":40,"lr":0.05,"eval_every":0,"seed":1}
+//! {"id":"a4","cmd":"status"}
+//! {"id":"a5","cmd":"shutdown"}
+//! ```
+//!
+//! Responses (one JSON line each, `"id"` first, `"kind"` second):
+//!
+//! * `row` — one sweep/compare scenario result. The `"result"` value is
+//!   the **last** field of the line and carries *exactly* the bytes
+//!   [`SweepRow::json`](crate::coordinator::sweep::SweepRow::json)
+//!   would put in a one-shot `sat sweep` JSON sink — byte-for-byte, so
+//!   clients can diff served results against offline artifacts.
+//!   [`raw_result`] slices those bytes back out of a response line.
+//! * `done` — terminates a sweep/compare stream; carries per-request
+//!   cache counters and wall time.
+//! * `train` — a completed (or cache-served) training request; the
+//!   deterministic result object is again the last field.
+//! * `status` — server counters, last field again.
+//! * `ok` — acknowledges `shutdown`.
+//! * `error` — parse or execution failure; the connection stays open.
+//!
+//! Omitted request fields take the same defaults as the CLI. Unknown
+//! `cmd` values and malformed lines produce an `error` response with
+//! whatever `"id"` could be salvaged from the line.
+
+use std::str::FromStr;
+
+use crate::coordinator::sweep::{parse_arrays, SweepSpec};
+use crate::nm::{Method, NmPattern};
+use crate::train::{default_lr, TrainSpec};
+use crate::util::json::{self, Obj, Value};
+
+/// One parsed request line.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Client-chosen correlation id, echoed on every response line.
+    pub id: String,
+    pub cmd: Cmd,
+}
+
+/// The request kinds the server understands.
+#[derive(Clone, Debug)]
+pub enum Cmd {
+    /// Stream every scenario of the grid, then a `done` line.
+    Sweep(SweepSpec),
+    /// A methods-axis sweep of one model/pattern (same row bytes).
+    Compare(SweepSpec),
+    /// Train one scenario on the native backend; result is cached.
+    Train(TrainRequest),
+    /// One `status` line of server counters.
+    Status,
+    /// Stop accepting connections; in-flight requests finish first.
+    Shutdown,
+}
+
+/// A validated `train` request. `model` is already canonicalized
+/// (`mlp` -> `tiny_mlp`) so identical logical requests share one
+/// cache slot.
+#[derive(Clone, Debug)]
+pub struct TrainRequest {
+    pub model: String,
+    pub method: Method,
+    pub pattern: NmPattern,
+    pub steps: usize,
+    pub lr: f32,
+    pub eval_every: usize,
+    pub seed: u64,
+}
+
+impl Request {
+    /// Parse one request line. On failure returns `(id, message)` where
+    /// `id` is whatever could still be extracted (possibly empty), so
+    /// the error response can be correlated by the client.
+    pub fn parse_line(line: &str) -> Result<Request, (String, String)> {
+        let doc = json::parse(line).map_err(|e| (String::new(), format!("bad JSON: {e}")))?;
+        let id = doc
+            .get("id")
+            .and_then(Value::as_str)
+            .unwrap_or("")
+            .to_string();
+        let cmd = match doc.get("cmd").and_then(Value::as_str) {
+            Some(c) => c,
+            None => {
+                return Err((id, "request must be an object with a string \"cmd\"".into()));
+            }
+        };
+        let cmd = match cmd {
+            "sweep" => sweep_spec(&doc).map(Cmd::Sweep),
+            "compare" => compare_spec(&doc).map(Cmd::Compare),
+            "train" => train_request(&doc).map(Cmd::Train),
+            "status" => Ok(Cmd::Status),
+            "shutdown" => Ok(Cmd::Shutdown),
+            other => Err(format!(
+                "unknown cmd {other:?} (want sweep|compare|train|status|shutdown)"
+            )),
+        };
+        match cmd {
+            Ok(cmd) => Ok(Request { id, cmd }),
+            Err(msg) => Err((id, msg)),
+        }
+    }
+
+    /// Canonical serialization: parses back to an equivalent request.
+    pub fn to_line(&self) -> String {
+        let obj = Obj::new().field_str("id", &self.id);
+        match &self.cmd {
+            Cmd::Sweep(s) => obj
+                .field_str("cmd", "sweep")
+                .field_str("models", &s.models.join(","))
+                .field_str("methods", &join_list(s.methods.iter().map(|m| m.name())))
+                .field_str(
+                    "patterns",
+                    &join_list(s.patterns.iter().map(|p| p.to_string())),
+                )
+                .field_str(
+                    "arrays",
+                    &join_list(s.arrays.iter().map(|(r, c)| format!("{r}x{c}"))),
+                )
+                .field_str(
+                    "bandwidths",
+                    &join_list(s.bandwidths.iter().map(|b| json::number(*b))),
+                )
+                .field_bool("overlap", s.overlap)
+                .field_usize("jobs", s.jobs)
+                .finish(),
+            Cmd::Compare(s) => obj
+                .field_str("cmd", "compare")
+                .field_str("model", &s.models[0])
+                .field_str("methods", &join_list(s.methods.iter().map(|m| m.name())))
+                .field_str("pattern", &s.patterns[0].to_string())
+                .field_usize("jobs", s.jobs)
+                .finish(),
+            Cmd::Train(t) => obj
+                .field_str("cmd", "train")
+                .field_str("model", &t.model)
+                .field_str("method", t.method.name())
+                .field_str("pattern", &t.pattern.to_string())
+                .field_usize("steps", t.steps)
+                .field_f64("lr", f64::from(t.lr))
+                .field_usize("eval_every", t.eval_every)
+                .field_u64("seed", t.seed)
+                .finish(),
+            Cmd::Status => obj.field_str("cmd", "status").finish(),
+            Cmd::Shutdown => obj.field_str("cmd", "shutdown").finish(),
+        }
+    }
+}
+
+fn join_list<I: IntoIterator>(items: I) -> String
+where
+    I::Item: AsRef<str>,
+{
+    let mut out = String::new();
+    for (i, item) in items.into_iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(item.as_ref());
+    }
+    out
+}
+
+fn str_of<'a>(doc: &'a Value, key: &str) -> Option<&'a str> {
+    doc.get(key).and_then(Value::as_str)
+}
+
+/// Optional non-negative integer field with a default.
+fn count_of(doc: &Value, key: &str, default: u64) -> Result<u64, String> {
+    match doc.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_u64()
+            .ok_or_else(|| format!("field {key:?} must be a non-negative integer")),
+    }
+}
+
+fn parse_list<T: FromStr>(text: &str, what: &str) -> Result<Vec<T>, String>
+where
+    T::Err: std::fmt::Display,
+{
+    let items: Vec<&str> = text
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .collect();
+    if items.is_empty() {
+        return Err(format!("field {what:?} must be a non-empty list"));
+    }
+    items
+        .into_iter()
+        .map(|s| s.parse::<T>().map_err(|e| format!("{what} {s:?}: {e}")))
+        .collect()
+}
+
+fn sweep_spec(doc: &Value) -> Result<SweepSpec, String> {
+    let mut spec = SweepSpec::default();
+    if let Some(v) = str_of(doc, "models") {
+        spec.models = v
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect();
+        if spec.models.is_empty() {
+            return Err("field \"models\" must be a non-empty list".into());
+        }
+    }
+    if let Some(v) = str_of(doc, "methods") {
+        spec.methods = parse_list(v, "methods")?;
+    }
+    if let Some(v) = str_of(doc, "patterns") {
+        spec.patterns = parse_list(v, "patterns")?;
+    }
+    if let Some(v) = str_of(doc, "arrays") {
+        spec.arrays = parse_arrays(v).map_err(|e| format!("arrays: {e:#}"))?;
+    }
+    if let Some(v) = str_of(doc, "bandwidths") {
+        spec.bandwidths = parse_list(v, "bandwidths")?;
+    }
+    if let Some(v) = doc.get("overlap") {
+        spec.overlap = v
+            .as_bool()
+            .ok_or_else(|| "field \"overlap\" must be a bool".to_string())?;
+    }
+    spec.jobs = count_of(doc, "jobs", 0)? as usize;
+    Ok(spec)
+}
+
+fn compare_spec(doc: &Value) -> Result<SweepSpec, String> {
+    let model = str_of(doc, "model")
+        .ok_or_else(|| "compare needs a string field \"model\"".to_string())?;
+    Ok(SweepSpec {
+        models: vec![model.to_string()],
+        methods: match str_of(doc, "methods") {
+            Some(v) => parse_list(v, "methods")?,
+            None => Method::ALL.to_vec(),
+        },
+        patterns: vec![match str_of(doc, "pattern") {
+            Some(v) => v.parse().map_err(|e| format!("pattern: {e}"))?,
+            None => NmPattern::P2_8,
+        }],
+        jobs: count_of(doc, "jobs", 0)? as usize,
+        ..SweepSpec::default()
+    })
+}
+
+fn train_request(doc: &Value) -> Result<TrainRequest, String> {
+    let model = str_of(doc, "model")
+        .ok_or_else(|| "train needs a string field \"model\"".to_string())?;
+    let method = match str_of(doc, "method") {
+        Some(v) => v.parse().map_err(|e| format!("method: {e}"))?,
+        None => Method::Bdwp,
+    };
+    let pattern: NmPattern = match str_of(doc, "pattern") {
+        Some(v) => v.parse().map_err(|e| format!("pattern: {e}"))?,
+        None => NmPattern::P2_8,
+    };
+    // Canonicalize and reject models the native backend has no dataset
+    // for, so the worker never panics mid-request.
+    let probe = TrainSpec::new(model, method, pattern);
+    if !matches!(probe.family(), "mlp" | "cnn" | "vit") {
+        return Err(format!(
+            "train model {model:?} is not native-trainable (want mlp|cnn|vit or their tiny_* stand-ins)"
+        ));
+    }
+    let steps = count_of(doc, "steps", 40)? as usize;
+    if steps == 0 {
+        return Err("field \"steps\" must be >= 1".into());
+    }
+    let lr = match doc.get("lr") {
+        None => default_lr(probe.family()),
+        Some(v) => v
+            .as_f64()
+            .ok_or_else(|| "field \"lr\" must be a number".to_string())? as f32,
+    };
+    if !lr.is_finite() || lr <= 0.0 {
+        return Err("field \"lr\" must be a positive finite number".into());
+    }
+    Ok(TrainRequest {
+        model: probe.model.clone(),
+        method,
+        pattern,
+        steps,
+        lr,
+        eval_every: count_of(doc, "eval_every", 0)? as usize,
+        seed: count_of(doc, "seed", 1)?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Response emission (server side)
+// ---------------------------------------------------------------------------
+
+/// Per-request cache/dedupe counters reported on the `done` line.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StreamStats {
+    pub rows: u64,
+    /// Scenarios served from the completed-result cache.
+    pub hits: u64,
+    /// Scenarios that subscribed to another request's in-flight compute.
+    pub joins: u64,
+    /// Scenarios this request computed itself.
+    pub misses: u64,
+}
+
+/// One streamed scenario. `result` must be the exact
+/// [`SweepRow::json`](crate::coordinator::sweep::SweepRow::json) bytes;
+/// keeping it the **last** field is what lets [`raw_result`] recover
+/// them without re-serializing.
+pub fn row_line(id: &str, index: usize, result: &str) -> String {
+    Obj::new()
+        .field_str("id", id)
+        .field_str("kind", "row")
+        .field_usize("index", index)
+        .field_raw("result", result)
+        .finish()
+}
+
+/// Terminates a sweep/compare stream. Timing lives here, never in the
+/// row lines, so rows stay pure functions of the grid point.
+pub fn done_line(id: &str, stats: &StreamStats, ms: f64) -> String {
+    Obj::new()
+        .field_str("id", id)
+        .field_str("kind", "done")
+        .field_u64("rows", stats.rows)
+        .field_u64("scenario_hits", stats.hits)
+        .field_u64("dedupe_joins", stats.joins)
+        .field_u64("scenario_misses", stats.misses)
+        .field_f64("ms", ms)
+        .finish()
+}
+
+pub fn error_line(id: &str, message: &str) -> String {
+    Obj::new()
+        .field_str("id", id)
+        .field_str("kind", "error")
+        .field_str("error", message)
+        .finish()
+}
+
+pub fn ok_line(id: &str) -> String {
+    Obj::new()
+        .field_str("id", id)
+        .field_str("kind", "ok")
+        .finish()
+}
+
+/// A finished training request; `result` is the deterministic JSON from
+/// the train cache (timing excluded), kept last for [`raw_result`].
+pub fn train_line(id: &str, cached: bool, ms: f64, result: &str) -> String {
+    Obj::new()
+        .field_str("id", id)
+        .field_str("kind", "train")
+        .field_bool("cached", cached)
+        .field_f64("ms", ms)
+        .field_raw("result", result)
+        .finish()
+}
+
+pub fn status_line(id: &str, status: &str) -> String {
+    Obj::new()
+        .field_str("id", id)
+        .field_str("kind", "status")
+        .field_raw("result", status)
+        .finish()
+}
+
+// ---------------------------------------------------------------------------
+// Response parsing (client side: selftest, tests, external tools)
+// ---------------------------------------------------------------------------
+
+/// A parsed response line (client view).
+#[derive(Debug)]
+pub struct Response {
+    pub id: String,
+    pub kind: String,
+    /// Row index for `kind == "row"`.
+    pub index: Option<usize>,
+    /// The whole parsed line, for ad-hoc field access.
+    pub body: Value,
+}
+
+pub fn parse_response(line: &str) -> Result<Response, String> {
+    let body = json::parse(line)?;
+    let id = body
+        .get("id")
+        .and_then(Value::as_str)
+        .ok_or("response line lacks \"id\"")?
+        .to_string();
+    let kind = body
+        .get("kind")
+        .and_then(Value::as_str)
+        .ok_or("response line lacks \"kind\"")?
+        .to_string();
+    let index = body
+        .get("index")
+        .and_then(Value::as_u64)
+        .map(|v| v as usize);
+    Ok(Response {
+        id,
+        kind,
+        index,
+        body,
+    })
+}
+
+/// Slice the raw `"result"` object bytes out of a response line without
+/// re-serializing (valid because emission puts `result` last). This is
+/// the byte-parity hook: `raw_result(row_line) == SweepRow::json()`.
+pub fn raw_result(line: &str) -> Option<&str> {
+    let pos = line.find("\"result\":")?;
+    let rest = &line[pos + "\"result\":".len()..];
+    rest.strip_suffix('}')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(req: &Request) -> Request {
+        let line = req.to_line();
+        let back = Request::parse_line(&line).expect("round trip parse");
+        assert_eq!(back.to_line(), line, "canonical form is a fixed point");
+        back
+    }
+
+    #[test]
+    fn sweep_round_trips_with_every_axis() {
+        let spec = SweepSpec {
+            models: vec!["resnet9".into(), "tiny_mlp".into()],
+            methods: vec![Method::Dense, Method::Bdwp],
+            patterns: vec![NmPattern::P2_4, NmPattern::P2_8],
+            arrays: vec![(16, 16), (32, 32)],
+            bandwidths: vec![25.6, 102.4],
+            overlap: false,
+            jobs: 3,
+            ..SweepSpec::default()
+        };
+        let back = round_trip(&Request {
+            id: "rq1".into(),
+            cmd: Cmd::Sweep(spec.clone()),
+        });
+        match back.cmd {
+            Cmd::Sweep(s) => {
+                assert_eq!(s.models, spec.models);
+                assert_eq!(s.methods, spec.methods);
+                assert_eq!(s.patterns, spec.patterns);
+                assert_eq!(s.arrays, spec.arrays);
+                assert_eq!(s.bandwidths, spec.bandwidths);
+                assert!(!s.overlap);
+                assert_eq!(s.jobs, 3);
+            }
+            other => panic!("expected sweep, got {other:?}"),
+        }
+        assert_eq!(back.id, "rq1");
+    }
+
+    #[test]
+    fn minimal_sweep_takes_cli_defaults() {
+        let req = Request::parse_line(r#"{"cmd":"sweep"}"#).unwrap();
+        let default = SweepSpec::default();
+        match req.cmd {
+            Cmd::Sweep(s) => {
+                assert_eq!(s.models, default.models);
+                assert_eq!(s.methods, default.methods);
+                assert_eq!(s.patterns, default.patterns);
+                assert_eq!(s.arrays, default.arrays);
+                assert_eq!(s.bandwidths, default.bandwidths);
+                assert!(s.overlap);
+                assert_eq!(s.jobs, 0);
+            }
+            other => panic!("expected sweep, got {other:?}"),
+        }
+        assert_eq!(req.id, "");
+    }
+
+    #[test]
+    fn compare_round_trips_and_defaults_to_all_methods() {
+        let back = round_trip(&Request {
+            id: "c1".into(),
+            cmd: Cmd::Compare(compare_spec(
+                &json::parse(r#"{"cmd":"compare","model":"resnet9"}"#).unwrap(),
+            )
+            .unwrap()),
+        });
+        match back.cmd {
+            Cmd::Compare(s) => {
+                assert_eq!(s.models, vec!["resnet9".to_string()]);
+                assert_eq!(s.methods, Method::ALL.to_vec());
+                assert_eq!(s.patterns, vec![NmPattern::P2_8]);
+            }
+            other => panic!("expected compare, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn train_round_trips_and_canonicalizes_the_model() {
+        let req =
+            Request::parse_line(r#"{"id":"t1","cmd":"train","model":"mlp","steps":7}"#).unwrap();
+        let t = match &req.cmd {
+            Cmd::Train(t) => t.clone(),
+            other => panic!("expected train, got {other:?}"),
+        };
+        assert_eq!(t.model, "tiny_mlp", "mlp canonicalizes to tiny_mlp");
+        assert_eq!(t.method, Method::Bdwp);
+        assert_eq!(t.pattern, NmPattern::P2_8);
+        assert_eq!(t.steps, 7);
+        assert_eq!(t.lr, default_lr("mlp"));
+        assert_eq!(t.seed, 1);
+        let back = round_trip(&req);
+        match back.cmd {
+            Cmd::Train(b) => {
+                assert_eq!(b.model, t.model);
+                assert_eq!(b.lr.to_bits(), t.lr.to_bits(), "lr survives exactly");
+            }
+            other => panic!("expected train, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn status_and_shutdown_round_trip() {
+        for (line, want) in [
+            (r#"{"id":"s","cmd":"status"}"#, "status"),
+            (r#"{"id":"s","cmd":"shutdown"}"#, "shutdown"),
+        ] {
+            let req = Request::parse_line(line).unwrap();
+            match (&req.cmd, want) {
+                (Cmd::Status, "status") | (Cmd::Shutdown, "shutdown") => {}
+                other => panic!("mismatch: {other:?}"),
+            }
+            round_trip(&req);
+        }
+    }
+
+    #[test]
+    fn malformed_lines_fail_with_the_salvaged_id() {
+        // Not JSON at all: no id to salvage.
+        let (id, msg) = Request::parse_line("not json").unwrap_err();
+        assert_eq!(id, "");
+        assert!(msg.contains("bad JSON"), "{msg}");
+        // Valid JSON, bad cmd: id still comes back.
+        let (id, msg) = Request::parse_line(r#"{"id":"x7","cmd":"nope"}"#).unwrap_err();
+        assert_eq!(id, "x7");
+        assert!(msg.contains("unknown cmd"), "{msg}");
+        // Missing cmd entirely.
+        let (id, _) = Request::parse_line(r#"{"id":"x8"}"#).unwrap_err();
+        assert_eq!(id, "x8");
+        // Field-level failures.
+        for line in [
+            r#"{"cmd":"sweep","methods":"dense,warp"}"#,
+            r#"{"cmd":"sweep","patterns":"9:1"}"#,
+            r#"{"cmd":"sweep","jobs":-1}"#,
+            r#"{"cmd":"sweep","jobs":1.5}"#,
+            r#"{"cmd":"sweep","overlap":"yes"}"#,
+            r#"{"cmd":"compare"}"#,
+            r#"{"cmd":"train","model":"resnet50"}"#,
+            r#"{"cmd":"train","model":"mlp","steps":0}"#,
+            r#"{"cmd":"train","model":"mlp","lr":-0.5}"#,
+        ] {
+            assert!(Request::parse_line(line).is_err(), "should reject: {line}");
+        }
+    }
+
+    #[test]
+    fn raw_result_recovers_the_exact_row_bytes() {
+        let row = r#"{"model":"resnet9","total_cycles":123}"#;
+        let line = row_line("rq", 4, row);
+        assert_eq!(raw_result(&line), Some(row));
+        let resp = parse_response(&line).unwrap();
+        assert_eq!(resp.id, "rq");
+        assert_eq!(resp.kind, "row");
+        assert_eq!(resp.index, Some(4));
+        // Non-result lines: no slice.
+        assert_eq!(raw_result(&ok_line("rq")), None);
+        // done/error/status parse as responses too.
+        let done = done_line(
+            "rq",
+            &StreamStats {
+                rows: 4,
+                hits: 1,
+                joins: 2,
+                misses: 1,
+            },
+            1.5,
+        );
+        let resp = parse_response(&done).unwrap();
+        assert_eq!(resp.kind, "done");
+        assert_eq!(resp.body.get("dedupe_joins").and_then(Value::as_u64), Some(2));
+        let err = error_line("rq", "it broke \"badly\"");
+        let resp = parse_response(&err).unwrap();
+        assert_eq!(
+            resp.body.get("error").and_then(Value::as_str),
+            Some("it broke \"badly\"")
+        );
+    }
+}

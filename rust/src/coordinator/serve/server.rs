@@ -1,0 +1,415 @@
+//! Socket front-end for `sat serve`: listener binding, the accept
+//! loop, and the per-connection line protocol.
+//!
+//! One handler thread per connection; every connection multiplexes any
+//! number of sequential requests over one [`ServeCore`], so caches,
+//! dedupe slots and the global worker pool are shared across clients.
+//! The accept loop polls a nonblocking listener so a `shutdown` request
+//! (which only flips a flag on the core) stops the server without
+//! needing to interrupt a blocking `accept()`; in-flight connections
+//! are drained before the accept loop returns.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
+
+use super::protocol::{self, Cmd, Request};
+use super::state::{FetchKind, ServeCore};
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixListener),
+}
+
+enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixStream),
+}
+
+/// A bound-but-not-yet-running server. [`Server::run`] consumes it;
+/// [`spawn_tcp`]/[`spawn_socket`] wrap bind+run on a thread.
+pub struct Server {
+    core: Arc<ServeCore>,
+    listener: Listener,
+    addr: String,
+}
+
+impl Server {
+    pub fn bind_tcp(core: Arc<ServeCore>, addr: &str) -> anyhow::Result<Server> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding tcp {addr:?}"))?;
+        let addr = listener
+            .local_addr()
+            .context("resolving bound address")?
+            .to_string();
+        Ok(Server {
+            core,
+            listener: Listener::Tcp(listener),
+            addr,
+        })
+    }
+
+    #[cfg(unix)]
+    pub fn bind_unix(core: Arc<ServeCore>, path: &str) -> anyhow::Result<Server> {
+        // A stale socket file from a previous run would fail the bind.
+        let _ = std::fs::remove_file(path);
+        let listener = std::os::unix::net::UnixListener::bind(path)
+            .with_context(|| format!("binding unix socket {path:?}"))?;
+        Ok(Server {
+            core,
+            listener: Listener::Unix(listener),
+            addr: path.to_string(),
+        })
+    }
+
+    /// The bound address: for TCP the resolved `ip:port` (so binding
+    /// port 0 reports the ephemeral port), for Unix sockets the path.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Accept loop. Returns after a `shutdown` request, once every
+    /// accepted connection's handler has finished.
+    pub fn run(self) -> anyhow::Result<()> {
+        match &self.listener {
+            Listener::Tcp(l) => l.set_nonblocking(true).context("listener nonblocking")?,
+            #[cfg(unix)]
+            Listener::Unix(l) => l.set_nonblocking(true).context("listener nonblocking")?,
+        }
+        let mut handlers: Vec<thread::JoinHandle<()>> = Vec::new();
+        while !self.core.is_shutdown() {
+            match self.accept().context("accepting connection")? {
+                Some(conn) => {
+                    let core = Arc::clone(&self.core);
+                    let handle = thread::Builder::new()
+                        .name("sat-serve-conn".into())
+                        .spawn(move || conn.handle(&core))
+                        .context("spawning connection handler")?;
+                    handlers.push(handle);
+                }
+                None => thread::sleep(Duration::from_millis(2)),
+            }
+        }
+        for h in handlers {
+            let _ = h.join();
+        }
+        #[cfg(unix)]
+        if matches!(self.listener, Listener::Unix(_)) {
+            let _ = std::fs::remove_file(&self.addr);
+        }
+        Ok(())
+    }
+
+    /// One nonblocking accept attempt; `None` when no client is waiting.
+    fn accept(&self) -> std::io::Result<Option<Conn>> {
+        match &self.listener {
+            Listener::Tcp(l) => match l.accept() {
+                Ok((s, _)) => {
+                    s.set_nonblocking(false)?;
+                    Ok(Some(Conn::Tcp(s)))
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+                Err(e) => Err(e),
+            },
+            #[cfg(unix)]
+            Listener::Unix(l) => match l.accept() {
+                Ok((s, _)) => {
+                    s.set_nonblocking(false)?;
+                    Ok(Some(Conn::Unix(s)))
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+                Err(e) => Err(e),
+            },
+        }
+    }
+}
+
+impl Conn {
+    fn handle(self, core: &ServeCore) {
+        // A client that disconnects mid-stream is normal operation;
+        // the io::Result here only stops this connection's loop.
+        let _ = match self {
+            Conn::Tcp(stream) => match stream.try_clone() {
+                Ok(read_half) => {
+                    serve_lines(core, BufReader::new(read_half), BufWriter::new(stream))
+                }
+                Err(e) => Err(e),
+            },
+            #[cfg(unix)]
+            Conn::Unix(stream) => match stream.try_clone() {
+                Ok(read_half) => {
+                    serve_lines(core, BufReader::new(read_half), BufWriter::new(stream))
+                }
+                Err(e) => Err(e),
+            },
+        };
+    }
+}
+
+/// The connection loop: one request line in, one or more response
+/// lines out, until EOF. Malformed lines produce an `error` response
+/// and the loop continues — a bad request never costs the connection.
+pub fn serve_lines<R: BufRead, W: Write>(
+    core: &ServeCore,
+    reader: R,
+    mut writer: W,
+) -> std::io::Result<()> {
+    for line in reader.lines() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        dispatch_line(core, trimmed, &mut writer)?;
+    }
+    Ok(())
+}
+
+fn dispatch_line<W: Write>(core: &ServeCore, line: &str, w: &mut W) -> std::io::Result<()> {
+    let req = match Request::parse_line(line) {
+        Ok(r) => r,
+        Err((id, msg)) => {
+            core.count_error();
+            return write_line(w, &protocol::error_line(&id, &msg));
+        }
+    };
+    core.begin_request();
+    let t0 = Instant::now();
+    // A panic in a handler (e.g. a poisoned scenario slot) must not
+    // take down the connection thread silently: answer, keep serving.
+    let out = catch_unwind(AssertUnwindSafe(|| dispatch(core, &req, t0, w)));
+    core.end_request(t0.elapsed());
+    match out {
+        Ok(io) => io,
+        Err(_) => {
+            core.count_error();
+            write_line(
+                w,
+                &protocol::error_line(&req.id, "internal error: request handler panicked"),
+            )
+        }
+    }
+}
+
+fn dispatch<W: Write>(
+    core: &ServeCore,
+    req: &Request,
+    t0: Instant,
+    w: &mut W,
+) -> std::io::Result<()> {
+    match &req.cmd {
+        Cmd::Sweep(spec) | Cmd::Compare(spec) => {
+            let mut emit =
+                |i: usize, row: &str| write_line(&mut *w, &protocol::row_line(&req.id, i, row));
+            match core.run_streamed(spec, &mut emit) {
+                Ok(stats) => write_line(
+                    w,
+                    &protocol::done_line(&req.id, &stats, t0.elapsed().as_secs_f64() * 1e3),
+                ),
+                Err(e) => {
+                    core.count_error();
+                    write_line(w, &protocol::error_line(&req.id, &format!("{e:#}")))
+                }
+            }
+        }
+        Cmd::Train(t) => {
+            let (result, kind) = core.run_train(t);
+            match result {
+                Ok(json) => write_line(
+                    w,
+                    &protocol::train_line(
+                        &req.id,
+                        kind != FetchKind::Computed,
+                        t0.elapsed().as_secs_f64() * 1e3,
+                        &json,
+                    ),
+                ),
+                Err(msg) => {
+                    core.count_error();
+                    write_line(w, &protocol::error_line(&req.id, &msg))
+                }
+            }
+        }
+        Cmd::Status => write_line(w, &protocol::status_line(&req.id, &core.status_json())),
+        Cmd::Shutdown => {
+            core.request_shutdown();
+            write_line(w, &protocol::ok_line(&req.id))
+        }
+    }
+}
+
+fn write_line<W: Write>(w: &mut W, line: &str) -> std::io::Result<()> {
+    w.write_all(line.as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()
+}
+
+/// A running server: the accept loop on its own thread plus the shared
+/// core and resolved address.
+pub struct ServerHandle {
+    core: Arc<ServeCore>,
+    addr: String,
+    thread: thread::JoinHandle<anyhow::Result<()>>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn core(&self) -> &Arc<ServeCore> {
+        &self.core
+    }
+
+    /// Wait for the accept loop to exit (i.e. a `shutdown` request).
+    pub fn join(self) -> anyhow::Result<()> {
+        match self.thread.join() {
+            Ok(r) => r,
+            Err(_) => anyhow::bail!("server thread panicked"),
+        }
+    }
+}
+
+/// Bind `addr` (TCP; `127.0.0.1:0` picks an ephemeral port) and run
+/// the accept loop on a background thread.
+pub fn spawn_tcp(core: Arc<ServeCore>, addr: &str) -> anyhow::Result<ServerHandle> {
+    let server = Server::bind_tcp(Arc::clone(&core), addr)?;
+    spawn(core, server)
+}
+
+/// Unix-socket sibling of [`spawn_tcp`].
+#[cfg(unix)]
+pub fn spawn_unix(core: Arc<ServeCore>, path: &str) -> anyhow::Result<ServerHandle> {
+    let server = Server::bind_unix(Arc::clone(&core), path)?;
+    spawn(core, server)
+}
+
+/// `--socket` entry point: dispatches to [`spawn_unix`] where Unix
+/// sockets exist and errors cleanly elsewhere.
+#[cfg(unix)]
+pub fn spawn_socket(core: Arc<ServeCore>, path: &str) -> anyhow::Result<ServerHandle> {
+    spawn_unix(core, path)
+}
+
+/// `--socket` entry point: dispatches to `spawn_unix` where Unix
+/// sockets exist and errors cleanly elsewhere.
+#[cfg(not(unix))]
+pub fn spawn_socket(_core: Arc<ServeCore>, _path: &str) -> anyhow::Result<ServerHandle> {
+    anyhow::bail!("unix sockets are unavailable on this platform; use --addr HOST:PORT")
+}
+
+fn spawn(core: Arc<ServeCore>, server: Server) -> anyhow::Result<ServerHandle> {
+    let addr = server.addr().to_string();
+    let thread = thread::Builder::new()
+        .name("sat-serve-accept".into())
+        .spawn(move || server.run())
+        .context("spawning server thread")?;
+    Ok(ServerHandle { core, addr, thread })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Value;
+    use std::io::Cursor;
+
+    fn run_session(core: &ServeCore, input: &str) -> Vec<String> {
+        let mut out = Vec::new();
+        serve_lines(core, Cursor::new(input.as_bytes().to_vec()), &mut out).unwrap();
+        String::from_utf8(out)
+            .unwrap()
+            .lines()
+            .map(str::to_string)
+            .collect()
+    }
+
+    #[test]
+    fn malformed_lines_answer_with_errors_and_the_session_continues() {
+        let core = ServeCore::new();
+        let lines = run_session(
+            &core,
+            concat!(
+                "not json\n",
+                "\n", // blank lines are ignored
+                "{\"id\":\"q1\",\"cmd\":\"status\"}\n",
+                "{\"id\":\"x\",\"cmd\":\"nope\"}\n",
+                "{\"id\":\"q2\",\"cmd\":\"status\"}\n",
+            ),
+        );
+        assert_eq!(lines.len(), 4, "{lines:?}");
+        let kinds: Vec<(String, String)> = lines
+            .iter()
+            .map(|l| {
+                let r = protocol::parse_response(l).unwrap();
+                (r.id, r.kind)
+            })
+            .collect();
+        assert_eq!(kinds[0], ("".to_string(), "error".to_string()));
+        assert_eq!(kinds[1], ("q1".to_string(), "status".to_string()));
+        assert_eq!(kinds[2], ("x".to_string(), "error".to_string()));
+        assert_eq!(kinds[3], ("q2".to_string(), "status".to_string()));
+        // Both bad lines were counted.
+        let status = protocol::parse_response(&lines[3]).unwrap();
+        let raw = protocol::raw_result(&lines[3]).unwrap();
+        let doc = crate::util::json::parse(raw).unwrap();
+        assert_eq!(doc.get("errors").and_then(Value::as_u64), Some(2));
+        assert_eq!(status.kind, "status");
+        // Parse failures never count as requests.
+        assert_eq!(doc.get("requests").and_then(Value::as_u64), Some(2));
+    }
+
+    #[test]
+    fn an_unknown_sweep_model_errors_without_closing_the_session() {
+        let core = ServeCore::new();
+        let lines = run_session(
+            &core,
+            concat!(
+                "{\"id\":\"b\",\"cmd\":\"sweep\",\"models\":\"nonesuch\"}\n",
+                "{\"id\":\"c\",\"cmd\":\"status\"}\n",
+            ),
+        );
+        assert_eq!(lines.len(), 2);
+        let first = protocol::parse_response(&lines[0]).unwrap();
+        assert_eq!((first.id.as_str(), first.kind.as_str()), ("b", "error"));
+        assert_eq!(protocol::parse_response(&lines[1]).unwrap().kind, "status");
+    }
+
+    #[test]
+    fn shutdown_acknowledges_and_flips_the_core_flag() {
+        let core = ServeCore::new();
+        let lines = run_session(&core, "{\"id\":\"z\",\"cmd\":\"shutdown\"}\n");
+        assert_eq!(lines.len(), 1);
+        let r = protocol::parse_response(&lines[0]).unwrap();
+        assert_eq!((r.id.as_str(), r.kind.as_str()), ("z", "ok"));
+        assert!(core.is_shutdown());
+    }
+
+    #[test]
+    fn a_sweep_session_streams_rows_then_done_over_the_wire_format() {
+        let core = ServeCore::new();
+        let lines = run_session(
+            &core,
+            "{\"id\":\"s\",\"cmd\":\"sweep\",\"models\":\"resnet9\",\"methods\":\"dense,bdwp\",\"patterns\":\"2:8\",\"jobs\":1}\n",
+        );
+        assert_eq!(lines.len(), 3, "2 rows + done: {lines:?}");
+        for (i, line) in lines[..2].iter().enumerate() {
+            let r = protocol::parse_response(line).unwrap();
+            assert_eq!((r.kind.as_str(), r.index), ("row", Some(i)));
+            assert!(protocol::raw_result(line).unwrap().starts_with('{'));
+        }
+        let done = protocol::parse_response(&lines[2]).unwrap();
+        assert_eq!(done.kind, "done");
+        assert_eq!(done.body.get("rows").and_then(Value::as_u64), Some(2));
+        assert_eq!(
+            done.body.get("scenario_misses").and_then(Value::as_u64),
+            Some(2)
+        );
+    }
+}

@@ -1,0 +1,676 @@
+//! Shared serving state: the cross-request scenario/train caches with
+//! in-flight dedupe, the server counters, and the streaming executor
+//! that routes requests onto the process-global worker pool.
+//!
+//! The core structure is [`ShareMap`], a lock-coarse "compute once,
+//! share forever" map layered *above* the per-artifact `SweepCaches`:
+//! where `ScheduleCache`/`PrecompCache` dedupe the expensive
+//! intermediates, `ShareMap` dedupes whole scenario *results* (the
+//! serialized sink row), including scenarios that are still in flight —
+//! a second request arriving while the first is computing subscribes to
+//! the same slot and runs zero simulations of its own.
+//!
+//! Lock order is strictly `map -> slot`; computation always happens
+//! with neither lock held beyond the claimed slot's own mutex, and slot
+//! waits never hold the map lock, so requests that miss on different
+//! keys proceed fully in parallel.
+
+use std::collections::{BTreeMap, HashMap};
+use std::hash::Hash;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::jobs;
+use crate::coordinator::sweep::{
+    PointKey, SweepCaches, SweepPoint, SweepRow, SweepSpec,
+};
+use crate::models::{zoo, Model};
+use crate::nm::{Method, NmPattern};
+use crate::sim::engine::finish_step;
+use crate::train::{self, BackendKind, TrainCurve, TrainOptions, TrainSpec};
+use crate::util::json::Obj;
+
+use super::protocol::{StreamStats, TrainRequest};
+
+/// How a [`ShareMap`] lookup was satisfied.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum FetchKind {
+    /// The slot was already filled: served from cache.
+    Hit,
+    /// Another request was mid-compute: subscribed to its result.
+    Joined,
+    /// This caller claimed the slot and ran the computation.
+    Computed,
+}
+
+enum SlotState<V> {
+    Pending,
+    Done(Result<V, String>),
+}
+
+struct Slot<V> {
+    state: Mutex<SlotState<V>>,
+    ready: Condvar,
+}
+
+impl<V: Clone> Slot<V> {
+    fn new() -> Slot<V> {
+        Slot {
+            state: Mutex::new(SlotState::Pending),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn is_filled(&self) -> bool {
+        matches!(*self.state.lock().expect("slot poisoned"), SlotState::Done(_))
+    }
+
+    fn fill(&self, v: Result<V, String>) {
+        let mut st = self.state.lock().expect("slot poisoned");
+        *st = SlotState::Done(v);
+        self.ready.notify_all();
+    }
+
+    fn wait(&self) -> Result<V, String> {
+        let mut st = self.state.lock().expect("slot poisoned");
+        loop {
+            if let SlotState::Done(v) = &*st {
+                return v.clone();
+            }
+            st = self.ready.wait(st).expect("slot poisoned");
+        }
+    }
+}
+
+/// A keyed compute-once map with in-flight dedupe and counters.
+///
+/// The first caller for a key becomes the *leader*: it computes the
+/// value (outside the map lock) and fills the slot. Callers arriving
+/// while the slot is pending *join* — they block on the slot's condvar
+/// and share the leader's result without computing anything. Callers
+/// arriving after the fill *hit*. Errors are cached like values
+/// (recomputing a deterministic failure would fail identically); a
+/// leader that panics poisons only its own slot with an error, not the
+/// map.
+pub struct ShareMap<K, V> {
+    map: Mutex<HashMap<K, Arc<Slot<V>>>>,
+    hits: AtomicU64,
+    joins: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl<K: Eq + Hash, V: Clone> ShareMap<K, V> {
+    pub fn new() -> ShareMap<K, V> {
+        ShareMap {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            joins: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    pub fn get_or_compute(
+        &self,
+        key: K,
+        compute: impl FnOnce() -> Result<V, String>,
+    ) -> (Result<V, String>, FetchKind) {
+        let (slot, kind) = {
+            let mut map = self.map.lock().expect("serve cache poisoned");
+            match map.entry(key) {
+                std::collections::hash_map::Entry::Occupied(e) => {
+                    let slot = Arc::clone(e.get());
+                    let kind = if slot.is_filled() {
+                        FetchKind::Hit
+                    } else {
+                        FetchKind::Joined
+                    };
+                    (slot, kind)
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    let slot = Arc::new(Slot::new());
+                    e.insert(Arc::clone(&slot));
+                    (slot, FetchKind::Computed)
+                }
+            }
+        };
+        match kind {
+            FetchKind::Computed => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                match catch_unwind(AssertUnwindSafe(compute)) {
+                    Ok(v) => {
+                        slot.fill(v.clone());
+                        (v, kind)
+                    }
+                    Err(payload) => {
+                        // Unblock joiners with a cached error, then let
+                        // the panic continue on the leader's thread.
+                        slot.fill(Err("scenario computation panicked".to_string()));
+                        resume_unwind(payload);
+                    }
+                }
+            }
+            FetchKind::Hit => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                (slot.wait(), kind)
+            }
+            FetchKind::Joined => {
+                self.joins.fetch_add(1, Ordering::Relaxed);
+                (slot.wait(), kind)
+            }
+        }
+    }
+
+    /// `(hits, joins, misses)` since construction.
+    pub fn stats(&self) -> (u64, u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.joins.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("serve cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<K: Eq + Hash, V: Clone> Default for ShareMap<K, V> {
+    fn default() -> ShareMap<K, V> {
+        ShareMap::new()
+    }
+}
+
+/// Cache identity of a training request: exactly the fields that reach
+/// the deterministic result (threads/kernel-set knobs are excluded —
+/// trajectories are bit-identical across them by the PR 4/6 contracts).
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+struct TrainKey {
+    model: String,
+    method: Method,
+    pattern: NmPattern,
+    steps: usize,
+    lr_bits: u32,
+    eval_every: usize,
+    seed: u64,
+}
+
+/// Everything a `sat serve` process shares across requests and
+/// connections: the artifact caches, the result caches, and counters.
+pub struct ServeCore {
+    caches: SweepCaches,
+    scenarios: ShareMap<PointKey, String>,
+    trains: ShareMap<TrainKey, String>,
+    started: Instant,
+    requests: AtomicU64,
+    errors: AtomicU64,
+    inflight: AtomicU64,
+    rows_streamed: AtomicU64,
+    request_us_total: AtomicU64,
+    request_us_max: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+impl ServeCore {
+    pub fn new() -> ServeCore {
+        ServeCore {
+            caches: SweepCaches::new(),
+            scenarios: ShareMap::new(),
+            trains: ShareMap::new(),
+            started: Instant::now(),
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            inflight: AtomicU64::new(0),
+            rows_streamed: AtomicU64::new(0),
+            request_us_total: AtomicU64::new(0),
+            request_us_max: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    // -- request lifecycle counters -------------------------------------
+
+    pub fn begin_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn end_request(&self, elapsed: Duration) {
+        self.inflight.fetch_sub(1, Ordering::Relaxed);
+        let us = elapsed.as_micros().min(u128::from(u64::MAX)) as u64;
+        self.request_us_total.fetch_add(us, Ordering::Relaxed);
+        self.request_us_max.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// `(hits, joins, misses)` of the scenario result cache.
+    pub fn scenario_stats(&self) -> (u64, u64, u64) {
+        self.scenarios.stats()
+    }
+
+    /// `(hits, joins, misses)` of the train result cache.
+    pub fn train_stats(&self) -> (u64, u64, u64) {
+        self.trains.stats()
+    }
+
+    // -- sweep / compare ------------------------------------------------
+
+    /// Expand `spec` and stream every row, in grid order, through
+    /// `emit(index, row_json)` as results complete.
+    ///
+    /// Rows come out of the scenario [`ShareMap`] so repeated and
+    /// concurrent requests share one simulation per distinct scenario;
+    /// each row's bytes are exactly [`SweepRow::json`], making streamed
+    /// output byte-identical to the one-shot `sat sweep` sink. Grid
+    /// points execute out of order on the worker pool ([`jobs::run_queue`])
+    /// and a reorder buffer emits the completed prefix, so streaming
+    /// starts before the sweep finishes without giving up ordering.
+    ///
+    /// Deadlock note: scenario leaders compute inline on pool workers
+    /// and only ever wait on schedule/precomp cache slots, whose own
+    /// fillers never wait on scenario slots — the wait graph is a
+    /// strict `scenario -> schedule/precomp` order with no cycles. A
+    /// contended pool dispatch (two concurrent requests) degrades to
+    /// inline execution on the loser's thread (`pool.rs`), never to a
+    /// blocked dispatch.
+    pub fn run_streamed(
+        &self,
+        spec: &SweepSpec,
+        emit: &mut dyn FnMut(usize, &str) -> std::io::Result<()>,
+    ) -> anyhow::Result<StreamStats> {
+        let points = spec.expand()?;
+        let jobs_n = if spec.jobs == 0 {
+            jobs::default_workers()
+        } else {
+            spec.jobs
+        };
+        let mut models: HashMap<String, Arc<Model>> = HashMap::new();
+        for p in &points {
+            if let std::collections::hash_map::Entry::Vacant(e) = models.entry(p.model.clone()) {
+                let m = zoo::model_by_name(&p.model)
+                    .expect("expand() already validated model names");
+                e.insert(Arc::new(m));
+            }
+        }
+        // Per-request counters: the ShareMap's own totals aggregate
+        // across concurrent requests, so the `done` line counts locally.
+        let hits = AtomicU64::new(0);
+        let joins = AtomicU64::new(0);
+        let misses = AtomicU64::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, String)>();
+        let mut io_err: Option<std::io::Error> = None;
+        {
+            let points = &points;
+            let models = &models;
+            let (hits, joins, misses) = (&hits, &joins, &misses);
+            std::thread::scope(|s| {
+                // Dispatcher: runs the grid on the pool; dropping `tx`
+                // when it returns ends the drain loop below.
+                s.spawn(move || {
+                    jobs::run_queue(points.len(), jobs_n, |i| {
+                        let p = &points[i];
+                        let key = PointKey::of(&p.model, p.method, p.pattern, &p.sat, &p.mem);
+                        let (row, kind) = self
+                            .scenarios
+                            .get_or_compute(key, || Ok(self.row_json(&models[&p.model], p)));
+                        match kind {
+                            FetchKind::Hit => hits.fetch_add(1, Ordering::Relaxed),
+                            FetchKind::Joined => joins.fetch_add(1, Ordering::Relaxed),
+                            FetchKind::Computed => misses.fetch_add(1, Ordering::Relaxed),
+                        };
+                        let row = row.expect("scenario computation is infallible");
+                        // Send failure = receiver gone after an emit
+                        // error; finishing the queue is still correct.
+                        let _ = tx.send((i, row));
+                    });
+                });
+                let mut next = 0usize;
+                let mut pending: BTreeMap<usize, String> = BTreeMap::new();
+                for (i, row) in rx {
+                    pending.insert(i, row);
+                    while let Some(row) = pending.remove(&next) {
+                        if io_err.is_none() {
+                            match emit(next, &row) {
+                                Ok(()) => {
+                                    self.rows_streamed.fetch_add(1, Ordering::Relaxed);
+                                }
+                                Err(e) => io_err = Some(e),
+                            }
+                        }
+                        next += 1;
+                    }
+                }
+            });
+        }
+        if let Some(e) = io_err {
+            return Err(anyhow::Error::from(e).context("writing streamed rows"));
+        }
+        Ok(StreamStats {
+            rows: points.len() as u64,
+            hits: hits.load(Ordering::Relaxed),
+            joins: joins.load(Ordering::Relaxed),
+            misses: misses.load(Ordering::Relaxed),
+        })
+    }
+
+    /// One scenario's sink bytes — a pure function of the grid point,
+    /// routed through the shared schedule/precomp caches.
+    fn row_json(&self, model: &Model, p: &SweepPoint) -> String {
+        let schedule = self
+            .caches
+            .schedules
+            .get_or_compute(model, p.method, p.pattern, &p.sat);
+        let pre = self.caches.precomps.get_or_compute(model, &schedule, &p.sat);
+        let report = finish_step(&pre, &p.sat, &p.mem);
+        SweepRow {
+            point: p.clone(),
+            predicted_cycles: schedule.predicted_total(),
+            report,
+        }
+        .json()
+    }
+
+    // -- train ----------------------------------------------------------
+
+    /// Run (or fetch) one training request. The cached result JSON is
+    /// deterministic — wall time is excluded and the final loss carries
+    /// its exact bit pattern — so cache hits are byte-identical to the
+    /// original computation.
+    pub fn run_train(&self, req: &TrainRequest) -> (Result<String, String>, FetchKind) {
+        let key = TrainKey {
+            model: req.model.clone(),
+            method: req.method,
+            pattern: req.pattern,
+            steps: req.steps,
+            lr_bits: req.lr.to_bits(),
+            eval_every: req.eval_every,
+            seed: req.seed,
+        };
+        self.trains.get_or_compute(key, || {
+            let backend = train::open_backend(BackendKind::Native, "artifacts")
+                .map_err(|e| format!("{e:#}"))?;
+            let spec = TrainSpec::new(&req.model, req.method, req.pattern);
+            let opts = TrainOptions {
+                steps: req.steps,
+                lr: req.lr,
+                eval_every: req.eval_every,
+                seed: req.seed,
+                ..TrainOptions::default()
+            };
+            let curve = backend.train(&spec, &opts).map_err(|e| format!("{e:#}"))?;
+            Ok(train_json(req, &curve))
+        })
+    }
+
+    // -- status ---------------------------------------------------------
+
+    pub fn status_json(&self) -> String {
+        let (sh, sj, sm) = self.scenarios.stats();
+        let (th, tj, tm) = self.trains.stats();
+        let (sch_h, sch_m) = self.caches.schedules.stats();
+        let (pre_h, pre_m) = self.caches.precomps.stats();
+        let requests = self.requests.load(Ordering::Relaxed);
+        let total_us = self.request_us_total.load(Ordering::Relaxed);
+        let avg_ms = if requests == 0 {
+            0.0
+        } else {
+            total_us as f64 / requests as f64 / 1e3
+        };
+        Obj::new()
+            .field_f64("uptime_s", self.started.elapsed().as_secs_f64())
+            .field_u64("requests", requests)
+            .field_u64("errors", self.errors.load(Ordering::Relaxed))
+            .field_u64("queue_depth", self.inflight.load(Ordering::Relaxed))
+            .field_u64("rows_streamed", self.rows_streamed.load(Ordering::Relaxed))
+            .field_u64("scenario_hits", sh)
+            .field_u64("dedupe_joins", sj)
+            .field_u64("scenario_misses", sm)
+            .field_usize("scenario_cached", self.scenarios.len())
+            .field_u64("train_hits", th)
+            .field_u64("train_joins", tj)
+            .field_u64("train_misses", tm)
+            .field_u64("schedule_hits", sch_h)
+            .field_u64("schedule_misses", sch_m)
+            .field_u64("precomp_hits", pre_h)
+            .field_u64("precomp_misses", pre_m)
+            .field_f64("avg_request_ms", avg_ms)
+            .field_f64(
+                "max_request_ms",
+                self.request_us_max.load(Ordering::Relaxed) as f64 / 1e3,
+            )
+            .field_usize(
+                "pool_parallelism",
+                crate::train::native::pool::global().parallelism(),
+            )
+            .finish()
+    }
+}
+
+impl Default for ServeCore {
+    fn default() -> ServeCore {
+        ServeCore::new()
+    }
+}
+
+fn train_json(req: &TrainRequest, curve: &TrainCurve) -> String {
+    let final_loss = curve.final_loss();
+    Obj::new()
+        .field_str("model", &req.model)
+        .field_str("method", req.method.name())
+        .field_str("pattern", &req.pattern.to_string())
+        .field_usize("steps", curve.losses.len())
+        .field_u64("seed", req.seed)
+        .field_f64("final_loss", f64::from(final_loss))
+        .field_str("final_loss_bits", &format!("{:08x}", final_loss.to_bits()))
+        .field_usize("evals", curve.evals.len())
+        .finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sweep::run_sweep;
+
+    fn small_spec(jobs: usize) -> SweepSpec {
+        SweepSpec {
+            models: vec!["resnet9".into()],
+            methods: vec![Method::Dense, Method::Bdwp],
+            patterns: vec![NmPattern::P2_8],
+            bandwidths: vec![25.6, 102.4],
+            jobs,
+            ..SweepSpec::default()
+        }
+    }
+
+    #[test]
+    fn second_identical_in_flight_scenario_runs_zero_computations() {
+        let map = Arc::new(ShareMap::<u32, u64>::new());
+        let (started_tx, started_rx) = mpsc::channel();
+        let (go_tx, go_rx) = mpsc::channel::<()>();
+        let leader = {
+            let map = Arc::clone(&map);
+            std::thread::spawn(move || {
+                map.get_or_compute(7, || {
+                    started_tx.send(()).unwrap();
+                    go_rx.recv().unwrap();
+                    Ok(40 + 2)
+                })
+            })
+        };
+        started_rx.recv().unwrap(); // leader owns the slot, mid-compute
+        let follower = {
+            let map = Arc::clone(&map);
+            std::thread::spawn(move || {
+                map.get_or_compute(7, || panic!("second requester must not compute"))
+            })
+        };
+        // The follower counts its join before blocking on the slot.
+        while map.stats().1 == 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        go_tx.send(()).unwrap();
+        let (lv, lk) = leader.join().unwrap();
+        let (fv, fk) = follower.join().unwrap();
+        assert_eq!((lv.unwrap(), lk), (42, FetchKind::Computed));
+        assert_eq!((fv.unwrap(), fk), (42, FetchKind::Joined));
+        assert_eq!(map.stats(), (0, 1, 1));
+        // A later request is a plain hit.
+        let (v, k) = map.get_or_compute(7, || panic!("cached"));
+        assert_eq!((v.unwrap(), k), (42, FetchKind::Hit));
+        assert_eq!(map.stats(), (1, 1, 1));
+        assert_eq!(map.len(), 1);
+    }
+
+    #[test]
+    fn errors_are_cached_like_values() {
+        let map = ShareMap::<u8, u8>::new();
+        let (v, k) = map.get_or_compute(9, || Err("nope".into()));
+        assert_eq!(k, FetchKind::Computed);
+        assert_eq!(v.unwrap_err(), "nope");
+        let (v, k) = map.get_or_compute(9, || Ok(1));
+        assert_eq!(k, FetchKind::Hit, "the failure is served, not retried");
+        assert_eq!(v.unwrap_err(), "nope");
+    }
+
+    #[test]
+    fn panicked_compute_poisons_its_slot_not_the_map() {
+        let map = ShareMap::<u8, u8>::new();
+        let r = catch_unwind(AssertUnwindSafe(|| map.get_or_compute(1, || panic!("boom"))));
+        assert!(r.is_err(), "leader panic propagates");
+        let (v, k) = map.get_or_compute(1, || Ok(5));
+        assert_eq!(k, FetchKind::Hit);
+        assert!(v.unwrap_err().contains("panicked"));
+        // Other keys are untouched.
+        let (v, k) = map.get_or_compute(2, || Ok(5));
+        assert_eq!((v.unwrap(), k), (5, FetchKind::Computed));
+    }
+
+    #[test]
+    fn streamed_rows_match_the_one_shot_sink_byte_for_byte() {
+        let spec = small_spec(2);
+        let oneshot = run_sweep(&spec).unwrap();
+        let core = ServeCore::new();
+        let mut got: Vec<(usize, String)> = Vec::new();
+        let stats = core
+            .run_streamed(&spec, &mut |i, row| {
+                got.push((i, row.to_string()));
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(stats.rows as usize, oneshot.rows.len());
+        assert_eq!((stats.hits, stats.joins, stats.misses), (0, 0, 4));
+        for (k, (i, row)) in got.iter().enumerate() {
+            assert_eq!(*i, k, "rows emit in grid order");
+            assert_eq!(row, &oneshot.rows[k].json(), "row {k} bytes");
+        }
+        // An identical second request is served entirely from cache.
+        let mut n = 0usize;
+        let stats = core
+            .run_streamed(&spec, &mut |_, _| {
+                n += 1;
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(n, 4);
+        assert_eq!((stats.hits, stats.joins, stats.misses), (4, 0, 0));
+        assert_eq!(core.scenario_stats(), (4, 0, 4));
+    }
+
+    #[test]
+    fn emit_errors_surface_without_wedging_the_pool() {
+        let core = ServeCore::new();
+        let err = core
+            .run_streamed(&small_spec(1), &mut |i, _| {
+                if i == 0 {
+                    Err(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "gone"))
+                } else {
+                    panic!("emission must stop after the first failure")
+                }
+            })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("streamed rows"), "{err:#}");
+        // The core still works afterwards.
+        let stats = core.run_streamed(&small_spec(1), &mut |_, _| Ok(())).unwrap();
+        assert_eq!(stats.rows, 4);
+    }
+
+    #[test]
+    fn train_results_are_cached_and_deterministic() {
+        let core = ServeCore::new();
+        let req = TrainRequest {
+            model: "tiny_mlp".into(),
+            method: Method::Bdwp,
+            pattern: NmPattern::P2_8,
+            steps: 3,
+            lr: 0.05,
+            eval_every: 0,
+            seed: 1,
+        };
+        let (a, k1) = core.run_train(&req);
+        let (b, k2) = core.run_train(&req);
+        assert_eq!(k1, FetchKind::Computed);
+        assert_eq!(k2, FetchKind::Hit);
+        let a = a.unwrap();
+        assert_eq!(a, b.unwrap(), "cache hits are byte-identical");
+        assert!(a.contains("\"final_loss_bits\":\""), "{a}");
+        // Result-relevant fields key the cache: a new seed recomputes.
+        let (_, k3) = core.run_train(&TrainRequest {
+            seed: 2,
+            ..req.clone()
+        });
+        assert_eq!(k3, FetchKind::Computed);
+        assert_eq!(core.train_stats(), (1, 0, 2));
+    }
+
+    #[test]
+    fn status_json_carries_the_counter_set() {
+        let core = ServeCore::new();
+        core.begin_request();
+        core.end_request(Duration::from_millis(2));
+        let status = core.status_json();
+        let doc = crate::util::json::parse(&status).unwrap();
+        for key in [
+            "uptime_s",
+            "requests",
+            "errors",
+            "queue_depth",
+            "rows_streamed",
+            "scenario_hits",
+            "dedupe_joins",
+            "scenario_misses",
+            "scenario_cached",
+            "train_hits",
+            "train_joins",
+            "train_misses",
+            "schedule_hits",
+            "schedule_misses",
+            "precomp_hits",
+            "precomp_misses",
+            "avg_request_ms",
+            "max_request_ms",
+            "pool_parallelism",
+        ] {
+            assert!(doc.get(key).is_some(), "status lacks {key}: {status}");
+        }
+        assert_eq!(
+            doc.get("requests").and_then(crate::util::json::Value::as_u64),
+            Some(1)
+        );
+    }
+}

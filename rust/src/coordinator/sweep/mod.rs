@@ -147,6 +147,46 @@ mod tests {
     }
 
     #[test]
+    fn concurrent_cached_sweeps_share_caches_and_match_serial() {
+        // The `sat serve` usage pattern: several requests running
+        // run_sweep_cached against ONE SweepCaches at the same time.
+        // Every caller must reproduce the serial rows byte-for-byte
+        // (contended pool dispatch degrades inline; OnceLock slots
+        // hand all callers the same Arc'd schedule/precomp).
+        let spec = SweepSpec {
+            models: vec!["resnet9".into()],
+            methods: vec![Method::Dense, Method::Bdwp],
+            patterns: vec![NmPattern::P2_8],
+            bandwidths: vec![25.6, 102.4],
+            jobs: 2,
+            ..SweepSpec::default()
+        };
+        let serial: Vec<String> =
+            run_sweep(&spec).unwrap().rows.iter().map(|r| r.json()).collect();
+        let caches = SweepCaches::new();
+        std::thread::scope(|s| {
+            let (spec, caches, serial) = (&spec, &caches, &serial);
+            let handles: Vec<_> = (0..3)
+                .map(|_| {
+                    s.spawn(move || {
+                        let r = run_sweep_cached(spec, caches).unwrap();
+                        let got: Vec<String> = r.rows.iter().map(|row| row.json()).collect();
+                        assert_eq!(&got, serial);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        // 2 distinct (schedule, precomp) keys total across all three
+        // concurrent sweeps — the shared cache computed each once.
+        let (_, s_misses) = caches.schedules.stats();
+        let (_, p_misses) = caches.precomps.stats();
+        assert_eq!((s_misses, p_misses), (2, 2));
+    }
+
+    #[test]
     fn bandwidth_variants_share_one_precomputation() {
         // 1 model x 2 methods x 1 pattern x 1 array x 3 bandwidths:
         // 2 distinct (schedule, precomp) keys, 4 hits each

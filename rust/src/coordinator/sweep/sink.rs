@@ -39,7 +39,11 @@ impl SweepRow {
         self.report.runtime_gops(&self.point.sat)
     }
 
-    fn json(&self) -> String {
+    /// The row's JSON-sink bytes. Public because `sat serve` streams
+    /// exactly this string as each scenario's `"result"` — the served
+    /// rows are byte-identical to a one-shot `sat sweep` sink, which
+    /// integration tests and clients rely on.
+    pub fn json(&self) -> String {
         let (ff, bp, wu, other) = self.report.stage_totals();
         json::Obj::new()
             .field_str("model", &self.point.model)

@@ -25,6 +25,17 @@
 //! engine's [`crate::coordinator::jobs::run_queue`] all share the one
 //! [`global`] pool sized to [`std::thread::available_parallelism`].
 //!
+//! Contended dispatch (`sat serve`): with multiple concurrent requests
+//! the pool routinely sees several dispatchers at once — not just the
+//! nested case the `run_lock` fallback was written for. The same
+//! `try_lock` path covers it: one dispatcher wins the pool, every
+//! other runs its tiles inline on its own request thread. Because the
+//! inline path executes the identical tile set through the identical
+//! kernel code, each request's results stay bit-identical to a serial
+//! run — contention affects wall-clock only, never bytes (asserted by
+//! `concurrent_dispatchers_degrade_without_changing_results` below and
+//! the two-connection sweep test in `tests/serve.rs`).
+//!
 //! This module is one of the crate's two `unsafe` islands (the
 //! crate-level lint stays `deny`; the other is the `std::arch` SIMD
 //! kernels of [`super::simd`]): two well-scoped uses — the lifetime
@@ -454,6 +465,42 @@ mod tests {
             *outer[t].lock().unwrap() += 1;
         });
         assert!(outer.iter().all(|h| *h.lock().unwrap() == 1));
+    }
+
+    #[test]
+    fn concurrent_dispatchers_degrade_without_changing_results() {
+        // Two `sat serve` requests dispatching at once: one wins
+        // `run_lock`, the other must degrade to inline execution —
+        // with every tile still executed exactly once per dispatch.
+        // Many repetitions make actually-contended try_lock races
+        // overwhelmingly likely on a private 4-way pool.
+        let pool = NativePool::new(4);
+        std::thread::scope(|s| {
+            let pool = &pool;
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    s.spawn(move || {
+                        for _ in 0..25 {
+                            let cells: Vec<Mutex<u64>> =
+                                (0..64).map(|_| Mutex::new(0)).collect();
+                            pool.run(4, 64, &|t| {
+                                *cells[t].lock().unwrap() += (t as u64) * 3 + 1;
+                            });
+                            for (t, c) in cells.iter().enumerate() {
+                                assert_eq!(
+                                    *c.lock().unwrap(),
+                                    (t as u64) * 3 + 1,
+                                    "tile {t} ran a wrong number of times"
+                                );
+                            }
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
     }
 
     #[test]

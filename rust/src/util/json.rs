@@ -131,6 +131,19 @@ impl Value {
         }
     }
 
+    /// Exact non-negative integer view of a number (protocol counters,
+    /// row indices): None for non-numbers, negatives, fractions, and
+    /// magnitudes past 2^53 where f64 stops being exact.
+    pub fn as_u64(&self) -> Option<u64> {
+        const MAX_EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+        match self {
+            Value::Num(n) if *n >= 0.0 && *n <= MAX_EXACT && n.fract() == 0.0 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -351,6 +364,20 @@ pub fn array<I: IntoIterator<Item = String>>(items: I) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn as_u64_accepts_exact_counts_only() {
+        let get = |text: &str| parse(text).unwrap().as_u64();
+        assert_eq!(get("0"), Some(0));
+        assert_eq!(get("42"), Some(42));
+        assert_eq!(get("9007199254740992"), Some(1 << 53));
+        assert_eq!(get("-1"), None);
+        assert_eq!(get("1.5"), None);
+        assert_eq!(get("1e300"), None);
+        assert_eq!(get("\"42\""), None);
+        assert_eq!(get("true"), None);
+        assert_eq!(get("null"), None);
+    }
 
     #[test]
     fn quoting_escapes_specials() {

@@ -1,0 +1,343 @@
+//! End-to-end tests of `sat serve` over real sockets: byte-parity of
+//! streamed results with the one-shot sink, cross-request cache hits,
+//! in-flight dedupe under concurrent connections, error handling that
+//! keeps connections alive, train caching, Unix-socket transport, and
+//! the selftest harness.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use sat::coordinator::serve::{
+    protocol, selftest, spawn_tcp, Cmd, Request, SelftestOpts, ServeCore, ServerHandle,
+};
+use sat::coordinator::sweep::{run_sweep, SweepSpec};
+use sat::nm::{Method, NmPattern};
+use sat::util::json::Value;
+
+fn start() -> (ServerHandle, String) {
+    let core = Arc::new(ServeCore::new());
+    let handle = spawn_tcp(core, "127.0.0.1:0").expect("spawn server");
+    let addr = handle.addr().to_string();
+    (handle, addr)
+}
+
+fn session(addr: &str) -> (BufReader<TcpStream>, TcpStream) {
+    let stream = TcpStream::connect(addr).expect("connect");
+    (
+        BufReader::new(stream.try_clone().expect("clone stream")),
+        stream,
+    )
+}
+
+fn send(w: &mut impl Write, req: &Request) {
+    w.write_all(req.to_line().as_bytes()).unwrap();
+    w.write_all(b"\n").unwrap();
+}
+
+fn read_response(r: &mut impl BufRead) -> (String, protocol::Response) {
+    let mut line = String::new();
+    assert!(r.read_line(&mut line).unwrap() > 0, "connection closed");
+    let line = line.trim_end().to_string();
+    let resp = protocol::parse_response(&line).expect("parse response");
+    (line, resp)
+}
+
+/// Drain one sweep/compare response stream: raw row result bytes plus
+/// the terminating non-row response.
+fn collect_rows(r: &mut impl BufRead) -> (Vec<String>, protocol::Response) {
+    let mut rows = Vec::new();
+    loop {
+        let (line, resp) = read_response(r);
+        if resp.kind != "row" {
+            return (rows, resp);
+        }
+        assert_eq!(resp.index, Some(rows.len()), "rows arrive in order");
+        rows.push(protocol::raw_result(&line).expect("row result").to_string());
+    }
+}
+
+fn shutdown(addr: &str, handle: ServerHandle) {
+    let (mut r, mut w) = session(addr);
+    send(
+        &mut w,
+        &Request {
+            id: "bye".into(),
+            cmd: Cmd::Shutdown,
+        },
+    );
+    let (_, resp) = read_response(&mut r);
+    assert_eq!(resp.kind, "ok");
+    handle.join().expect("server exits cleanly");
+}
+
+fn small_spec(jobs: usize) -> SweepSpec {
+    SweepSpec {
+        models: vec!["resnet9".into()],
+        methods: vec![Method::Dense, Method::Bdwp],
+        patterns: vec![NmPattern::P2_8],
+        bandwidths: vec![25.6, 102.4],
+        jobs,
+        ..SweepSpec::default()
+    }
+}
+
+#[test]
+fn streamed_sweep_is_byte_identical_to_the_one_shot_sink() {
+    let (handle, addr) = start();
+    let spec = small_spec(2);
+    let oneshot: Vec<String> = run_sweep(&spec)
+        .unwrap()
+        .rows
+        .iter()
+        .map(|r| r.json())
+        .collect();
+
+    let (mut r, mut w) = session(&addr);
+    send(
+        &mut w,
+        &Request {
+            id: "s1".into(),
+            cmd: Cmd::Sweep(spec.clone()),
+        },
+    );
+    let (rows, done) = collect_rows(&mut r);
+    assert_eq!(done.kind, "done", "{done:?}");
+    assert_eq!(rows, oneshot, "served rows == one-shot sink bytes");
+    assert_eq!(
+        done.body.get("scenario_misses").and_then(Value::as_u64),
+        Some(4)
+    );
+
+    // The identical request again, same connection: pure cache.
+    send(
+        &mut w,
+        &Request {
+            id: "s2".into(),
+            cmd: Cmd::Sweep(spec),
+        },
+    );
+    let (rows2, done2) = collect_rows(&mut r);
+    assert_eq!(rows2, oneshot, "cache-served rows byte-identical too");
+    assert_eq!(
+        done2.body.get("scenario_hits").and_then(Value::as_u64),
+        Some(4)
+    );
+    assert_eq!(
+        done2.body.get("scenario_misses").and_then(Value::as_u64),
+        Some(0)
+    );
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn compare_streams_the_methods_axis_byte_identical_to_sweep() {
+    let (handle, addr) = start();
+    // A compare request is exactly a methods-axis sweep of one
+    // model/pattern at base geometry — assert that equivalence.
+    let equivalent = SweepSpec {
+        models: vec!["resnet9".into()],
+        methods: Method::ALL.to_vec(),
+        patterns: vec![NmPattern::P2_8],
+        jobs: 1,
+        ..SweepSpec::default()
+    };
+    let oneshot: Vec<String> = run_sweep(&equivalent)
+        .unwrap()
+        .rows
+        .iter()
+        .map(|r| r.json())
+        .collect();
+
+    let (mut r, mut w) = session(&addr);
+    let req = Request::parse_line(r#"{"id":"c1","cmd":"compare","model":"resnet9","pattern":"2:8","jobs":1}"#)
+        .expect("compare parses");
+    send(&mut w, &req);
+    let (rows, done) = collect_rows(&mut r);
+    assert_eq!(done.kind, "done");
+    assert_eq!(rows, oneshot, "compare rows == equivalent sweep rows");
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn malformed_lines_error_but_the_connection_survives() {
+    let (handle, addr) = start();
+    let (mut r, mut w) = session(&addr);
+    w.write_all(b"this is not json\n").unwrap();
+    let (_, resp) = read_response(&mut r);
+    assert_eq!(resp.kind, "error");
+    w.write_all(b"{\"id\":\"q\",\"cmd\":\"sweep\",\"models\":\"nonesuch\"}\n")
+        .unwrap();
+    let (_, resp) = read_response(&mut r);
+    assert_eq!((resp.id.as_str(), resp.kind.as_str()), ("q", "error"));
+    // Same connection still serves real requests.
+    send(
+        &mut w,
+        &Request {
+            id: "ok".into(),
+            cmd: Cmd::Status,
+        },
+    );
+    let (line, resp) = read_response(&mut r);
+    assert_eq!(resp.kind, "status");
+    let raw = protocol::raw_result(&line).unwrap();
+    let doc = sat::util::json::parse(raw).unwrap();
+    assert_eq!(doc.get("errors").and_then(Value::as_u64), Some(2));
+    // A status handled inside a request counts itself in the queue.
+    assert_eq!(doc.get("queue_depth").and_then(Value::as_u64), Some(1));
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn concurrent_identical_sweeps_simulate_each_scenario_once() {
+    let (handle, addr) = start();
+    let spec = small_spec(2);
+    let expect: Vec<String> = run_sweep(&spec)
+        .unwrap()
+        .rows
+        .iter()
+        .map(|r| r.json())
+        .collect();
+
+    std::thread::scope(|s| {
+        let (addr, spec, expect) = (&addr, &spec, &expect);
+        let handles: Vec<_> = (0..2)
+            .map(|t| {
+                s.spawn(move || {
+                    let (mut r, mut w) = session(addr);
+                    send(
+                        &mut w,
+                        &Request {
+                            id: format!("t{t}"),
+                            cmd: Cmd::Sweep(spec.clone()),
+                        },
+                    );
+                    let (rows, done) = collect_rows(&mut r);
+                    assert_eq!(done.kind, "done");
+                    assert_eq!(&rows, expect, "request t{t} bytes");
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    // The system-level dedupe assertion: two full requests, but only
+    // one simulation per distinct scenario ever ran — the other
+    // request's fetches were hits or in-flight joins.
+    let (hits, joins, misses) = handle.core().scenario_stats();
+    assert_eq!(misses, 4, "4 distinct grid points -> 4 computations");
+    assert_eq!(hits + joins, 4, "the second request computed nothing");
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn train_requests_compute_once_and_replay_from_cache() {
+    let (handle, addr) = start();
+    let (mut r, mut w) = session(&addr);
+    let line = r#"{"id":"tr1","cmd":"train","model":"mlp","method":"bdwp","pattern":"2:8","steps":4,"seed":3}"#;
+    w.write_all(line.as_bytes()).unwrap();
+    w.write_all(b"\n").unwrap();
+    let (first_line, first) = read_response(&mut r);
+    assert_eq!(first.kind, "train", "{first:?}");
+    assert_eq!(first.body.get("cached").and_then(Value::as_bool), Some(false));
+    let first_result = protocol::raw_result(&first_line).unwrap().to_string();
+    let doc = sat::util::json::parse(&first_result).unwrap();
+    assert_eq!(doc.get("model").and_then(Value::as_str), Some("tiny_mlp"));
+    assert_eq!(doc.get("steps").and_then(Value::as_u64), Some(4));
+    let loss = doc.get("final_loss").and_then(Value::as_f64).unwrap();
+    assert!(loss.is_finite(), "final loss is a real number: {loss}");
+    assert!(doc.get("final_loss_bits").and_then(Value::as_str).is_some());
+
+    // Identical request: served from the train cache, byte-identical.
+    let relabeled = line.replace("tr1", "tr2");
+    w.write_all(relabeled.as_bytes()).unwrap();
+    w.write_all(b"\n").unwrap();
+    let (second_line, second) = read_response(&mut r);
+    assert_eq!(second.kind, "train");
+    assert_eq!(second.body.get("cached").and_then(Value::as_bool), Some(true));
+    assert_eq!(
+        protocol::raw_result(&second_line).unwrap(),
+        first_result,
+        "cached train result is byte-identical"
+    );
+    assert_eq!(handle.core().train_stats(), (1, 0, 1));
+    shutdown(&addr, handle);
+}
+
+#[cfg(unix)]
+#[test]
+fn unix_socket_transport_round_trips() {
+    use std::os::unix::net::UnixStream;
+
+    let path = std::env::temp_dir().join(format!("sat-serve-test-{}.sock", std::process::id()));
+    let path_str = path.to_str().unwrap().to_string();
+    let core = Arc::new(ServeCore::new());
+    let handle = sat::coordinator::serve::spawn_unix(core, &path_str).expect("bind unix socket");
+
+    let stream = UnixStream::connect(&path).expect("connect unix socket");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    send(
+        &mut writer,
+        &Request {
+            id: "u1".into(),
+            cmd: Cmd::Sweep(SweepSpec {
+                models: vec!["resnet9".into()],
+                methods: vec![Method::Bdwp],
+                patterns: vec![NmPattern::P2_8],
+                jobs: 1,
+                ..SweepSpec::default()
+            }),
+        },
+    );
+    let (rows, done) = collect_rows(&mut reader);
+    assert_eq!(rows.len(), 1);
+    assert_eq!(done.kind, "done");
+    send(
+        &mut writer,
+        &Request {
+            id: "u2".into(),
+            cmd: Cmd::Shutdown,
+        },
+    );
+    let (_, resp) = read_response(&mut reader);
+    assert_eq!(resp.kind, "ok");
+    handle.join().expect("unix server exits");
+    assert!(!path.exists(), "socket file cleaned up on shutdown");
+}
+
+#[test]
+fn selftest_smoke_meets_its_own_gates() {
+    let out = std::env::temp_dir().join(format!("sat-selftest-test-{}.json", std::process::id()));
+    let out_str = out.to_str().unwrap().to_string();
+    let opts = SelftestOpts {
+        quick: true,
+        clients: 2,
+        requests_per_client: 12,
+        out: out_str,
+        min_hit_rate: Some(0.3),
+        min_joins: Some(1),
+    };
+    selftest::run(&opts).expect("selftest passes its gates");
+    let text = std::fs::read_to_string(&out).unwrap();
+    let doc = sat::util::json::parse(&text).unwrap();
+    assert_eq!(
+        doc.get("schema").and_then(Value::as_str),
+        Some("sat-serve-selftest-v1")
+    );
+    let results = doc.get("results").and_then(Value::as_array).unwrap();
+    assert_eq!(results.len(), 3, "two phases + overall");
+    for row in results {
+        for metric in ["hit_rate", "p50_ms", "p99_ms", "runtime_gops"] {
+            assert!(
+                row.get(metric).and_then(Value::as_f64).is_some(),
+                "row lacks {metric}"
+            );
+        }
+    }
+    // The emitted report bench-diffs against itself on a serve metric.
+    let diff = sat::coordinator::benchdiff::diff_texts(&text, &text, "hit_rate").unwrap();
+    assert_eq!(diff.max_regression_pct(), 0.0);
+    let _ = std::fs::remove_file(&out);
+}
