@@ -17,8 +17,10 @@ use crate::util::table::Table;
 
 /// Metrics a diff can run on (fields of each result row). The first
 /// three come from sweep reports; `hit_rate`/`p50_ms`/`p99_ms` come
-/// from `sat serve --selftest` reports (`sat-serve-selftest-v1`), whose
-/// rows reuse the sweep scenario-identity fields so no schema
+/// from `sat serve --selftest` reports (`sat-serve-selftest-v1`);
+/// `retries`/`redispatches`/`rows_recovered` come from
+/// `sat shard --selftest` reports (`sat-shard-selftest-v1`). All three
+/// report kinds reuse the sweep scenario-identity fields so no schema
 /// special-casing is needed here.
 pub const METRICS: &[&str] = &[
     "total_cycles",
@@ -27,6 +29,9 @@ pub const METRICS: &[&str] = &[
     "hit_rate",
     "p50_ms",
     "p99_ms",
+    "retries",
+    "redispatches",
+    "rows_recovered",
 ];
 
 /// One scenario present in both reports.
@@ -155,7 +160,10 @@ impl BenchDiff {
     /// GROW; throughput (GOPS) and cache hit rate regress when they
     /// SHRINK.
     fn regression_sign(&self) -> f64 {
-        if matches!(self.metric.as_str(), "runtime_gops" | "hit_rate") {
+        if matches!(
+            self.metric.as_str(),
+            "runtime_gops" | "hit_rate" | "rows_recovered"
+        ) {
             -1.0
         } else {
             1.0
@@ -360,6 +368,49 @@ mod tests {
         assert_eq!(d.regressions_above(5.0).len(), 1, "p99 growth must flag");
         let d = diff_texts(&old, &old, "p50_ms").unwrap();
         assert_eq!(d.max_regression_pct(), 0.0);
+    }
+
+    fn shard_row(phase: &str, retries: u64, redispatches: u64, recovered: u64) -> String {
+        Obj::new()
+            .field_str("model", "shard")
+            .field_str("method", phase)
+            .field_str("pattern", "chaos")
+            .field_usize("rows", 3)
+            .field_usize("cols", 8)
+            .field_usize("lanes", 0)
+            .field_f64("freq_mhz", 0.0)
+            .field_f64("bandwidth_gbs", 0.0)
+            .field_bool("overlap", true)
+            .field_u64("total_cycles", 16)
+            .field_f64("batch_ms", 900.0)
+            .field_f64("runtime_gops", 17.8)
+            .field_u64("retries", retries)
+            .field_u64("redispatches", redispatches)
+            .field_u64("rows_recovered", recovered)
+            .field_f64("p50_ms", 2.0)
+            .field_f64("p99_ms", 9.0)
+            .finish()
+    }
+
+    #[test]
+    fn shard_selftest_metrics_diff_with_the_right_signs() {
+        let old = doc(vec![shard_row("chaos", 4, 2, 6)]);
+        // Retries/redispatches GROWING is the regression (the cluster
+        // got flakier); rows_recovered SHRINKING is (recovery stopped
+        // working while faults persisted).
+        let worse = doc(vec![shard_row("chaos", 9, 5, 3)]);
+        for metric in ["retries", "redispatches"] {
+            let d = diff_texts(&old, &worse, metric).unwrap();
+            assert_eq!(d.regressions_above(5.0).len(), 1, "{metric} growth flags");
+            let d = diff_texts(&worse, &old, metric).unwrap();
+            assert!(d.regressions_above(0.0).is_empty(), "{metric} drop is fine");
+        }
+        let d = diff_texts(&old, &worse, "rows_recovered").unwrap();
+        assert_eq!(d.regressions_above(5.0).len(), 1, "recovery drop flags");
+        let d = diff_texts(&worse, &old, "rows_recovered").unwrap();
+        assert!(d.regressions_above(0.0).is_empty(), "recovery growth is fine");
+        let d = diff_texts(&old, &old, "retries").unwrap();
+        assert_eq!(d.max_regression_pct(), 0.0, "self-diff is clean");
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! Minimal CLI argument parser (clap is unavailable offline).
 //!
 //! Grammar: `sat <subcommand> [--flag value]... [--switch]...`
-//! Flags may repeat; the last value wins. Unknown flags are errors so
-//! typos fail loudly.
+//! Flags may repeat; [`Args::get`] returns the last value, while
+//! [`Args::get_all`] returns every occurrence in order (for flags like
+//! `--endpoint` that are naturally repeatable). Unknown flags are
+//! errors so typos fail loudly.
 
 use std::collections::HashMap;
 use std::fmt;
@@ -11,7 +13,7 @@ use std::fmt;
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     pub subcommand: String,
-    flags: HashMap<String, String>,
+    flags: HashMap<String, Vec<String>>,
     switches: Vec<String>,
     positionals: Vec<String>,
 }
@@ -70,7 +72,7 @@ impl Args {
                 let val = it
                     .next()
                     .ok_or_else(|| ParseError(format!("--{name} needs a value")))?;
-                out.flags.insert(name.to_string(), val.clone());
+                out.flags.entry(name.to_string()).or_default().push(val.clone());
             } else {
                 return Err(ParseError(format!("unknown flag --{name}")));
             }
@@ -83,8 +85,22 @@ impl Args {
         self.positionals.get(i).map(|s| s.as_str())
     }
 
+    /// Last occurrence of a repeatable flag (the historical "last value
+    /// wins" semantics every single-valued flag relies on).
     pub fn get(&self, name: &str) -> Option<&str> {
-        self.flags.get(name).map(|s| s.as_str())
+        self.flags
+            .get(name)
+            .and_then(|vs| vs.last())
+            .map(|s| s.as_str())
+    }
+
+    /// Every occurrence of a flag, in command-line order. Empty when the
+    /// flag was never given.
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.flags
+            .get(name)
+            .map(|vs| vs.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
     }
 
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
@@ -165,6 +181,19 @@ mod tests {
         )
         .unwrap();
         assert_eq!(a.get("m"), Some("b"));
+    }
+
+    #[test]
+    fn get_all_preserves_every_occurrence_in_order() {
+        let a = Args::parse(
+            &sv(&["shard", "--endpoint", "tcp:a:1", "--endpoint", "unix:/s"]),
+            &["endpoint"],
+            &[],
+        )
+        .unwrap();
+        assert_eq!(a.get_all("endpoint"), vec!["tcp:a:1", "unix:/s"]);
+        assert_eq!(a.get("endpoint"), Some("unix:/s"));
+        assert!(a.get_all("missing").is_empty());
     }
 
     #[test]

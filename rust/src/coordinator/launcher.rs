@@ -8,6 +8,7 @@ use crate::coordinator::cli::Args;
 use crate::coordinator::config::{RunConfig, CONFIG_FLAGS, CONFIG_SWITCHES};
 use crate::coordinator::jobs;
 use crate::coordinator::serve;
+use crate::coordinator::shard;
 use crate::coordinator::sweep::{self, SimBank, SweepSpec};
 use crate::models::zoo;
 use crate::nm::{Method, NmPattern};
@@ -66,16 +67,37 @@ SUBCOMMANDS
              requests (sweep|compare|train|status|shutdown) over TCP or
              a Unix socket; shared caches + in-flight dedupe across
              requests, results streamed as they complete
-             [--addr HOST:PORT (default 127.0.0.1:4077) | --socket PATH]
+             [--addr HOST:PORT (default 127.0.0.1:4077) | --socket PATH
+              --fault PLAN  deterministic fault injection, keyed by
+                            request id (also env SAT_FAULT); PLAN is
+                            comma-separated drop[@N] | delay[@N]:MS |
+                            garble[@N] — e.g. drop@3,delay@2:50]
              selftest: in-process load generator, writes a bench-diff
              JSON and hard-fails below the cache/dedupe gates
              [--selftest --quick --clients N --requests N
               --out BENCH_serve_selftest.json
               --min-hit-rate F --min-joins N]
-  bench-diff compare two sweep JSON or serve-selftest reports, flag
-             metric regressions
+  shard      fault-tolerant sharded sweep across several `sat serve`
+             endpoints: index-stable grid split, streamed k-way merge
+             byte-identical to one-shot `sat sweep --format json`,
+             retry with seeded backoff, redispatch, per-endpoint
+             circuit breakers, local fallback when every endpoint dies
+             [--endpoint tcp:HOST:PORT|unix:PATH (repeatable)
+              --models ... --methods ... --patterns ... --arrays ...
+              --bandwidths ... --no-overlap --jobs N
+              --shards N (0 = 2x endpoints) --timeout-ms MS
+              --attempts N --backoff-ms MS --backoff-max-ms MS
+              --breaker N --seed S --out FILE]
+             status: merge every endpoint's live `status` counters
+             [--status --endpoint ... (repeatable)]
+             selftest: chaos harness over in-process faulty servers
+             [--selftest --quick --max-row-loss N
+              --out BENCH_shard_selftest.json]
+  bench-diff compare two sweep JSON or serve/shard-selftest reports,
+             flag metric regressions
              [old.json new.json --threshold PCT --metric total_cycles|
-              batch_ms|runtime_gops|hit_rate|p50_ms|p99_ms]
+              batch_ms|runtime_gops|hit_rate|p50_ms|p99_ms|retries|
+              redispatches|rows_recovered]
   help       this text
 ";
 
@@ -109,8 +131,17 @@ pub fn run(argv: &[String]) -> i32 {
         Some("serve") => {
             flags.extend_from_slice(&[
                 "addr", "socket", "clients", "requests", "out", "min-hit-rate", "min-joins",
+                "fault",
             ]);
             switches.extend_from_slice(&["selftest", "quick"]);
+        }
+        Some("shard") => {
+            flags.extend_from_slice(&[
+                "endpoint", "models", "methods", "patterns", "arrays", "bandwidths", "jobs",
+                "shards", "timeout-ms", "attempts", "backoff-ms", "backoff-max-ms", "breaker",
+                "seed", "out", "max-row-loss",
+            ]);
+            switches.extend_from_slice(&["selftest", "quick", "status", "no-overlap"]);
         }
         Some("bench-diff") => {
             flags.extend_from_slice(&["old", "new", "threshold", "metric"]);
@@ -135,6 +166,7 @@ pub fn run(argv: &[String]) -> i32 {
         "compare" => cmd_compare(&args),
         "verify" => cmd_verify(&args),
         "serve" => cmd_serve(&args),
+        "shard" => cmd_shard(&args),
         "bench-diff" => cmd_bench_diff(&args),
         "help" | "" => {
             println!("{USAGE}");
@@ -575,7 +607,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         args.get("addr").is_none() || args.get("socket").is_none(),
         "give --addr or --socket, not both"
     );
-    let core = std::sync::Arc::new(serve::ServeCore::new());
+    // --fault wins over SAT_FAULT so a shell with the env var set can
+    // still launch a clean server explicitly.
+    let fault_text = args
+        .get("fault")
+        .map(str::to_string)
+        .or_else(|| std::env::var("SAT_FAULT").ok().filter(|s| !s.is_empty()));
+    let fault = fault_text
+        .map(|t| serve::FaultPlan::parse(&t).map_err(|e| anyhow!(e)))
+        .transpose()?;
+    if let Some(plan) = &fault {
+        eprintln!("[serve] WARNING: fault injection active ({plan})");
+    }
+    let core = std::sync::Arc::new(serve::ServeCore::with_fault_plan(fault));
     let handle = match args.get("socket") {
         Some(path) => serve::spawn_socket(core, path)?,
         None => serve::spawn_tcp(core, args.get_or("addr", "127.0.0.1:4077"))?,
@@ -586,6 +630,57 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         handle.addr()
     );
     handle.join()
+}
+
+fn cmd_shard(args: &Args) -> anyhow::Result<()> {
+    if args.has("selftest") {
+        return shard::selftest::run(&shard::ShardSelftestOpts::from_args(args)?);
+    }
+    let endpoints = args
+        .get_all("endpoint")
+        .into_iter()
+        .map(|t| shard::Endpoint::parse(t).map_err(|e| anyhow!(e)))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    ensure!(
+        !endpoints.is_empty(),
+        "give at least one --endpoint tcp:HOST:PORT or unix:PATH (repeatable)"
+    );
+    let timeout_ms: u64 = args.get_parse("timeout-ms", 30_000u64)?;
+    if args.has("status") {
+        println!(
+            "{}",
+            shard::merged_status(
+                &endpoints,
+                std::time::Duration::from_millis(timeout_ms.max(1)),
+            )
+        );
+        return Ok(());
+    }
+    let spec = SweepSpec::from_args(args)?;
+    let defaults = shard::ShardOpts::default();
+    let opts = shard::ShardOpts {
+        shards: args.get_parse("shards", defaults.shards)?,
+        timeout_ms,
+        attempts: args.get_parse("attempts", defaults.attempts)?,
+        backoff_ms: args.get_parse("backoff-ms", defaults.backoff_ms)?,
+        backoff_max_ms: args.get_parse("backoff-max-ms", defaults.backoff_max_ms)?,
+        breaker: args.get_parse("breaker", defaults.breaker)?,
+        seed: args.get_parse("seed", defaults.seed)?,
+        progress: true,
+    };
+    ensure!(opts.attempts >= 1, "--attempts must be >= 1");
+    ensure!(opts.breaker >= 1, "--breaker must be >= 1");
+    let outcome = shard::run_sharded(&spec, &endpoints, &opts)?;
+    let doc = outcome.to_json();
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &doc).map_err(|e| anyhow!("writing {path:?}: {e}"))?;
+            eprintln!("wrote {} bytes to {path}", doc.len());
+        }
+        None => println!("{doc}"),
+    }
+    eprintln!("[shard] {}", outcome.summary());
+    Ok(())
 }
 
 fn cmd_bench_diff(args: &Args) -> anyhow::Result<()> {

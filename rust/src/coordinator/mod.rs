@@ -9,6 +9,7 @@ pub mod jobs;
 pub mod config;
 pub mod launcher;
 pub mod serve;
+pub mod shard;
 pub mod sweep;
 
 pub use cli::{Args, ParseError};

@@ -1,0 +1,242 @@
+//! Deterministic fault injection for `sat serve`.
+//!
+//! A [`FaultPlan`] is parsed from `--fault PLAN` (or the `SAT_FAULT`
+//! environment variable) and consulted once per request. Faults are
+//! keyed by the request id via FNV-1a, so the same plan applied to the
+//! same request stream injects the same faults every run — the shard
+//! chaos selftest depends on that reproducibility.
+//!
+//! Grammar (comma-separated rules, all parts case-sensitive):
+//!
+//! ```text
+//! drop[@N]        kill the connection mid-stream on every Nth-hash id
+//! delay[@N]:MS    sleep MS milliseconds before answering
+//! garble[@N]      truncate one streamed row line to malformed JSON
+//! ```
+//!
+//! `@N` defaults to 1 (every request). A request id `id` matches a rule
+//! when `fnv1a64(id) % N == 0`, so `drop@2` hits a deterministic ~half
+//! of the id space, not literally every second request.
+//!
+//! Faults only apply to streaming sweep/compare requests — the point is
+//! exercising the shard front-end's retry, redispatch and dedupe paths,
+//! which only row streams have.
+
+use std::fmt;
+
+/// Marker embedded in the injected-drop `io::Error` message so the
+/// server can tell an injected drop from a genuine client disconnect
+/// and actually sever the connection instead of emitting an error line.
+pub const FAULT_DROP_MSG: &str = "fault-injected connection drop";
+
+/// 64-bit FNV-1a. Tiny, stable across platforms, and good enough to
+/// spread request ids over `% N` buckets.
+pub fn fnv1a64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    Drop,
+    Delay,
+    Garble,
+}
+
+#[derive(Clone, Debug)]
+struct Rule {
+    kind: Kind,
+    /// Inject when `fnv1a64(id) % every == 0`.
+    every: u64,
+    /// Delay in milliseconds (Delay rules only).
+    ms: u64,
+}
+
+/// A parsed fault plan: zero or more independent rules.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    rules: Vec<Rule>,
+}
+
+/// What to do to one request, resolved from its id.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultDecision {
+    /// Sleep this long before processing the request.
+    pub delay_ms: u64,
+    /// Sever the connection after roughly half the rows have streamed.
+    pub drop: bool,
+    /// Truncate one row line mid-way so the client sees malformed JSON.
+    pub garble: bool,
+}
+
+impl FaultDecision {
+    pub fn is_clean(&self) -> bool {
+        *self == FaultDecision::default()
+    }
+}
+
+impl FaultPlan {
+    /// Parse a plan string; `Err` carries a message naming the bad rule.
+    pub fn parse(text: &str) -> Result<FaultPlan, String> {
+        let mut rules = Vec::new();
+        for part in text.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (head, ms) = match part.split_once(':') {
+                Some((h, ms_text)) => {
+                    let ms = ms_text
+                        .parse::<u64>()
+                        .map_err(|e| format!("fault rule {part:?}: bad delay ms: {e}"))?;
+                    (h, ms)
+                }
+                None => (part, 0),
+            };
+            let (kind_text, every) = match head.split_once('@') {
+                Some((k, n_text)) => {
+                    let n = n_text
+                        .parse::<u64>()
+                        .map_err(|e| format!("fault rule {part:?}: bad @N: {e}"))?;
+                    if n == 0 {
+                        return Err(format!("fault rule {part:?}: @N must be >= 1"));
+                    }
+                    (k, n)
+                }
+                None => (head, 1),
+            };
+            let kind = match kind_text {
+                "drop" => Kind::Drop,
+                "delay" => Kind::Delay,
+                "garble" => Kind::Garble,
+                other => {
+                    return Err(format!(
+                        "fault rule {part:?}: unknown kind {other:?} (want drop|delay|garble)"
+                    ))
+                }
+            };
+            if kind == Kind::Delay && ms == 0 {
+                return Err(format!("fault rule {part:?}: delay needs :MS"));
+            }
+            if kind != Kind::Delay && ms != 0 {
+                return Err(format!("fault rule {part:?}: only delay takes :MS"));
+            }
+            rules.push(Rule { kind, every, ms });
+        }
+        Ok(FaultPlan { rules })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    /// Resolve the faults to inject for one request id. Deterministic:
+    /// depends only on the plan and the id bytes.
+    pub fn decide(&self, id: &str) -> FaultDecision {
+        let h = fnv1a64(id);
+        let mut d = FaultDecision::default();
+        for r in &self.rules {
+            if h % r.every != 0 {
+                continue;
+            }
+            match r.kind {
+                Kind::Drop => d.drop = true,
+                Kind::Garble => d.garble = true,
+                Kind::Delay => d.delay_ms = d.delay_ms.max(r.ms),
+            }
+        }
+        d
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, r) in self.rules.iter().enumerate() {
+            if i > 0 {
+                f.write_str(",")?;
+            }
+            match r.kind {
+                Kind::Drop => write!(f, "drop@{}", r.every)?,
+                Kind::Garble => write!(f, "garble@{}", r.every)?,
+                Kind::Delay => write!(f, "delay@{}:{}", r.every, r.ms)?,
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Truncate a line to malformed JSON at a UTF-8 boundary near its
+/// midpoint. The result still gets a trailing newline on the wire so
+/// the client's line framing survives and the *next* line parses —
+/// only this row is garbage.
+pub fn garble_line(line: &str) -> String {
+    let mut cut = line.len() / 2;
+    while cut > 0 && !line.is_char_boundary(cut) {
+        cut -= 1;
+    }
+    line[..cut].to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let p = FaultPlan::parse("drop@2,delay@3:15,garble").unwrap();
+        assert_eq!(p.to_string(), "drop@2,delay@3:15,garble@1");
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" drop , garble@4 ").is_ok());
+    }
+
+    #[test]
+    fn rejects_bad_rules() {
+        for bad in [
+            "explode",
+            "drop@0",
+            "drop@x",
+            "delay@2",     // delay without :MS
+            "delay:abc",   // non-numeric MS
+            "garble@1:10", // :MS on a non-delay rule
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_keyed_by_id() {
+        let p = FaultPlan::parse("drop@1").unwrap();
+        assert!(p.decide("s0a0").drop);
+        assert!(p.decide("anything").drop);
+
+        let half = FaultPlan::parse("garble@2").unwrap();
+        let ids: Vec<String> = (0..64).map(|i| format!("s{i}a0")).collect();
+        let hit = ids.iter().filter(|id| half.decide(id).garble).count();
+        // Not all, not none — the hash actually spreads ids over buckets.
+        assert!(hit > 0 && hit < ids.len(), "hit {hit}/{}", ids.len());
+        // Same id, same answer, every time.
+        for id in &ids {
+            assert_eq!(half.decide(id), half.decide(id));
+        }
+    }
+
+    #[test]
+    fn delay_takes_the_max_of_matching_rules() {
+        let p = FaultPlan::parse("delay@1:10,delay@1:25").unwrap();
+        assert_eq!(p.decide("x").delay_ms, 25);
+    }
+
+    #[test]
+    fn garble_truncates_at_a_char_boundary() {
+        let line = "{\"id\":\"x\",\"kind\":\"row\",\"result\":{\"a\":1}}";
+        let g = garble_line(line);
+        assert!(g.len() < line.len());
+        assert!(crate::util::json::parse(&g).is_err());
+        // Multi-byte content does not panic.
+        let _ = garble_line("{\"id\":\"héllo—wörld\"}");
+    }
+}

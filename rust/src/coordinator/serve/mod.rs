@@ -19,12 +19,18 @@
 //!   generator that replays thousands of mixed-grid queries and emits
 //!   a bench-diff-schema `BENCH_serve_selftest.json` (cache hit rate,
 //!   p50/p99 latency, throughput vs. worker count) for CI gating.
+//! * [`fault`] — deterministic fault injection (`--fault` /
+//!   `SAT_FAULT`): connection drops mid-stream, delayed responses,
+//!   garbled row lines, keyed by request id. Powers the `sat shard`
+//!   chaos selftest.
 
+pub mod fault;
 pub mod protocol;
 pub mod selftest;
 pub mod server;
 pub mod state;
 
+pub use fault::{FaultDecision, FaultPlan};
 pub use protocol::{Cmd, Request, StreamStats, TrainRequest};
 pub use selftest::SelftestOpts;
 #[cfg(unix)]

@@ -425,10 +425,20 @@ pub fn parse_response(line: &str) -> Result<Response, String> {
 /// Slice the raw `"result"` object bytes out of a response line without
 /// re-serializing (valid because emission puts `result` last). This is
 /// the byte-parity hook: `raw_result(row_line) == SweepRow::json()`.
+///
+/// Hardened against adversarial input: the candidate slice must parse
+/// as one complete JSON value (the parser rejects trailing data), so a
+/// truncated, garbled, or field-reordered line — where `"result":` is
+/// not the last field, or the tail is cut mid-object — returns `None`
+/// instead of mis-sliced bytes. An escaped `\"result\":` inside a JSON
+/// string can never match the unescaped pattern, so string content
+/// cannot spoof the key.
 pub fn raw_result(line: &str) -> Option<&str> {
     let pos = line.find("\"result\":")?;
     let rest = &line[pos + "\"result\":".len()..];
-    rest.strip_suffix('}')
+    let body = rest.strip_suffix('}')?;
+    json::parse(body).ok()?;
+    Some(body)
 }
 
 #[cfg(test)]
@@ -610,5 +620,134 @@ mod tests {
             resp.body.get("error").and_then(Value::as_str),
             Some("it broke \"badly\"")
         );
+    }
+
+    /// One canonical line of every response kind — the adversarial
+    /// corpus below mutates these.
+    fn canonical_response_lines() -> Vec<String> {
+        vec![
+            row_line(
+                "rq",
+                3,
+                r#"{"model":"resnet9","nested":{"a":[1,2]},"total_cycles":123}"#,
+            ),
+            done_line(
+                "rq",
+                &StreamStats {
+                    rows: 4,
+                    hits: 1,
+                    joins: 2,
+                    misses: 1,
+                },
+                1.5,
+            ),
+            train_line("rq", true, 2.5, r#"{"model":"tiny_mlp","final_loss":0.5}"#),
+            status_line("rq", r#"{"requests":9,"errors":0}"#),
+            ok_line("rq"),
+            error_line("rq", "boom"),
+        ]
+    }
+
+    #[test]
+    fn every_truncation_of_every_response_kind_is_rejected() {
+        for line in canonical_response_lines() {
+            assert!(parse_response(&line).is_ok(), "corpus line invalid: {line}");
+            for cut in 0..line.len() {
+                let prefix = &line[..cut];
+                assert!(
+                    parse_response(prefix).is_err(),
+                    "truncation at {cut} parsed: {prefix:?}"
+                );
+                // A proper prefix can never be a complete line, so a
+                // Some() here would be a mis-slice.
+                assert_eq!(
+                    raw_result(prefix),
+                    None,
+                    "truncation at {cut} sliced a result: {prefix:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reordered_and_spoofed_result_fields_never_mis_slice() {
+        // result not last: the naive slice would drag trailing fields
+        // along; the parse validation rejects it instead.
+        assert_eq!(
+            raw_result(r#"{"id":"a","result":{"x":1},"kind":"row","index":0}"#),
+            None
+        );
+        // A decoy "result" before the real one: the anchored slice
+        // fails to parse, so the line is rejected, never mis-sliced.
+        assert_eq!(
+            raw_result(r#"{"id":"a","result":1,"kind":"row","result":{"x":1}}"#),
+            None
+        );
+        // "result": inside a *string value* is escaped on emission and
+        // can't spoof the unescaped key pattern.
+        let tricky = error_line("a", "saw \"result\": weird");
+        assert_eq!(raw_result(&tricky), None);
+        assert_eq!(
+            parse_response(&tricky).unwrap().body.get("error").and_then(Value::as_str),
+            Some("saw \"result\": weird")
+        );
+    }
+
+    #[test]
+    fn garbled_lines_never_panic_and_surviving_slices_always_parse() {
+        use crate::util::prng::Pcg32;
+        let corpus = canonical_response_lines();
+        let mut rng = Pcg32::new(0x5eed);
+        for round in 0..400 {
+            let base = &corpus[round % corpus.len()];
+            let mut bytes = base.clone().into_bytes();
+            for _ in 0..=rng.below(4) {
+                let pos = rng.below(bytes.len() as u32) as usize;
+                bytes[pos] = b' ' + rng.below(95) as u8; // printable ASCII
+            }
+            let mutated = String::from_utf8(bytes).unwrap();
+            // Neither entry point may panic on garbage; and when the
+            // hardened slicer does return bytes, they must be one
+            // complete JSON value — that is its contract.
+            let _ = parse_response(&mutated);
+            if let Some(body) = raw_result(&mutated) {
+                assert!(
+                    json::parse(body).is_ok(),
+                    "raw_result returned a non-JSON slice from: {mutated}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn random_requests_round_trip_through_the_canonical_form() {
+        use crate::util::prng::Pcg32;
+        let models = ["resnet9", "tiny_mlp", "vit"];
+        let patterns = [NmPattern::P2_4, NmPattern::P2_8];
+        let arrays = [(16usize, 16usize), (32, 32), (8, 64)];
+        let bandwidths = [25.6, 77.0, 102.4, 1024.0];
+        let mut rng = Pcg32::new(2026);
+        for i in 0..200u32 {
+            // Non-empty random prefixes of each axis pool keep the spec
+            // valid while varying every field.
+            let take = |rng: &mut Pcg32, n: usize| 1 + rng.below(n as u32) as usize;
+            let spec = SweepSpec {
+                models: models[..take(&mut rng, models.len())]
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect(),
+                methods: Method::ALL[..take(&mut rng, Method::ALL.len())].to_vec(),
+                patterns: patterns[..take(&mut rng, patterns.len())].to_vec(),
+                arrays: arrays[..take(&mut rng, arrays.len())].to_vec(),
+                bandwidths: bandwidths[..take(&mut rng, bandwidths.len())].to_vec(),
+                overlap: rng.below(2) == 0,
+                jobs: rng.below(5) as usize,
+                ..SweepSpec::default()
+            };
+            round_trip(&Request {
+                id: format!("r{i}"),
+                cmd: Cmd::Sweep(spec),
+            });
+        }
     }
 }

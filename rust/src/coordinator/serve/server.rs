@@ -18,8 +18,14 @@ use std::time::{Duration, Instant};
 
 use anyhow::Context;
 
+use super::fault;
 use super::protocol::{self, Cmd, Request};
 use super::state::{FetchKind, ServeCore};
+
+/// Socket read timeout on handler connections. A blocked `read` wakes
+/// up this often to poll the core's shutdown flag, so an idle or dead
+/// client can never pin its handler thread past a shutdown drain.
+const READ_POLL: Duration = Duration::from_millis(200);
 
 enum Listener {
     Tcp(TcpListener),
@@ -113,6 +119,7 @@ impl Server {
             Listener::Tcp(l) => match l.accept() {
                 Ok((s, _)) => {
                     s.set_nonblocking(false)?;
+                    s.set_read_timeout(Some(READ_POLL))?;
                     Ok(Some(Conn::Tcp(s)))
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
@@ -122,6 +129,7 @@ impl Server {
             Listener::Unix(l) => match l.accept() {
                 Ok((s, _)) => {
                     s.set_nonblocking(false)?;
+                    s.set_read_timeout(Some(READ_POLL))?;
                     Ok(Some(Conn::Unix(s)))
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
@@ -156,20 +164,54 @@ impl Conn {
 /// The connection loop: one request line in, one or more response
 /// lines out, until EOF. Malformed lines produce an `error` response
 /// and the loop continues — a bad request never costs the connection.
+///
+/// Socket readers carry a [`READ_POLL`] read timeout: a timed-out read
+/// is a poll tick, not an error — the partial line (if any) stays in
+/// the buffer, the shutdown flag is checked, and the read resumes.
 pub fn serve_lines<R: BufRead, W: Write>(
     core: &ServeCore,
-    reader: R,
+    mut reader: R,
     mut writer: W,
 ) -> std::io::Result<()> {
-    for line in reader.lines() {
-        let line = line?;
+    let mut raw: Vec<u8> = Vec::new();
+    loop {
+        raw.clear();
+        let eof = loop {
+            match reader.read_until(b'\n', &mut raw) {
+                Ok(_) if raw.ends_with(b"\n") => break false,
+                // read_until only stops short of the delimiter at EOF.
+                Ok(_) => break true,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                            | std::io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    // Bytes read before the timeout were appended to
+                    // `raw`; retrying resumes the same line.
+                    if core.is_shutdown() {
+                        return Ok(());
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        };
+        let line = std::str::from_utf8(&raw).map_err(|_| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "request line is not valid UTF-8",
+            )
+        })?;
         let trimmed = line.trim();
-        if trimmed.is_empty() {
-            continue;
+        if !trimmed.is_empty() {
+            dispatch_line(core, trimmed, &mut writer)?;
         }
-        dispatch_line(core, trimmed, &mut writer)?;
+        if eof {
+            return Ok(());
+        }
     }
-    Ok(())
 }
 
 fn dispatch_line<W: Write>(core: &ServeCore, line: &str, w: &mut W) -> std::io::Result<()> {
@@ -206,14 +248,52 @@ fn dispatch<W: Write>(
 ) -> std::io::Result<()> {
     match &req.cmd {
         Cmd::Sweep(spec) | Cmd::Compare(spec) => {
-            let mut emit =
-                |i: usize, row: &str| write_line(&mut *w, &protocol::row_line(&req.id, i, row));
+            // Fault injection (serve/fault.rs): a no-op unless the core
+            // was built with a plan. Drops and garbles land mid-stream
+            // (around half the rows) so retrying clients exercise their
+            // dedupe path, not just clean replays.
+            let f = core.fault_decision(&req.id);
+            if f.delay_ms > 0 {
+                core.count_fault();
+                thread::sleep(Duration::from_millis(f.delay_ms));
+            }
+            let midpoint = spec.grid_size() / 2;
+            let drop_at = f.drop.then_some(midpoint);
+            let garble_at = f.garble.then_some(midpoint);
+            let mut emit = |i: usize, row: &str| {
+                if drop_at == Some(i) {
+                    core.count_fault();
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::ConnectionAborted,
+                        fault::FAULT_DROP_MSG,
+                    ));
+                }
+                let line = protocol::row_line(&req.id, i, row);
+                if garble_at == Some(i) {
+                    core.count_fault();
+                    return write_line(&mut *w, &fault::garble_line(&line));
+                }
+                write_line(&mut *w, &line)
+            };
             match core.run_streamed(spec, &mut emit) {
                 Ok(stats) => write_line(
                     w,
                     &protocol::done_line(&req.id, &stats, t0.elapsed().as_secs_f64() * 1e3),
                 ),
                 Err(e) => {
+                    // An injected drop must sever the connection, not
+                    // answer with an error line: propagate the io::Error
+                    // so serve_lines returns and the stream is closed.
+                    if let Some(io) = e.downcast_ref::<std::io::Error>() {
+                        if io.kind() == std::io::ErrorKind::ConnectionAborted
+                            && io.to_string().contains(fault::FAULT_DROP_MSG)
+                        {
+                            return Err(std::io::Error::new(
+                                std::io::ErrorKind::ConnectionAborted,
+                                fault::FAULT_DROP_MSG,
+                            ));
+                        }
+                    }
                     core.count_error();
                     write_line(w, &protocol::error_line(&req.id, &format!("{e:#}")))
                 }
@@ -411,5 +491,69 @@ mod tests {
             done.body.get("scenario_misses").and_then(Value::as_u64),
             Some(2)
         );
+    }
+
+    const SWEEP_2ROWS: &str = "{\"id\":\"s\",\"cmd\":\"sweep\",\"models\":\"resnet9\",\"methods\":\"dense,bdwp\",\"patterns\":\"2:8\",\"jobs\":1}\n";
+
+    #[test]
+    fn injected_drop_severs_the_connection_mid_stream() {
+        let core = ServeCore::with_fault_plan(Some(fault::FaultPlan::parse("drop@1").unwrap()));
+        let mut out = Vec::new();
+        let err = serve_lines(
+            &core,
+            Cursor::new(SWEEP_2ROWS.as_bytes().to_vec()),
+            &mut out,
+        )
+        .unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::ConnectionAborted);
+        let text = String::from_utf8(out).unwrap();
+        // Grid of 2, drop at the midpoint: exactly one row made it out,
+        // and neither a done nor an error line followed — from the
+        // client's side this is a connection lost mid-stream.
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1, "{lines:?}");
+        assert_eq!(protocol::parse_response(lines[0]).unwrap().kind, "row");
+    }
+
+    #[test]
+    fn injected_garble_truncates_one_row_line_but_finishes_the_stream() {
+        let core = ServeCore::with_fault_plan(Some(fault::FaultPlan::parse("garble@1").unwrap()));
+        let lines = run_session(&core, SWEEP_2ROWS);
+        assert_eq!(lines.len(), 3, "row + garbled row + done: {lines:?}");
+        assert_eq!(protocol::parse_response(&lines[0]).unwrap().kind, "row");
+        assert!(
+            protocol::parse_response(&lines[1]).is_err(),
+            "the midpoint row must be malformed: {:?}",
+            lines[1]
+        );
+        assert_eq!(protocol::parse_response(&lines[2]).unwrap().kind, "done");
+    }
+
+    #[test]
+    fn a_silent_client_does_not_block_shutdown() {
+        let core = Arc::new(ServeCore::new());
+        let handle = spawn_tcp(Arc::clone(&core), "127.0.0.1:0").unwrap();
+        let addr = handle.addr().to_string();
+        // A client that connects and never sends a byte.
+        let silent = TcpStream::connect(&addr).unwrap();
+        // A second client shuts the server down.
+        let mut ctl = TcpStream::connect(&addr).unwrap();
+        ctl.write_all(b"{\"id\":\"z\",\"cmd\":\"shutdown\"}\n").unwrap();
+        let mut reply = String::new();
+        BufReader::new(ctl.try_clone().unwrap())
+            .read_line(&mut reply)
+            .unwrap();
+        assert_eq!(protocol::parse_response(reply.trim()).unwrap().kind, "ok");
+        // Before handler sockets had a read timeout, the silent
+        // handler blocked in read() forever and this join never
+        // returned; now its poll tick sees the shutdown flag.
+        let (tx, rx) = std::sync::mpsc::channel();
+        thread::spawn(move || {
+            let _ = tx.send(handle.join());
+        });
+        rx.recv_timeout(Duration::from_secs(10))
+            .expect("shutdown drain stalled on the silent client")
+            .unwrap();
+        drop(silent);
     }
 }

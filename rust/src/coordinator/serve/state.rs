@@ -32,6 +32,7 @@ use crate::sim::engine::finish_step;
 use crate::train::{self, BackendKind, TrainCurve, TrainOptions, TrainSpec};
 use crate::util::json::Obj;
 
+use super::fault::{FaultDecision, FaultPlan};
 use super::protocol::{StreamStats, TrainRequest};
 
 /// How a [`ShareMap`] lookup was satisfied.
@@ -214,10 +215,20 @@ pub struct ServeCore {
     request_us_total: AtomicU64,
     request_us_max: AtomicU64,
     shutdown: AtomicBool,
+    fault: Option<FaultPlan>,
+    faults_injected: AtomicU64,
 }
 
 impl ServeCore {
     pub fn new() -> ServeCore {
+        ServeCore::with_fault_plan(None)
+    }
+
+    /// A core with a deterministic [`FaultPlan`] armed: sweep/compare
+    /// requests whose id matches the plan get the configured connection
+    /// drops, delays, and garbled row lines (see `serve/fault.rs`).
+    /// Production servers pass `None` and behave exactly as before.
+    pub fn with_fault_plan(fault: Option<FaultPlan>) -> ServeCore {
         ServeCore {
             caches: SweepCaches::new(),
             scenarios: ShareMap::new(),
@@ -230,6 +241,8 @@ impl ServeCore {
             request_us_total: AtomicU64::new(0),
             request_us_max: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
+            fault,
+            faults_injected: AtomicU64::new(0),
         }
     }
 
@@ -257,6 +270,19 @@ impl ServeCore {
 
     pub fn is_shutdown(&self) -> bool {
         self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// The faults to inject for one request id; clean when no plan is
+    /// armed (the production default).
+    pub fn fault_decision(&self, id: &str) -> FaultDecision {
+        self.fault
+            .as_ref()
+            .map(|p| p.decide(id))
+            .unwrap_or_default()
+    }
+
+    pub fn count_fault(&self) {
+        self.faults_injected.fetch_add(1, Ordering::Relaxed);
     }
 
     /// `(hits, joins, misses)` of the scenario result cache.
@@ -453,6 +479,10 @@ impl ServeCore {
             .field_f64(
                 "max_request_ms",
                 self.request_us_max.load(Ordering::Relaxed) as f64 / 1e3,
+            )
+            .field_u64(
+                "faults_injected",
+                self.faults_injected.load(Ordering::Relaxed),
             )
             .field_usize(
                 "pool_parallelism",
@@ -664,6 +694,7 @@ mod tests {
             "precomp_misses",
             "avg_request_ms",
             "max_request_ms",
+            "faults_injected",
             "pool_parallelism",
         ] {
             assert!(doc.get(key).is_some(), "status lacks {key}: {status}");

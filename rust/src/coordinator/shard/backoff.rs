@@ -1,0 +1,63 @@
+//! Capped exponential backoff with deterministic jitter.
+//!
+//! Retrying shards back off exponentially so a struggling endpoint is
+//! not hammered, with jitter so several failed shards do not retry in
+//! lockstep. The jitter is drawn from a [`Pcg32`] seeded purely by
+//! `(seed, shard, attempt)`, so a shard run with a fixed `--seed`
+//! retries at exactly the same offsets every time — the chaos selftest
+//! and the fault-injection plans rely on that reproducibility.
+
+use crate::util::prng::Pcg32;
+
+/// Delay before `attempt` (1-based: the first retry is attempt 1) of
+/// `shard`, in milliseconds. Exponential in the attempt number, capped
+/// at `cap_ms`, jittered over the upper half of the window:
+/// `[exp/2, exp]` where `exp = min(base_ms << (attempt-1), cap_ms)`.
+pub fn backoff_ms(base_ms: u64, cap_ms: u64, attempt: u32, seed: u64, shard: u64) -> u64 {
+    if base_ms == 0 || attempt == 0 {
+        return 0;
+    }
+    let shift = (attempt - 1).min(16);
+    let exp = base_ms
+        .saturating_mul(1u64 << shift)
+        .min(cap_ms.max(base_ms));
+    let lo = exp / 2;
+    let span = exp - lo + 1;
+    let mut rng = Pcg32::with_stream(seed ^ shard.rotate_left(17), 0x5a17 + u64::from(attempt));
+    lo + u64::from(rng.next_u32()) % span
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_the_same_inputs() {
+        for attempt in 1..6 {
+            for shard in 0..8 {
+                assert_eq!(
+                    backoff_ms(50, 2000, attempt, 7, shard),
+                    backoff_ms(50, 2000, attempt, 7, shard)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bounded_by_the_exponential_window_and_the_cap() {
+        for attempt in 1..20u32 {
+            let d = backoff_ms(50, 2000, attempt, 1, 3);
+            let exp = 50u64.saturating_mul(1 << (attempt - 1).min(16)).min(2000);
+            assert!(d >= exp / 2 && d <= exp, "attempt {attempt}: {d} not in [{}, {exp}]", exp / 2);
+        }
+        assert_eq!(backoff_ms(0, 2000, 3, 1, 1), 0, "base 0 disables backoff");
+        assert_eq!(backoff_ms(50, 2000, 0, 1, 1), 0, "attempt 0 never waits");
+    }
+
+    #[test]
+    fn different_shards_jitter_differently() {
+        let delays: Vec<u64> = (0..32).map(|s| backoff_ms(400, 4000, 4, 9, s)).collect();
+        let distinct: std::collections::HashSet<u64> = delays.iter().copied().collect();
+        assert!(distinct.len() > 1, "jitter must spread shards: {delays:?}");
+    }
+}

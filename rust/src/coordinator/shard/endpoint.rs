@@ -1,0 +1,251 @@
+//! Endpoint addressing and client connections for `sat shard`.
+//!
+//! Endpoints are spelled `tcp:HOST:PORT` or `unix:PATH` — the same two
+//! transports `sat serve` listens on. A connection wraps either stream
+//! behind one reader/writer pair with a short socket read timeout, so
+//! the runner's per-shard deadline can interleave "did data arrive?"
+//! polls with "is the deadline gone?" checks without OS-specific I/O.
+
+use std::fmt;
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+/// How often a blocked read wakes to check the shard deadline.
+const READ_POLL: Duration = Duration::from_millis(50);
+
+/// One `sat serve` endpoint.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Endpoint {
+    /// `tcp:HOST:PORT` — the `HOST:PORT` part.
+    Tcp(String),
+    /// `unix:PATH` — the socket path.
+    Unix(String),
+}
+
+impl Endpoint {
+    /// Parse `tcp:HOST:PORT` or `unix:PATH`.
+    pub fn parse(text: &str) -> Result<Endpoint, String> {
+        if let Some(rest) = text.strip_prefix("tcp:") {
+            if rest.rsplit_once(':').is_none() {
+                return Err(format!("endpoint {text:?}: want tcp:HOST:PORT"));
+            }
+            Ok(Endpoint::Tcp(rest.to_string()))
+        } else if let Some(rest) = text.strip_prefix("unix:") {
+            if rest.is_empty() {
+                return Err(format!("endpoint {text:?}: want unix:PATH"));
+            }
+            Ok(Endpoint::Unix(rest.to_string()))
+        } else {
+            Err(format!(
+                "endpoint {text:?}: want tcp:HOST:PORT or unix:PATH"
+            ))
+        }
+    }
+
+    /// Open a connection; `timeout` bounds the TCP connect. The socket
+    /// read timeout is armed at [`READ_POLL`] so reads poll, not block.
+    pub fn connect(&self, timeout: Duration) -> io::Result<EndpointConn> {
+        let stream = match self {
+            Endpoint::Tcp(addr) => {
+                let resolved = addr.to_socket_addrs()?.next().ok_or_else(|| {
+                    io::Error::new(
+                        io::ErrorKind::AddrNotAvailable,
+                        format!("{addr:?} resolved to no address"),
+                    )
+                })?;
+                let s = TcpStream::connect_timeout(&resolved, timeout.max(Duration::from_millis(1)))?;
+                s.set_nodelay(true)?;
+                s.set_read_timeout(Some(READ_POLL))?;
+                Stream::Tcp(s)
+            }
+            #[cfg(unix)]
+            Endpoint::Unix(path) => {
+                let s = std::os::unix::net::UnixStream::connect(path)?;
+                s.set_read_timeout(Some(READ_POLL))?;
+                Stream::Unix(s)
+            }
+            #[cfg(not(unix))]
+            Endpoint::Unix(_) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::Unsupported,
+                    "unix: endpoints are unavailable on this platform",
+                ))
+            }
+        };
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(EndpointConn {
+            reader,
+            writer: stream,
+            buf: Vec::new(),
+        })
+    }
+}
+
+impl fmt::Display for Endpoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Endpoint::Tcp(a) => write!(f, "tcp:{a}"),
+            Endpoint::Unix(p) => write!(f, "unix:{p}"),
+        }
+    }
+}
+
+enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixStream),
+}
+
+impl Stream {
+    fn try_clone(&self) -> io::Result<Stream> {
+        Ok(match self {
+            Stream::Tcp(s) => Stream::Tcp(s.try_clone()?),
+            #[cfg(unix)]
+            Stream::Unix(s) => Stream::Unix(s.try_clone()?),
+        })
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// A line-oriented client connection to one endpoint.
+pub struct EndpointConn {
+    reader: BufReader<Stream>,
+    writer: Stream,
+    buf: Vec<u8>,
+}
+
+impl EndpointConn {
+    pub fn send_line(&mut self, line: &str) -> io::Result<()> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()
+    }
+
+    /// Read one full line, or fail once `deadline` passes. A read
+    /// timeout is a poll tick (partial bytes stay buffered and the
+    /// read resumes); EOF — clean or mid-line — is an error, because
+    /// the protocol terminates every request with a non-row line, so a
+    /// well-behaved server never just closes on us.
+    pub fn read_line(&mut self, deadline: Instant) -> io::Result<String> {
+        self.buf.clear();
+        loop {
+            match self.reader.read_until(b'\n', &mut self.buf) {
+                Ok(_) if self.buf.ends_with(b"\n") => break,
+                // read_until only stops short of the delimiter at EOF.
+                Ok(_) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "connection closed mid-stream",
+                    ))
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock
+                            | io::ErrorKind::TimedOut
+                            | io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    if Instant::now() >= deadline {
+                        return Err(io::Error::new(
+                            io::ErrorKind::TimedOut,
+                            "shard deadline exceeded",
+                        ));
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        let text = std::str::from_utf8(&self.buf).map_err(|_| {
+            io::Error::new(io::ErrorKind::InvalidData, "response line is not valid UTF-8")
+        })?;
+        Ok(text.trim().to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_both_endpoint_forms() {
+        assert_eq!(
+            Endpoint::parse("tcp:127.0.0.1:4077"),
+            Ok(Endpoint::Tcp("127.0.0.1:4077".into()))
+        );
+        assert_eq!(
+            Endpoint::parse("unix:/tmp/sat.sock"),
+            Ok(Endpoint::Unix("/tmp/sat.sock".into()))
+        );
+        assert_eq!(
+            Endpoint::parse("tcp:127.0.0.1:4077").unwrap().to_string(),
+            "tcp:127.0.0.1:4077"
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_endpoints() {
+        for bad in ["", "127.0.0.1:4077", "tcp:nohost", "unix:", "http:x"] {
+            assert!(Endpoint::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn connecting_to_a_closed_port_fails_cleanly() {
+        // Bind-then-drop guarantees the port exists but nobody listens.
+        let port = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let ep = Endpoint::Tcp(format!("127.0.0.1:{port}"));
+        assert!(ep.connect(Duration::from_millis(200)).is_err());
+    }
+
+    #[test]
+    fn read_line_times_out_against_a_silent_server() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            // Accept, then say nothing until the client gives up.
+            let (_s, _) = listener.accept().unwrap();
+            std::thread::sleep(Duration::from_millis(600));
+        });
+        let ep = Endpoint::Tcp(addr);
+        let mut conn = ep.connect(Duration::from_millis(500)).unwrap();
+        let t0 = Instant::now();
+        let err = conn
+            .read_line(Instant::now() + Duration::from_millis(250))
+            .unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::TimedOut);
+        assert!(t0.elapsed() < Duration::from_secs(5), "deadline respected");
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,33 @@
+//! `sat shard` — fault-tolerant cross-host sharded sweeps.
+//!
+//! A front-end over the `sat serve` wire protocol: split a sweep grid
+//! into index-stable sub-ranges, dispatch them to several servers as
+//! ordinary sweep requests, and k-way merge the streamed rows back
+//! into output byte-identical to the one-shot `sat sweep` sink.
+//!
+//! * [`plan`] — grid splitting. Pinning a prefix of the expansion
+//!   axes yields contiguous global-index blocks, so a shard is just a
+//!   smaller `SweepSpec` plus an offset.
+//! * [`endpoint`] — `tcp:HOST:PORT` / `unix:PATH` addressing and a
+//!   deadline-polling line client.
+//! * [`backoff`] — capped exponential backoff with deterministic,
+//!   seeded jitter (reproducible retry timing).
+//! * [`runner`] — the dispatch loop: per-shard deadlines, retry,
+//!   redispatch to healthy endpoints, per-endpoint circuit breakers,
+//!   index-keyed duplicate suppression, and local fallback through
+//!   `run_sweep_cached` when every endpoint is dead. Also
+//!   [`merged_status`], the multi-endpoint `status` aggregator.
+//! * [`selftest`] — the chaos harness: in-process servers with
+//!   injected faults (drops, delays, garbled rows) must still yield a
+//!   byte-identical merge, gated by `--max-row-loss 0` in CI.
+
+pub mod backoff;
+pub mod endpoint;
+pub mod plan;
+pub mod runner;
+pub mod selftest;
+
+pub use endpoint::Endpoint;
+pub use plan::{split_spec, Shard};
+pub use runner::{merged_status, run_sharded, EndpointStat, ShardOpts, ShardOutcome};
+pub use selftest::ShardSelftestOpts;

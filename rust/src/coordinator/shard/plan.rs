@@ -1,0 +1,158 @@
+//! Index-stable splitting of a `SweepSpec` grid into shard sub-specs.
+//!
+//! `SweepSpec::expand` nests its axes in a fixed order — models →
+//! methods → patterns → arrays → bandwidths, last axis fastest — and
+//! stamps each point with its position. Pinning a *prefix* of that
+//! nesting order to singleton values therefore yields a sub-spec whose
+//! own expansion is a contiguous, order-preserving block of the full
+//! grid: `full[offset + i] == sub[i]` for every local index `i`. That
+//! is the whole sharding trick — a shard is just an ordinary sweep
+//! request, and `offset + local_index` reconstructs the global index
+//! of every streamed row, which is the key for both the k-way merge
+//! and duplicate suppression on redispatch.
+
+use crate::coordinator::sweep::SweepSpec;
+
+/// One shard: a sub-spec plus its block position in the full grid.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub id: usize,
+    /// Global index of this shard's first grid point.
+    pub offset: usize,
+    /// Number of grid points (`spec.grid_size()`).
+    pub len: usize,
+    pub spec: SweepSpec,
+}
+
+/// Split `spec` into at least `target` shards where the grid allows,
+/// by pinning the shortest axis prefix whose combined length reaches
+/// `target`. With `target <= 1` (or all-singleton axes) the whole grid
+/// is one shard. Shards are returned in global index order.
+pub fn split_spec(spec: &SweepSpec, target: usize) -> Vec<Shard> {
+    let axis_lens = [
+        spec.models.len(),
+        spec.methods.len(),
+        spec.patterns.len(),
+        spec.arrays.len(),
+        spec.bandwidths.len(),
+    ];
+    let mut depth = 0;
+    let mut shard_count = 1usize;
+    while depth < axis_lens.len() && shard_count < target.max(1) {
+        shard_count = shard_count.saturating_mul(axis_lens[depth].max(1));
+        depth += 1;
+    }
+    let mut out = Vec::with_capacity(shard_count);
+    let mut idx = vec![0usize; depth];
+    let mut offset = 0usize;
+    loop {
+        let mut sub = spec.clone();
+        if depth > 0 {
+            sub.models = vec![spec.models[idx[0]].clone()];
+        }
+        if depth > 1 {
+            sub.methods = vec![spec.methods[idx[1]]];
+        }
+        if depth > 2 {
+            sub.patterns = vec![spec.patterns[idx[2]]];
+        }
+        if depth > 3 {
+            sub.arrays = vec![spec.arrays[idx[3]]];
+        }
+        if depth > 4 {
+            sub.bandwidths = vec![spec.bandwidths[idx[4]]];
+        }
+        let len = sub.grid_size();
+        out.push(Shard {
+            id: out.len(),
+            offset,
+            len,
+            spec: sub,
+        });
+        offset += len;
+        // Odometer over the pinned prefix, last pinned axis fastest —
+        // the same order expand() walks, keeping offsets contiguous.
+        let mut k = depth;
+        loop {
+            if k == 0 {
+                return out;
+            }
+            k -= 1;
+            idx[k] += 1;
+            if idx[k] < axis_lens[k] {
+                break;
+            }
+            idx[k] = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sweep::PointKey;
+    use crate::nm::{Method, NmPattern};
+
+    fn spec_2x2x2x1x2() -> SweepSpec {
+        SweepSpec {
+            models: vec!["resnet9".into(), "tiny_mlp".into()],
+            methods: vec![Method::Dense, Method::Bdwp],
+            patterns: vec![NmPattern::P2_4, NmPattern::P2_8],
+            bandwidths: vec![25.6, 102.4],
+            ..SweepSpec::default()
+        }
+    }
+
+    #[test]
+    fn shard_concatenation_reproduces_the_full_grid_in_order() {
+        let spec = spec_2x2x2x1x2();
+        let full = spec.expand().unwrap();
+        for target in [1, 2, 3, 5, 6, 16, 100] {
+            let shards = split_spec(&spec, target);
+            assert!(
+                shards.len() >= target.min(full.len()) || target > full.len(),
+                "target {target}: got {} shards",
+                shards.len()
+            );
+            let mut global = 0usize;
+            for shard in &shards {
+                assert_eq!(shard.offset, global, "offsets are contiguous");
+                let points = shard.spec.expand().unwrap();
+                assert_eq!(points.len(), shard.len);
+                for (i, p) in points.iter().enumerate() {
+                    assert_eq!(p.index, i, "local indices restart per shard");
+                    let f = &full[shard.offset + i];
+                    assert_eq!(
+                        PointKey::of(&p.model, p.method, p.pattern, &p.sat, &p.mem),
+                        PointKey::of(&f.model, f.method, f.pattern, &f.sat, &f.mem),
+                        "target {target}, shard {}, local {i}",
+                        shard.id
+                    );
+                }
+                global += shard.len;
+            }
+            assert_eq!(global, full.len(), "shards cover the grid exactly once");
+        }
+    }
+
+    #[test]
+    fn small_targets_pin_only_the_outer_axes() {
+        let spec = spec_2x2x2x1x2();
+        let shards = split_spec(&spec, 2);
+        assert_eq!(shards.len(), 2, "models axis alone reaches target 2");
+        assert_eq!(shards[0].spec.models, vec!["resnet9".to_string()]);
+        assert_eq!(shards[1].spec.models, vec!["tiny_mlp".to_string()]);
+        assert_eq!(shards[0].spec.methods.len(), 2, "inner axes stay whole");
+        let one = split_spec(&spec, 1);
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].len, spec.grid_size());
+    }
+
+    #[test]
+    fn oversubscribed_targets_cap_at_the_grid() {
+        let spec = spec_2x2x2x1x2();
+        let shards = split_spec(&spec, 1000);
+        assert_eq!(shards.len(), spec.grid_size(), "one point per shard");
+        assert!(shards.iter().all(|s| s.len == 1));
+    }
+}

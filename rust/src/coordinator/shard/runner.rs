@@ -1,0 +1,639 @@
+//! Fault-tolerant shard execution: dispatch, retry, redispatch, merge.
+//!
+//! One worker thread per endpoint pulls shard jobs from a shared queue
+//! and serves them as ordinary `sweep` requests over the serve wire
+//! protocol. Failure handling:
+//!
+//! * **Per-shard deadline** — every attempt (connect + stream) must
+//!   finish inside `timeout_ms`, enforced by polling socket reads.
+//! * **Retry with capped exponential backoff + deterministic jitter**
+//!   ([`super::backoff`]) — a failed shard is requeued with
+//!   `attempt + 1` and a `not_before` stamp.
+//! * **Redispatch** — the requeued job is picked up by whichever
+//!   endpoint's worker is free; landing on a different endpoint than
+//!   the failed attempt counts as a redispatch.
+//! * **Circuit breaker** — `breaker` consecutive failures retire an
+//!   endpoint's worker for the rest of the run.
+//! * **Duplicate suppression** — rows are keyed by *global grid index*
+//!   (`shard.offset + local_index`); rows that arrived before a
+//!   mid-stream failure are kept, and the redispatched shard's replays
+//!   of them are suppressed byte-checked.
+//! * **Local fallback** — after the workers finish (or every circuit
+//!   opens), any shard with missing rows runs in-process through
+//!   [`run_sweep_cached`], so a shard run only fails if local
+//!   execution also fails.
+//!
+//! The merged output is index-complete and byte-identical to the
+//! one-shot `sat sweep` sink's rows (the serve protocol's byte-parity
+//! contract, extended across hosts).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context};
+
+use crate::coordinator::serve::protocol::{self, Cmd, Request};
+use crate::coordinator::sweep::{run_sweep_cached, SweepCaches, SweepSpec};
+use crate::util::json::{self, Obj, Value};
+
+use super::backoff::backoff_ms;
+use super::endpoint::Endpoint;
+use super::plan::{split_spec, Shard};
+
+/// Tuning for one shard run. Defaults favor long sweeps over WANs;
+/// the selftest and tests shrink the timeouts.
+#[derive(Clone, Debug)]
+pub struct ShardOpts {
+    /// Target shard count; 0 = `2 × endpoints` (each endpoint gets
+    /// work immediately and stragglers still rebalance).
+    pub shards: usize,
+    /// Per-attempt deadline (connect + full row stream), milliseconds.
+    pub timeout_ms: u64,
+    /// Remote attempts per shard before it is left to local fallback.
+    pub attempts: usize,
+    /// Backoff base, milliseconds (0 disables backoff).
+    pub backoff_ms: u64,
+    /// Backoff cap, milliseconds.
+    pub backoff_max_ms: u64,
+    /// Consecutive failures that open an endpoint's circuit.
+    pub breaker: u32,
+    /// Seed for the deterministic backoff jitter.
+    pub seed: u64,
+    /// Log per-attempt failures to stderr.
+    pub progress: bool,
+}
+
+impl Default for ShardOpts {
+    fn default() -> ShardOpts {
+        ShardOpts {
+            shards: 0,
+            timeout_ms: 30_000,
+            attempts: 4,
+            backoff_ms: 50,
+            backoff_max_ms: 2_000,
+            breaker: 3,
+            seed: 0x5a7d,
+            progress: false,
+        }
+    }
+}
+
+/// Per-endpoint counters, snapshotted into [`ShardOutcome`].
+#[derive(Clone, Debug)]
+pub struct EndpointStat {
+    pub endpoint: String,
+    pub attempts: u64,
+    pub failures: u64,
+    /// Rows newly recorded from this endpoint (duplicates excluded).
+    pub rows: u64,
+    pub circuit_open: bool,
+}
+
+/// A completed shard run.
+#[derive(Clone, Debug)]
+pub struct ShardOutcome {
+    /// Every grid row's sink bytes, in global index order, complete.
+    pub rows: Vec<String>,
+    pub shards: usize,
+    /// Attempts beyond each shard's first.
+    pub retries: u64,
+    /// Retry attempts that landed on a different endpoint.
+    pub redispatches: u64,
+    /// Rows first recorded by a retry, a redispatch, or the local
+    /// fallback after remote failures.
+    pub rows_recovered: u64,
+    /// Replayed rows dropped by the index-keyed merge.
+    pub duplicates_suppressed: u64,
+    /// Shards (fully or partially) completed by local fallback.
+    pub local_shards: usize,
+    pub per_endpoint: Vec<EndpointStat>,
+    /// Wall latency of every remote attempt, milliseconds.
+    pub attempt_ms: Vec<f64>,
+    pub wall_ms: f64,
+}
+
+impl ShardOutcome {
+    /// The merged results array — byte-identical to
+    /// `SweepResults::rows_json()` of a one-shot run of the same spec.
+    pub fn rows_json(&self) -> String {
+        json::array(self.rows.iter().cloned())
+    }
+
+    /// Full output document: `results` carries the one-shot-identical
+    /// rows; `meta` records how the run went (retries, redispatches,
+    /// per-endpoint counters), mirroring the sweep sink's split of
+    /// deterministic data vs. run metadata.
+    pub fn to_json(&self) -> String {
+        let per: Vec<String> = self
+            .per_endpoint
+            .iter()
+            .map(|e| {
+                Obj::new()
+                    .field_str("endpoint", &e.endpoint)
+                    .field_u64("attempts", e.attempts)
+                    .field_u64("failures", e.failures)
+                    .field_u64("rows", e.rows)
+                    .field_bool("circuit_open", e.circuit_open)
+                    .finish()
+            })
+            .collect();
+        let meta = Obj::new()
+            .field_usize("shards", self.shards)
+            .field_u64("retries", self.retries)
+            .field_u64("redispatches", self.redispatches)
+            .field_u64("rows_recovered", self.rows_recovered)
+            .field_u64("duplicates_suppressed", self.duplicates_suppressed)
+            .field_usize("local_shards", self.local_shards)
+            .field_f64("wall_ms", self.wall_ms)
+            .field_raw("endpoints", &json::array(per))
+            .finish();
+        Obj::new()
+            .field_str("schema", "sat-shard-v1")
+            .field_usize("grid", self.rows.len())
+            .field_raw("meta", &meta)
+            .field_raw("results", &self.rows_json())
+            .finish()
+    }
+
+    /// One-line stderr summary.
+    pub fn summary(&self) -> String {
+        let per: Vec<String> = self
+            .per_endpoint
+            .iter()
+            .map(|e| {
+                format!(
+                    "{}: {} attempt(s), {} failure(s), {} row(s){}",
+                    e.endpoint,
+                    e.attempts,
+                    e.failures,
+                    e.rows,
+                    if e.circuit_open { ", circuit OPEN" } else { "" }
+                )
+            })
+            .collect();
+        format!(
+            "{} rows over {} shard(s) in {:.2}s; {} retry(ies), {} redispatch(es), \
+             {} row(s) recovered, {} duplicate(s) suppressed, {} local shard(s) [{}]",
+            self.rows.len(),
+            self.shards,
+            self.wall_ms / 1e3,
+            self.retries,
+            self.redispatches,
+            self.rows_recovered,
+            self.duplicates_suppressed,
+            self.local_shards,
+            per.join("; ")
+        )
+    }
+}
+
+/// The index-keyed merge buffer: one slot per global grid index.
+struct Merger {
+    rows: Vec<Option<String>>,
+    recovered: u64,
+    duplicates: u64,
+}
+
+impl Merger {
+    fn new(total: usize) -> Merger {
+        Merger {
+            rows: vec![None; total],
+            recovered: 0,
+            duplicates: 0,
+        }
+    }
+
+    /// Record a row's sink bytes at `index`. Replays of an
+    /// already-recorded index are suppressed after a byte check —
+    /// conflicting bytes mean an endpoint is serving different results
+    /// and the run must fail loudly rather than merge silently.
+    fn record(&mut self, index: usize, row: &str, recovered: bool) -> Result<bool, String> {
+        let total = self.rows.len();
+        let slot = self
+            .rows
+            .get_mut(index)
+            .ok_or_else(|| format!("row index {index} out of range ({total} grid points)"))?;
+        match slot {
+            Some(prev) => {
+                if prev.as_str() != row {
+                    return Err(format!(
+                        "conflicting bytes for row {index}: an endpoint disagrees with an earlier attempt"
+                    ));
+                }
+                self.duplicates += 1;
+                Ok(false)
+            }
+            None => {
+                *slot = Some(row.to_string());
+                if recovered {
+                    self.recovered += 1;
+                }
+                Ok(true)
+            }
+        }
+    }
+
+    fn missing_in(&self, offset: usize, len: usize) -> bool {
+        self.rows[offset..offset + len].iter().any(|r| r.is_none())
+    }
+}
+
+#[derive(Default)]
+struct EpState {
+    attempts: AtomicU64,
+    failures: AtomicU64,
+    rows: AtomicU64,
+    consecutive: AtomicU32,
+    open: AtomicBool,
+}
+
+struct Job {
+    shard_idx: usize,
+    attempt: usize,
+    not_before: Instant,
+    last_ep: Option<usize>,
+}
+
+struct Shared {
+    shards: Vec<Shard>,
+    queue: Mutex<VecDeque<Job>>,
+    /// Shards still queued or in flight remotely. Workers run while
+    /// this is nonzero; exhausting a shard's remote attempts also
+    /// decrements it (the local fallback pass picks it up later).
+    pending: AtomicUsize,
+    merger: Mutex<Merger>,
+    eps: Vec<EpState>,
+    retries: AtomicU64,
+    redispatches: AtomicU64,
+    attempt_us: Mutex<Vec<u64>>,
+}
+
+/// Run `spec` across `endpoints` and merge the streams. See the module
+/// docs for the failure model; the short version is that this only
+/// returns `Err` when local execution fails too (or a server returns
+/// conflicting bytes for the same grid index).
+pub fn run_sharded(
+    spec: &SweepSpec,
+    endpoints: &[Endpoint],
+    opts: &ShardOpts,
+) -> anyhow::Result<ShardOutcome> {
+    let t0 = Instant::now();
+    // Expanding up front validates axes and model names before any
+    // connection is opened — bad specs fail fast and locally.
+    let total = spec.expand().context("expanding sweep grid")?.len();
+    let target = if opts.shards > 0 {
+        opts.shards
+    } else {
+        (2 * endpoints.len()).max(1)
+    };
+    let shards = split_spec(spec, target);
+    let shared = Shared {
+        pending: AtomicUsize::new(shards.len()),
+        queue: Mutex::new(
+            shards
+                .iter()
+                .enumerate()
+                .map(|(i, _)| Job {
+                    shard_idx: i,
+                    attempt: 0,
+                    not_before: t0,
+                    last_ep: None,
+                })
+                .collect(),
+        ),
+        merger: Mutex::new(Merger::new(total)),
+        eps: endpoints.iter().map(|_| EpState::default()).collect(),
+        shards,
+        retries: AtomicU64::new(0),
+        redispatches: AtomicU64::new(0),
+        attempt_us: Mutex::new(Vec::new()),
+    };
+    if !endpoints.is_empty() {
+        thread::scope(|s| {
+            for (i, ep) in endpoints.iter().enumerate() {
+                let shared = &shared;
+                s.spawn(move || worker(shared, i, ep, opts));
+            }
+        });
+    }
+    // Local fallback: whatever the endpoints could not finish —
+    // exhausted shards, shards stranded when every circuit opened, or
+    // partially-streamed shards — runs in-process. Partial remote rows
+    // are kept; the replays dedupe against them.
+    let mut local_shards = 0usize;
+    let caches = SweepCaches::new();
+    for shard in &shared.shards {
+        if !shared.merger.lock().unwrap().missing_in(shard.offset, shard.len) {
+            continue;
+        }
+        local_shards += 1;
+        if opts.progress {
+            eprintln!(
+                "sat shard: shard {} running locally ({} rows)",
+                shard.id, shard.len
+            );
+        }
+        let res = run_sweep_cached(&shard.spec, &caches)
+            .with_context(|| format!("local fallback for shard {}", shard.id))?;
+        let mut m = shared.merger.lock().unwrap();
+        let recovered = !endpoints.is_empty();
+        for (i, row) in res.rows.iter().enumerate() {
+            m.record(shard.offset + i, &row.json(), recovered)
+                .map_err(|e| anyhow!(e))?;
+        }
+    }
+    let merger = shared.merger.into_inner().unwrap();
+    let rows = merger
+        .rows
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| r.ok_or_else(|| anyhow!("row {i} missing after local fallback")))
+        .collect::<anyhow::Result<Vec<String>>>()?;
+    let per_endpoint = endpoints
+        .iter()
+        .zip(&shared.eps)
+        .map(|(ep, st)| EndpointStat {
+            endpoint: ep.to_string(),
+            attempts: st.attempts.load(Ordering::Relaxed),
+            failures: st.failures.load(Ordering::Relaxed),
+            rows: st.rows.load(Ordering::Relaxed),
+            circuit_open: st.open.load(Ordering::Relaxed),
+        })
+        .collect();
+    Ok(ShardOutcome {
+        rows,
+        shards: shared.shards.len(),
+        retries: shared.retries.load(Ordering::Relaxed),
+        redispatches: shared.redispatches.load(Ordering::Relaxed),
+        rows_recovered: merger.recovered,
+        duplicates_suppressed: merger.duplicates,
+        local_shards,
+        per_endpoint,
+        attempt_ms: shared
+            .attempt_us
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|us| us as f64 / 1e3)
+            .collect(),
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+    })
+}
+
+/// One endpoint's worker: pull ready jobs until nothing is pending or
+/// this endpoint's circuit opens.
+fn worker(shared: &Shared, ep_idx: usize, endpoint: &Endpoint, opts: &ShardOpts) {
+    let st = &shared.eps[ep_idx];
+    while shared.pending.load(Ordering::SeqCst) > 0 {
+        if st.open.load(Ordering::SeqCst) {
+            return;
+        }
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            let now = Instant::now();
+            match q.iter().position(|j| j.not_before <= now) {
+                Some(p) => q.remove(p),
+                None => None,
+            }
+        };
+        let Some(job) = job else {
+            // Backing-off jobs or another worker's in-flight shard.
+            thread::sleep(Duration::from_millis(2));
+            continue;
+        };
+        if job.attempt > 0 {
+            shared.retries.fetch_add(1, Ordering::Relaxed);
+            if job.last_ep != Some(ep_idx) {
+                shared.redispatches.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        st.attempts.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let res = fetch_shard(endpoint, &shared.shards[job.shard_idx], &job, opts, shared);
+        shared
+            .attempt_us
+            .lock()
+            .unwrap()
+            .push(t0.elapsed().as_micros().min(u128::from(u64::MAX)) as u64);
+        match res {
+            Ok(new_rows) => {
+                st.rows.fetch_add(new_rows, Ordering::Relaxed);
+                st.consecutive.store(0, Ordering::Relaxed);
+                shared.pending.fetch_sub(1, Ordering::SeqCst);
+            }
+            Err(msg) => {
+                st.failures.fetch_add(1, Ordering::Relaxed);
+                let streak = st.consecutive.fetch_add(1, Ordering::Relaxed) + 1;
+                if streak >= opts.breaker {
+                    st.open.store(true, Ordering::SeqCst);
+                }
+                if opts.progress {
+                    eprintln!(
+                        "sat shard: {endpoint} shard {} attempt {}: {msg}",
+                        job.shard_idx, job.attempt
+                    );
+                }
+                let next_attempt = job.attempt + 1;
+                if next_attempt >= opts.attempts {
+                    // Remote attempts exhausted; the local fallback
+                    // pass will finish this shard.
+                    shared.pending.fetch_sub(1, Ordering::SeqCst);
+                } else {
+                    let delay = backoff_ms(
+                        opts.backoff_ms,
+                        opts.backoff_max_ms,
+                        next_attempt as u32,
+                        opts.seed,
+                        job.shard_idx as u64,
+                    );
+                    shared.queue.lock().unwrap().push_back(Job {
+                        shard_idx: job.shard_idx,
+                        attempt: next_attempt,
+                        not_before: Instant::now() + Duration::from_millis(delay),
+                        last_ep: Some(ep_idx),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// One remote attempt: connect, send the shard's sweep request, record
+/// every valid row into the merge buffer (kept even if the attempt
+/// later fails), succeed on a `done` that leaves no gap in the shard's
+/// range. The request id `s<shard>a<attempt>` is deterministic, which
+/// is what makes server-side fault plans reproducible.
+fn fetch_shard(
+    endpoint: &Endpoint,
+    shard: &Shard,
+    job: &Job,
+    opts: &ShardOpts,
+    shared: &Shared,
+) -> Result<u64, String> {
+    let deadline = Instant::now() + Duration::from_millis(opts.timeout_ms);
+    let mut conn = endpoint
+        .connect(Duration::from_millis(opts.timeout_ms.clamp(1, 2_000)))
+        .map_err(|e| format!("connect: {e}"))?;
+    let req_id = format!("s{}a{}", shard.id, job.attempt);
+    let req = Request {
+        id: req_id.clone(),
+        cmd: Cmd::Sweep(shard.spec.clone()),
+    };
+    conn.send_line(&req.to_line()).map_err(|e| format!("send: {e}"))?;
+    let mut new_rows = 0u64;
+    loop {
+        let line = conn.read_line(deadline).map_err(|e| format!("read: {e}"))?;
+        if line.is_empty() {
+            continue;
+        }
+        let resp =
+            protocol::parse_response(&line).map_err(|e| format!("bad response line: {e}"))?;
+        if resp.id != req_id {
+            return Err(format!(
+                "response id {:?} does not match request {req_id:?}",
+                resp.id
+            ));
+        }
+        match resp.kind.as_str() {
+            "row" => {
+                let local = resp.index.ok_or("row line lacks an index")?;
+                if local >= shard.len {
+                    return Err(format!(
+                        "row index {local} outside shard of {} rows",
+                        shard.len
+                    ));
+                }
+                let raw =
+                    protocol::raw_result(&line).ok_or("row line carries no valid result")?;
+                let mut m = shared.merger.lock().unwrap();
+                if m.record(shard.offset + local, raw, job.attempt > 0)? {
+                    new_rows += 1;
+                }
+            }
+            "done" => {
+                // The server says the stream is complete; verify no
+                // gap in this shard's range before trusting it.
+                let m = shared.merger.lock().unwrap();
+                if m.missing_in(shard.offset, shard.len) {
+                    return Err("done arrived before every shard row".into());
+                }
+                return Ok(new_rows);
+            }
+            "error" => {
+                let msg = resp
+                    .body
+                    .get("error")
+                    .and_then(Value::as_str)
+                    .unwrap_or("unknown server error");
+                return Err(format!("server error: {msg}"));
+            }
+            other => return Err(format!("unexpected response kind {other:?}")),
+        }
+    }
+}
+
+/// Query every endpoint's live `status` and merge: summed
+/// attempts/failures/rows (as the serve counters `requests`/`errors`/
+/// `rows_streamed`) plus each endpoint's full status object — a long
+/// sweep's health, observable mid-run from a second terminal.
+pub fn merged_status(endpoints: &[Endpoint], timeout: Duration) -> String {
+    let mut per: Vec<String> = Vec::with_capacity(endpoints.len());
+    let (mut requests, mut errors, mut rows) = (0u64, 0u64, 0u64);
+    let mut up = 0usize;
+    for (i, ep) in endpoints.iter().enumerate() {
+        let one = query_status(ep, i, timeout);
+        per.push(match one {
+            Ok(raw) => {
+                up += 1;
+                if let Ok(doc) = json::parse(&raw) {
+                    requests += doc.get("requests").and_then(Value::as_u64).unwrap_or(0);
+                    errors += doc.get("errors").and_then(Value::as_u64).unwrap_or(0);
+                    rows += doc.get("rows_streamed").and_then(Value::as_u64).unwrap_or(0);
+                }
+                Obj::new()
+                    .field_str("endpoint", &ep.to_string())
+                    .field_bool("up", true)
+                    .field_raw("status", &raw)
+                    .finish()
+            }
+            Err(e) => Obj::new()
+                .field_str("endpoint", &ep.to_string())
+                .field_bool("up", false)
+                .field_str("error", &e)
+                .finish(),
+        });
+    }
+    Obj::new()
+        .field_usize("endpoints_total", endpoints.len())
+        .field_usize("endpoints_up", up)
+        .field_u64("requests", requests)
+        .field_u64("errors", errors)
+        .field_u64("rows_streamed", rows)
+        .field_raw("endpoints", &json::array(per))
+        .finish()
+}
+
+/// Fetch one endpoint's raw `status` result document.
+fn query_status(ep: &Endpoint, i: usize, timeout: Duration) -> Result<String, String> {
+    let mut conn = ep.connect(timeout).map_err(|e| format!("connect: {e}"))?;
+    let req = Request {
+        id: format!("st{i}"),
+        cmd: Cmd::Status,
+    };
+    conn.send_line(&req.to_line()).map_err(|e| format!("send: {e}"))?;
+    let line = conn
+        .read_line(Instant::now() + timeout)
+        .map_err(|e| format!("read: {e}"))?;
+    let resp = protocol::parse_response(&line)?;
+    if resp.kind != "status" {
+        return Err(format!("unexpected response kind {:?}", resp.kind));
+    }
+    protocol::raw_result(&line)
+        .map(str::to_string)
+        .ok_or_else(|| "status line carries no result".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merger_suppresses_replays_and_rejects_conflicts() {
+        let mut m = Merger::new(3);
+        assert!(m.record(0, "{\"a\":1}", false).unwrap());
+        assert!(m.record(1, "{\"b\":2}", true).unwrap());
+        // A replay of identical bytes is suppressed, not re-recorded.
+        assert!(!m.record(0, "{\"a\":1}", true).unwrap());
+        assert_eq!(m.duplicates, 1);
+        assert_eq!(m.recovered, 1, "replays never count as recovered");
+        // Conflicting bytes for an index are a hard error.
+        assert!(m.record(0, "{\"a\":999}", false).is_err());
+        // Out-of-range indices are rejected.
+        assert!(m.record(9, "{}", false).is_err());
+        assert!(m.missing_in(0, 3), "index 2 still empty");
+        assert!(m.record(2, "{}", false).unwrap());
+        assert!(!m.missing_in(0, 3));
+    }
+
+    #[test]
+    fn run_sharded_with_no_endpoints_degrades_to_local_execution() {
+        use crate::nm::{Method, NmPattern};
+        let spec = SweepSpec {
+            models: vec!["resnet9".into()],
+            methods: vec![Method::Dense, Method::Bdwp],
+            patterns: vec![NmPattern::P2_8],
+            bandwidths: vec![25.6, 102.4],
+            jobs: 1,
+            ..SweepSpec::default()
+        };
+        let out = run_sharded(&spec, &[], &ShardOpts::default()).unwrap();
+        assert_eq!(out.rows.len(), 4);
+        assert_eq!(out.retries, 0);
+        assert_eq!(out.rows_recovered, 0, "pure-local rows are not 'recovered'");
+        let oneshot = crate::coordinator::sweep::run_sweep(&spec).unwrap();
+        assert_eq!(out.rows_json(), oneshot.rows_json(), "byte parity");
+    }
+}

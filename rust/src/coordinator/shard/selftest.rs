@@ -1,0 +1,378 @@
+//! `sat shard --selftest` — the chaos harness.
+//!
+//! Spins several in-process `sat serve` servers, points the shard
+//! runner at them, and injects deterministic faults (connection drops
+//! mid-stream, delayed responses, garbled row lines) through the
+//! servers' [`FaultPlan`]s. The headline assertion is byte parity: the
+//! merged output of every phase — clean, under chaos, and with every
+//! endpoint dead — must be byte-identical to the fault-free one-shot
+//! `sat sweep` sink, with zero lost and zero duplicated rows
+//! (`--max-row-loss 0` is the default and CI's setting).
+//!
+//! Emits a bench-diff-schema `BENCH_shard_selftest.json` (retries,
+//! redispatches, rows recovered, attempt p50/p99) so the `shard-chaos`
+//! CI job can self-diff and archive the run.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, ensure, Context};
+
+use crate::coordinator::cli::Args;
+use crate::coordinator::serve::server::spawn_tcp;
+use crate::coordinator::serve::{Cmd, FaultPlan, Request, ServeCore};
+use crate::coordinator::sweep::{run_sweep, SweepSpec};
+use crate::nm::{Method, NmPattern};
+use crate::util::json::{self, Obj};
+use crate::util::stats::percentile;
+use crate::util::table::Table;
+
+use super::endpoint::Endpoint;
+use super::runner::{run_sharded, ShardOpts, ShardOutcome};
+
+/// Knobs for the chaos harness, parsed from `sat shard --selftest`.
+#[derive(Clone, Debug)]
+pub struct ShardSelftestOpts {
+    pub quick: bool,
+    /// Report path (bench-diff schema).
+    pub out: String,
+    /// Hard gate: rows missing from the merged output, per phase.
+    pub max_row_loss: usize,
+}
+
+impl ShardSelftestOpts {
+    pub fn from_args(args: &Args) -> anyhow::Result<ShardSelftestOpts> {
+        Ok(ShardSelftestOpts {
+            quick: args.has("quick"),
+            out: args
+                .get("out")
+                .unwrap_or("BENCH_shard_selftest.json")
+                .to_string(),
+            max_row_loss: args.get_parse("max-row-loss", 0)?,
+        })
+    }
+}
+
+struct PhaseResult {
+    name: &'static str,
+    endpoints: usize,
+    outcome: ShardOutcome,
+}
+
+/// Run the three phases, print the table, write the report, gate.
+pub fn run(opts: &ShardSelftestOpts) -> anyhow::Result<()> {
+    let spec = selftest_spec(opts.quick);
+    let total = spec.grid_size();
+    eprintln!(
+        "[shard-selftest] {} grid points, baseline one-shot sweep first",
+        total
+    );
+    let baseline = run_sweep(&spec).context("fault-free one-shot baseline")?;
+    let expected = baseline.rows_json();
+
+    let shard_opts = ShardOpts {
+        timeout_ms: 10_000,
+        backoff_ms: 5,
+        backoff_max_ms: 50,
+        seed: 0x5eed,
+        ..ShardOpts::default()
+    };
+
+    let mut phases = Vec::new();
+
+    // Phase 1 — clean: three healthy servers, no faults. Establishes
+    // that sharding alone (split + k-way merge) preserves bytes.
+    phases.push(run_phase("clean", &spec, &[None, None, None], &shard_opts)?);
+
+    // Phase 2 — chaos: one server drops every sweep connection
+    // mid-stream, one garbles rows and delays responses, one is
+    // healthy. Retries/redispatches (and, if circuits starve the grid,
+    // the local fallback) must reassemble the exact byte stream.
+    phases.push(run_phase(
+        "chaos",
+        &spec,
+        &[Some("drop@1"), Some("garble@2,delay@3:15"), None],
+        &shard_opts,
+    )?);
+
+    // Phase 3 — dead: every endpoint is a bound-then-closed port, so
+    // no remote attempt ever succeeds and the whole grid degrades to
+    // local execution. Also keeps this phase's wall time tiny.
+    let dead: Vec<Endpoint> = (0..2)
+        .map(|_| {
+            let l = std::net::TcpListener::bind("127.0.0.1:0")?;
+            let addr = l.local_addr()?;
+            drop(l);
+            Ok(Endpoint::Tcp(addr.to_string()))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let outcome = run_sharded(&spec, &dead, &shard_opts)?;
+    phases.push(PhaseResult {
+        name: "dead",
+        endpoints: dead.len(),
+        outcome,
+    });
+
+    let mut table = Table::new("shard selftest").header(&[
+        "phase", "eps", "shards", "rows", "wall ms", "retries", "redisp", "recovered", "dups",
+        "local", "p99 ms",
+    ]);
+    for p in &phases {
+        let o = &p.outcome;
+        table.row(&[
+            p.name.to_string(),
+            p.endpoints.to_string(),
+            o.shards.to_string(),
+            o.rows.len().to_string(),
+            format!("{:.1}", o.wall_ms),
+            o.retries.to_string(),
+            o.redispatches.to_string(),
+            o.rows_recovered.to_string(),
+            o.duplicates_suppressed.to_string(),
+            o.local_shards.to_string(),
+            format!("{:.3}", percentile(&o.attempt_ms, 99.0)),
+        ]);
+    }
+    println!("{}", table.render());
+
+    let doc = report_json(opts, &phases, total);
+    std::fs::write(&opts.out, &doc).with_context(|| format!("writing {:?}", opts.out))?;
+    eprintln!("[shard-selftest] wrote {}", opts.out);
+
+    // The gates. Byte parity subsumes loss/duplication, but the loss
+    // count is checked first so a failure reads as "lost N rows" and
+    // not as an opaque byte mismatch.
+    for p in &phases {
+        let lost = total.saturating_sub(p.outcome.rows.len());
+        ensure!(
+            lost <= opts.max_row_loss,
+            "phase {:?} lost {lost} row(s), more than --max-row-loss {}",
+            p.name,
+            opts.max_row_loss
+        );
+        ensure!(
+            p.outcome.rows_json() == expected,
+            "phase {:?}: merged rows are not byte-identical to the one-shot sink",
+            p.name
+        );
+    }
+    let chaos = &phases[1].outcome;
+    if chaos.retries == 0 {
+        // Possible only if scheduling starved the faulty endpoints of
+        // every shard; worth a note, not a failure.
+        eprintln!("[shard-selftest] note: chaos phase saw no retries");
+    }
+    eprintln!(
+        "[shard-selftest] OK: all {} phases byte-identical to the one-shot sink \
+         ({} retries, {} redispatches, {} rows recovered under chaos)",
+        phases.len(),
+        chaos.retries,
+        chaos.redispatches,
+        chaos.rows_recovered
+    );
+    Ok(())
+}
+
+/// A small multi-axis grid: wide enough to shard 8 ways, cheap enough
+/// to one-shot for the baseline.
+fn selftest_spec(quick: bool) -> SweepSpec {
+    SweepSpec {
+        models: vec!["resnet9".into(), "tiny_mlp".into()],
+        methods: vec![Method::Dense, Method::Bdwp],
+        patterns: vec![NmPattern::P2_4, NmPattern::P2_8],
+        bandwidths: if quick {
+            vec![25.6, 102.4]
+        } else {
+            vec![25.6, 77.0, 102.4]
+        },
+        jobs: 1,
+        ..SweepSpec::default()
+    }
+}
+
+/// Spin one server per fault plan, run the sharded sweep against them,
+/// then shut them all down.
+fn run_phase(
+    name: &'static str,
+    spec: &SweepSpec,
+    plans: &[Option<&str>],
+    shard_opts: &ShardOpts,
+) -> anyhow::Result<PhaseResult> {
+    let mut handles = Vec::with_capacity(plans.len());
+    let mut endpoints = Vec::with_capacity(plans.len());
+    for plan in plans {
+        let plan = plan
+            .map(|p| FaultPlan::parse(p).map_err(|e| anyhow!(e)))
+            .transpose()?;
+        let core = Arc::new(ServeCore::with_fault_plan(plan));
+        let handle = spawn_tcp(core, "127.0.0.1:0")?;
+        endpoints.push(Endpoint::Tcp(handle.addr().to_string()));
+        handles.push(handle);
+    }
+    let outcome = run_sharded(spec, &endpoints, shard_opts);
+    for (ep, handle) in endpoints.iter().zip(handles) {
+        shutdown_server(ep)?;
+        handle.join()?;
+    }
+    Ok(PhaseResult {
+        name,
+        endpoints: endpoints.len(),
+        outcome: outcome?,
+    })
+}
+
+/// Ask one live server to shut down (fault plans never touch control
+/// requests, so this works on the chaos servers too).
+fn shutdown_server(ep: &Endpoint) -> anyhow::Result<()> {
+    let mut conn = ep.connect(Duration::from_secs(5))?;
+    let req = Request {
+        id: "ctl-shutdown".into(),
+        cmd: Cmd::Shutdown,
+    };
+    conn.send_line(&req.to_line())?;
+    let line = conn.read_line(Instant::now() + Duration::from_secs(10))?;
+    let resp = crate::coordinator::serve::protocol::parse_response(&line)
+        .map_err(|e| anyhow!("bad shutdown response: {e}"))?;
+    ensure!(resp.kind == "ok", "shutdown answered {:?}", resp.kind);
+    Ok(())
+}
+
+/// Bench-diff-schema report: one row per phase plus an `overall` row.
+fn report_json(opts: &ShardSelftestOpts, phases: &[PhaseResult], grid: usize) -> String {
+    let mut rows: Vec<String> = phases.iter().map(phase_row).collect();
+    let mut all_lat: Vec<f64> = Vec::new();
+    let (mut retries, mut redisp, mut recovered, mut wall_ms, mut merged) =
+        (0u64, 0u64, 0u64, 0.0f64, 0u64);
+    for p in phases {
+        let o = &p.outcome;
+        all_lat.extend_from_slice(&o.attempt_ms);
+        retries += o.retries;
+        redisp += o.redispatches;
+        recovered += o.rows_recovered;
+        wall_ms += o.wall_ms;
+        merged += o.rows.len() as u64;
+    }
+    let rps = if wall_ms <= 0.0 {
+        0.0
+    } else {
+        merged as f64 / (wall_ms / 1e3)
+    };
+    rows.push(
+        Obj::new()
+            .field_str("model", "shard")
+            .field_str("method", "overall")
+            .field_str("pattern", "chaos")
+            .field_usize("rows", phases.len())
+            .field_usize("cols", 0)
+            .field_usize("lanes", 0)
+            .field_f64("freq_mhz", 0.0)
+            .field_f64("bandwidth_gbs", 0.0)
+            .field_bool("overlap", true)
+            .field_u64("total_cycles", merged)
+            .field_f64("batch_ms", wall_ms)
+            .field_f64("runtime_gops", rps)
+            .field_u64("retries", retries)
+            .field_u64("redispatches", redisp)
+            .field_u64("rows_recovered", recovered)
+            .field_f64("p50_ms", percentile(&all_lat, 50.0))
+            .field_f64("p99_ms", percentile(&all_lat, 99.0))
+            .finish(),
+    );
+    Obj::new()
+        .field_str("schema", "sat-shard-selftest-v1")
+        .field_raw(
+            "meta",
+            &Obj::new()
+                .field_bool("quick", opts.quick)
+                .field_usize("grid", grid)
+                .field_usize("max_row_loss", opts.max_row_loss)
+                .field_u64("retries", retries)
+                .field_u64("redispatches", redisp)
+                .field_u64("rows_recovered", recovered)
+                .finish(),
+        )
+        .field_raw("results", &json::array(rows))
+        .finish()
+}
+
+fn phase_row(p: &PhaseResult) -> String {
+    let o = &p.outcome;
+    let rps = if o.wall_ms <= 0.0 {
+        0.0
+    } else {
+        o.rows.len() as f64 / (o.wall_ms / 1e3)
+    };
+    Obj::new()
+        .field_str("model", "shard")
+        .field_str("method", p.name)
+        .field_str("pattern", "chaos")
+        .field_usize("rows", p.endpoints)
+        .field_usize("cols", o.shards)
+        .field_usize("lanes", 0)
+        .field_f64("freq_mhz", 0.0)
+        .field_f64("bandwidth_gbs", 0.0)
+        .field_bool("overlap", true)
+        .field_u64("total_cycles", o.rows.len() as u64)
+        .field_f64("batch_ms", o.wall_ms)
+        .field_f64("runtime_gops", rps)
+        .field_u64("retries", o.retries)
+        .field_u64("redispatches", o.redispatches)
+        .field_u64("rows_recovered", o.rows_recovered)
+        .field_f64("p50_ms", percentile(&o.attempt_ms, 50.0))
+        .field_f64("p99_ms", percentile(&o.attempt_ms, 99.0))
+        .finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_phase(name: &'static str) -> PhaseResult {
+        PhaseResult {
+            name,
+            endpoints: 3,
+            outcome: ShardOutcome {
+                rows: vec!["{}".into(); 4],
+                shards: 8,
+                retries: 3,
+                redispatches: 2,
+                rows_recovered: 5,
+                duplicates_suppressed: 1,
+                local_shards: 0,
+                per_endpoint: Vec::new(),
+                attempt_ms: vec![1.0, 2.0, 8.0],
+                wall_ms: 40.0,
+            },
+        }
+    }
+
+    #[test]
+    fn report_rows_satisfy_the_bench_diff_schema() {
+        let opts = ShardSelftestOpts {
+            quick: true,
+            out: "unused".into(),
+            max_row_loss: 0,
+        };
+        let doc = report_json(&opts, &[fake_phase("clean"), fake_phase("chaos")], 16);
+        // Self-diff must work for the robustness metrics with no
+        // schema special-casing — the shard-chaos CI job relies on it.
+        for metric in ["retries", "redispatches", "rows_recovered", "p99_ms"] {
+            let diff = crate::coordinator::benchdiff::diff_texts(&doc, &doc, metric).unwrap();
+            assert_eq!(diff.rows.len(), 3, "{metric}");
+            assert_eq!(diff.max_regression_pct(), 0.0, "{metric}");
+        }
+    }
+
+    #[test]
+    fn opts_default_to_a_zero_loss_gate() {
+        let argv: Vec<String> = ["shard", "--selftest", "--quick"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = Args::parse(&argv, &["out", "max-row-loss"], &["selftest", "quick"]).unwrap();
+        let opts = ShardSelftestOpts::from_args(&args).unwrap();
+        assert_eq!(opts.max_row_loss, 0);
+        assert!(opts.quick);
+        assert_eq!(opts.out, "BENCH_shard_selftest.json");
+    }
+}

@@ -1,0 +1,187 @@
+//! End-to-end tests of `sat shard` over real sockets: byte-parity of
+//! the k-way merged stream with the one-shot sink while an endpoint
+//! misbehaves, index-keyed duplicate suppression across redispatched
+//! attempts, local fallback when remote attempts are exhausted, and
+//! the multi-endpoint status aggregator.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use sat::coordinator::serve::{protocol, spawn_tcp, Cmd, FaultPlan, Request, ServeCore, ServerHandle};
+use sat::coordinator::shard::{merged_status, run_sharded, Endpoint, ShardOpts};
+use sat::coordinator::sweep::{run_sweep, SweepSpec};
+use sat::nm::{Method, NmPattern};
+use sat::util::json::{self, Value};
+
+/// Start one in-process server, optionally with a fault plan.
+fn start(plan: Option<&str>) -> (ServerHandle, Endpoint) {
+    let plan = plan.map(|p| FaultPlan::parse(p).expect("fault plan"));
+    let core = Arc::new(ServeCore::with_fault_plan(plan));
+    let handle = spawn_tcp(core, "127.0.0.1:0").expect("spawn server");
+    let ep = Endpoint::Tcp(handle.addr().to_string());
+    (handle, ep)
+}
+
+fn shutdown(handle: ServerHandle) {
+    let stream = TcpStream::connect(handle.addr()).expect("connect for shutdown");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut w = stream;
+    let req = Request {
+        id: "bye".into(),
+        cmd: Cmd::Shutdown,
+    };
+    w.write_all(req.to_line().as_bytes()).unwrap();
+    w.write_all(b"\n").unwrap();
+    let mut line = String::new();
+    assert!(reader.read_line(&mut line).unwrap() > 0);
+    let resp = protocol::parse_response(line.trim_end()).expect("shutdown response");
+    assert_eq!(resp.kind, "ok");
+    handle.join().expect("server exits cleanly");
+}
+
+fn spec_16_points() -> SweepSpec {
+    SweepSpec {
+        models: vec!["resnet9".into(), "tiny_mlp".into()],
+        methods: vec![Method::Dense, Method::Bdwp],
+        patterns: vec![NmPattern::P2_4, NmPattern::P2_8],
+        bandwidths: vec![25.6, 102.4],
+        jobs: 1,
+        ..SweepSpec::default()
+    }
+}
+
+fn fast_opts() -> ShardOpts {
+    ShardOpts {
+        timeout_ms: 10_000,
+        backoff_ms: 0, // retries requeue immediately; tests stay fast
+        seed: 0x5eed,
+        ..ShardOpts::default()
+    }
+}
+
+#[test]
+fn sharded_sweep_with_a_faulty_endpoint_matches_the_one_shot_sink() {
+    let spec = spec_16_points();
+    let expected = run_sweep(&spec).expect("one-shot baseline").rows_json();
+
+    // One endpoint drops EVERY sweep connection mid-stream; two are
+    // healthy. Retries and redispatch must reassemble the exact bytes.
+    let (h0, e0) = start(Some("drop@1"));
+    let (h1, e1) = start(None);
+    let (h2, e2) = start(None);
+    let endpoints = [e0, e1, e2];
+    let opts = ShardOpts {
+        shards: 8,
+        ..fast_opts()
+    };
+    let outcome = run_sharded(&spec, &endpoints, &opts).expect("sharded run");
+
+    assert_eq!(outcome.rows.len(), 16, "no row lost");
+    assert_eq!(outcome.rows_json(), expected, "merged bytes == one-shot sink");
+    // The faulty endpoint never completes a sweep, so every attempt it
+    // made is a failure — deterministically, whatever the scheduling.
+    let ep0 = &outcome.per_endpoint[0];
+    assert_eq!(ep0.failures, ep0.attempts, "drop@1 fails every attempt");
+    assert_eq!(ep0.rows, 0, "rows recorded before the drop are replays-in-waiting");
+    // The healthy endpoints carried the grid (directly or after the
+    // local fallback picked up circuit-stranded shards).
+    let healthy: u64 = outcome.per_endpoint[1..].iter().map(|e| e.rows).sum();
+    assert!(
+        healthy > 0 || outcome.local_shards > 0,
+        "someone must have produced the rows"
+    );
+
+    shutdown(h0);
+    shutdown(h1);
+    shutdown(h2);
+}
+
+#[test]
+fn redispatched_attempts_dedupe_rows_by_grid_index() {
+    // 4 points, 2 shards of 2 rows. The only endpoint garbles the
+    // SECOND row of every sweep response (midpoint of a 2-row grid is
+    // index 1), so every remote attempt records row 0 of its shard and
+    // then fails — each retry replays row 0 (byte-checked duplicate),
+    // and the local fallback finishes the job.
+    let spec = SweepSpec {
+        models: vec!["resnet9".into(), "tiny_mlp".into()],
+        methods: vec![Method::Dense, Method::Bdwp],
+        patterns: vec![NmPattern::P2_8],
+        bandwidths: vec![25.6],
+        jobs: 1,
+        ..SweepSpec::default()
+    };
+    let expected = run_sweep(&spec).expect("one-shot baseline").rows_json();
+
+    let (h, ep) = start(Some("garble@1"));
+    let opts = ShardOpts {
+        shards: 2,
+        attempts: 2,
+        breaker: 100, // keep the circuit closed; exhaust attempts instead
+        ..fast_opts()
+    };
+    let outcome = run_sharded(&spec, &[ep], &opts).expect("sharded run");
+
+    assert_eq!(outcome.rows_json(), expected, "merged bytes == one-shot sink");
+    assert_eq!(outcome.shards, 2);
+    assert_eq!(outcome.retries, 2, "each shard's second attempt is a retry");
+    assert_eq!(outcome.redispatches, 0, "one endpoint, nowhere to redispatch to");
+    assert_eq!(outcome.local_shards, 2, "remote attempts exhausted everywhere");
+    // Each shard's row 0 is recorded by attempt 0, replayed by attempt
+    // 1, and replayed once more by the local fallback: 2 shards × 2
+    // suppressed replays.
+    assert_eq!(outcome.duplicates_suppressed, 4);
+    // The garbled second rows only ever arrive via recovery.
+    assert_eq!(outcome.rows_recovered, 2);
+
+    shutdown(h);
+}
+
+#[test]
+fn merged_status_aggregates_live_and_dead_endpoints() {
+    let (h0, e0) = start(None);
+    let (h1, e1) = start(None);
+    // A bound-then-closed port: guaranteed dead.
+    let dead = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        drop(l);
+        Endpoint::Tcp(addr.to_string())
+    };
+
+    // Put one real sweep through e0 so the summed counters are nonzero.
+    let spec = SweepSpec {
+        models: vec!["resnet9".into()],
+        methods: vec![Method::Dense],
+        patterns: vec![NmPattern::P2_8],
+        bandwidths: vec![25.6],
+        jobs: 1,
+        ..SweepSpec::default()
+    };
+    run_sharded(&spec, std::slice::from_ref(&e0), &fast_opts()).expect("warm-up sweep");
+
+    let merged = merged_status(&[e0, e1, dead], Duration::from_secs(5));
+    let doc = json::parse(&merged).expect("merged status parses");
+    assert_eq!(doc.get("endpoints_total").and_then(Value::as_u64), Some(3));
+    assert_eq!(doc.get("endpoints_up").and_then(Value::as_u64), Some(2));
+    assert!(
+        doc.get("rows_streamed").and_then(Value::as_u64).unwrap_or(0) >= 1,
+        "the warm-up sweep's rows show up in the sum"
+    );
+    let eps = doc.get("endpoints").and_then(Value::as_array).expect("endpoints array");
+    assert_eq!(eps.len(), 3);
+    let ups: Vec<bool> = eps
+        .iter()
+        .map(|e| e.get("up").and_then(Value::as_bool).unwrap())
+        .collect();
+    assert_eq!(ups, vec![true, true, false]);
+    assert!(
+        eps[0].get("status").is_some() && eps[2].get("error").is_some(),
+        "live endpoints embed their status document, dead ones an error"
+    );
+
+    shutdown(h0);
+    shutdown(h1);
+}
