@@ -18,10 +18,13 @@ use crate::util::table::Table;
 /// Metrics a diff can run on (fields of each result row). The first
 /// three come from sweep reports; `hit_rate`/`p50_ms`/`p99_ms` come
 /// from `sat serve --selftest` reports (`sat-serve-selftest-v1`);
-/// `retries`/`redispatches`/`rows_recovered` come from
-/// `sat shard --selftest` reports (`sat-shard-selftest-v1`). All three
-/// report kinds reuse the sweep scenario-identity fields so no schema
-/// special-casing is needed here.
+/// `retries`/`redispatches`/`rows_recovered`/`splits`/`readmissions`
+/// come from `sat shard --selftest` reports (`sat-shard-selftest-v1`).
+/// All three report kinds reuse the sweep scenario-identity fields so
+/// no schema special-casing is needed here. `splits` and
+/// `readmissions` growing means the cluster needed more adaptation
+/// (stragglers, tripped circuits) to finish, so like `retries` their
+/// growth is the regression direction.
 pub const METRICS: &[&str] = &[
     "total_cycles",
     "batch_ms",
@@ -32,6 +35,8 @@ pub const METRICS: &[&str] = &[
     "retries",
     "redispatches",
     "rows_recovered",
+    "splits",
+    "readmissions",
 ];
 
 /// One scenario present in both reports.
@@ -371,6 +376,9 @@ mod tests {
     }
 
     fn shard_row(phase: &str, retries: u64, redispatches: u64, recovered: u64) -> String {
+        // splits/readmissions scale with retries so the sign checks
+        // below exercise them with the same old/worse pair.
+        let (splits, readmissions) = (retries / 2, retries / 4);
         Obj::new()
             .field_str("model", "shard")
             .field_str("method", phase)
@@ -387,6 +395,8 @@ mod tests {
             .field_u64("retries", retries)
             .field_u64("redispatches", redispatches)
             .field_u64("rows_recovered", recovered)
+            .field_u64("splits", splits)
+            .field_u64("readmissions", readmissions)
             .field_f64("p50_ms", 2.0)
             .field_f64("p99_ms", 9.0)
             .finish()
@@ -399,7 +409,7 @@ mod tests {
         // got flakier); rows_recovered SHRINKING is (recovery stopped
         // working while faults persisted).
         let worse = doc(vec![shard_row("chaos", 9, 5, 3)]);
-        for metric in ["retries", "redispatches"] {
+        for metric in ["retries", "redispatches", "splits", "readmissions"] {
             let d = diff_texts(&old, &worse, metric).unwrap();
             assert_eq!(d.regressions_above(5.0).len(), 1, "{metric} growth flags");
             let d = diff_texts(&worse, &old, metric).unwrap();

@@ -59,7 +59,10 @@ SUBCOMMANDS
              [--backend native|pjrt --model mlp|cnn|vit --steps N
               --eval-every K --tta --sim-model M --target F
               --sparse-compute auto|on|off --threads N
-              --check-tracks-dense PCT]
+              --check-tracks-dense PCT
+              --out FILE  machine mode: skip the chart and write the
+                          deterministic compare JSON (byte-identical
+                          to `sat shard --mode compare`)]
   verify     check the N:M golden contract; native checks run from a
              fresh clone, PJRT step goldens when artifacts exist
              [--backend native|pjrt|all]
@@ -71,33 +74,44 @@ SUBCOMMANDS
               --fault PLAN  deterministic fault injection, keyed by
                             request id (also env SAT_FAULT); PLAN is
                             comma-separated drop[@N] | delay[@N]:MS |
-                            garble[@N] — e.g. drop@3,delay@2:50]
+                            garble[@N] | stall[@N]:MS —
+                            e.g. drop@3,delay@2:50,stall@5:400]
              selftest: in-process load generator, writes a bench-diff
              JSON and hard-fails below the cache/dedupe gates
              [--selftest --quick --clients N --requests N
               --out BENCH_serve_selftest.json
               --min-hit-rate F --min-joins N]
-  shard      fault-tolerant sharded sweep across several `sat serve`
-             endpoints: index-stable grid split, streamed k-way merge
-             byte-identical to one-shot `sat sweep --format json`,
-             retry with seeded backoff, redispatch, per-endpoint
-             circuit breakers, local fallback when every endpoint dies
+  shard      adaptive sharded sweep/train/compare across several
+             `sat serve` endpoints: index-stable grid split, streamed
+             k-way merge byte-identical to one-shot `sat sweep
+             --format json`, retry with seeded backoff, redispatch,
+             half-open circuit breakers, straggler re-splitting,
+             capacity-weighted planning, local fallback when every
+             endpoint dies
              [--endpoint tcp:HOST:PORT|unix:PATH (repeatable)
+              --mode sweep|compare|train (default sweep)
               --models ... --methods ... --patterns ... --arrays ...
               --bandwidths ... --no-overlap --jobs N
               --shards N (0 = 2x endpoints) --timeout-ms MS
               --attempts N --backoff-ms MS --backoff-max-ms MS
-              --breaker N --seed S --out FILE]
+              --breaker N --probe-interval MS (0 = no half-open)
+              --straggler-factor F (0 = off) --max-splits N
+              --weights auto|uniform --seed S --out FILE]
+             train/compare modes take --model --method --pattern
+             --steps --lr --eval-every --train-seed; train answers are
+             replica-voted byte-identical, compare output is
+             byte-identical to `sat compare --out`
              status: merge every endpoint's live `status` counters
              [--status --endpoint ... (repeatable)]
              selftest: chaos harness over in-process faulty servers
+             (drops, garbles, stalls, a dead endpoint)
              [--selftest --quick --max-row-loss N
               --out BENCH_shard_selftest.json]
   bench-diff compare two sweep JSON or serve/shard-selftest reports,
              flag metric regressions
              [old.json new.json --threshold PCT --metric total_cycles|
               batch_ms|runtime_gops|hit_rate|p50_ms|p99_ms|retries|
-              redispatches|rows_recovered]
+              redispatches|rows_recovered|splits|readmissions]
   help       this text
 ";
 
@@ -123,7 +137,7 @@ pub fn run(argv: &[String]) -> i32 {
         Some("compare") => {
             flags.extend_from_slice(&[
                 "backend", "target", "sim-model", "check-tracks-dense",
-                "sparse-compute", "threads",
+                "sparse-compute", "threads", "out",
             ]);
             switches.push("tta");
         }
@@ -139,7 +153,8 @@ pub fn run(argv: &[String]) -> i32 {
             flags.extend_from_slice(&[
                 "endpoint", "models", "methods", "patterns", "arrays", "bandwidths", "jobs",
                 "shards", "timeout-ms", "attempts", "backoff-ms", "backoff-max-ms", "breaker",
-                "seed", "out", "max-row-loss",
+                "seed", "out", "max-row-loss", "mode", "max-splits", "straggler-factor",
+                "probe-interval", "weights", "train-seed",
             ]);
             switches.extend_from_slice(&["selftest", "quick", "status", "no-overlap"]);
         }
@@ -463,6 +478,26 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
         "cnn" | "tiny_cnn" | "vit" | "tiny_vit" => vec![Method::Dense, Method::Bdwp],
         other => return Err(anyhow!("unknown family {other:?} (mlp|cnn|vit)")),
     };
+    if let Some(path) = args.get("out") {
+        // Machine mode: skip the chart and emit the deterministic
+        // compare document through the serve-path executor — the same
+        // assembly the sharded compare path uses, so the two outputs
+        // are byte-identical.
+        ensure!(
+            kind == BackendKind::Native,
+            "--out machine mode runs on the native backend"
+        );
+        let lr = if args.get("lr").is_some() { Some(cfg.lr) } else { None };
+        let base = serve::TrainRequest::build(
+            family, Method::Dense, cfg.pattern, cfg.steps, lr, cfg.eval_every, cfg.seed,
+        )
+        .map_err(|e| anyhow!(e))?;
+        let doc = serve::compare_result_json(&base, &mut |r| serve::train_result_json(r))
+            .map_err(|e| anyhow!(e))?;
+        std::fs::write(path, &doc).with_context(|| format!("writing {path:?}"))?;
+        eprintln!("wrote {} bytes to {path}", doc.len());
+        return Ok(());
+    }
     let specs: Vec<TrainSpec> = methods
         .iter()
         .map(|&m| TrainSpec::new(family, m, cfg.pattern))
@@ -656,7 +691,6 @@ fn cmd_shard(args: &Args) -> anyhow::Result<()> {
         );
         return Ok(());
     }
-    let spec = SweepSpec::from_args(args)?;
     let defaults = shard::ShardOpts::default();
     let opts = shard::ShardOpts {
         shards: args.get_parse("shards", defaults.shards)?,
@@ -665,22 +699,74 @@ fn cmd_shard(args: &Args) -> anyhow::Result<()> {
         backoff_ms: args.get_parse("backoff-ms", defaults.backoff_ms)?,
         backoff_max_ms: args.get_parse("backoff-max-ms", defaults.backoff_max_ms)?,
         breaker: args.get_parse("breaker", defaults.breaker)?,
+        straggler_factor: args.get_parse("straggler-factor", defaults.straggler_factor)?,
+        max_splits: args.get_parse("max-splits", defaults.max_splits)?,
+        probe_interval_ms: args.get_parse("probe-interval", defaults.probe_interval_ms)?,
+        weights: args.get_parse("weights", defaults.weights)?,
         seed: args.get_parse("seed", defaults.seed)?,
         progress: true,
     };
     ensure!(opts.attempts >= 1, "--attempts must be >= 1");
     ensure!(opts.breaker >= 1, "--breaker must be >= 1");
-    let outcome = shard::run_sharded(&spec, &endpoints, &opts)?;
-    let doc = outcome.to_json();
-    match args.get("out") {
-        Some(path) => {
-            std::fs::write(path, &doc).map_err(|e| anyhow!("writing {path:?}: {e}"))?;
-            eprintln!("wrote {} bytes to {path}", doc.len());
+    let write_out = |doc: &str| -> anyhow::Result<()> {
+        match args.get("out") {
+            Some(path) => {
+                std::fs::write(path, doc).map_err(|e| anyhow!("writing {path:?}: {e}"))?;
+                eprintln!("wrote {} bytes to {path}", doc.len());
+            }
+            None => println!("{doc}"),
         }
-        None => println!("{doc}"),
+        Ok(())
+    };
+    match args.get_or("mode", "sweep") {
+        "sweep" => {
+            let spec = SweepSpec::from_args(args)?;
+            let outcome = shard::run_sharded(&spec, &endpoints, &opts)?;
+            write_out(&outcome.to_json())?;
+            eprintln!("[shard] {}", outcome.summary());
+        }
+        mode @ ("train" | "compare") => {
+            let req = shard_train_request(args)?;
+            let outcome = if mode == "train" {
+                shard::run_sharded_train(&req, &endpoints, &opts)?
+            } else {
+                shard::run_sharded_compare(&req, &endpoints, &opts)?
+            };
+            write_out(&outcome.result)?;
+            eprintln!("[shard] {mode}: {}", outcome.summary());
+        }
+        other => return Err(anyhow!("unknown --mode {other:?} (sweep|compare|train)")),
     }
-    eprintln!("[shard] {}", outcome.summary());
     Ok(())
+}
+
+/// The train request behind `sat shard --mode train|compare`, built
+/// with the wire parser's canonicalization and defaults. The backoff
+/// seed already owns `--seed`, so the trajectory seed is
+/// `--train-seed`.
+fn shard_train_request(args: &Args) -> anyhow::Result<serve::TrainRequest> {
+    let method: Method = match args.get("method") {
+        Some(v) => v.parse().map_err(|e| anyhow!("--method {v:?}: {e}"))?,
+        None => Method::Bdwp,
+    };
+    let pattern: NmPattern = match args.get("pattern") {
+        Some(v) => v.parse().map_err(|e| anyhow!("--pattern {v:?}: {e}"))?,
+        None => NmPattern::P2_8,
+    };
+    let lr: Option<f32> = match args.get("lr") {
+        Some(v) => Some(v.parse().map_err(|e| anyhow!("--lr {v:?}: {e}"))?),
+        None => None,
+    };
+    serve::TrainRequest::build(
+        args.get_or("model", "mlp"),
+        method,
+        pattern,
+        args.get_parse("steps", 40usize)?,
+        lr,
+        args.get_parse("eval-every", 0usize)?,
+        args.get_parse("train-seed", 1u64)?,
+    )
+    .map_err(|e| anyhow!(e))
 }
 
 fn cmd_bench_diff(args: &Args) -> anyhow::Result<()> {

@@ -12,6 +12,7 @@
 //! drop[@N]        kill the connection mid-stream on every Nth-hash id
 //! delay[@N]:MS    sleep MS milliseconds before answering
 //! garble[@N]      truncate one streamed row line to malformed JSON
+//! stall[@N]:MS    emit the first rows, then hang MS ms without closing
 //! ```
 //!
 //! `@N` defaults to 1 (every request). A request id `id` matches a rule
@@ -45,6 +46,7 @@ enum Kind {
     Drop,
     Delay,
     Garble,
+    Stall,
 }
 
 #[derive(Clone, Debug)]
@@ -71,6 +73,10 @@ pub struct FaultDecision {
     pub drop: bool,
     /// Truncate one row line mid-way so the client sees malformed JSON.
     pub garble: bool,
+    /// After streaming roughly half the rows, go silent for this long
+    /// without closing the connection — the shape that exercises the
+    /// client's straggler detection (drop/delay/garble all terminate).
+    pub stall_ms: u64,
 }
 
 impl FaultDecision {
@@ -113,17 +119,19 @@ impl FaultPlan {
                 "drop" => Kind::Drop,
                 "delay" => Kind::Delay,
                 "garble" => Kind::Garble,
+                "stall" => Kind::Stall,
                 other => {
                     return Err(format!(
-                        "fault rule {part:?}: unknown kind {other:?} (want drop|delay|garble)"
+                        "fault rule {part:?}: unknown kind {other:?} (want drop|delay|garble|stall)"
                     ))
                 }
             };
-            if kind == Kind::Delay && ms == 0 {
-                return Err(format!("fault rule {part:?}: delay needs :MS"));
+            let takes_ms = matches!(kind, Kind::Delay | Kind::Stall);
+            if takes_ms && ms == 0 {
+                return Err(format!("fault rule {part:?}: {kind_text} needs :MS"));
             }
-            if kind != Kind::Delay && ms != 0 {
-                return Err(format!("fault rule {part:?}: only delay takes :MS"));
+            if !takes_ms && ms != 0 {
+                return Err(format!("fault rule {part:?}: only delay/stall take :MS"));
             }
             rules.push(Rule { kind, every, ms });
         }
@@ -147,6 +155,7 @@ impl FaultPlan {
                 Kind::Drop => d.drop = true,
                 Kind::Garble => d.garble = true,
                 Kind::Delay => d.delay_ms = d.delay_ms.max(r.ms),
+                Kind::Stall => d.stall_ms = d.stall_ms.max(r.ms),
             }
         }
         d
@@ -163,6 +172,7 @@ impl fmt::Display for FaultPlan {
                 Kind::Drop => write!(f, "drop@{}", r.every)?,
                 Kind::Garble => write!(f, "garble@{}", r.every)?,
                 Kind::Delay => write!(f, "delay@{}:{}", r.every, r.ms)?,
+                Kind::Stall => write!(f, "stall@{}:{}", r.every, r.ms)?,
             }
         }
         Ok(())
@@ -187,8 +197,8 @@ mod tests {
 
     #[test]
     fn parses_the_full_grammar() {
-        let p = FaultPlan::parse("drop@2,delay@3:15,garble").unwrap();
-        assert_eq!(p.to_string(), "drop@2,delay@3:15,garble@1");
+        let p = FaultPlan::parse("drop@2,delay@3:15,garble,stall@4:250").unwrap();
+        assert_eq!(p.to_string(), "drop@2,delay@3:15,garble@1,stall@4:250");
         assert!(FaultPlan::parse("").unwrap().is_empty());
         assert!(FaultPlan::parse(" drop , garble@4 ").is_ok());
     }
@@ -202,9 +212,19 @@ mod tests {
             "delay@2",     // delay without :MS
             "delay:abc",   // non-numeric MS
             "garble@1:10", // :MS on a non-delay rule
+            "stall@2",     // stall without :MS
         ] {
             assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should not parse");
         }
+    }
+
+    #[test]
+    fn stall_decisions_take_the_max_and_stay_keyed() {
+        let p = FaultPlan::parse("stall@1:100,stall@1:400").unwrap();
+        let d = p.decide("s0a0");
+        assert_eq!(d.stall_ms, 400);
+        assert!(!d.is_clean());
+        assert!(FaultPlan::parse("drop@1").unwrap().decide("x").stall_ms == 0);
     }
 
     #[test]

@@ -21,8 +21,8 @@
 //!   p50/p99 latency, throughput vs. worker count) for CI gating.
 //! * [`fault`] — deterministic fault injection (`--fault` /
 //!   `SAT_FAULT`): connection drops mid-stream, delayed responses,
-//!   garbled row lines, keyed by request id. Powers the `sat shard`
-//!   chaos selftest.
+//!   garbled row lines, mid-stream stalls, keyed by request id. Powers
+//!   the `sat shard` chaos selftest.
 
 pub mod fault;
 pub mod protocol;
@@ -36,4 +36,6 @@ pub use selftest::SelftestOpts;
 #[cfg(unix)]
 pub use server::spawn_unix;
 pub use server::{spawn_socket, spawn_tcp, Server, ServerHandle};
-pub use state::{FetchKind, ServeCore, ShareMap};
+pub use state::{
+    compare_methods, compare_result_json, train_result_json, FetchKind, ServeCore, ShareMap,
+};

@@ -85,6 +85,45 @@ pub struct TrainRequest {
     pub seed: u64,
 }
 
+impl TrainRequest {
+    /// Build a validated request from CLI-style values, applying the
+    /// same canonicalization and defaults as the wire parser (`lr`
+    /// `None` takes the family default), so a locally-built request
+    /// and its wire round-trip name the same cache slot.
+    pub fn build(
+        model: &str,
+        method: Method,
+        pattern: NmPattern,
+        steps: usize,
+        lr: Option<f32>,
+        eval_every: usize,
+        seed: u64,
+    ) -> Result<TrainRequest, String> {
+        let probe = TrainSpec::new(model, method, pattern);
+        if !matches!(probe.family(), "mlp" | "cnn" | "vit") {
+            return Err(format!(
+                "train model {model:?} is not native-trainable (want mlp|cnn|vit or their tiny_* stand-ins)"
+            ));
+        }
+        if steps == 0 {
+            return Err("steps must be >= 1".into());
+        }
+        let lr = lr.unwrap_or_else(|| default_lr(probe.family()));
+        if !lr.is_finite() || lr <= 0.0 {
+            return Err("lr must be a positive finite number".into());
+        }
+        Ok(TrainRequest {
+            model: probe.model.clone(),
+            method,
+            pattern,
+            steps,
+            lr,
+            eval_every,
+            seed,
+        })
+    }
+}
+
 impl Request {
     /// Parse one request line. On failure returns `(id, message)` where
     /// `id` is whatever could still be extracted (possibly empty), so

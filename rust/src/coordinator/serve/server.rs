@@ -260,7 +260,26 @@ fn dispatch<W: Write>(
             let midpoint = spec.grid_size() / 2;
             let drop_at = f.drop.then_some(midpoint);
             let garble_at = f.garble.then_some(midpoint);
+            let stall_at = (f.stall_ms > 0).then_some(midpoint);
             let mut emit = |i: usize, row: &str| {
+                if stall_at == Some(i) {
+                    // Go silent without closing: the first half of the
+                    // rows are already flushed, so the client sees a
+                    // live-but-stuck stream — the straggler shape. The
+                    // shutdown poll keeps a stalled handler from
+                    // pinning the accept loop's drain.
+                    core.count_fault();
+                    let until = Instant::now() + Duration::from_millis(f.stall_ms);
+                    while Instant::now() < until {
+                        if core.is_shutdown() {
+                            return Err(std::io::Error::new(
+                                std::io::ErrorKind::ConnectionAborted,
+                                fault::FAULT_DROP_MSG,
+                            ));
+                        }
+                        thread::sleep(Duration::from_millis(20));
+                    }
+                }
                 if drop_at == Some(i) {
                     core.count_fault();
                     return Err(std::io::Error::new(
@@ -527,6 +546,49 @@ mod tests {
             lines[1]
         );
         assert_eq!(protocol::parse_response(&lines[2]).unwrap().kind, "done");
+    }
+
+    #[test]
+    fn injected_stall_pauses_mid_stream_without_closing() {
+        let core =
+            ServeCore::with_fault_plan(Some(fault::FaultPlan::parse("stall@1:120").unwrap()));
+        let t0 = Instant::now();
+        let lines = run_session(&core, SWEEP_2ROWS);
+        // The stream pauses at the midpoint, then finishes intact —
+        // unlike a drop, nothing is lost and the connection survives.
+        assert!(t0.elapsed() >= Duration::from_millis(120));
+        assert_eq!(lines.len(), 3, "row + row + done: {lines:?}");
+        assert_eq!(protocol::parse_response(&lines[0]).unwrap().kind, "row");
+        assert_eq!(protocol::parse_response(&lines[1]).unwrap().kind, "row");
+        assert_eq!(protocol::parse_response(&lines[2]).unwrap().kind, "done");
+    }
+
+    #[test]
+    fn a_shutdown_mid_stall_severs_the_stalled_stream_promptly() {
+        let core =
+            ServeCore::with_fault_plan(Some(fault::FaultPlan::parse("stall@1:60000").unwrap()));
+        let core2 = Arc::new(core);
+        let inner = Arc::clone(&core2);
+        let worker = thread::spawn(move || {
+            let mut out = Vec::new();
+            let r = serve_lines(
+                &inner,
+                Cursor::new(SWEEP_2ROWS.as_bytes().to_vec()),
+                &mut out,
+            );
+            (r, out)
+        });
+        // Give the stream time to reach the stall, then shut down.
+        thread::sleep(Duration::from_millis(150));
+        core2.request_shutdown();
+        let (r, out) = worker.join().unwrap();
+        assert_eq!(
+            r.unwrap_err().kind(),
+            std::io::ErrorKind::ConnectionAborted,
+            "a stalled stream must sever, not finish, on shutdown"
+        );
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.lines().count() <= 1, "only pre-stall rows: {text:?}");
     }
 
     #[test]

@@ -30,7 +30,7 @@ use crate::models::{zoo, Model};
 use crate::nm::{Method, NmPattern};
 use crate::sim::engine::finish_step;
 use crate::train::{self, BackendKind, TrainCurve, TrainOptions, TrainSpec};
-use crate::util::json::Obj;
+use crate::util::json::{self, Obj};
 
 use super::fault::{FaultDecision, FaultPlan};
 use super::protocol::{StreamStats, TrainRequest};
@@ -428,20 +428,7 @@ impl ServeCore {
             eval_every: req.eval_every,
             seed: req.seed,
         };
-        self.trains.get_or_compute(key, || {
-            let backend = train::open_backend(BackendKind::Native, "artifacts")
-                .map_err(|e| format!("{e:#}"))?;
-            let spec = TrainSpec::new(&req.model, req.method, req.pattern);
-            let opts = TrainOptions {
-                steps: req.steps,
-                lr: req.lr,
-                eval_every: req.eval_every,
-                seed: req.seed,
-                ..TrainOptions::default()
-            };
-            let curve = backend.train(&spec, &opts).map_err(|e| format!("{e:#}"))?;
-            Ok(train_json(req, &curve))
-        })
+        self.trains.get_or_compute(key, || train_result_json(req))
     }
 
     // -- status ---------------------------------------------------------
@@ -496,6 +483,69 @@ impl Default for ServeCore {
     fn default() -> ServeCore {
         ServeCore::new()
     }
+}
+
+/// Execute one training request on the native backend and serialize
+/// its deterministic result document. This is the single executor
+/// behind the serve `train` cache, `sat compare --out`, and the
+/// sharded train/compare local fallback — one code path is what makes
+/// their outputs byte-identical.
+pub fn train_result_json(req: &TrainRequest) -> Result<String, String> {
+    let backend = train::open_backend(BackendKind::Native, "artifacts")
+        .map_err(|e| format!("{e:#}"))?;
+    let spec = TrainSpec::new(&req.model, req.method, req.pattern);
+    let opts = TrainOptions {
+        steps: req.steps,
+        lr: req.lr,
+        eval_every: req.eval_every,
+        seed: req.seed,
+        ..TrainOptions::default()
+    };
+    let curve = backend.train(&spec, &opts).map_err(|e| format!("{e:#}"))?;
+    Ok(train_json(req, &curve))
+}
+
+/// The method panel a compare of `family` runs on the native backend:
+/// the MLP and ViT stand-ins run the full panel, the costlier CNN
+/// keeps the headline dense-vs-BDWP pair (mirroring `sat compare`).
+pub fn compare_methods(family: &str) -> Result<Vec<Method>, String> {
+    match family {
+        "mlp" | "tiny_mlp" | "vit" | "tiny_vit" => Ok(Method::ALL.to_vec()),
+        "cnn" | "tiny_cnn" => Ok(vec![Method::Dense, Method::Bdwp]),
+        other => Err(format!("unknown family {other:?} (mlp|cnn|vit)")),
+    }
+}
+
+/// Assemble the machine-readable compare document: one train result
+/// per panel method, in panel order. `resolve` supplies each method's
+/// result JSON — locally via [`train_result_json`], or remotely via a
+/// sharded `train` request; training is deterministic, so both paths
+/// produce identical bytes and the assembled document is
+/// byte-comparable across hosts.
+pub fn compare_result_json(
+    base: &TrainRequest,
+    resolve: &mut dyn FnMut(&TrainRequest) -> Result<String, String>,
+) -> Result<String, String> {
+    let family = TrainSpec::new(&base.model, base.method, base.pattern)
+        .family()
+        .to_string();
+    let methods = compare_methods(&family)?;
+    let mut results = Vec::with_capacity(methods.len());
+    for m in methods {
+        let req = TrainRequest {
+            method: m,
+            ..base.clone()
+        };
+        results.push(resolve(&req)?);
+    }
+    Ok(Obj::new()
+        .field_str("schema", "sat-compare-v1")
+        .field_str("model", &base.model)
+        .field_str("pattern", &base.pattern.to_string())
+        .field_usize("steps", base.steps)
+        .field_u64("seed", base.seed)
+        .field_raw("results", &json::array(results))
+        .finish())
 }
 
 fn train_json(req: &TrainRequest, curve: &TrainCurve) -> String {

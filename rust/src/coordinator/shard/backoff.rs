@@ -27,6 +27,108 @@ pub fn backoff_ms(base_ms: u64, cap_ms: u64, attempt: u32, seed: u64, shard: u64
     lo + u64::from(rng.next_u32()) % span
 }
 
+/// What a dispatcher may do with an endpoint right now.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerAction {
+    /// Circuit closed: dispatch real work.
+    Admit,
+    /// Circuit half-open: admit exactly one cheap probe.
+    Probe,
+    /// Circuit open: do nothing with this endpoint yet.
+    Wait,
+}
+
+/// Pure per-endpoint circuit-breaker state machine with half-open
+/// recovery. Time is an explicit millisecond counter, so transitions
+/// are fully deterministic and property-testable without a wall clock:
+///
+/// ```text
+///            threshold consecutive failures
+///   CLOSED ────────────────────────────────▶ OPEN
+///     ▲                                       │ probe_interval elapses
+///     │ probe ok (a re-admission)             ▼
+///     └─────────────────────────────────── HALF-OPEN
+///                                             │ probe fails
+///                                             ▼
+///                                           OPEN (escalated interval)
+/// ```
+///
+/// A `probe_interval_ms` of 0 disables half-open entirely: a tripped
+/// circuit stays open for the rest of the run (the PR 8 behavior).
+/// Probe retry intervals escalate through [`backoff_ms`] (same seeded
+/// jitter, capped at 8× the base interval), so a fleet of tripped
+/// endpoints does not probe in lockstep.
+#[derive(Clone, Debug)]
+pub struct Breaker {
+    threshold: u32,
+    probe_interval_ms: u64,
+    seed: u64,
+    stream: u64,
+    consecutive: u32,
+    probe_round: u32,
+    /// `Some(t)` = open, next probe admitted at ms-time `t`.
+    probe_at: Option<u64>,
+}
+
+impl Breaker {
+    pub fn new(threshold: u32, probe_interval_ms: u64, seed: u64, stream: u64) -> Breaker {
+        Breaker {
+            threshold: threshold.max(1),
+            probe_interval_ms,
+            seed,
+            stream,
+            consecutive: 0,
+            probe_round: 0,
+            probe_at: None,
+        }
+    }
+
+    pub fn is_open(&self) -> bool {
+        self.probe_at.is_some()
+    }
+
+    /// A dispatched request succeeded: fully close and reset.
+    pub fn on_success(&mut self) {
+        self.consecutive = 0;
+        self.probe_round = 0;
+        self.probe_at = None;
+    }
+
+    /// A dispatched request failed; `threshold` consecutive failures
+    /// trip the circuit open.
+    pub fn on_failure(&mut self, now_ms: u64) {
+        self.consecutive = self.consecutive.saturating_add(1);
+        if self.consecutive >= self.threshold && self.probe_at.is_none() {
+            self.probe_at = Some(now_ms.saturating_add(self.probe_interval_ms.max(1)));
+        }
+    }
+
+    pub fn poll(&self, now_ms: u64) -> BreakerAction {
+        match self.probe_at {
+            None => BreakerAction::Admit,
+            Some(t) if self.probe_interval_ms > 0 && now_ms >= t => BreakerAction::Probe,
+            Some(_) => BreakerAction::Wait,
+        }
+    }
+
+    /// Verdict of the half-open probe [`poll`](Self::poll) admitted. A
+    /// success re-closes the circuit (a re-admission); a failure
+    /// re-opens it with an escalated, jittered probe interval. After a
+    /// re-admission the *next* trip again takes `threshold` consecutive
+    /// dispatch failures — the probe already proved the endpoint can
+    /// answer, so it earns a full streak allowance back.
+    pub fn on_probe(&mut self, ok: bool, now_ms: u64) {
+        if ok {
+            self.on_success();
+            return;
+        }
+        self.probe_round = self.probe_round.saturating_add(1);
+        let cap = self.probe_interval_ms.saturating_mul(8);
+        let d = backoff_ms(self.probe_interval_ms, cap, self.probe_round, self.seed, self.stream);
+        self.probe_at = Some(now_ms.saturating_add(d.max(1)));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -52,6 +154,43 @@ mod tests {
         }
         assert_eq!(backoff_ms(0, 2000, 3, 1, 1), 0, "base 0 disables backoff");
         assert_eq!(backoff_ms(50, 2000, 0, 1, 1), 0, "attempt 0 never waits");
+    }
+
+    #[test]
+    fn breaker_walks_trip_half_open_readmit_and_retrip() {
+        let mut b = Breaker::new(3, 100, 7, 1);
+        assert_eq!(b.poll(0), BreakerAction::Admit);
+        b.on_failure(10);
+        b.on_failure(20);
+        assert_eq!(b.poll(20), BreakerAction::Admit, "streak below threshold");
+        b.on_failure(30);
+        assert!(b.is_open());
+        assert_eq!(b.poll(100), BreakerAction::Wait, "probe interval not yet up");
+        assert_eq!(b.poll(130), BreakerAction::Probe, "half-open at open+interval");
+        // A failed probe re-opens with an escalated interval.
+        b.on_probe(false, 130);
+        assert_eq!(b.poll(130), BreakerAction::Wait);
+        // A successful probe later re-admits fully.
+        let t = (131..).find(|&t| b.poll(t) == BreakerAction::Probe).unwrap();
+        b.on_probe(true, t);
+        assert!(!b.is_open(), "probe success closes the circuit");
+        assert_eq!(b.poll(t), BreakerAction::Admit);
+        // Re-trip takes a fresh full streak.
+        b.on_failure(t + 1);
+        assert_eq!(b.poll(t + 1), BreakerAction::Admit);
+        b.on_failure(t + 2);
+        b.on_failure(t + 3);
+        assert!(b.is_open(), "re-tripped after a fresh streak");
+    }
+
+    #[test]
+    fn breaker_with_zero_interval_stays_open_forever() {
+        let mut b = Breaker::new(1, 0, 7, 1);
+        b.on_failure(5);
+        assert!(b.is_open());
+        for t in [6, 1_000, u64::MAX] {
+            assert_eq!(b.poll(t), BreakerAction::Wait, "t={t}");
+        }
     }
 
     #[test]

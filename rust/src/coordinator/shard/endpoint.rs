@@ -154,9 +154,14 @@ impl EndpointConn {
     /// read resumes); EOF — clean or mid-line — is an error, because
     /// the protocol terminates every request with a non-row line, so a
     /// well-behaved server never just closes on us.
+    ///
+    /// A deadline expiry returns a clean `TimedOut` and *keeps* any
+    /// partial line in `self.buf`: a later call with a fresh deadline
+    /// resumes the same line instead of garbling it. That makes a
+    /// timeout a resumable poll slice, which is what lets the shard
+    /// runner interleave straggler checks with reads mid-line.
     pub fn read_line(&mut self, deadline: Instant) -> io::Result<String> {
-        self.buf.clear();
-        loop {
+        while !self.buf.ends_with(b"\n") {
             match self.reader.read_until(b'\n', &mut self.buf) {
                 Ok(_) if self.buf.ends_with(b"\n") => break,
                 // read_until only stops short of the delimiter at EOF.
@@ -175,6 +180,8 @@ impl EndpointConn {
                     ) =>
                 {
                     if Instant::now() >= deadline {
+                        // Never a garbled-line error: the bytes read so
+                        // far stay put for the next slice.
                         return Err(io::Error::new(
                             io::ErrorKind::TimedOut,
                             "shard deadline exceeded",
@@ -184,7 +191,10 @@ impl EndpointConn {
                 Err(e) => return Err(e),
             }
         }
-        let text = std::str::from_utf8(&self.buf).map_err(|_| {
+        // Take the completed line out whether or not it validates, so a
+        // bad line can't poison the next read.
+        let raw = std::mem::take(&mut self.buf);
+        let text = std::str::from_utf8(&raw).map_err(|_| {
             io::Error::new(io::ErrorKind::InvalidData, "response line is not valid UTF-8")
         })?;
         Ok(text.trim().to_string())
@@ -227,6 +237,42 @@ mod tests {
         };
         let ep = Endpoint::Tcp(format!("127.0.0.1:{port}"));
         assert!(ep.connect(Duration::from_millis(200)).is_err());
+    }
+
+    #[test]
+    fn a_partial_line_survives_a_deadline_slice_and_resumes_cleanly() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            // Half a line, a pause longer than the client's first
+            // deadline, then the rest of the line plus a second line.
+            s.write_all(b"{\"half\":").unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(300));
+            s.write_all(b"1}\n{\"next\":2}\n").unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(100));
+        });
+        let ep = Endpoint::Tcp(addr);
+        let mut conn = ep.connect(Duration::from_millis(500)).unwrap();
+        // The first slice expires mid-line: a clean timeout, never a
+        // garbled-line error.
+        let err = conn
+            .read_line(Instant::now() + Duration::from_millis(120))
+            .unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::TimedOut);
+        // The next slice resumes the same line; nothing was lost or
+        // spliced across the boundary.
+        let line = conn
+            .read_line(Instant::now() + Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(line, "{\"half\":1}");
+        let line = conn
+            .read_line(Instant::now() + Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(line, "{\"next\":2}");
+        server.join().unwrap();
     }
 
     #[test]

@@ -11,23 +11,37 @@
 //! * [`endpoint`] — `tcp:HOST:PORT` / `unix:PATH` addressing and a
 //!   deadline-polling line client.
 //! * [`backoff`] — capped exponential backoff with deterministic,
-//!   seeded jitter (reproducible retry timing).
+//!   seeded jitter (reproducible retry timing), plus the pure
+//!   [`backoff::Breaker`] state machine: trip on consecutive failures,
+//!   half-open after a probe interval, re-admit on a probe success.
 //! * [`runner`] — the dispatch loop: per-shard deadlines, retry,
-//!   redispatch to healthy endpoints, per-endpoint circuit breakers,
-//!   index-keyed duplicate suppression, and local fallback through
-//!   `run_sweep_cached` when every endpoint is dead. Also
-//!   [`merged_status`], the multi-endpoint `status` aggregator.
+//!   redispatch to healthy endpoints, half-open circuit breakers,
+//!   straggler re-splitting of slow in-flight shards, capacity-weighted
+//!   planning (`--weights auto`), index-keyed duplicate suppression,
+//!   and local fallback through `run_sweep_cached` when every endpoint
+//!   is dead. Also [`merged_status`], the multi-endpoint `status`
+//!   aggregator.
+//! * [`trainjobs`] — `train` and `compare` routed through the same
+//!   fleet: replica-voted byte-identity for sharded training,
+//!   per-method merging (byte-identical to `sat compare --out`) for
+//!   sharded comparison.
 //! * [`selftest`] — the chaos harness: in-process servers with
-//!   injected faults (drops, delays, garbled rows) must still yield a
-//!   byte-identical merge, gated by `--max-row-loss 0` in CI.
+//!   injected faults (drops, delays, garbled rows, stalls) must still
+//!   yield a byte-identical merge — and the stall phase must provoke
+//!   at least one re-split and one half-open re-admission — gated by
+//!   `--max-row-loss 0` in CI.
 
 pub mod backoff;
 pub mod endpoint;
 pub mod plan;
 pub mod runner;
 pub mod selftest;
+pub mod trainjobs;
 
 pub use endpoint::Endpoint;
-pub use plan::{split_spec, Shard};
-pub use runner::{merged_status, run_sharded, EndpointStat, ShardOpts, ShardOutcome};
+pub use plan::{resplit, split_range, split_spec, Shard};
+pub use runner::{
+    merged_status, run_sharded, EndpointStat, ShardOpts, ShardOutcome, Weights,
+};
 pub use selftest::ShardSelftestOpts;
+pub use trainjobs::{run_sharded_compare, run_sharded_train, TrainShardOutcome};

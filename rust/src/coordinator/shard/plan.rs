@@ -87,6 +87,137 @@ pub fn split_spec(spec: &SweepSpec, target: usize) -> Vec<Shard> {
     }
 }
 
+/// Build the sub-spec for one axis-aligned block: axes before `pivot`
+/// pinned to their digit values, the pivot axis restricted to the
+/// contiguous sub-list `[start, start + count)`, axes after the pivot
+/// left whole. Expands to a contiguous block of `spec`'s grid exactly
+/// when the block's starting position is aligned to the pivot stride.
+fn pinned_sub(
+    spec: &SweepSpec,
+    digits: &[usize; 5],
+    pivot: usize,
+    start: usize,
+    count: usize,
+) -> SweepSpec {
+    let mut sub = spec.clone();
+    if pivot > 0 {
+        sub.models = vec![spec.models[digits[0]].clone()];
+    }
+    if pivot > 1 {
+        sub.methods = vec![spec.methods[digits[1]]];
+    }
+    if pivot > 2 {
+        sub.patterns = vec![spec.patterns[digits[2]]];
+    }
+    if pivot > 3 {
+        sub.arrays = vec![spec.arrays[digits[3]]];
+    }
+    match pivot {
+        0 => sub.models = spec.models[start..start + count].to_vec(),
+        1 => sub.methods = spec.methods[start..start + count].to_vec(),
+        2 => sub.patterns = spec.patterns[start..start + count].to_vec(),
+        3 => sub.arrays = spec.arrays[start..start + count].to_vec(),
+        _ => sub.bandwidths = spec.bandwidths[start..start + count].to_vec(),
+    }
+    sub
+}
+
+/// Cover the contiguous local index range `[lo, hi)` of `spec`'s grid
+/// with axis-aligned sub-specs, greedily taking the coarsest aligned
+/// block at each position. Unlike [`split_spec`], the range need not
+/// start or end on an axis-prefix boundary — this is what lets a
+/// straggler shard's *remaining* rows become ordinary shards. Returned
+/// offsets are local to `spec`'s grid; ids run from 0.
+pub fn split_range(spec: &SweepSpec, lo: usize, hi: usize) -> Vec<Shard> {
+    let lens = [
+        spec.models.len(),
+        spec.methods.len(),
+        spec.patterns.len(),
+        spec.arrays.len(),
+        spec.bandwidths.len(),
+    ];
+    // stride[k] = grid points per step of axis k (product of inner axes).
+    let mut stride = [1usize; 5];
+    for k in (0..4).rev() {
+        stride[k] = stride[k + 1] * lens[k + 1].max(1);
+    }
+    let total = stride[0] * lens[0].max(1);
+    let hi = hi.min(total);
+    let mut out = Vec::new();
+    let mut pos = lo;
+    while pos < hi {
+        let mut digits = [0usize; 5];
+        for k in 0..5 {
+            digits[k] = (pos / stride[k]) % lens[k].max(1);
+        }
+        // A block pivoted on axis p starts legally at `pos` when every
+        // axis inside p reads zero there, i.e. pos % stride[p] == 0.
+        // Axis 4 has stride 1, so a block always exists.
+        let (pivot, count) = (0..5)
+            .filter(|&p| pos % stride[p] == 0)
+            .find_map(|p| {
+                let c = (lens[p].max(1) - digits[p]).min((hi - pos) / stride[p]);
+                (c > 0).then_some((p, c))
+            })
+            .expect("the innermost axis always yields a block");
+        let sub = pinned_sub(spec, &digits, pivot, digits[pivot], count);
+        let len = count * stride[pivot];
+        debug_assert_eq!(sub.grid_size(), len);
+        out.push(Shard {
+            id: out.len(),
+            offset: pos,
+            len,
+            spec: sub,
+        });
+        pos += len;
+    }
+    out
+}
+
+/// Split the undelivered tail of an in-flight shard — local indices
+/// `[delivered, shard.len)` — into new shards covering exactly those
+/// global indices, refined toward `parts` pieces so several healthy
+/// endpoints can share the tail. Offsets are global (the parent's
+/// offset is already applied); ids run from 0 and the caller assigns
+/// fresh unique ids before dispatch. Rows streamed in index order make
+/// `delivered` a contiguous prefix, which is what lets the remainder
+/// be a contiguous range at all.
+pub fn resplit(shard: &Shard, delivered: usize, parts: usize) -> Vec<Shard> {
+    if delivered >= shard.len {
+        return Vec::new();
+    }
+    let mut blocks = split_range(&shard.spec, delivered, shard.len);
+    for b in &mut blocks {
+        b.offset += shard.offset;
+    }
+    // Refine the biggest blocks until the tail has ~`parts` pieces (or
+    // nothing splittable remains).
+    while blocks.len() < parts {
+        let Some((i, _)) = blocks
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.len > 1)
+            .max_by_key(|(_, b)| b.len)
+        else {
+            break;
+        };
+        let b = blocks.remove(i);
+        let subs = split_spec(&b.spec, 2);
+        if subs.len() < 2 {
+            blocks.insert(i, b);
+            break;
+        }
+        for (j, mut s) in subs.into_iter().enumerate() {
+            s.offset += b.offset;
+            blocks.insert(i + j, s);
+        }
+    }
+    for (i, b) in blocks.iter_mut().enumerate() {
+        b.id = i;
+    }
+    blocks
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,5 +285,62 @@ mod tests {
         let shards = split_spec(&spec, 1000);
         assert_eq!(shards.len(), spec.grid_size(), "one point per shard");
         assert!(shards.iter().all(|s| s.len == 1));
+    }
+
+    #[test]
+    fn split_range_partitions_any_contiguous_window() {
+        let spec = spec_2x2x2x1x2();
+        let full = spec.expand().unwrap();
+        let total = full.len();
+        for lo in 0..total {
+            for hi in lo..=total {
+                let blocks = split_range(&spec, lo, hi);
+                let mut pos = lo;
+                for b in &blocks {
+                    assert_eq!(b.offset, pos, "blocks are contiguous");
+                    let points = b.spec.expand().unwrap();
+                    assert_eq!(points.len(), b.len);
+                    for (i, p) in points.iter().enumerate() {
+                        let f = &full[b.offset + i];
+                        assert_eq!(
+                            PointKey::of(&p.model, p.method, p.pattern, &p.sat, &p.mem),
+                            PointKey::of(&f.model, f.method, f.pattern, &f.sat, &f.mem),
+                            "window [{lo},{hi}), block at {}, local {i}",
+                            b.offset
+                        );
+                    }
+                    pos += b.len;
+                }
+                assert_eq!(pos, hi, "window [{lo},{hi}) covered exactly");
+            }
+        }
+    }
+
+    #[test]
+    fn resplit_covers_exactly_the_undelivered_tail() {
+        let spec = spec_2x2x2x1x2();
+        let parent = Shard {
+            id: 3,
+            offset: 100, // pretend this shard sits mid-grid
+            len: spec.grid_size(),
+            spec,
+        };
+        for delivered in 0..=parent.len {
+            let subs = resplit(&parent, delivered, 3);
+            if delivered >= parent.len {
+                assert!(subs.is_empty());
+                continue;
+            }
+            let mut pos = parent.offset + delivered;
+            for (i, s) in subs.iter().enumerate() {
+                assert_eq!(s.id, i, "ids are renumbered from 0");
+                assert_eq!(s.offset, pos, "tail shards are contiguous");
+                assert_eq!(s.spec.grid_size(), s.len);
+                pos += s.len;
+            }
+            assert_eq!(pos, parent.offset + parent.len, "tail covered exactly");
+            let want = 3.min(parent.len - delivered);
+            assert!(subs.len() >= want.min(2), "delivered {delivered}: {} subs", subs.len());
+        }
     }
 }

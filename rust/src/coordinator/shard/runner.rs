@@ -12,8 +12,21 @@
 //! * **Redispatch** — the requeued job is picked up by whichever
 //!   endpoint's worker is free; landing on a different endpoint than
 //!   the failed attempt counts as a redispatch.
-//! * **Circuit breaker** — `breaker` consecutive failures retire an
-//!   endpoint's worker for the rest of the run.
+//! * **Circuit breaker with half-open recovery** — `breaker`
+//!   consecutive failures open an endpoint's circuit; after
+//!   `probe_interval_ms` the circuit goes half-open and admits one
+//!   cheap `status` probe, and a successful probe re-admits the
+//!   endpoint into the dispatch rotation mid-run ([`Breaker`]).
+//! * **Straggler re-splitting** — a monitor compares every in-flight
+//!   shard's progress against the rate completed attempts establish;
+//!   a shard running `straggler_factor ×` past its expected duration
+//!   has its undelivered tail re-split ([`super::plan::resplit`]) and
+//!   redispatched to healthy endpoints. The byte-checked merge makes
+//!   the resulting overlap races harmless by construction.
+//! * **Capacity-weighted planning** — with `--weights auto`, a
+//!   parallel `status` probe round sizes shards by measured endpoint
+//!   latency, and straggler tails are re-assigned to the endpoints
+//!   with the best observed completion rates.
 //! * **Duplicate suppression** — rows are keyed by *global grid index*
 //!   (`shard.offset + local_index`); rows that arrived before a
 //!   mid-stream failure are kept, and the redispatched shard's replays
@@ -28,8 +41,8 @@
 //! contract, extended across hosts).
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, RwLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -39,9 +52,33 @@ use crate::coordinator::serve::protocol::{self, Cmd, Request};
 use crate::coordinator::sweep::{run_sweep_cached, SweepCaches, SweepSpec};
 use crate::util::json::{self, Obj, Value};
 
-use super::backoff::backoff_ms;
+use super::backoff::{backoff_ms, Breaker, BreakerAction};
 use super::endpoint::Endpoint;
-use super::plan::{split_spec, Shard};
+use super::plan::{resplit, split_range, split_spec, Shard};
+
+/// How the planner sizes shards across the endpoint fleet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Weights {
+    /// Even axis-prefix splitting ([`split_spec`]); every endpoint is
+    /// assumed equally capable.
+    Uniform,
+    /// An initial parallel `status` probe round measures per-endpoint
+    /// latency; shard sizes are proportioned to measured capacity and
+    /// jobs carry a soft endpoint affinity (work stealing still
+    /// rebalances).
+    Auto,
+}
+
+impl std::str::FromStr for Weights {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Weights, String> {
+        match s {
+            "uniform" => Ok(Weights::Uniform),
+            "auto" => Ok(Weights::Auto),
+            other => Err(format!("unknown weights mode {other:?} (want auto|uniform)")),
+        }
+    }
+}
 
 /// Tuning for one shard run. Defaults favor long sweeps over WANs;
 /// the selftest and tests shrink the timeouts.
@@ -60,6 +97,19 @@ pub struct ShardOpts {
     pub backoff_max_ms: u64,
     /// Consecutive failures that open an endpoint's circuit.
     pub breaker: u32,
+    /// Straggler threshold: an in-flight shard whose age exceeds
+    /// `straggler_factor ×` its expected duration (estimated from the
+    /// rate of completed attempts) has its undelivered tail re-split
+    /// and redispatched. 0 disables re-splitting.
+    pub straggler_factor: f64,
+    /// Cap on straggler re-split events per run.
+    pub max_splits: usize,
+    /// Half-open probing: a tripped circuit admits one `status` probe
+    /// this long after opening (escalating on probe failure). 0 keeps
+    /// tripped circuits open for the rest of the run.
+    pub probe_interval_ms: u64,
+    /// Shard size planning across heterogeneous endpoints.
+    pub weights: Weights,
     /// Seed for the deterministic backoff jitter.
     pub seed: u64,
     /// Log per-attempt failures to stderr.
@@ -75,6 +125,10 @@ impl Default for ShardOpts {
             backoff_ms: 50,
             backoff_max_ms: 2_000,
             breaker: 3,
+            straggler_factor: 4.0,
+            max_splits: 4,
+            probe_interval_ms: 500,
+            weights: Weights::Uniform,
             seed: 0x5a7d,
             progress: false,
         }
@@ -107,6 +161,10 @@ pub struct ShardOutcome {
     pub rows_recovered: u64,
     /// Replayed rows dropped by the index-keyed merge.
     pub duplicates_suppressed: u64,
+    /// Straggler re-split events (each splits one shard's tail).
+    pub splits: u64,
+    /// Half-open probes that re-admitted a tripped endpoint.
+    pub readmissions: u64,
     /// Shards (fully or partially) completed by local fallback.
     pub local_shards: usize,
     pub per_endpoint: Vec<EndpointStat>,
@@ -146,6 +204,8 @@ impl ShardOutcome {
             .field_u64("redispatches", self.redispatches)
             .field_u64("rows_recovered", self.rows_recovered)
             .field_u64("duplicates_suppressed", self.duplicates_suppressed)
+            .field_u64("splits", self.splits)
+            .field_u64("readmissions", self.readmissions)
             .field_usize("local_shards", self.local_shards)
             .field_f64("wall_ms", self.wall_ms)
             .field_raw("endpoints", &json::array(per))
@@ -176,12 +236,15 @@ impl ShardOutcome {
             .collect();
         format!(
             "{} rows over {} shard(s) in {:.2}s; {} retry(ies), {} redispatch(es), \
-             {} row(s) recovered, {} duplicate(s) suppressed, {} local shard(s) [{}]",
+             {} split(s), {} readmission(s), {} row(s) recovered, \
+             {} duplicate(s) suppressed, {} local shard(s) [{}]",
             self.rows.len(),
             self.shards,
             self.wall_ms / 1e3,
             self.retries,
             self.redispatches,
+            self.splits,
+            self.readmissions,
             self.rows_recovered,
             self.duplicates_suppressed,
             self.local_shards,
@@ -239,6 +302,16 @@ impl Merger {
     fn missing_in(&self, offset: usize, len: usize) -> bool {
         self.rows[offset..offset + len].iter().any(|r| r.is_none())
     }
+
+    /// Length of the contiguous delivered prefix of a shard's range.
+    /// Rows stream in index order, so this is exactly how far a
+    /// straggling attempt actually got.
+    fn delivered_prefix(&self, offset: usize, len: usize) -> usize {
+        self.rows[offset..offset + len]
+            .iter()
+            .take_while(|r| r.is_some())
+            .count()
+    }
 }
 
 #[derive(Default)]
@@ -246,7 +319,8 @@ struct EpState {
     attempts: AtomicU64,
     failures: AtomicU64,
     rows: AtomicU64,
-    consecutive: AtomicU32,
+    /// Mirror of the worker-owned [`Breaker`]'s open state, readable
+    /// by the straggler monitor and the other workers.
     open: AtomicBool,
 }
 
@@ -255,10 +329,26 @@ struct Job {
     attempt: usize,
     not_before: Instant,
     last_ep: Option<usize>,
+    /// Soft affinity from capacity-weighted planning; any free worker
+    /// may still steal the job.
+    preferred: Option<usize>,
+    /// Born from a straggler re-split: its fresh rows count as
+    /// recovered, like a retry's.
+    split_child: bool,
+}
+
+/// One in-flight remote attempt, visible to the straggler monitor.
+struct Flight {
+    shard_idx: usize,
+    started: Instant,
+    /// This attempt's tail was already re-split once.
+    split: bool,
 }
 
 struct Shared {
-    shards: Vec<Shard>,
+    /// Append-only during a run: the straggler monitor pushes re-split
+    /// tail shards past the planned prefix.
+    shards: RwLock<Vec<Shard>>,
     queue: Mutex<VecDeque<Job>>,
     /// Shards still queued or in flight remotely. Workers run while
     /// this is nonzero; exhausting a shard's remote attempts also
@@ -268,7 +358,16 @@ struct Shared {
     eps: Vec<EpState>,
     retries: AtomicU64,
     redispatches: AtomicU64,
+    splits: AtomicU64,
+    readmissions: AtomicU64,
     attempt_us: Mutex<Vec<u64>>,
+    /// `(rows, µs)` summed over successful attempts — the per-row rate
+    /// estimate the straggler threshold is scaled from.
+    ok_rate: Mutex<(u64, u64)>,
+    /// One slot per endpoint: the attempt currently in flight there.
+    flights: Mutex<Vec<Option<Flight>>>,
+    /// Workers still running; the monitor exits when this hits zero.
+    alive: AtomicUsize,
 }
 
 /// Run `spec` across `endpoints` and merge the streams. See the module
@@ -289,34 +388,63 @@ pub fn run_sharded(
     } else {
         (2 * endpoints.len()).max(1)
     };
-    let shards = split_spec(spec, target);
+    let plan: Vec<(Shard, Option<usize>)> = match opts.weights {
+        Weights::Uniform => split_spec(spec, target).into_iter().map(|s| (s, None)).collect(),
+        Weights::Auto if endpoints.is_empty() => {
+            split_spec(spec, target).into_iter().map(|s| (s, None)).collect()
+        }
+        Weights::Auto => {
+            let w = probe_weights(endpoints, opts);
+            if opts.progress {
+                let pretty: Vec<String> = endpoints
+                    .iter()
+                    .zip(&w)
+                    .map(|(ep, w)| format!("{ep}={w:.3}"))
+                    .collect();
+                eprintln!("sat shard: capacity weights [{}]", pretty.join(", "));
+            }
+            weighted_plan(spec, total, target, &w)
+        }
+    };
+    let shards: Vec<Shard> = plan.iter().map(|(s, _)| s.clone()).collect();
     let shared = Shared {
         pending: AtomicUsize::new(shards.len()),
         queue: Mutex::new(
-            shards
-                .iter()
+            plan.iter()
                 .enumerate()
-                .map(|(i, _)| Job {
+                .map(|(i, (_, preferred))| Job {
                     shard_idx: i,
                     attempt: 0,
                     not_before: t0,
                     last_ep: None,
+                    preferred: *preferred,
+                    split_child: false,
                 })
                 .collect(),
         ),
         merger: Mutex::new(Merger::new(total)),
         eps: endpoints.iter().map(|_| EpState::default()).collect(),
-        shards,
+        shards: RwLock::new(shards),
         retries: AtomicU64::new(0),
         redispatches: AtomicU64::new(0),
+        splits: AtomicU64::new(0),
+        readmissions: AtomicU64::new(0),
         attempt_us: Mutex::new(Vec::new()),
+        ok_rate: Mutex::new((0, 0)),
+        flights: Mutex::new(endpoints.iter().map(|_| None).collect()),
+        alive: AtomicUsize::new(endpoints.len()),
     };
     if !endpoints.is_empty() {
         thread::scope(|s| {
             for (i, ep) in endpoints.iter().enumerate() {
                 let shared = &shared;
-                s.spawn(move || worker(shared, i, ep, opts));
+                s.spawn(move || {
+                    worker(shared, i, ep, opts);
+                    shared.alive.fetch_sub(1, Ordering::SeqCst);
+                });
             }
+            let shared = &shared;
+            s.spawn(move || straggler_monitor(shared, endpoints, opts));
         });
     }
     // Local fallback: whatever the endpoints could not finish —
@@ -325,7 +453,11 @@ pub fn run_sharded(
     // are kept; the replays dedupe against them.
     let mut local_shards = 0usize;
     let caches = SweepCaches::new();
-    for shard in &shared.shards {
+    // Snapshot: the monitor is gone once the scope closes, so the
+    // shard list is final; cloning avoids holding the lock across
+    // in-process sweeps.
+    let all_shards: Vec<Shard> = shared.shards.read().unwrap().clone();
+    for shard in &all_shards {
         if !shared.merger.lock().unwrap().missing_in(shard.offset, shard.len) {
             continue;
         }
@@ -365,11 +497,13 @@ pub fn run_sharded(
         .collect();
     Ok(ShardOutcome {
         rows,
-        shards: shared.shards.len(),
+        shards: all_shards.len(),
         retries: shared.retries.load(Ordering::Relaxed),
         redispatches: shared.redispatches.load(Ordering::Relaxed),
         rows_recovered: merger.recovered,
         duplicates_suppressed: merger.duplicates,
+        splits: shared.splits.load(Ordering::Relaxed),
+        readmissions: shared.readmissions.load(Ordering::Relaxed),
         local_shards,
         per_endpoint,
         attempt_ms: shared
@@ -383,21 +517,61 @@ pub fn run_sharded(
     })
 }
 
-/// One endpoint's worker: pull ready jobs until nothing is pending or
-/// this endpoint's circuit opens.
+/// One endpoint's worker: pull ready jobs until nothing is pending.
+/// The worker owns its endpoint's [`Breaker`]; a tripped circuit
+/// half-opens after the probe interval and a successful `status` probe
+/// re-admits the endpoint mid-run. With probing disabled (interval 0)
+/// a trip ends the worker — the PR 8 behavior.
 fn worker(shared: &Shared, ep_idx: usize, endpoint: &Endpoint, opts: &ShardOpts) {
     let st = &shared.eps[ep_idx];
+    let born = Instant::now();
+    let now_ms = || born.elapsed().as_millis().min(u128::from(u64::MAX)) as u64;
+    let mut breaker = Breaker::new(opts.breaker, opts.probe_interval_ms, opts.seed, ep_idx as u64);
     while shared.pending.load(Ordering::SeqCst) > 0 {
-        if st.open.load(Ordering::SeqCst) {
-            return;
+        match breaker.poll(now_ms()) {
+            BreakerAction::Admit => {}
+            BreakerAction::Wait => {
+                if opts.probe_interval_ms == 0 {
+                    // Half-open disabled: an open circuit is final.
+                    return;
+                }
+                if shared.eps.iter().all(|e| e.open.load(Ordering::SeqCst)) {
+                    // Every circuit is open, so nothing can dispatch or
+                    // re-split; stop waiting and let the local fallback
+                    // own the rest instead of probing a dead fleet.
+                    return;
+                }
+                thread::sleep(Duration::from_millis(2));
+                continue;
+            }
+            BreakerAction::Probe => {
+                let ok = query_status(
+                    endpoint,
+                    ep_idx,
+                    Duration::from_millis(opts.timeout_ms.clamp(1, 2_000)),
+                )
+                .is_ok();
+                breaker.on_probe(ok, now_ms());
+                st.open.store(breaker.is_open(), Ordering::SeqCst);
+                if ok {
+                    shared.readmissions.fetch_add(1, Ordering::Relaxed);
+                    if opts.progress {
+                        eprintln!("sat shard: {endpoint} re-admitted by half-open probe");
+                    }
+                }
+                continue;
+            }
         }
         let job = {
             let mut q = shared.queue.lock().unwrap();
             let now = Instant::now();
-            match q.iter().position(|j| j.not_before <= now) {
-                Some(p) => q.remove(p),
-                None => None,
-            }
+            // Soft affinity: take a job planned for this endpoint if
+            // one is ready, otherwise steal any ready job.
+            let pos = q
+                .iter()
+                .position(|j| j.not_before <= now && j.preferred == Some(ep_idx))
+                .or_else(|| q.iter().position(|j| j.not_before <= now));
+            pos.and_then(|p| q.remove(p))
         };
         let Some(job) = job else {
             // Backing-off jobs or another worker's in-flight shard.
@@ -411,25 +585,34 @@ fn worker(shared: &Shared, ep_idx: usize, endpoint: &Endpoint, opts: &ShardOpts)
             }
         }
         st.attempts.fetch_add(1, Ordering::Relaxed);
+        let shard = shared.shards.read().unwrap()[job.shard_idx].clone();
+        shared.flights.lock().unwrap()[ep_idx] = Some(Flight {
+            shard_idx: job.shard_idx,
+            started: Instant::now(),
+            split: false,
+        });
         let t0 = Instant::now();
-        let res = fetch_shard(endpoint, &shared.shards[job.shard_idx], &job, opts, shared);
-        shared
-            .attempt_us
-            .lock()
-            .unwrap()
-            .push(t0.elapsed().as_micros().min(u128::from(u64::MAX)) as u64);
+        let res = fetch_shard(endpoint, &shard, &job, opts, shared);
+        let elapsed_us = t0.elapsed().as_micros().min(u128::from(u64::MAX)) as u64;
+        shared.flights.lock().unwrap()[ep_idx] = None;
+        shared.attempt_us.lock().unwrap().push(elapsed_us);
         match res {
             Ok(new_rows) => {
                 st.rows.fetch_add(new_rows, Ordering::Relaxed);
-                st.consecutive.store(0, Ordering::Relaxed);
+                breaker.on_success();
+                st.open.store(false, Ordering::SeqCst);
+                {
+                    // Feed the straggler threshold's per-row estimate.
+                    let mut rate = shared.ok_rate.lock().unwrap();
+                    rate.0 += shard.len as u64;
+                    rate.1 += elapsed_us;
+                }
                 shared.pending.fetch_sub(1, Ordering::SeqCst);
             }
             Err(msg) => {
                 st.failures.fetch_add(1, Ordering::Relaxed);
-                let streak = st.consecutive.fetch_add(1, Ordering::Relaxed) + 1;
-                if streak >= opts.breaker {
-                    st.open.store(true, Ordering::SeqCst);
-                }
+                breaker.on_failure(now_ms());
+                st.open.store(breaker.is_open(), Ordering::SeqCst);
                 if opts.progress {
                     eprintln!(
                         "sat shard: {endpoint} shard {} attempt {}: {msg}",
@@ -454,11 +637,200 @@ fn worker(shared: &Shared, ep_idx: usize, endpoint: &Endpoint, opts: &ShardOpts)
                         attempt: next_attempt,
                         not_before: Instant::now() + Duration::from_millis(delay),
                         last_ep: Some(ep_idx),
+                        preferred: job.preferred,
+                        split_child: job.split_child,
                     });
                 }
             }
         }
     }
+}
+
+/// Watch in-flight attempts and re-split stragglers. The expected
+/// duration of a shard is scaled from the per-row rate completed
+/// attempts establish (floored at 10 ms so cold starts are not
+/// stampeded); an attempt older than `straggler_factor ×` that has its
+/// undelivered tail [`resplit`] and redispatched to the healthy
+/// endpoints with the best completion rates. The original attempt is
+/// left running — whichever side delivers a row first wins, and the
+/// byte-checked merge suppresses the loser's replays.
+fn straggler_monitor(shared: &Shared, endpoints: &[Endpoint], opts: &ShardOpts) {
+    if opts.straggler_factor <= 0.0 || opts.max_splits == 0 {
+        return;
+    }
+    while shared.pending.load(Ordering::SeqCst) > 0 && shared.alive.load(Ordering::SeqCst) > 0 {
+        thread::sleep(Duration::from_millis(5));
+        if shared.splits.load(Ordering::Relaxed) >= opts.max_splits as u64 {
+            return;
+        }
+        let (ok_rows, ok_us) = *shared.ok_rate.lock().unwrap();
+        if ok_rows == 0 {
+            // No completed attempt yet: no rate to judge against.
+            continue;
+        }
+        let per_row_us = ok_us / ok_rows;
+        for ep_idx in 0..endpoints.len() {
+            let flight = {
+                let flights = shared.flights.lock().unwrap();
+                match &flights[ep_idx] {
+                    Some(f) if !f.split => Some((f.shard_idx, f.started)),
+                    _ => None,
+                }
+            };
+            let Some((shard_idx, started)) = flight else {
+                continue;
+            };
+            // Re-splitting only helps if someone else can take the tail.
+            let mut healthy: Vec<usize> = (0..endpoints.len())
+                .filter(|&h| h != ep_idx && !shared.eps[h].open.load(Ordering::SeqCst))
+                .collect();
+            if healthy.is_empty() {
+                continue;
+            }
+            let shard = shared.shards.read().unwrap()[shard_idx].clone();
+            let expected_us = per_row_us.saturating_mul(shard.len as u64).max(10_000);
+            let elapsed_us = started.elapsed().as_micros().min(u128::from(u64::MAX)) as u64;
+            if elapsed_us as f64 <= opts.straggler_factor * expected_us as f64 {
+                continue;
+            }
+            let delivered = {
+                let m = shared.merger.lock().unwrap();
+                m.delivered_prefix(shard.offset, shard.len)
+            };
+            let children = resplit(&shard, delivered, healthy.len());
+            if children.is_empty() {
+                continue;
+            }
+            {
+                // Mark the flight before queueing so one straggling
+                // attempt is never split twice; skip if the attempt
+                // ended (or was replaced) while we were measuring.
+                let mut flights = shared.flights.lock().unwrap();
+                match flights[ep_idx].as_mut() {
+                    Some(f) if f.shard_idx == shard_idx && !f.split => f.split = true,
+                    _ => continue,
+                }
+            }
+            // Completion-rate re-weighting: hand tail pieces to the
+            // healthy endpoints that have delivered the most rows.
+            healthy.sort_by_key(|&h| std::cmp::Reverse(shared.eps[h].rows.load(Ordering::Relaxed)));
+            if opts.progress {
+                eprintln!(
+                    "sat shard: {} straggling on shard {} ({} of {} rows after {} ms); \
+                     re-splitting the tail into {} piece(s)",
+                    endpoints[ep_idx],
+                    shard.id,
+                    delivered,
+                    shard.len,
+                    elapsed_us / 1_000,
+                    children.len()
+                );
+            }
+            let mut shards_w = shared.shards.write().unwrap();
+            let mut q = shared.queue.lock().unwrap();
+            for (k, mut child) in children.into_iter().enumerate() {
+                child.id = shards_w.len();
+                let idx = shards_w.len();
+                shards_w.push(child);
+                shared.pending.fetch_add(1, Ordering::SeqCst);
+                q.push_back(Job {
+                    shard_idx: idx,
+                    attempt: 0,
+                    not_before: Instant::now(),
+                    last_ep: None,
+                    preferred: Some(healthy[k % healthy.len()]),
+                    split_child: true,
+                });
+            }
+            shared.splits.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// One parallel `status` round against the fleet; an endpoint's weight
+/// is the reciprocal of its measured round-trip (dead endpoints weigh
+/// 0 and are planned around entirely).
+fn probe_weights(endpoints: &[Endpoint], opts: &ShardOpts) -> Vec<f64> {
+    let timeout = Duration::from_millis(opts.timeout_ms.clamp(1, 2_000));
+    let mut weights = vec![0.0f64; endpoints.len()];
+    thread::scope(|s| {
+        for (i, (ep, w)) in endpoints.iter().zip(weights.iter_mut()).enumerate() {
+            s.spawn(move || {
+                let t0 = Instant::now();
+                if query_status(ep, i, timeout).is_ok() {
+                    *w = 1e6 / t0.elapsed().as_micros().max(1) as f64;
+                }
+            });
+        }
+    });
+    weights
+}
+
+/// Cut the grid into per-endpoint spans proportioned to `weights`
+/// (largest-remainder quotas summing exactly to `total`), then cut each
+/// span into its share of the `target` shard count via [`split_range`].
+/// Every shard carries a soft affinity for its endpoint. Falls back to
+/// the uniform plan when no endpoint carries weight.
+fn weighted_plan(
+    spec: &SweepSpec,
+    total: usize,
+    target: usize,
+    weights: &[f64],
+) -> Vec<(Shard, Option<usize>)> {
+    let sum: f64 = weights.iter().sum();
+    if !(sum > 0.0) {
+        return split_spec(spec, target).into_iter().map(|s| (s, None)).collect();
+    }
+    let n = weights.len();
+    let mut quota = vec![0usize; n];
+    let mut rem: Vec<(f64, usize)> = Vec::with_capacity(n);
+    let mut assigned = 0usize;
+    for (i, &w) in weights.iter().enumerate() {
+        let exact = total as f64 * w / sum;
+        let q = exact.floor() as usize;
+        quota[i] = q;
+        assigned += q;
+        rem.push((exact - q as f64, i));
+    }
+    // Ties break by index so the plan is deterministic.
+    rem.sort_by(|a, b| {
+        b.0.partial_cmp(&a.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.1.cmp(&b.1))
+    });
+    let mut k = 0usize;
+    while assigned < total {
+        quota[rem[k % n].1] += 1;
+        assigned += 1;
+        k += 1;
+    }
+    let mut out: Vec<(Shard, Option<usize>)> = Vec::new();
+    let mut pos = 0usize;
+    for (i, &q) in quota.iter().enumerate() {
+        if q == 0 {
+            continue;
+        }
+        // This endpoint's proportionate slice of the shard budget.
+        let pieces = ((target * q + total / 2) / total).max(1);
+        let base = q / pieces;
+        let extra = q % pieces;
+        let mut lo = pos;
+        for p in 0..pieces {
+            let len = base + usize::from(p < extra);
+            if len == 0 {
+                continue;
+            }
+            for s in split_range(spec, lo, lo + len) {
+                out.push((s, Some(i)));
+            }
+            lo += len;
+        }
+        pos += q;
+    }
+    for (idx, (s, _)) in out.iter_mut().enumerate() {
+        s.id = idx;
+    }
+    out
 }
 
 /// One remote attempt: connect, send the shard's sweep request, record
@@ -509,7 +881,7 @@ fn fetch_shard(
                 let raw =
                     protocol::raw_result(&line).ok_or("row line carries no valid result")?;
                 let mut m = shared.merger.lock().unwrap();
-                if m.record(shard.offset + local, raw, job.attempt > 0)? {
+                if m.record(shard.offset + local, raw, job.attempt > 0 || job.split_child)? {
                     new_rows += 1;
                 }
             }
@@ -616,6 +988,40 @@ mod tests {
         assert!(m.missing_in(0, 3), "index 2 still empty");
         assert!(m.record(2, "{}", false).unwrap());
         assert!(!m.missing_in(0, 3));
+    }
+
+    #[test]
+    fn weighted_plan_partitions_the_grid_and_skips_dead_endpoints() {
+        use crate::nm::{Method, NmPattern};
+        let spec = SweepSpec {
+            models: vec!["resnet9".into()],
+            methods: vec![Method::Dense, Method::Bdwp],
+            patterns: vec![NmPattern::P2_8],
+            bandwidths: vec![25.6, 51.2, 102.4, 409.6],
+            jobs: 1,
+            ..SweepSpec::default()
+        };
+        let total = spec.expand().unwrap().len();
+        assert_eq!(total, 8);
+        let plan = weighted_plan(&spec, total, 4, &[3.0, 0.0, 1.0]);
+        let mut seen = vec![0u32; total];
+        for (s, pref) in &plan {
+            assert_ne!(*pref, Some(1), "a dead endpoint gets no shards");
+            assert_eq!(s.spec.expand().unwrap().len(), s.len, "shard spec matches its len");
+            for i in s.offset..s.offset + s.len {
+                seen[i] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "exact cover: {seen:?}");
+        let rows_for = |e: usize| -> usize {
+            plan.iter().filter(|(_, p)| *p == Some(e)).map(|(s, _)| s.len).sum()
+        };
+        assert_eq!(rows_for(0), 6, "weight 3 of 4 → 6 of 8 rows");
+        assert_eq!(rows_for(2), 2, "weight 1 of 4 → 2 of 8 rows");
+        // With no live endpoint the plan falls back to uniform, unpinned.
+        let fallback = weighted_plan(&spec, total, 4, &[0.0, 0.0]);
+        assert!(fallback.iter().all(|(_, p)| p.is_none()));
+        assert_eq!(fallback.iter().map(|(s, _)| s.len).sum::<usize>(), total);
     }
 
     #[test]

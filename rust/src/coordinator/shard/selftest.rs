@@ -2,16 +2,24 @@
 //!
 //! Spins several in-process `sat serve` servers, points the shard
 //! runner at them, and injects deterministic faults (connection drops
-//! mid-stream, delayed responses, garbled row lines) through the
-//! servers' [`FaultPlan`]s. The headline assertion is byte parity: the
-//! merged output of every phase — clean, under chaos, and with every
-//! endpoint dead — must be byte-identical to the fault-free one-shot
-//! `sat sweep` sink, with zero lost and zero duplicated rows
-//! (`--max-row-loss 0` is the default and CI's setting).
+//! mid-stream, delayed responses, garbled row lines, mid-stream
+//! stalls) through the servers' [`FaultPlan`]s. The headline assertion
+//! is byte parity: the merged output of every phase — clean, under
+//! chaos, with a stalling straggler, and with every endpoint dead —
+//! must be byte-identical to the fault-free one-shot `sat sweep` sink,
+//! with zero lost and zero duplicated rows (`--max-row-loss 0` is the
+//! default and CI's setting).
+//!
+//! The straggler phase additionally gates on the adaptive machinery:
+//! the stalled endpoint must provoke at least one straggler re-split
+//! and at least one half-open re-admission. A final compare-parity leg
+//! checks that `sat shard --mode compare` against live servers emits
+//! bytes identical to the local `sat compare --out` assembly.
 //!
 //! Emits a bench-diff-schema `BENCH_shard_selftest.json` (retries,
-//! redispatches, rows recovered, attempt p50/p99) so the `shard-chaos`
-//! CI job can self-diff and archive the run.
+//! redispatches, rows recovered, splits, readmissions, attempt
+//! p50/p99) so the `shard-chaos` CI job can self-diff and archive the
+//! run.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -95,7 +103,34 @@ pub fn run(opts: &ShardSelftestOpts) -> anyhow::Result<()> {
         &shard_opts,
     )?);
 
-    // Phase 3 — dead: every endpoint is a bound-then-closed port, so
+    // Phase 3 — straggler: one server accepts every sweep request,
+    // streams half the rows, then goes silent for 60 s without closing
+    // (far past the 700 ms deadline); two servers are healthy. The
+    // stalled shard must be detected by progress (not just the hard
+    // deadline), its undelivered tail re-split to the healthy
+    // endpoints, and — once the deadline failure trips the 1-failure
+    // breaker — a half-open `status` probe (fault-exempt, like every
+    // control request) must re-admit the endpoint. The generous retry
+    // backoff keeps the requeued shard in the queue long enough that
+    // the re-admission deterministically lands while work remains.
+    let straggler_opts = ShardOpts {
+        timeout_ms: 700,
+        backoff_ms: 150,
+        backoff_max_ms: 150,
+        breaker: 1,
+        straggler_factor: 2.0,
+        probe_interval_ms: 1,
+        seed: 0x5eed,
+        ..ShardOpts::default()
+    };
+    phases.push(run_phase(
+        "straggler",
+        &spec,
+        &[Some("stall@1:60000"), None, None],
+        &straggler_opts,
+    )?);
+
+    // Phase 4 — dead: every endpoint is a bound-then-closed port, so
     // no remote attempt ever succeeds and the whole grid degrades to
     // local execution. Also keeps this phase's wall time tiny.
     let dead: Vec<Endpoint> = (0..2)
@@ -114,8 +149,8 @@ pub fn run(opts: &ShardSelftestOpts) -> anyhow::Result<()> {
     });
 
     let mut table = Table::new("shard selftest").header(&[
-        "phase", "eps", "shards", "rows", "wall ms", "retries", "redisp", "recovered", "dups",
-        "local", "p99 ms",
+        "phase", "eps", "shards", "rows", "wall ms", "retries", "redisp", "splits", "readm",
+        "recovered", "dups", "local", "p99 ms",
     ]);
     for p in &phases {
         let o = &p.outcome;
@@ -127,6 +162,8 @@ pub fn run(opts: &ShardSelftestOpts) -> anyhow::Result<()> {
             format!("{:.1}", o.wall_ms),
             o.retries.to_string(),
             o.redispatches.to_string(),
+            o.splits.to_string(),
+            o.readmissions.to_string(),
             o.rows_recovered.to_string(),
             o.duplicates_suppressed.to_string(),
             o.local_shards.to_string(),
@@ -162,13 +199,75 @@ pub fn run(opts: &ShardSelftestOpts) -> anyhow::Result<()> {
         // every shard; worth a note, not a failure.
         eprintln!("[shard-selftest] note: chaos phase saw no retries");
     }
+    // The adaptive gates: the stall phase must exercise the straggler
+    // and half-open machinery, not merely survive it.
+    let strag = &phases[2].outcome;
+    ensure!(
+        strag.splits >= 1,
+        "straggler phase produced no re-split — the stalled shard was never detected"
+    );
+    ensure!(
+        strag.readmissions >= 1,
+        "straggler phase produced no half-open re-admission — the tripped circuit never recovered"
+    );
+
+    compare_parity_leg(opts.quick)?;
+
     eprintln!(
         "[shard-selftest] OK: all {} phases byte-identical to the one-shot sink \
-         ({} retries, {} redispatches, {} rows recovered under chaos)",
+         ({} retries, {} redispatches, {} rows recovered under chaos; \
+         {} split(s), {} readmission(s) under stall)",
         phases.len(),
         chaos.retries,
         chaos.redispatches,
-        chaos.rows_recovered
+        chaos.rows_recovered,
+        strag.splits,
+        strag.readmissions
+    );
+    Ok(())
+}
+
+/// The sharded-compare parity leg: two clean in-process servers, one
+/// `--mode compare` run against them, byte-diffed against the local
+/// `sat compare --out` assembly. Training is deterministic, so any
+/// byte difference means the two paths diverged.
+fn compare_parity_leg(quick: bool) -> anyhow::Result<()> {
+    use crate::coordinator::serve::{compare_result_json, train_result_json, TrainRequest};
+
+    use super::trainjobs::run_sharded_compare;
+
+    let steps = if quick { 2 } else { 4 };
+    let base = TrainRequest::build("mlp", Method::Bdwp, NmPattern::P2_8, steps, None, 0, 1)
+        .map_err(|e| anyhow!(e))?;
+    let expected =
+        compare_result_json(&base, &mut |r| train_result_json(r)).map_err(|e| anyhow!(e))?;
+    let mut handles = Vec::new();
+    let mut endpoints = Vec::new();
+    for _ in 0..2 {
+        let core = Arc::new(ServeCore::with_fault_plan(None));
+        let handle = spawn_tcp(core, "127.0.0.1:0")?;
+        endpoints.push(Endpoint::Tcp(handle.addr().to_string()));
+        handles.push(handle);
+    }
+    let shard_opts = ShardOpts {
+        timeout_ms: 30_000,
+        ..ShardOpts::default()
+    };
+    let out = run_sharded_compare(&base, &endpoints, &shard_opts);
+    for (ep, handle) in endpoints.iter().zip(handles) {
+        shutdown_server(ep)?;
+        handle.join()?;
+    }
+    let out = out?;
+    ensure!(out.remote_ok > 0, "compare parity leg never reached a server");
+    ensure!(
+        out.result == expected,
+        "sharded compare is not byte-identical to the local `sat compare --out` assembly"
+    );
+    eprintln!(
+        "[shard-selftest] compare parity: {} bytes byte-identical across {} remote leg(s)",
+        expected.len(),
+        out.remote_ok
     );
     Ok(())
 }
@@ -243,12 +342,15 @@ fn report_json(opts: &ShardSelftestOpts, phases: &[PhaseResult], grid: usize) ->
     let mut all_lat: Vec<f64> = Vec::new();
     let (mut retries, mut redisp, mut recovered, mut wall_ms, mut merged) =
         (0u64, 0u64, 0u64, 0.0f64, 0u64);
+    let (mut splits, mut readmissions) = (0u64, 0u64);
     for p in phases {
         let o = &p.outcome;
         all_lat.extend_from_slice(&o.attempt_ms);
         retries += o.retries;
         redisp += o.redispatches;
         recovered += o.rows_recovered;
+        splits += o.splits;
+        readmissions += o.readmissions;
         wall_ms += o.wall_ms;
         merged += o.rows.len() as u64;
     }
@@ -274,6 +376,8 @@ fn report_json(opts: &ShardSelftestOpts, phases: &[PhaseResult], grid: usize) ->
             .field_u64("retries", retries)
             .field_u64("redispatches", redisp)
             .field_u64("rows_recovered", recovered)
+            .field_u64("splits", splits)
+            .field_u64("readmissions", readmissions)
             .field_f64("p50_ms", percentile(&all_lat, 50.0))
             .field_f64("p99_ms", percentile(&all_lat, 99.0))
             .finish(),
@@ -289,6 +393,8 @@ fn report_json(opts: &ShardSelftestOpts, phases: &[PhaseResult], grid: usize) ->
                 .field_u64("retries", retries)
                 .field_u64("redispatches", redisp)
                 .field_u64("rows_recovered", recovered)
+                .field_u64("splits", splits)
+                .field_u64("readmissions", readmissions)
                 .finish(),
         )
         .field_raw("results", &json::array(rows))
@@ -318,6 +424,8 @@ fn phase_row(p: &PhaseResult) -> String {
         .field_u64("retries", o.retries)
         .field_u64("redispatches", o.redispatches)
         .field_u64("rows_recovered", o.rows_recovered)
+        .field_u64("splits", o.splits)
+        .field_u64("readmissions", o.readmissions)
         .field_f64("p50_ms", percentile(&o.attempt_ms, 50.0))
         .field_f64("p99_ms", percentile(&o.attempt_ms, 99.0))
         .finish()
@@ -338,6 +446,8 @@ mod tests {
                 redispatches: 2,
                 rows_recovered: 5,
                 duplicates_suppressed: 1,
+                splits: 1,
+                readmissions: 1,
                 local_shards: 0,
                 per_endpoint: Vec::new(),
                 attempt_ms: vec![1.0, 2.0, 8.0],
@@ -356,7 +466,14 @@ mod tests {
         let doc = report_json(&opts, &[fake_phase("clean"), fake_phase("chaos")], 16);
         // Self-diff must work for the robustness metrics with no
         // schema special-casing — the shard-chaos CI job relies on it.
-        for metric in ["retries", "redispatches", "rows_recovered", "p99_ms"] {
+        for metric in [
+            "retries",
+            "redispatches",
+            "rows_recovered",
+            "splits",
+            "readmissions",
+            "p99_ms",
+        ] {
             let diff = crate::coordinator::benchdiff::diff_texts(&doc, &doc, metric).unwrap();
             assert_eq!(diff.rows.len(), 3, "{metric}");
             assert_eq!(diff.max_regression_pct(), 0.0, "{metric}");

@@ -1,0 +1,244 @@
+//! Sharded `train` and `compare`: the serve fleet's other two request
+//! kinds, routed with the same failover discipline as sweep shards.
+//!
+//! Training is deterministic — the result document carries the final
+//! loss's exact bit pattern — which buys two things:
+//!
+//! * **Replica-voted training** ([`run_sharded_train`]): the same
+//!   request is dispatched to up to two endpoints and the answers must
+//!   be byte-identical, the cross-host analogue of the sweep merger's
+//!   byte-checked duplicate suppression. Disagreement is a hard error,
+//!   never a silent pick.
+//! * **Byte-parity compare** ([`run_sharded_compare`]): the panel is
+//!   assembled by [`compare_result_json`] around per-method `train`
+//!   requests resolved remotely with per-endpoint failover; the local
+//!   `sat compare --out` path assembles the same document around
+//!   [`train_result_json`], so the two outputs are byte-identical by
+//!   construction.
+//!
+//! Either entry point falls back to local execution when every
+//! endpoint fails, mirroring the sweep runner's contract: a sharded
+//! run only errors when local execution also fails.
+
+use std::time::{Duration, Instant};
+
+use anyhow::anyhow;
+
+use crate::coordinator::serve::protocol::{self, Cmd, Request, TrainRequest};
+use crate::coordinator::serve::state::{compare_result_json, train_result_json};
+use crate::util::json::Value;
+
+use super::endpoint::Endpoint;
+use super::runner::ShardOpts;
+
+/// A completed sharded train or compare run.
+#[derive(Clone, Debug)]
+pub struct TrainShardOutcome {
+    /// The result document (train result, or the compare panel).
+    pub result: String,
+    /// Remote requests that answered successfully.
+    pub remote_ok: u64,
+    /// Remote requests that failed (connect, deadline, or error line).
+    pub remote_failed: u64,
+    /// Byte-identical replica answers backing the result (train only;
+    /// compare legs are single-answer with failover).
+    pub votes: u64,
+    /// Some leg fell back to in-process execution.
+    pub local: bool,
+}
+
+impl TrainShardOutcome {
+    /// One-line stderr summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} remote ok, {} remote failure(s), {} vote(s){}",
+            self.remote_ok,
+            self.remote_failed,
+            self.votes,
+            if self.local { ", local fallback" } else { "" }
+        )
+    }
+}
+
+/// Dispatch one `train` request across the fleet and replica-vote the
+/// answer: up to two endpoints must return byte-identical documents.
+/// One healthy endpoint means one vote; zero means local execution.
+pub fn run_sharded_train(
+    req: &TrainRequest,
+    endpoints: &[Endpoint],
+    opts: &ShardOpts,
+) -> anyhow::Result<TrainShardOutcome> {
+    let want = endpoints.len().min(2).max(1);
+    let mut answers: Vec<String> = Vec::new();
+    let (mut ok, mut failed) = (0u64, 0u64);
+    for (i, ep) in endpoints.iter().enumerate() {
+        if answers.len() >= want {
+            break;
+        }
+        match fetch_train(ep, req, i, 0, opts) {
+            Ok(doc) => {
+                ok += 1;
+                if let Some(prev) = answers.first() {
+                    if prev != &doc {
+                        return Err(anyhow!(
+                            "replica vote failed: {ep} disagrees byte-for-byte with an earlier \
+                             endpoint on the same train request"
+                        ));
+                    }
+                }
+                answers.push(doc);
+            }
+            Err(e) => {
+                failed += 1;
+                if opts.progress {
+                    eprintln!("sat shard: {ep} train attempt: {e}");
+                }
+            }
+        }
+    }
+    let votes = answers.len() as u64;
+    let (result, local) = match answers.into_iter().next() {
+        Some(doc) => (doc, false),
+        None => (train_result_json(req).map_err(|e| anyhow!(e))?, true),
+    };
+    Ok(TrainShardOutcome {
+        result,
+        remote_ok: ok,
+        remote_failed: failed,
+        votes,
+        local,
+    })
+}
+
+/// Assemble the compare panel by resolving each method's `train`
+/// request remotely, walking the fleet until one endpoint answers.
+/// Legs that exhaust every endpoint run locally — identical bytes
+/// either way, so a partially-degraded fleet still yields the exact
+/// `sat compare --out` document.
+pub fn run_sharded_compare(
+    base: &TrainRequest,
+    endpoints: &[Endpoint],
+    opts: &ShardOpts,
+) -> anyhow::Result<TrainShardOutcome> {
+    let (mut ok, mut failed) = (0u64, 0u64);
+    let mut local = false;
+    let mut leg = 0usize;
+    let result = compare_result_json(base, &mut |req| {
+        let this_leg = leg;
+        leg += 1;
+        // Start each leg on a different endpoint so the panel spreads
+        // over the fleet instead of hammering endpoint 0.
+        let n = endpoints.len();
+        for k in 0..n {
+            let i = (this_leg + k) % n;
+            match fetch_train(&endpoints[i], req, i, this_leg, opts) {
+                Ok(doc) => {
+                    ok += 1;
+                    return Ok(doc);
+                }
+                Err(e) => {
+                    failed += 1;
+                    if opts.progress {
+                        eprintln!(
+                            "sat shard: {} compare leg {this_leg}: {e}",
+                            endpoints[i]
+                        );
+                    }
+                }
+            }
+        }
+        local = true;
+        train_result_json(req)
+    })
+    .map_err(|e| anyhow!(e))?;
+    Ok(TrainShardOutcome {
+        result,
+        remote_ok: ok,
+        remote_failed: failed,
+        votes: 0,
+        local: local || endpoints.is_empty(),
+    })
+}
+
+/// One remote `train` attempt: connect, send, and read to the `train`
+/// response line inside the shard deadline. The request id
+/// `t<leg>e<endpoint>` is deterministic for reproducible fault plans.
+fn fetch_train(
+    ep: &Endpoint,
+    req: &TrainRequest,
+    ep_idx: usize,
+    leg: usize,
+    opts: &ShardOpts,
+) -> Result<String, String> {
+    let deadline = Instant::now() + Duration::from_millis(opts.timeout_ms);
+    let mut conn = ep
+        .connect(Duration::from_millis(opts.timeout_ms.clamp(1, 2_000)))
+        .map_err(|e| format!("connect: {e}"))?;
+    let req_id = format!("t{leg}e{ep_idx}");
+    let wire = Request {
+        id: req_id.clone(),
+        cmd: Cmd::Train(req.clone()),
+    };
+    conn.send_line(&wire.to_line()).map_err(|e| format!("send: {e}"))?;
+    loop {
+        let line = conn.read_line(deadline).map_err(|e| format!("read: {e}"))?;
+        if line.is_empty() {
+            continue;
+        }
+        let resp =
+            protocol::parse_response(&line).map_err(|e| format!("bad response line: {e}"))?;
+        if resp.id != req_id {
+            return Err(format!(
+                "response id {:?} does not match request {req_id:?}",
+                resp.id
+            ));
+        }
+        match resp.kind.as_str() {
+            "train" => {
+                return protocol::raw_result(&line)
+                    .map(str::to_string)
+                    .ok_or_else(|| "train line carries no valid result".to_string());
+            }
+            "error" => {
+                let msg = resp
+                    .body
+                    .get("error")
+                    .and_then(Value::as_str)
+                    .unwrap_or("unknown server error");
+                return Err(format!("server error: {msg}"));
+            }
+            other => return Err(format!("unexpected response kind {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nm::{Method, NmPattern};
+
+    fn tiny_req() -> TrainRequest {
+        TrainRequest::build("mlp", Method::Bdwp, NmPattern::P2_8, 2, None, 0, 1)
+            .expect("mlp stand-in is native-trainable")
+    }
+
+    #[test]
+    fn train_with_no_endpoints_degrades_to_local_execution() {
+        let out = run_sharded_train(&tiny_req(), &[], &ShardOpts::default()).unwrap();
+        assert!(out.local);
+        assert_eq!(out.votes, 0);
+        assert_eq!(out.remote_ok, 0);
+        let direct = train_result_json(&tiny_req()).unwrap();
+        assert_eq!(out.result, direct, "local fallback is the one executor");
+    }
+
+    #[test]
+    fn compare_with_no_endpoints_matches_the_local_assembly() {
+        let base = tiny_req();
+        let out = run_sharded_compare(&base, &[], &ShardOpts::default()).unwrap();
+        assert!(out.local);
+        let direct = compare_result_json(&base, &mut |r| train_result_json(r)).unwrap();
+        assert_eq!(out.result, direct, "byte parity by construction");
+        assert!(out.result.contains("\"schema\":\"sat-compare-v1\""));
+    }
+}

@@ -1,8 +1,11 @@
 //! Cross-module property tests: invariants that must hold across the
-//! nm / models / sched / sim / arch boundary, checked over randomized
+//! nm / models / sched / sim / arch / coordinator boundary, checked over randomized
 //! configurations (in-repo testkit; reproduce failures with PROP_SEED).
 
 use sat::arch::{ChipResources, SatConfig};
+use sat::coordinator::shard::backoff::{Breaker, BreakerAction};
+use sat::coordinator::shard::{resplit, Shard};
+use sat::coordinator::sweep::{PointKey, SweepSpec};
 use sat::models::{zoo, Stage};
 use sat::nm::{flops, prune_values, CompactNm, Method, NmPattern, PruneAxis};
 use sat::sched::{rwg_schedule, words};
@@ -361,5 +364,122 @@ fn stage_totals_sum_to_total_cycles() {
         let (ff, bp, wu, other) = r.stage_totals();
         assert_eq!(ff + bp + wu + other, r.total_cycles);
         let _ = Stage::ALL; // doc anchor
+    });
+}
+
+// ---------------------------------------------------------------- shard plans
+
+fn random_sweep_spec(g: &mut Gen) -> SweepSpec {
+    let model_pool = ["resnet9", "tiny_mlp", "tiny_cnn"];
+    SweepSpec {
+        models: model_pool[..g.usize_in(1, model_pool.len())]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        methods: Method::ALL[..g.usize_in(1, Method::ALL.len())].to_vec(),
+        patterns: [NmPattern::P2_4, NmPattern::P2_8][..g.usize_in(1, 2)].to_vec(),
+        arrays: (0..g.usize_in(1, 2)).map(|i| (16 << i, 16)).collect(),
+        bandwidths: [12.8, 25.6, 102.4][..g.usize_in(1, 3)].to_vec(),
+        ..SweepSpec::default()
+    }
+}
+
+#[test]
+fn resplit_partitions_the_undelivered_tail_for_any_shape() {
+    check("resplit partition", 30, |g| {
+        let spec = random_sweep_spec(g);
+        let full = spec.expand().unwrap();
+        let total = full.len();
+        let parent = Shard {
+            id: 7,
+            offset: g.usize_in(0, 96),
+            len: total,
+            spec: spec.clone(),
+        };
+        let delivered = g.usize_in(0, total);
+        let parts = g.usize_in(1, 5);
+        let children = resplit(&parent, delivered, parts);
+        if delivered >= total {
+            assert!(children.is_empty(), "nothing left to resplit");
+            return;
+        }
+        let mut pos = parent.offset + delivered;
+        for (k, c) in children.iter().enumerate() {
+            assert_eq!(c.id, k, "child ids are renumbered from zero");
+            assert_eq!(c.offset, pos, "children are contiguous");
+            let points = c.spec.expand().unwrap();
+            assert_eq!(points.len(), c.len);
+            for (i, p) in points.iter().enumerate() {
+                let f = &full[c.offset - parent.offset + i];
+                assert_eq!(
+                    PointKey::of(&p.model, p.method, p.pattern, &p.sat, &p.mem),
+                    PointKey::of(&f.model, f.method, f.pattern, &f.sat, &f.mem),
+                    "delivered {delivered}, parts {parts}, child {k}, local {i}"
+                );
+            }
+            pos += c.len;
+        }
+        assert_eq!(pos, parent.offset + total, "tail covered exactly once");
+    });
+}
+
+#[test]
+fn breaker_schedules_walk_trip_probe_and_readmission_lawfully() {
+    check("breaker transitions", 40, |g| {
+        let threshold = g.usize_in(1, 4) as u32;
+        let interval = *g.pick(&[0u64, 1, 25, 120]);
+        let mut b =
+            Breaker::new(threshold, interval, g.usize_in(0, 1 << 20) as u64, 11);
+        let mut now = 0u64;
+        let mut streak = 0u32; // failures since the last success / re-admission
+        for _ in 0..80 {
+            now += g.usize_in(1, 64) as u64;
+            match b.poll(now) {
+                BreakerAction::Admit => {
+                    assert!(!b.is_open(), "an open circuit never admits");
+                    if g.bool() {
+                        b.on_success();
+                        streak = 0;
+                        assert!(!b.is_open());
+                    } else {
+                        b.on_failure(now);
+                        streak += 1;
+                        assert_eq!(
+                            b.is_open(),
+                            streak >= threshold,
+                            "trips exactly at the failure threshold"
+                        );
+                    }
+                }
+                BreakerAction::Probe => {
+                    assert!(b.is_open(), "only an open circuit probes");
+                    assert!(interval > 0, "probing is disabled at interval 0");
+                    let ok = g.bool();
+                    b.on_probe(ok, now);
+                    if ok {
+                        streak = 0;
+                        assert!(!b.is_open(), "probe success re-admits");
+                        assert_eq!(b.poll(now), BreakerAction::Admit);
+                    } else {
+                        assert!(b.is_open(), "probe failure re-trips");
+                        assert_eq!(
+                            b.poll(now),
+                            BreakerAction::Wait,
+                            "a re-trip backs off before the next probe"
+                        );
+                    }
+                }
+                BreakerAction::Wait => {
+                    assert!(b.is_open(), "only an open circuit waits");
+                    if interval == 0 {
+                        assert_eq!(
+                            b.poll(now.saturating_add(1 << 40)),
+                            BreakerAction::Wait,
+                            "interval 0 keeps the circuit open forever"
+                        );
+                    }
+                }
+            }
+        }
     });
 }

@@ -1,16 +1,23 @@
 //! End-to-end tests of `sat shard` over real sockets: byte-parity of
 //! the k-way merged stream with the one-shot sink while an endpoint
 //! misbehaves, index-keyed duplicate suppression across redispatched
-//! attempts, local fallback when remote attempts are exhausted, and
-//! the multi-endpoint status aggregator.
+//! attempts, local fallback when remote attempts are exhausted,
+//! straggler re-splitting with half-open breaker re-admission under a
+//! mid-stream stall, sharded train/compare parity, and the
+//! multi-endpoint status aggregator.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
 use std::time::Duration;
 
-use sat::coordinator::serve::{protocol, spawn_tcp, Cmd, FaultPlan, Request, ServeCore, ServerHandle};
-use sat::coordinator::shard::{merged_status, run_sharded, Endpoint, ShardOpts};
+use sat::coordinator::serve::{
+    compare_result_json, protocol, spawn_tcp, train_result_json, Cmd, FaultPlan, Request,
+    ServeCore, ServerHandle,
+};
+use sat::coordinator::shard::{
+    merged_status, run_sharded, run_sharded_compare, run_sharded_train, Endpoint, ShardOpts,
+};
 use sat::coordinator::sweep::{run_sweep, SweepSpec};
 use sat::nm::{Method, NmPattern};
 use sat::util::json::{self, Value};
@@ -184,4 +191,106 @@ fn merged_status_aggregates_live_and_dead_endpoints() {
 
     shutdown(h0);
     shutdown(h1);
+}
+
+#[test]
+fn a_stalled_endpoint_is_resplit_and_readmitted_without_losing_rows() {
+    let spec = spec_16_points();
+    let expected = run_sweep(&spec).expect("one-shot baseline").rows_json();
+
+    // One endpoint streams half of every sweep response and then goes
+    // silent for 60 s without closing; two are healthy. The stall is
+    // far past the 700 ms deadline, so progress-based detection (not
+    // the deadline) must re-split the undelivered tail, and the
+    // deadline failure trips the 1-failure breaker whose half-open
+    // `status` probe (fault-exempt) re-admits the endpoint while the
+    // generous retry backoff keeps work in the queue.
+    let (h0, e0) = start(Some("stall@1:60000"));
+    let (h1, e1) = start(None);
+    let (h2, e2) = start(None);
+    let endpoints = [e0, e1, e2];
+    let opts = ShardOpts {
+        shards: 8,
+        timeout_ms: 700,
+        backoff_ms: 150,
+        backoff_max_ms: 150,
+        breaker: 1,
+        straggler_factor: 2.0,
+        probe_interval_ms: 1,
+        seed: 0x5eed,
+        ..ShardOpts::default()
+    };
+    let outcome = run_sharded(&spec, &endpoints, &opts).expect("sharded run");
+
+    assert_eq!(outcome.rows.len(), 16, "no row lost to the stall");
+    assert_eq!(outcome.rows_json(), expected, "merged bytes == one-shot sink");
+    assert!(
+        outcome.splits >= 1,
+        "the stalled shard's tail must be re-split: {}",
+        outcome.summary()
+    );
+    assert!(
+        outcome.readmissions >= 1,
+        "the tripped circuit must recover through a half-open probe: {}",
+        outcome.summary()
+    );
+
+    shutdown(h0);
+    shutdown(h1);
+    shutdown(h2);
+}
+
+fn tiny_train_request() -> protocol::TrainRequest {
+    protocol::TrainRequest::build("mlp", Method::Bdwp, NmPattern::P2_8, 2, None, 0, 1)
+        .expect("native-trainable request")
+}
+
+#[test]
+fn sharded_train_replica_vote_matches_local_execution() {
+    let req = tiny_train_request();
+    let expected = train_result_json(&req).expect("local baseline");
+
+    let (h0, e0) = start(None);
+    let (h1, e1) = start(None);
+    let opts = ShardOpts {
+        timeout_ms: 30_000,
+        ..ShardOpts::default()
+    };
+    let out = run_sharded_train(&req, &[e0, e1], &opts).expect("sharded train");
+
+    assert_eq!(out.votes, 2, "both replicas answered byte-identically");
+    assert_eq!(out.remote_ok, 2);
+    assert!(!out.local, "no local fallback with a healthy fleet");
+    assert_eq!(out.result, expected, "remote bytes == local executor");
+
+    shutdown(h0);
+    shutdown(h1);
+}
+
+#[test]
+fn sharded_compare_is_byte_identical_to_the_one_shot_assembly() {
+    let base = tiny_train_request();
+    let expected =
+        compare_result_json(&base, &mut |r| train_result_json(r)).expect("local baseline");
+
+    // One healthy endpoint plus one guaranteed-dead port: every leg
+    // must fail over and the panel must still come out byte-identical.
+    let (h0, e0) = start(None);
+    let dead = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        drop(l);
+        Endpoint::Tcp(addr.to_string())
+    };
+    let opts = ShardOpts {
+        timeout_ms: 30_000,
+        ..ShardOpts::default()
+    };
+    let out = run_sharded_compare(&base, &[dead, e0], &opts).expect("sharded compare");
+
+    assert!(out.remote_ok > 0, "the healthy endpoint carried the panel");
+    assert!(!out.local, "failover reached the healthy endpoint");
+    assert_eq!(out.result, expected, "panel bytes == `sat compare --out`");
+
+    shutdown(h0);
 }
