@@ -26,6 +26,14 @@
 //!    `--min-simd-speedup X` turns the dense + spmm f=256 geomeans
 //!    into hard asserts (CI pins 2.0; skipped with a note when only
 //!    the scalar set is available).
+//! 5. **prescan** — the PR 10 zero-block data-side skip: block-
+//!    structured A operands at 0.3/0.5/0.7 block occupancy through
+//!    `par::matmul_blocks_into` (scan cost charged to the prescan side,
+//!    as the auto gate does) vs the dense packed driver, per effective
+//!    block size 8/16/32. Rows carry the measured `data_skip_ratio`.
+//!    Acceptance: `--min-prescan-speedup X` asserts the best-block
+//!    geomean speedup on the f=256 shapes at 50% occupancy (CI pins
+//!    1.2).
 //!
 //! Every timed kernel is parity-asserted against its oracle first.
 //! Emits `BENCH_nm_kernels.json` in the `sat bench-diff` row schema so
@@ -33,7 +41,8 @@
 //!
 //! Run: `cargo bench --bench nm_kernels` (add `-- --quick` for the CI
 //! smoke grid, `-- --out FILE` to change the report path,
-//! `-- --min-simd-speedup X` to gate the kernel-set geomeans).
+//! `-- --min-simd-speedup X` / `-- --min-prescan-speedup X` to gate
+//! the kernel-set and prescan geomeans).
 
 use sat::models::zoo::Model;
 use sat::models::{Layer, LayerKind};
@@ -56,11 +65,13 @@ struct KernelRow {
     workers: usize,
     m: Measurement,
     dense_macs: u64,
+    /// Measured zero-block skip fraction (prescan rows only).
+    skip: Option<f64>,
 }
 
 impl KernelRow {
     fn json(&self) -> String {
-        json::Obj::new()
+        let obj = json::Obj::new()
             .field_str("model", &self.shape)
             .field_str("method", &self.kernel)
             .field_str("pattern", &self.pattern)
@@ -75,8 +86,11 @@ impl KernelRow {
             .field_f64("runtime_gops", {
                 // dense-equivalent throughput, Table IV convention
                 2.0 * self.dense_macs as f64 / self.m.mean_s / 1e9
-            })
-            .finish()
+            });
+        match self.skip {
+            Some(s) => obj.field_f64("data_skip_ratio", s).finish(),
+            None => obj.finish(),
+        }
     }
 }
 
@@ -97,6 +111,11 @@ fn main() -> anyhow::Result<()> {
         .position(|a| a == "--min-simd-speedup")
         .and_then(|i| argv.get(i + 1))
         .map(|v| v.parse().expect("--min-simd-speedup takes a number"));
+    let min_prescan_speedup: Option<f64> = argv
+        .iter()
+        .position(|a| a == "--min-prescan-speedup")
+        .and_then(|i| argv.get(i + 1))
+        .map(|v| v.parse().expect("--min-prescan-speedup takes a number"));
     let threaded_workers = 4usize;
     let (warmup, iters) = if quick { (1, 3) } else { (2, 7) };
     // ResNet-ish im2col shapes (B·Ho·Wo, kh·kw·Ci, Co), constant dense
@@ -219,6 +238,7 @@ fn main() -> anyhow::Result<()> {
                     workers,
                     m,
                     dense_macs: macs,
+                    skip: None,
                 });
             }
         }
@@ -361,6 +381,7 @@ fn main() -> anyhow::Result<()> {
                     workers,
                     m,
                     dense_macs: macs,
+                    skip: None,
                 });
             }
         }
@@ -401,6 +422,7 @@ fn main() -> anyhow::Result<()> {
             workers: threaded_workers,
             m,
             dense_macs: 0,
+            skip: None,
         });
     }
 
@@ -485,6 +507,7 @@ fn main() -> anyhow::Result<()> {
                     workers: 1,
                     m,
                     dense_macs: macs,
+                    skip: None,
                 });
             }
         }
@@ -555,11 +578,115 @@ fn main() -> anyhow::Result<()> {
                     workers: 1,
                     m,
                     dense_macs: (ab * t * d * t) as u64,
+                    skip: None,
                 });
             }
         }
     }
     simd_table.print();
+
+    // ---- 5. prescan: zero-block data-side skip vs dense packed ----
+    // Block-structured A operands (each canonical 8-element K-block
+    // kept with probability `occ`, zeroed whole otherwise — the shape
+    // post-ReLU activations take) through the prescan driver per
+    // effective block size, serial. The occupancy scan runs INSIDE the
+    // timed closure: the auto gate pays it on every call, so the bench
+    // must too.
+    use sat::train::native::prescan::KBlockMap;
+    let occupancies = [0.3f64, 0.5, 0.7];
+    let mut prescan_speedups_f256_occ50 = Vec::new();
+    let mut prescan_table =
+        Table::new("prescan — zero-block skip GEMM vs dense packed (serial, scan charged)")
+            .header(&["shape", "occ", "block", "dense ms", "prescan ms", "speedup", "skip"]);
+    for &(b, k, f) in shapes {
+        let mut rng = Pcg32::new(0x0CC0 + k as u64);
+        let w = vec_normal(&mut rng, k * f);
+        let macs = (b * k * f) as u64;
+        let shape = format!("b{b}_k{k}_f{f}");
+        for &occ in &occupancies {
+            let mut x = vec_normal(&mut rng, b * k);
+            let keep_per_mille = (occ * 1000.0) as u32;
+            for r in 0..b {
+                for b8 in 0..(k + 7) / 8 {
+                    if rng.below(1000) >= keep_per_mille {
+                        let lo = r * k + b8 * 8;
+                        let hi = (lo + 8).min((r + 1) * k);
+                        x[lo..hi].fill(0.0);
+                    }
+                }
+            }
+            let mut pack = PackedB::default();
+            let (mut dense_buf, mut buf) = (Vec::new(), Vec::new());
+            let mut map = KBlockMap::default();
+            // parity before timing: prescan == dense, bit-exact, at
+            // every effective block size
+            par::matmul_into(&x, &w, b, k, f, 1, &mut pack, &mut dense_buf);
+            for step in [1usize, 2, 4] {
+                map.scan(&x, b, k);
+                map.step = step;
+                par::matmul_blocks_into(&x, &map, &w, b, k, f, 1, &mut pack, &mut buf);
+                assert_eq!(
+                    buf,
+                    dense_buf,
+                    "prescan != dense at {shape} occ={occ} block {}",
+                    step * 8
+                );
+            }
+            let dense = bench(&format!("prescan/dense_ref {shape} occ={occ}"), warmup, iters, || {
+                par::matmul_into(&x, &w, b, k, f, 1, &mut pack, &mut dense_buf);
+                dense_buf.len()
+            });
+            rows.push(KernelRow {
+                shape: shape.clone(),
+                kernel: "prescan_dense_ref".to_string(),
+                pattern: format!("occ={occ}"),
+                k,
+                f,
+                workers: 1,
+                m: dense.clone(),
+                dense_macs: macs,
+                skip: None,
+            });
+            let mut best_speedup = 0.0f64;
+            for step in [1usize, 2, 4] {
+                let block = step * 8;
+                let m = bench(&format!("prescan/b{block} {shape} occ={occ}"), warmup, iters, || {
+                    map.scan(&x, b, k); // charged, as the gate pays it
+                    map.step = step;
+                    par::matmul_blocks_into(&x, &map, &w, b, k, f, 1, &mut pack, &mut buf);
+                    buf.len()
+                });
+                let (empty, total) = map.count_empty();
+                let skip = empty as f64 / total.max(1) as f64;
+                let speedup = dense.mean_s / m.mean_s;
+                best_speedup = best_speedup.max(speedup);
+                prescan_table.row(&[
+                    shape.clone(),
+                    format!("{occ}"),
+                    format!("b{block}"),
+                    format!("{:.2}", dense.mean_s * 1e3),
+                    format!("{:.2}", m.mean_s * 1e3),
+                    format!("{speedup:.2}x"),
+                    format!("{skip:.2}"),
+                ]);
+                rows.push(KernelRow {
+                    shape: shape.clone(),
+                    kernel: format!("prescan_matmul_b{block}"),
+                    pattern: format!("occ={occ}"),
+                    k,
+                    f,
+                    workers: 1,
+                    m,
+                    dense_macs: macs,
+                    skip: Some(skip),
+                });
+            }
+            if f == 256 && (occ - 0.5).abs() < 1e-9 {
+                prescan_speedups_f256_occ50.push(best_speedup);
+            }
+        }
+    }
+    prescan_table.print();
 
     // ---- end-to-end: BDWP NativeNet step time, sparse-compute A/B ----
     let (dims, e2e_batch, e2e_steps): (&[usize], usize, usize) =
@@ -638,6 +765,19 @@ fn main() -> anyhow::Result<()> {
     } else {
         println!("ACCEPTANCE SIMD vs scalar: no SIMD kernel set detected on this host");
     }
+    let prescan_geo = geomean(&prescan_speedups_f256_occ50);
+    println!(
+        "ACCEPTANCE prescan zero-block GEMM (best block, scan charged) vs dense packed on \
+         the f=256 shapes at 50% occupancy: geomean {prescan_geo:.2}x (target >= 1.2x)"
+    );
+    if let Some(min) = min_prescan_speedup {
+        assert!(
+            prescan_geo >= min,
+            "prescan f=256 occ=0.5 geomean {prescan_geo:.2}x below the --min-prescan-speedup \
+             {min}x gate"
+        );
+        println!("prescan speedup gate OK (>= {min}x on the f=256 occ=0.5 geomean)");
+    }
     if let Some(min) = min_simd_speedup {
         if simd_available {
             assert!(
@@ -671,6 +811,7 @@ fn main() -> anyhow::Result<()> {
                 .field_f64("packed_gemm_geomean_speedup_f256", packed_geo)
                 .field_f64("simd_dense_geomean_f256", simd_dense_geo)
                 .field_f64("simd_spmm_geomean_f256", simd_spmm_geo)
+                .field_f64("prescan_geomean_speedup_f256_occ50", prescan_geo)
                 .field_f64("packed_spmm_vs_oracle_geomean_2_8", oracle_geo)
                 .field_f64("ff_geomean_speedup_2_8", ff_geo)
                 .field_f64("bt_geomean_speedup_2_8", bt_geo)

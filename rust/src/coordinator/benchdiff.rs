@@ -24,7 +24,10 @@ use crate::util::table::Table;
 /// no schema special-casing is needed here. `splits` and
 /// `readmissions` growing means the cluster needed more adaptation
 /// (stragglers, tripped circuits) to finish, so like `retries` their
-/// growth is the regression direction.
+/// growth is the regression direction. `data_skip_ratio` is the
+/// fraction of K-blocks the zero-block prescan skipped (kernel bench
+/// and sweep rows); it SHRINKING is the regression — the prescan
+/// stopped finding the sparsity it used to.
 pub const METRICS: &[&str] = &[
     "total_cycles",
     "batch_ms",
@@ -37,6 +40,7 @@ pub const METRICS: &[&str] = &[
     "rows_recovered",
     "splits",
     "readmissions",
+    "data_skip_ratio",
 ];
 
 /// One scenario present in both reports.
@@ -93,8 +97,12 @@ fn scenario_key(row: &Value) -> anyhow::Result<String> {
         .get("overlap")
         .and_then(Value::as_bool)
         .ok_or_else(|| anyhow!("result row missing bool field \"overlap\""))?;
+    // Optional axis (added later): absent and 0.0 key identically, so
+    // baselines written before the field existed keep matching.
+    let act = row.get("act_sparsity").and_then(Value::as_f64).unwrap_or(0.0);
+    let act_key = if act > 0.0 { format!(" act={act}") } else { String::new() };
     Ok(format!(
-        "{} {} {} {}x{}x{} @{}MHz {}GB/s overlap={}",
+        "{} {} {} {}x{}x{} @{}MHz {}GB/s overlap={}{}",
         s("model")?,
         s("method")?,
         s("pattern")?,
@@ -104,6 +112,7 @@ fn scenario_key(row: &Value) -> anyhow::Result<String> {
         n("freq_mhz")?,
         n("bandwidth_gbs")?,
         overlap,
+        act_key,
     ))
 }
 
@@ -167,7 +176,7 @@ impl BenchDiff {
     fn regression_sign(&self) -> f64 {
         if matches!(
             self.metric.as_str(),
-            "runtime_gops" | "hit_rate" | "rows_recovered"
+            "runtime_gops" | "hit_rate" | "rows_recovered" | "data_skip_ratio"
         ) {
             -1.0
         } else {
@@ -421,6 +430,37 @@ mod tests {
         assert!(d.regressions_above(0.0).is_empty(), "recovery growth is fine");
         let d = diff_texts(&old, &old, "retries").unwrap();
         assert_eq!(d.max_regression_pct(), 0.0, "self-diff is clean");
+    }
+
+    fn prescan_row(model: &str, act: f64, skip: f64) -> String {
+        let with_cycles = row(model, 25.6, 1000);
+        // splice the two new fields into an ordinary sweep row
+        let mut r = with_cycles.trim_end_matches('}').to_string();
+        r.push_str(&format!(",\"act_sparsity\":{act},\"data_skip_ratio\":{skip}}}"));
+        r
+    }
+
+    #[test]
+    fn data_skip_ratio_regresses_downward() {
+        let old = doc(vec![prescan_row("resnet18", 0.5, 0.48)]);
+        let worse = doc(vec![prescan_row("resnet18", 0.5, 0.10)]);
+        let d = diff_texts(&old, &worse, "data_skip_ratio").unwrap();
+        assert_eq!(d.regressions_above(5.0).len(), 1, "skip-ratio drop must flag");
+        let d = diff_texts(&worse, &old, "data_skip_ratio").unwrap();
+        assert!(d.regressions_above(0.0).is_empty(), "skip-ratio growth is fine");
+    }
+
+    #[test]
+    fn act_sparsity_keys_only_when_nonzero() {
+        // a pre-axis baseline (no act_sparsity field) must still match a
+        // new act=0 row of the same scenario...
+        let legacy = doc(vec![row("resnet18", 25.6, 1000)]);
+        let zero = doc(vec![prescan_row("resnet18", 0.0, 0.0)]);
+        let d = diff_texts(&legacy, &zero, "total_cycles").unwrap();
+        assert_eq!(d.rows.len(), 1, "act=0 keys like the legacy rows");
+        // ...while a nonzero sparsity is a distinct scenario
+        let half = doc(vec![prescan_row("resnet18", 0.5, 0.4)]);
+        assert!(diff_texts(&legacy, &half, "total_cycles").is_err());
     }
 
     #[test]

@@ -29,7 +29,8 @@ SUBCOMMANDS
              [--id EXHIBIT --jobs N]
   sweep      simulate a model x method x pattern x arch grid in parallel
              [--models a,b --methods dense,bdwp,... --patterns 2:4,2:8
-              --arrays 16x16,32x32 --bandwidths 25.6,102.4 --no-overlap
+              --arrays 16x16,32x32 --bandwidths 25.6,102.4
+              --act-sparsities 0,0.5 --no-overlap
               --jobs N --format table|json|csv --out FILE]
   sim        simulate one training step on SAT
              [--model M --method X --pattern N:M --rows R --cols C
@@ -42,9 +43,14 @@ SUBCOMMANDS
              the native op-graph engine covers the MLP, CNN and ViT
              stand-ins (tiny_vit: attention + layer-norm + token pool)
              [--backend native|pjrt --model tiny_mlp|tiny_cnn|tiny_vit
-              --method dense|srste|sdgp|sdwp|bdwp --pattern N:M
+              --method dense|srste|sdgp|sdwp|bdwp|adatopk --pattern N:M
               --steps N --lr F --eval-every K --seed S --chunk
               --sparse-compute auto|on|off
+              --data-sparse auto|on|off  zero-block prescan for
+                           data-product GEMMs (native); auto = per-shape
+                           micro-benchmark gate. Result-identical in
+                           every mode; the achieved skip ratio and gate
+                           decisions print after training.
               --threads N  matmul workers on the persistent pool;
                            0 (default) = auto: serial for tiny matmuls,
                            otherwise every core reported by
@@ -58,7 +64,8 @@ SUBCOMMANDS
   compare    train several methods on identical data (Fig. 4 protocol)
              [--backend native|pjrt --model mlp|cnn|vit --steps N
               --eval-every K --tta --sim-model M --target F
-              --sparse-compute auto|on|off --threads N
+              --sparse-compute auto|on|off --data-sparse auto|on|off
+              --threads N
               --check-tracks-dense PCT
               --out FILE  machine mode: skip the chart and write the
                           deterministic compare JSON (byte-identical
@@ -91,7 +98,7 @@ SUBCOMMANDS
              [--endpoint tcp:HOST:PORT|unix:PATH (repeatable)
               --mode sweep|compare|train (default sweep)
               --models ... --methods ... --patterns ... --arrays ...
-              --bandwidths ... --no-overlap --jobs N
+              --bandwidths ... --act-sparsities ... --no-overlap --jobs N
               --shards N (0 = 2x endpoints) --timeout-ms MS
               --attempts N --backoff-ms MS --backoff-max-ms MS
               --breaker N --probe-interval MS (0 = no half-open)
@@ -126,18 +133,20 @@ pub fn run(argv: &[String]) -> i32 {
     // instead of silently simulating at the default bandwidth.
     match argv.first().map(String::as_str) {
         Some("sweep") => flags.extend_from_slice(&[
-            "models", "methods", "patterns", "arrays", "bandwidths", "jobs",
-            "format", "out",
+            "models", "methods", "patterns", "arrays", "bandwidths",
+            "act-sparsities", "jobs", "format", "out",
         ]),
         Some("exhibits") => flags.push("jobs"),
         Some("train") => {
-            flags.extend_from_slice(&["backend", "sparse-compute", "threads", "dump-losses"]);
+            flags.extend_from_slice(&[
+                "backend", "sparse-compute", "data-sparse", "threads", "dump-losses",
+            ]);
             switches.push("assert-decreasing");
         }
         Some("compare") => {
             flags.extend_from_slice(&[
                 "backend", "target", "sim-model", "check-tracks-dense",
-                "sparse-compute", "threads", "out",
+                "sparse-compute", "data-sparse", "threads", "out",
             ]);
             switches.push("tta");
         }
@@ -151,7 +160,8 @@ pub fn run(argv: &[String]) -> i32 {
         }
         Some("shard") => {
             flags.extend_from_slice(&[
-                "endpoint", "models", "methods", "patterns", "arrays", "bandwidths", "jobs",
+                "endpoint", "models", "methods", "patterns", "arrays", "bandwidths",
+                "act-sparsities", "jobs",
                 "shards", "timeout-ms", "attempts", "backoff-ms", "backoff-max-ms", "breaker",
                 "seed", "out", "max-row-loss", "mode", "max-splits", "straggler-factor",
                 "probe-interval", "weights", "train-seed",
@@ -386,15 +396,46 @@ fn backend_kind(args: &Args) -> anyhow::Result<BackendKind> {
 }
 
 /// Resolve the native engine's execution knobs (`--sparse-compute`,
-/// `--threads`); both are result-neutral, so they live outside
-/// `RunConfig`'s what-to-run surface.
-fn compute_knobs(args: &Args) -> anyhow::Result<(train::SparseCompute, usize)> {
+/// `--data-sparse`, `--threads`); all are result-neutral, so they live
+/// outside `RunConfig`'s what-to-run surface.
+fn compute_knobs(
+    args: &Args,
+) -> anyhow::Result<(train::SparseCompute, train::DataSparse, usize)> {
     let sparse = args
         .get_or("sparse-compute", "auto")
         .parse()
         .map_err(|e: String| anyhow!("{e}"))?;
+    let data_sparse = args
+        .get_or("data-sparse", "auto")
+        .parse()
+        .map_err(|e: String| anyhow!("{e}"))?;
     let threads = args.get_parse("threads", 0usize)?;
-    Ok((sparse, threads))
+    Ok((sparse, data_sparse, threads))
+}
+
+/// Print one run's data-side sparsity summary (native backend only —
+/// wall-clock-dependent gate decisions stay out of machine documents).
+fn print_data_report(report: &train::DataReport) {
+    if report.gated_calls + report.dense_calls == 0 && report.topk_rows == 0 {
+        return;
+    }
+    println!(
+        "data-side sparsity: skip ratio {:.1}% over {} gated calls ({} dense)",
+        report.skip_ratio * 100.0,
+        report.gated_calls,
+        report.dense_calls,
+    );
+    if report.topk_rows > 0 {
+        println!(
+            "  adatopk backward: kept {}/{} gradient rows ({:.1}% dropped)",
+            report.topk_kept,
+            report.topk_rows,
+            report.topk_drop_ratio() * 100.0,
+        );
+    }
+    for d in &report.decisions {
+        println!("  gate {d}");
+    }
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
@@ -413,7 +454,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     };
     // family-tuned default lr unless the user pinned one
     let lr = if args.get("lr").is_some() { cfg.lr } else { train::default_lr(spec.family()) };
-    let (sparse_compute, threads) = compute_knobs(args)?;
+    let (sparse_compute, data_sparse, threads) = compute_knobs(args)?;
     let opts = TrainOptions {
         steps: cfg.steps,
         lr,
@@ -422,6 +463,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         seed: cfg.seed,
         sparse_compute,
         threads,
+        data_sparse,
     };
     let backend = train::open_backend(kind, &cfg.artifacts_dir)?;
     println!("training {spec} for {} steps on the {} backend", opts.steps, backend.name());
@@ -437,6 +479,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     );
     for (step, l, a) in &curve.evals {
         println!("  eval @ {step}: loss {l:.4} acc {:.1}%", a * 100.0);
+    }
+    if let Some(report) = &curve.data_sparse {
+        print_data_report(report);
     }
     if args.has("assert-decreasing") {
         let first = *curve.losses.first().unwrap_or(&f32::NAN);
@@ -467,12 +512,15 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
     let kind = backend_kind(args)?;
     let family = args.get("model").unwrap_or("mlp");
     let methods: Vec<Method> = match family {
-        // the MLP stand-in runs the full Fig. 3 panel on either backend
+        // the native MLP/ViT stand-ins run the six-method panel
+        // (Fig. 3's five plus the adaptive top-k backward); PJRT keeps
+        // the Fig. 3 five for the MLP (aot.py lowers no adatopk
+        // artifact — the method only exists in the native engine)
+        "mlp" | "tiny_mlp" if kind == BackendKind::Native => Method::PANEL.to_vec(),
         "mlp" | "tiny_mlp" => Method::ALL.to_vec(),
-        // the native ViT stand-in runs the full panel too; the PJRT
-        // side keeps the dense-vs-BDWP pair (aot.py only lowers
-        // vit_dense/vit_bdwp artifacts)
-        "vit" | "tiny_vit" if kind == BackendKind::Native => Method::ALL.to_vec(),
+        // the PJRT ViT side keeps the dense-vs-BDWP pair (aot.py only
+        // lowers vit_dense/vit_bdwp artifacts)
+        "vit" | "tiny_vit" if kind == BackendKind::Native => Method::PANEL.to_vec(),
         // the CNN keeps the pair everywhere (conv steps are ~20×
         // costlier, and the figure only needs the headline contrast)
         "cnn" | "tiny_cnn" | "vit" | "tiny_vit" => vec![Method::Dense, Method::Bdwp],
@@ -517,7 +565,7 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
     } else {
         train::default_lr(specs[0].family())
     };
-    let (sparse_compute, threads) = compute_knobs(args)?;
+    let (sparse_compute, data_sparse, threads) = compute_knobs(args)?;
     let opts = TrainOptions {
         steps: cfg.steps,
         lr,
@@ -526,6 +574,7 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
         seed: cfg.seed,
         sparse_compute,
         threads,
+        data_sparse,
     };
     let backend = train::open_backend(kind, &cfg.artifacts_dir)?;
     let curves = train::compare_specs(&*backend, &specs, &opts)?;
@@ -548,6 +597,14 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
         &series_refs, 72, 16,
     ));
     report::fig04_summary(&curves).print();
+    for c in &curves {
+        if let Some(report) = &c.data_sparse {
+            if report.gated_calls + report.dense_calls > 0 || report.topk_rows > 0 {
+                println!("[{}]", c.method);
+                print_data_report(report);
+            }
+        }
+    }
     if args.has("tta") {
         let sim_name = args.get_or("sim-model", "resnet18");
         let model = zoo::model_by_name(sim_name)

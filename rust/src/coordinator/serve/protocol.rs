@@ -12,7 +12,7 @@
 //! ```text
 //! {"id":"a1","cmd":"sweep","models":"resnet9","methods":"dense,bdwp",
 //!  "patterns":"2:8","arrays":"16x16","bandwidths":"25.6,102.4",
-//!  "overlap":true,"jobs":0}
+//!  "act_sparsities":"0,0.5","overlap":true,"jobs":0}
 //! {"id":"a2","cmd":"compare","model":"resnet9","methods":"dense,bdwp",
 //!  "pattern":"2:8"}
 //! {"id":"a3","cmd":"train","model":"mlp","method":"bdwp","pattern":"2:8",
@@ -177,6 +177,10 @@ impl Request {
                     "bandwidths",
                     &join_list(s.bandwidths.iter().map(|b| json::number(*b))),
                 )
+                .field_str(
+                    "act_sparsities",
+                    &join_list(s.act_sparsities.iter().map(|b| json::number(*b))),
+                )
                 .field_bool("overlap", s.overlap)
                 .field_usize("jobs", s.jobs)
                 .finish(),
@@ -273,6 +277,11 @@ fn sweep_spec(doc: &Value) -> Result<SweepSpec, String> {
     }
     if let Some(v) = str_of(doc, "bandwidths") {
         spec.bandwidths = parse_list(v, "bandwidths")?;
+    }
+    // optional; absent = [0.0] (the paper grid) so old clients keep
+    // getting byte-identical sweeps
+    if let Some(v) = str_of(doc, "act_sparsities") {
+        spec.act_sparsities = parse_list(v, "act_sparsities")?;
     }
     if let Some(v) = doc.get("overlap") {
         spec.overlap = v
@@ -499,6 +508,7 @@ mod tests {
             patterns: vec![NmPattern::P2_4, NmPattern::P2_8],
             arrays: vec![(16, 16), (32, 32)],
             bandwidths: vec![25.6, 102.4],
+            act_sparsities: vec![0.0, 0.5],
             overlap: false,
             jobs: 3,
             ..SweepSpec::default()
@@ -514,6 +524,7 @@ mod tests {
                 assert_eq!(s.patterns, spec.patterns);
                 assert_eq!(s.arrays, spec.arrays);
                 assert_eq!(s.bandwidths, spec.bandwidths);
+                assert_eq!(s.act_sparsities, spec.act_sparsities);
                 assert!(!s.overlap);
                 assert_eq!(s.jobs, 3);
             }
@@ -533,6 +544,7 @@ mod tests {
                 assert_eq!(s.patterns, default.patterns);
                 assert_eq!(s.arrays, default.arrays);
                 assert_eq!(s.bandwidths, default.bandwidths);
+                assert_eq!(s.act_sparsities, vec![0.0], "absent field = paper grid");
                 assert!(s.overlap);
                 assert_eq!(s.jobs, 0);
             }
@@ -765,6 +777,7 @@ mod tests {
         let patterns = [NmPattern::P2_4, NmPattern::P2_8];
         let arrays = [(16usize, 16usize), (32, 32), (8, 64)];
         let bandwidths = [25.6, 77.0, 102.4, 1024.0];
+        let act_sparsities = [0.0, 0.25, 0.5, 0.75];
         let mut rng = Pcg32::new(2026);
         for i in 0..200u32 {
             // Non-empty random prefixes of each axis pool keep the spec
@@ -779,6 +792,8 @@ mod tests {
                 patterns: patterns[..take(&mut rng, patterns.len())].to_vec(),
                 arrays: arrays[..take(&mut rng, arrays.len())].to_vec(),
                 bandwidths: bandwidths[..take(&mut rng, bandwidths.len())].to_vec(),
+                act_sparsities: act_sparsities[..take(&mut rng, act_sparsities.len())]
+                    .to_vec(),
                 overlap: rng.below(2) == 0,
                 jobs: rng.below(5) as usize,
                 ..SweepSpec::default()

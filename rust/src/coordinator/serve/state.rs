@@ -506,11 +506,12 @@ pub fn train_result_json(req: &TrainRequest) -> Result<String, String> {
 }
 
 /// The method panel a compare of `family` runs on the native backend:
-/// the MLP and ViT stand-ins run the full panel, the costlier CNN
-/// keeps the headline dense-vs-BDWP pair (mirroring `sat compare`).
+/// the MLP and ViT stand-ins run the full six-method panel (Fig. 3's
+/// five plus the adaptive top-k backward), the costlier CNN keeps the
+/// headline dense-vs-BDWP pair (mirroring `sat compare`).
 pub fn compare_methods(family: &str) -> Result<Vec<Method>, String> {
     match family {
-        "mlp" | "tiny_mlp" | "vit" | "tiny_vit" => Ok(Method::ALL.to_vec()),
+        "mlp" | "tiny_mlp" | "vit" | "tiny_vit" => Ok(Method::PANEL.to_vec()),
         "cnn" | "tiny_cnn" => Ok(vec![Method::Dense, Method::Bdwp]),
         other => Err(format!("unknown family {other:?} (mlp|cnn|vit)")),
     }

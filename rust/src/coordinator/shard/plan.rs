@@ -1,8 +1,8 @@
 //! Index-stable splitting of a `SweepSpec` grid into shard sub-specs.
 //!
 //! `SweepSpec::expand` nests its axes in a fixed order — models →
-//! methods → patterns → arrays → bandwidths, last axis fastest — and
-//! stamps each point with its position. Pinning a *prefix* of that
+//! methods → patterns → arrays → bandwidths → activation sparsities,
+//! last axis fastest — and stamps each point with its position. Pinning a *prefix* of that
 //! nesting order to singleton values therefore yields a sub-spec whose
 //! own expansion is a contiguous, order-preserving block of the full
 //! grid: `full[offset + i] == sub[i]` for every local index `i`. That
@@ -35,6 +35,7 @@ pub fn split_spec(spec: &SweepSpec, target: usize) -> Vec<Shard> {
         spec.patterns.len(),
         spec.arrays.len(),
         spec.bandwidths.len(),
+        spec.act_sparsities.len(),
     ];
     let mut depth = 0;
     let mut shard_count = 1usize;
@@ -61,6 +62,9 @@ pub fn split_spec(spec: &SweepSpec, target: usize) -> Vec<Shard> {
         }
         if depth > 4 {
             sub.bandwidths = vec![spec.bandwidths[idx[4]]];
+        }
+        if depth > 5 {
+            sub.act_sparsities = vec![spec.act_sparsities[idx[5]]];
         }
         let len = sub.grid_size();
         out.push(Shard {
@@ -94,7 +98,7 @@ pub fn split_spec(spec: &SweepSpec, target: usize) -> Vec<Shard> {
 /// when the block's starting position is aligned to the pivot stride.
 fn pinned_sub(
     spec: &SweepSpec,
-    digits: &[usize; 5],
+    digits: &[usize; 6],
     pivot: usize,
     start: usize,
     count: usize,
@@ -112,12 +116,16 @@ fn pinned_sub(
     if pivot > 3 {
         sub.arrays = vec![spec.arrays[digits[3]]];
     }
+    if pivot > 4 {
+        sub.bandwidths = vec![spec.bandwidths[digits[4]]];
+    }
     match pivot {
         0 => sub.models = spec.models[start..start + count].to_vec(),
         1 => sub.methods = spec.methods[start..start + count].to_vec(),
         2 => sub.patterns = spec.patterns[start..start + count].to_vec(),
         3 => sub.arrays = spec.arrays[start..start + count].to_vec(),
-        _ => sub.bandwidths = spec.bandwidths[start..start + count].to_vec(),
+        4 => sub.bandwidths = spec.bandwidths[start..start + count].to_vec(),
+        _ => sub.act_sparsities = spec.act_sparsities[start..start + count].to_vec(),
     }
     sub
 }
@@ -135,10 +143,11 @@ pub fn split_range(spec: &SweepSpec, lo: usize, hi: usize) -> Vec<Shard> {
         spec.patterns.len(),
         spec.arrays.len(),
         spec.bandwidths.len(),
+        spec.act_sparsities.len(),
     ];
     // stride[k] = grid points per step of axis k (product of inner axes).
-    let mut stride = [1usize; 5];
-    for k in (0..4).rev() {
+    let mut stride = [1usize; 6];
+    for k in (0..5).rev() {
         stride[k] = stride[k + 1] * lens[k + 1].max(1);
     }
     let total = stride[0] * lens[0].max(1);
@@ -146,14 +155,14 @@ pub fn split_range(spec: &SweepSpec, lo: usize, hi: usize) -> Vec<Shard> {
     let mut out = Vec::new();
     let mut pos = lo;
     while pos < hi {
-        let mut digits = [0usize; 5];
-        for k in 0..5 {
+        let mut digits = [0usize; 6];
+        for k in 0..6 {
             digits[k] = (pos / stride[k]) % lens[k].max(1);
         }
         // A block pivoted on axis p starts legally at `pos` when every
         // axis inside p reads zero there, i.e. pos % stride[p] == 0.
-        // Axis 4 has stride 1, so a block always exists.
-        let (pivot, count) = (0..5)
+        // Axis 5 has stride 1, so a block always exists.
+        let (pivot, count) = (0..6)
             .filter(|&p| pos % stride[p] == 0)
             .find_map(|p| {
                 let c = (lens[p].max(1) - digits[p]).min((hi - pos) / stride[p]);
@@ -234,9 +243,22 @@ mod tests {
         }
     }
 
+    /// Same grid with a non-singleton innermost (activation sparsity) axis.
+    fn spec_with_act_axis() -> SweepSpec {
+        SweepSpec {
+            act_sparsities: vec![0.0, 0.5],
+            ..spec_2x2x2x1x2()
+        }
+    }
+
     #[test]
     fn shard_concatenation_reproduces_the_full_grid_in_order() {
-        let spec = spec_2x2x2x1x2();
+        for spec in [spec_2x2x2x1x2(), spec_with_act_axis()] {
+            shard_concatenation_case(&spec);
+        }
+    }
+
+    fn shard_concatenation_case(spec: &SweepSpec) {
         let full = spec.expand().unwrap();
         for target in [1, 2, 3, 5, 6, 16, 100] {
             let shards = split_spec(&spec, target);
@@ -289,7 +311,12 @@ mod tests {
 
     #[test]
     fn split_range_partitions_any_contiguous_window() {
-        let spec = spec_2x2x2x1x2();
+        for spec in [spec_2x2x2x1x2(), spec_with_act_axis()] {
+            split_range_case(&spec);
+        }
+    }
+
+    fn split_range_case(spec: &SweepSpec) {
         let full = spec.expand().unwrap();
         let total = full.len();
         for lo in 0..total {

@@ -2,9 +2,10 @@
 //! Cartesian product into a flat, deterministically ordered job list.
 //!
 //! Axis nesting (outer → inner): model, method, pattern, array geometry,
-//! bandwidth. The order is part of the output contract — result rows,
-//! CSV lines and JSON entries all follow it, so two runs of the same
-//! spec are byte-comparable regardless of worker count.
+//! bandwidth, activation sparsity. The order is part of the output
+//! contract — result rows, CSV lines and JSON entries all follow it, so
+//! two runs of the same spec are byte-comparable regardless of worker
+//! count.
 
 use anyhow::{anyhow, bail};
 
@@ -25,6 +26,10 @@ pub struct SweepSpec {
     pub arrays: Vec<(usize, usize)>,
     /// Off-chip bandwidths in GB/s.
     pub bandwidths: Vec<f64>,
+    /// Modeled activation (data-side) sparsities in [0, 1) — the
+    /// innermost axis; `[0.0]` (the default) reproduces the paper's
+    /// grid exactly. See [`MemConfig::act_sparsity`].
+    pub act_sparsities: Vec<f64>,
     /// Double-buffering overlap (applied to every point).
     pub overlap: bool,
     /// Template for the non-swept arch knobs (lanes, frequency).
@@ -42,6 +47,7 @@ impl Default for SweepSpec {
             patterns: vec![NmPattern::P2_4, NmPattern::P2_8],
             arrays: vec![(base.rows, base.cols)],
             bandwidths: vec![MemConfig::paper_default().bandwidth_gbs],
+            act_sparsities: vec![0.0],
             overlap: true,
             base,
             jobs: 0,
@@ -71,6 +77,7 @@ impl SweepSpec {
             * self.patterns.len()
             * self.arrays.len()
             * self.bandwidths.len()
+            * self.act_sparsities.len()
     }
 
     /// Expand to the ordered job list; rejects empty axes and unknown
@@ -81,12 +88,21 @@ impl SweepSpec {
             || self.patterns.is_empty()
             || self.arrays.is_empty()
             || self.bandwidths.is_empty()
+            || self.act_sparsities.is_empty()
         {
-            bail!("sweep spec has an empty axis (models/methods/patterns/arrays/bandwidths)");
+            bail!(
+                "sweep spec has an empty axis \
+                 (models/methods/patterns/arrays/bandwidths/act-sparsities)"
+            );
         }
         for name in &self.models {
             if zoo::model_by_name(name).is_none() {
                 bail!("unknown model {name:?} in sweep spec");
+            }
+        }
+        for &s in &self.act_sparsities {
+            if !(0.0..1.0).contains(&s) {
+                bail!("act sparsity {s} out of range [0, 1)");
             }
         }
         let mut points = Vec::with_capacity(self.grid_size());
@@ -95,17 +111,20 @@ impl SweepSpec {
                 for &pattern in &self.patterns {
                     for &(rows, cols) in &self.arrays {
                         for &bw in &self.bandwidths {
-                            points.push(SweepPoint {
-                                index: points.len(),
-                                model: model.clone(),
-                                method,
-                                pattern,
-                                sat: SatConfig { rows, cols, pattern, ..self.base },
-                                mem: MemConfig {
-                                    bandwidth_gbs: bw,
-                                    overlap: self.overlap,
-                                },
-                            });
+                            for &act in &self.act_sparsities {
+                                points.push(SweepPoint {
+                                    index: points.len(),
+                                    model: model.clone(),
+                                    method,
+                                    pattern,
+                                    sat: SatConfig { rows, cols, pattern, ..self.base },
+                                    mem: MemConfig {
+                                        bandwidth_gbs: bw,
+                                        overlap: self.overlap,
+                                        act_sparsity: act,
+                                    },
+                                });
+                            }
                         }
                     }
                 }
@@ -138,6 +157,14 @@ impl SweepSpec {
                 .map(|s| {
                     s.parse::<f64>()
                         .map_err(|e| anyhow!("--bandwidths {s:?}: {e}"))
+                })
+                .collect::<anyhow::Result<_>>()?;
+        }
+        if let Some(v) = args.get("act-sparsities") {
+            spec.act_sparsities = split_list(v)
+                .map(|s| {
+                    s.parse::<f64>()
+                        .map_err(|e| anyhow!("--act-sparsities {s:?}: {e}"))
                 })
                 .collect::<anyhow::Result<_>>()?;
         }
@@ -185,7 +212,7 @@ mod tests {
         assert_eq!(spec.grid_size(), 16);
         let points = spec.expand().unwrap();
         assert_eq!(points.len(), 16);
-        // innermost axis (bandwidth) varies fastest
+        // with the default single-value sparsity axis, bandwidth varies fastest
         assert_eq!(points[0].mem.bandwidth_gbs, 25.6);
         assert_eq!(points[1].mem.bandwidth_gbs, 102.4);
         assert_eq!(points[1].sat.rows, 16);
@@ -196,7 +223,30 @@ mod tests {
         for (i, p) in points.iter().enumerate() {
             assert_eq!(p.index, i);
             assert_eq!(p.sat.pattern, p.pattern, "STCE pattern kept in sync");
+            assert_eq!(p.mem.act_sparsity, 0.0, "default axis is the paper grid");
         }
+    }
+
+    #[test]
+    fn act_sparsity_is_the_innermost_axis() {
+        let spec = SweepSpec {
+            models: vec!["resnet9".into()],
+            methods: vec![Method::Bdwp],
+            patterns: vec![NmPattern::P2_8],
+            bandwidths: vec![25.6, 102.4],
+            act_sparsities: vec![0.0, 0.5],
+            ..SweepSpec::default()
+        };
+        assert_eq!(spec.grid_size(), 4);
+        let points = spec.expand().unwrap();
+        assert_eq!(points[0].mem.act_sparsity, 0.0);
+        assert_eq!(points[1].mem.act_sparsity, 0.5);
+        assert_eq!(points[0].mem.bandwidth_gbs, 25.6);
+        assert_eq!(points[1].mem.bandwidth_gbs, 25.6);
+        assert_eq!(points[2].mem.bandwidth_gbs, 102.4);
+        // 1.0 would zero the compute model — rejected up front
+        let bad = SweepSpec { act_sparsities: vec![1.0], ..spec };
+        assert!(bad.expand().is_err());
     }
 
     #[test]
@@ -228,14 +278,18 @@ mod tests {
         let argv: Vec<String> = [
             "sweep", "--models", "resnet9,vit", "--methods", "dense,bdwp",
             "--patterns", "1:4,2:8", "--arrays", "16x16", "--bandwidths",
-            "25.6,102.4", "--jobs", "3", "--no-overlap",
+            "25.6,102.4", "--act-sparsities", "0,0.5", "--jobs", "3",
+            "--no-overlap",
         ]
         .iter()
         .map(|s| s.to_string())
         .collect();
         let args = Args::parse(
             &argv,
-            &["models", "methods", "patterns", "arrays", "bandwidths", "jobs"],
+            &[
+                "models", "methods", "patterns", "arrays", "bandwidths",
+                "act-sparsities", "jobs",
+            ],
             &["no-overlap"],
         )
         .unwrap();
@@ -245,9 +299,10 @@ mod tests {
         assert_eq!(spec.patterns, vec![NmPattern::P1_4, NmPattern::P2_8]);
         assert_eq!(spec.arrays, vec![(16, 16)]);
         assert_eq!(spec.bandwidths, vec![25.6, 102.4]);
+        assert_eq!(spec.act_sparsities, vec![0.0, 0.5]);
         assert_eq!(spec.jobs, 3);
         assert!(!spec.overlap);
-        assert_eq!(spec.grid_size(), 2 * 2 * 2 * 1 * 2);
+        assert_eq!(spec.grid_size(), 2 * 2 * 2 * 1 * 2 * 2);
     }
 
     #[test]
@@ -257,7 +312,10 @@ mod tests {
                 ["sweep", flag, val].iter().map(|s| s.to_string()).collect();
             let args = Args::parse(
                 &argv,
-                &["models", "methods", "patterns", "arrays", "bandwidths", "jobs"],
+                &[
+                    "models", "methods", "patterns", "arrays", "bandwidths",
+                    "act-sparsities", "jobs",
+                ],
                 &[],
             )
             .unwrap();
@@ -267,5 +325,6 @@ mod tests {
         assert!(mk("--patterns", "9").is_err());
         assert!(mk("--bandwidths", "fast").is_err());
         assert!(mk("--arrays", "big").is_err());
+        assert!(mk("--act-sparsities", "lots").is_err());
     }
 }

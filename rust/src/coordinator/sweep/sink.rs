@@ -55,6 +55,7 @@ impl SweepRow {
             .field_f64("freq_mhz", self.point.sat.freq_mhz)
             .field_f64("bandwidth_gbs", self.point.mem.bandwidth_gbs)
             .field_bool("overlap", self.point.mem.overlap)
+            .field_f64("act_sparsity", self.point.mem.act_sparsity)
             .field_u64("total_cycles", self.report.total_cycles)
             .field_u64("predicted_stce_cycles", self.predicted_cycles)
             .field_f64("batch_ms", self.batch_ms())
@@ -71,7 +72,7 @@ impl SweepRow {
     fn csv(&self) -> String {
         let (ff, bp, wu, other) = self.report.stage_totals();
         format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{:.6},{:.3},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{:.6},{:.3},{},{},{},{},{},{}",
             self.point.model,
             self.point.method.name(),
             self.point.pattern,
@@ -81,6 +82,7 @@ impl SweepRow {
             self.point.sat.freq_mhz,
             self.point.mem.bandwidth_gbs,
             self.point.mem.overlap,
+            self.point.mem.act_sparsity,
             self.report.total_cycles,
             self.predicted_cycles,
             self.batch_ms(),
@@ -116,9 +118,9 @@ pub struct SweepResults {
 }
 
 pub const CSV_HEADER: &str = "model,method,pattern,rows,cols,lanes,freq_mhz,\
-bandwidth_gbs,overlap,total_cycles,predicted_stce_cycles,batch_ms,\
-runtime_gops,ff_cycles,bp_cycles,wu_cycles,other_cycles,dense_macs,\
-useful_macs";
+bandwidth_gbs,overlap,act_sparsity,total_cycles,predicted_stce_cycles,\
+batch_ms,runtime_gops,ff_cycles,bp_cycles,wu_cycles,other_cycles,\
+dense_macs,useful_macs";
 
 impl SweepResults {
     /// The deterministic half of the JSON document: the `results` array.
@@ -159,7 +161,7 @@ impl SweepResults {
     /// Human-oriented table for terminal runs.
     pub fn to_table(&self) -> Table {
         let mut t = Table::new("sweep results").header(&[
-            "model", "method", "pattern", "array", "GB/s", "cycles",
+            "model", "method", "pattern", "array", "GB/s", "act-s", "cycles",
             "ms/batch", "GOPS", "useful/dense",
         ]);
         for r in &self.rows {
@@ -169,6 +171,7 @@ impl SweepResults {
                 r.point.pattern.to_string(),
                 format!("{}x{}", r.point.sat.rows, r.point.sat.cols),
                 format!("{}", r.point.mem.bandwidth_gbs),
+                format!("{}", r.point.mem.act_sparsity),
                 r.report.total_cycles.to_string(),
                 format!("{:.2}", r.batch_ms()),
                 format!("{:.1}", r.runtime_gops()),
@@ -205,6 +208,7 @@ pub struct PointKey {
     sched: ScheduleKey,
     bandwidth_bits: u64,
     overlap: bool,
+    act_sparsity_bits: u64,
 }
 
 impl PointKey {
@@ -219,6 +223,7 @@ impl PointKey {
             sched: ScheduleKey::new(model, method, pattern, sat),
             bandwidth_bits: mem.bandwidth_gbs.to_bits(),
             overlap: mem.overlap,
+            act_sparsity_bits: mem.act_sparsity.to_bits(),
         }
     }
 }

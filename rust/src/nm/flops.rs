@@ -24,11 +24,33 @@ pub enum Method {
     Sdwp,
     /// The paper's contribution: w̃_FF in FF and w̃_BP in BP.
     Bdwp,
+    /// TinyProp-style adaptive top-k backward: per layer and per step,
+    /// keep only the output-gradient rows covering a fixed fraction of
+    /// the gradient energy in the BP input-gradient product. DATA-side
+    /// dynamic sparsity, not an N:M weight mask — stages report dense
+    /// here (row counts adapt at runtime, so there is no static FLOP
+    /// model); the native engine skips the dropped rows block-wise.
+    AdaTopk,
 }
 
 impl Method {
+    /// The paper's Fig. 3 panel — the static N:M methods every FLOP
+    /// table and sweep iterates. [`Method::AdaTopk`] is deliberately
+    /// NOT in here (its cost is runtime-adaptive); it joins only the
+    /// native compare panels via [`Method::PANEL`].
     pub const ALL: [Method; 5] =
         [Method::Dense, Method::SrSte, Method::Sdgp, Method::Sdwp, Method::Bdwp];
+
+    /// The native compare panel: Fig. 3's five methods plus the
+    /// adaptive top-k backward as the sixth column.
+    pub const PANEL: [Method; 6] = [
+        Method::Dense,
+        Method::SrSte,
+        Method::Sdgp,
+        Method::Sdwp,
+        Method::Bdwp,
+        Method::AdaTopk,
+    ];
 
     pub fn name(&self) -> &'static str {
         match self {
@@ -37,6 +59,7 @@ impl Method {
             Method::Sdgp => "sdgp",
             Method::Sdwp => "sdwp",
             Method::Bdwp => "bdwp",
+            Method::AdaTopk => "adatopk",
         }
     }
 
@@ -83,6 +106,7 @@ impl FromStr for Method {
             "sdgp" => Method::Sdgp,
             "sdwp" => Method::Sdwp,
             "bdwp" => Method::Bdwp,
+            "adatopk" | "topk" | "tinyprop" => Method::AdaTopk,
             other => return Err(format!("unknown method {other:?}")),
         })
     }
@@ -247,10 +271,30 @@ mod tests {
 
     #[test]
     fn method_parse_roundtrip() {
-        for m in Method::ALL {
+        for m in Method::PANEL {
             assert_eq!(m.name().parse::<Method>().unwrap(), m);
         }
+        assert_eq!("topk".parse::<Method>().unwrap(), Method::AdaTopk);
+        assert_eq!("tinyprop".parse::<Method>().unwrap(), Method::AdaTopk);
         assert!("foo".parse::<Method>().is_err());
+    }
+
+    #[test]
+    fn adatopk_joins_the_panel_but_not_the_static_tables() {
+        assert!(!Method::ALL.contains(&Method::AdaTopk));
+        assert_eq!(Method::PANEL[..5], Method::ALL);
+        assert_eq!(*Method::PANEL.last().unwrap(), Method::AdaTopk);
+        // no static sparsity model: every stage reports dense
+        for stage in Stage::ALL {
+            assert!(!Method::AdaTopk.stage_sparse(stage));
+        }
+        assert!(Method::AdaTopk.can_pregenerate());
+        // FLOP tables therefore cost it as dense
+        let m = zoo::tiny_mlp();
+        assert_eq!(
+            train_flops(&m, 64, Method::AdaTopk, P28).total(),
+            train_flops(&m, 64, Method::Dense, P28).total()
+        );
     }
 
     #[test]

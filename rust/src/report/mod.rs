@@ -280,7 +280,7 @@ pub fn fig16_layerwise() -> Table {
 /// Fig. 16 via an injected simulation provider.
 pub fn fig16_layerwise_with(sim: SimFn) -> Table {
     let cfg = SatConfig::paper_default();
-    let mem = MemConfig { bandwidth_gbs: 25.6, overlap: false };
+    let mem = MemConfig { overlap: false, ..MemConfig::paper_default() };
     let model = zoo::resnet18();
     let r = sim(&model, Method::Bdwp, NmPattern::P2_8, &cfg, &mem);
     let mut t = Table::new(
@@ -380,7 +380,7 @@ pub fn fig17_scaling_with(sim: SimFn) -> Table {
         let cfg = SatConfig { rows: size, cols: size, ..SatConfig::paper_default() };
         let mut cells = vec![format!("{size}x{size}")];
         for bw in FIG17_BANDWIDTHS {
-            let mem = MemConfig { bandwidth_gbs: bw, overlap: true };
+            let mem = MemConfig { bandwidth_gbs: bw, ..MemConfig::paper_default() };
             let r = sim(&model, Method::Bdwp, NmPattern::P2_8, &cfg, &mem);
             cells.push(format!("{:.0}", r.runtime_gops(&cfg)));
         }
@@ -521,6 +521,7 @@ mod tests {
             losses: vec![first, last],
             evals: vec![(2, last + 0.1, 0.5)],
             wall_seconds: 1.0,
+            data_sparse: None,
         };
         let curves = vec![curve("dense", 2.0, 0.5), curve("bdwp", 2.0, 0.6)];
         let r = fig04_summary(&curves).render();

@@ -265,10 +265,22 @@ pub fn finish_step(pre: &StepPrecomp, cfg: &SatConfig, mem: &MemConfig) -> StepR
         let mut lt = LayerTime { name: lp.name.clone(), ..Default::default() };
         lt.other = mem.combine(lp.other_compute, mem.transfer_cycles(lp.other_bytes, cfg));
         for sp in &lp.stages {
-            let cycles = mem.combine(sp.compute, mem.transfer_cycles(sp.bytes, cfg));
+            // Activation (data-side) sparsity: the zero-block prescan
+            // skips FF/BP data-product compute at runtime, so those
+            // stages' compute and useful MACs scale by 1 - act_sparsity.
+            // WU, weight-side N:M, traffic and dense-equivalent MACs
+            // are untouched (operands still stream in full).
+            let (compute, useful) = match sp.stage {
+                Stage::FF | Stage::BP => (
+                    mem.scale_data_compute(sp.compute),
+                    mem.scale_data_compute(sp.useful_macs),
+                ),
+                Stage::WU => (sp.compute, sp.useful_macs),
+            };
+            let cycles = mem.combine(compute, mem.transfer_cycles(sp.bytes, cfg));
             lt.sore += sp.sore_inline;
             report.dense_macs += sp.dense_macs;
-            report.useful_macs += sp.useful_macs;
+            report.useful_macs += useful;
             match sp.stage {
                 Stage::FF => lt.ff = cycles,
                 Stage::BP => lt.bp = cycles,
@@ -384,11 +396,11 @@ mod tests {
         let m = zoo::resnet18();
         let on = simulate_method(
             &m, Method::Bdwp, NmPattern::P2_8, &cfg,
-            &MemConfig { bandwidth_gbs: 25.6, overlap: true },
+            &MemConfig::paper_default(),
         );
         let off = simulate_method(
             &m, Method::Bdwp, NmPattern::P2_8, &cfg,
-            &MemConfig { bandwidth_gbs: 25.6, overlap: false },
+            &MemConfig { overlap: false, ..MemConfig::paper_default() },
         );
         assert!(off.total_cycles > on.total_cycles);
     }
@@ -401,7 +413,7 @@ mod tests {
         for bw in [12.8, 25.6, 51.2, 102.4, 409.6] {
             let r = simulate_method(
                 &m, Method::Bdwp, NmPattern::P2_8, &cfg,
-                &MemConfig { bandwidth_gbs: bw, overlap: true },
+                &MemConfig { bandwidth_gbs: bw, ..MemConfig::paper_default() },
             );
             assert!(r.total_cycles <= last, "bw {bw}");
             last = r.total_cycles;
@@ -463,7 +475,11 @@ mod tests {
                 let pre = precompute_step(&m, &s, &cfg);
                 for bw in [12.8, 25.6, 102.4] {
                     for overlap in [true, false] {
-                        let mem = MemConfig { bandwidth_gbs: bw, overlap };
+                        let mem = MemConfig {
+                            bandwidth_gbs: bw,
+                            overlap,
+                            ..MemConfig::paper_default()
+                        };
                         assert_eq!(
                             finish_step(&pre, &cfg, &mem),
                             simulate_step(&m, &s, &cfg, &mem),
@@ -473,6 +489,39 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn act_sparsity_cuts_ff_bp_only_and_zero_is_identity() {
+        let cfg = SatConfig::paper_default();
+        let m = zoo::resnet18();
+        let base = MemConfig::paper_default();
+        let r0 = simulate_method(&m, Method::Dense, NmPattern::P2_8, &cfg, &base);
+        // s = 0.0 must be the exact identity (the paper's model)
+        let r0b = simulate_method(
+            &m, Method::Dense, NmPattern::P2_8, &cfg,
+            &MemConfig { act_sparsity: 0.0, ..base },
+        );
+        assert_eq!(r0, r0b);
+        let r5 = simulate_method(
+            &m, Method::Dense, NmPattern::P2_8, &cfg,
+            &MemConfig { act_sparsity: 0.5, ..base },
+        );
+        let (ff0, bp0, wu0, other0) = r0.stage_totals();
+        let (ff5, bp5, wu5, other5) = r5.stage_totals();
+        assert!(ff5 < ff0, "FF compute must shrink ({ff0} -> {ff5})");
+        assert!(bp5 < bp0, "BP compute must shrink ({bp0} -> {bp5})");
+        assert_eq!(wu0, wu5, "WU untouched");
+        assert_eq!(other0, other5, "elementwise untouched");
+        // useful MACs drop, dense-equivalent MACs don't
+        assert_eq!(r0.dense_macs, r5.dense_macs);
+        assert!(r5.useful_macs < r0.useful_macs);
+        // monotone: more sparsity, never slower
+        let r7 = simulate_method(
+            &m, Method::Dense, NmPattern::P2_8, &cfg,
+            &MemConfig { act_sparsity: 0.7, ..base },
+        );
+        assert!(r7.total_cycles <= r5.total_cycles);
     }
 
     #[test]

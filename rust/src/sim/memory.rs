@@ -11,18 +11,37 @@ pub const FP16: usize = 2;
 /// Bytes per element of FP32 master state (weights + momentum).
 pub const FP32: usize = 4;
 
-/// Memory system configuration.
+/// Memory system configuration (plus the runtime data-sparsity
+/// presentation knob the sweep grid exposes alongside it).
 #[derive(Clone, Copy, Debug)]
 pub struct MemConfig {
     /// Off-chip bandwidth in GB/s (paper board: 25.6; Fig. 17 sweeps it).
     pub bandwidth_gbs: f64,
     /// Double buffering on: transfer overlaps compute.
     pub overlap: bool,
+    /// Modeled activation (data-side) sparsity in [0, 1): the fraction
+    /// of FF/BP *data-product* compute the zero-block prescan skips at
+    /// runtime. Scales FF/BP MatMul compute cycles and useful MACs by
+    /// `1 - act_sparsity`; weight-side N:M products, WU, traffic
+    /// volumes and dense-equivalent MACs are untouched (the skip is a
+    /// compute phenomenon — operands still stream). 0.0 = off (the
+    /// paper's model, and the default).
+    pub act_sparsity: f64,
 }
 
 impl MemConfig {
     pub fn paper_default() -> MemConfig {
-        MemConfig { bandwidth_gbs: 25.6, overlap: true }
+        MemConfig { bandwidth_gbs: 25.6, overlap: true, act_sparsity: 0.0 }
+    }
+
+    /// Deterministic FF/BP compute scaling under the activation-
+    /// sparsity knob: `ceil(x · (1 - s))`, so any nonzero compute stays
+    /// nonzero and `s = 0` is exactly the identity.
+    pub fn scale_data_compute(&self, x: u64) -> u64 {
+        if self.act_sparsity <= 0.0 {
+            return x;
+        }
+        (x as f64 * (1.0 - self.act_sparsity)).ceil() as u64
     }
 
     /// Cycles (at the SAT clock) to move `bytes` over the DDR link.
@@ -113,8 +132,8 @@ mod tests {
 
     #[test]
     fn overlap_hides_the_smaller_side() {
-        let on = MemConfig { bandwidth_gbs: 25.6, overlap: true };
-        let off = MemConfig { bandwidth_gbs: 25.6, overlap: false };
+        let on = MemConfig::paper_default();
+        let off = MemConfig { overlap: false, ..MemConfig::paper_default() };
         assert_eq!(on.combine(1000, 400), 1000);
         assert_eq!(on.combine(400, 1000), 1000);
         assert_eq!(off.combine(1000, 400), 1400);

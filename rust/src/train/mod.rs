@@ -21,7 +21,7 @@ pub mod native;
 pub mod tta;
 
 pub use backend::{compare_specs, open_backend, Backend, BackendKind, PjrtBackend, TrainSpec};
-pub use native::{NativeBackend, SparseCompute};
+pub use native::{DataReport, DataSparse, NativeBackend, SparseCompute};
 
 use anyhow::Context;
 
@@ -38,6 +38,11 @@ pub struct TrainCurve {
     /// (step, eval_loss, eval_accuracy) snapshots.
     pub evals: Vec<(usize, f32, f32)>,
     pub wall_seconds: f64,
+    /// Native backend: the run's data-side sparsity summary (prescan
+    /// gate decisions, achieved skip ratio, adaptive top-k rows).
+    /// Wall-clock dependent — CLI display only, never serialized into
+    /// byte-voted machine documents. None on the PJRT path.
+    pub data_sparse: Option<DataReport>,
 }
 
 impl TrainCurve {
@@ -79,6 +84,10 @@ pub struct TrainOptions {
     /// `std::thread::available_parallelism()`, which is exactly the
     /// pool's capacity). Never changes results, only wall-clock.
     pub threads: usize,
+    /// Native backend: zero-block prescan for data-product GEMMs
+    /// (`--data-sparse auto|on|off`). Result-identical either way;
+    /// PJRT ignores it.
+    pub data_sparse: DataSparse,
 }
 
 impl Default for TrainOptions {
@@ -91,6 +100,7 @@ impl Default for TrainOptions {
             seed: 1,
             sparse_compute: SparseCompute::Auto,
             threads: 0,
+            data_sparse: DataSparse::Auto,
         }
     }
 }
@@ -139,6 +149,7 @@ pub fn run_training(
         losses: Vec::with_capacity(opts.steps),
         evals: Vec::new(),
         wall_seconds: 0.0,
+        data_sparse: None,
     };
     let t0 = std::time::Instant::now();
     let mut step = 0usize;

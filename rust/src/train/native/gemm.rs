@@ -37,6 +37,7 @@
 //! and trivially order-exact.
 
 use super::pool::TileOut;
+use super::prescan::KBlockMap;
 
 /// Packed panel width (output columns per panel). Eight f32 lanes — one
 /// AVX/NEON-width line the autovectorizer can keep in a register.
@@ -143,6 +144,48 @@ fn mk_rm<const R: usize, const SKIP: bool>(
     acc
 }
 
+/// [`mk_rm`] with the zero-block prescan: consult the A operand's
+/// K-block occupancy bitmap and skip whole effective blocks
+/// ([`KBlockMap::step`] × 8 reduction steps) that are all-zero across
+/// every row of the register tile. Kept blocks run the identical
+/// element-skip inner loop in ascending `kk` order, so a skipped block
+/// removes only `0.0 * w` terms and the accumulators are bit-exact
+/// `==` `mk_rm::<R, true>` on the same inputs.
+#[inline(always)]
+fn mk_rm_blocks<const R: usize>(
+    a: &[f32],
+    red: usize,
+    panel: &[f32],
+    arow0: usize,
+    occ: &KBlockMap,
+) -> [[f32; NR]; R] {
+    let rows: [&[f32]; R] =
+        core::array::from_fn(|t| &a[(arow0 + t) * red..(arow0 + t + 1) * red]);
+    let mut acc = [[0.0f32; NR]; R];
+    let mut b8 = 0usize;
+    while b8 < occ.nb8 {
+        let take = occ.step.min(occ.nb8 - b8);
+        if occ.group_occupied(arow0, R, b8, take) {
+            let kk1 = ((b8 + take) * 8).min(red);
+            for kk in b8 * 8..kk1 {
+                let bs: &[f32; NR] =
+                    panel[kk * NR..(kk + 1) * NR].try_into().expect("NR-sized panel line");
+                for t in 0..R {
+                    let xv = rows[t][kk];
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    for j in 0..NR {
+                        acc[t][j] += xv * bs[j];
+                    }
+                }
+            }
+        }
+        b8 += take;
+    }
+    acc
+}
+
 /// `R × NR` microkernel for the A-transposed product (`matmul_at`):
 /// output rows are K-axis columns of `x (red × ktot)`, so the A reads
 /// are `x[r*ktot + kk0 .. +R]` — contiguous across the tile's rows for
@@ -212,6 +255,47 @@ pub fn gemm_rm_tile<const SKIP: bool>(a: &[f32], red: usize, pb: &PackedB, mut o
         } else {
             for p in p0..p1 {
                 let acc = mk_rm::<1, SKIP>(a, red, pb.panel(p), r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 1;
+        }
+    }
+}
+
+/// [`gemm_rm_tile::<true>`] with the zero-block prescan: the scalar
+/// member of the `gemm_rm_skip_blocks` kernel-set slot. `occ` must
+/// describe exactly the `a` operand (`occ.rows ≥` the tile's rows,
+/// `occ.k == red`).
+pub fn gemm_rm_blocks_tile(
+    a: &[f32],
+    red: usize,
+    occ: &KBlockMap,
+    pb: &PackedB,
+    mut out: TileOut<'_>,
+) {
+    debug_assert_eq!(pb.k, red, "packed reduction mismatch");
+    debug_assert_eq!(occ.k, red, "prescan reduction mismatch");
+    let (r1, c0, c1) = (out.rows().end, out.cols().start, out.cols().end);
+    debug_assert!(c0 % NR == 0, "tile columns must start on a panel boundary");
+    let (p0, p1) = (c0 / NR, (c1 + NR - 1) / NR);
+    let mut r = out.rows().start;
+    while r < r1 {
+        let left = r1 - r;
+        if left >= 8 {
+            for p in p0..p1 {
+                let acc = mk_rm_blocks::<8>(a, red, pb.panel(p), r, occ);
+                store(&mut out, r, p, &acc);
+            }
+            r += 8;
+        } else if left >= 4 {
+            for p in p0..p1 {
+                let acc = mk_rm_blocks::<4>(a, red, pb.panel(p), r, occ);
+                store(&mut out, r, p, &acc);
+            }
+            r += 4;
+        } else {
+            for p in p0..p1 {
+                let acc = mk_rm_blocks::<1>(a, red, pb.panel(p), r, occ);
                 store(&mut out, r, p, &acc);
             }
             r += 1;
@@ -327,6 +411,54 @@ mod tests {
         }
         let w = g.vec_normal(k * cols);
         assert_eq!(packed_matmul(&x, &w, rows, k, cols), ops::matmul(&x, &w, rows, k, cols));
+    }
+
+    #[test]
+    fn blocks_tile_equals_dense_skip_tile_at_every_step() {
+        let mut g = Gen::new(6);
+        // shapes crossing row-tile cadence, ragged panels AND ragged
+        // final K-blocks (k = 12, 21 not multiples of 8)
+        for (rows, k, cols) in [(1usize, 8usize, 3usize), (7, 12, 9), (13, 21, 17), (33, 40, 8)] {
+            let mut x = g.vec_normal(rows * k);
+            // block-structured sparsity: zero whole 8-blocks, plus
+            // element zeros inside kept blocks
+            for (i, v) in x.iter_mut().enumerate() {
+                let b8 = (i % k) / 8;
+                if (i / k + b8) % 2 == 0 || *v < -0.5 {
+                    *v = 0.0;
+                }
+            }
+            let w = g.vec_normal(k * cols);
+            let want = packed_matmul(&x, &w, rows, k, cols);
+            let mut pb = PackedB::default();
+            pack_b_into(&w, k, cols, &mut pb);
+            let mut occ = KBlockMap::default();
+            occ.scan(&x, rows, k);
+            for step in [1usize, 2, 4] {
+                occ.step = step;
+                let mut out = vec![0.0f32; rows * cols];
+                let grid = TileGrid::new(rows, cols, par::TILE_ROWS, par::TILE_COLS);
+                run_tiles(&mut out, &grid, 1, |tile| gemm_rm_blocks_tile(&x, k, &occ, &pb, tile));
+                assert_eq!(out, want, "rows={rows} k={k} cols={cols} step={step}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocks_tile_on_a_dense_operand_changes_nothing() {
+        let mut g = Gen::new(7);
+        let (rows, k, cols) = (9usize, 16usize, 11usize);
+        let x = g.vec_normal(rows * k); // no zeros: every block kept
+        let w = g.vec_normal(k * cols);
+        let mut pb = PackedB::default();
+        pack_b_into(&w, k, cols, &mut pb);
+        let mut occ = KBlockMap::default();
+        occ.scan(&x, rows, k);
+        occ.step = 2;
+        let mut out = vec![0.0f32; rows * cols];
+        let grid = TileGrid::new(rows, cols, par::TILE_ROWS, par::TILE_COLS);
+        run_tiles(&mut out, &grid, 1, |tile| gemm_rm_blocks_tile(&x, k, &occ, &pb, tile));
+        assert_eq!(out, packed_matmul(&x, &w, rows, k, cols));
     }
 
     #[test]

@@ -50,13 +50,26 @@
 //! step ([`crate::nm::CompactNm::pack_panels_into`]), and parallel work
 //! is tiled over the persistent worker pool ([`pool`]) — bit-identical
 //! across worker counts by construction.
+//!
+//! **Data-side sparsity** (PR 10): orthogonally to the weight-side
+//! paths above, GEMMs whose A operand is a *data* product — post-ReLU
+//! activations, im2col matrices, adaptively-dropped gradient rows —
+//! can skip whole all-zero K-blocks through the zero-block prescan
+//! ([`prescan`]). The [`DataSparse`] knob (`--data-sparse auto|on|off`)
+//! selects the path; `auto` is a per-shape micro-benchmark gate with
+//! "dense retained" as a first-class outcome. Results are bit-identical
+//! in every mode; the achieved skip is reported via
+//! [`NativeNet::data_report`].
 
 pub mod gemm;
 pub mod ops;
 pub mod par;
 pub mod pool;
+pub mod prescan;
 pub mod simd;
 pub mod sparse_ops;
+
+pub use prescan::{DataReport, DataSparse};
 
 use std::fmt;
 use std::str::FromStr;
@@ -182,6 +195,8 @@ pub struct NativeNet {
     pattern: NmPattern,
     /// Compute-path selection for weight-pruned stages.
     pub sparse: SparseCompute,
+    /// Data-side zero-block prescan selection (`--data-sparse`).
+    pub data_sparse: DataSparse,
     /// Worker threads for the pool-tiled matmul drivers (0 = auto:
     /// serial for tiny matmuls, the whole machine — the pool's
     /// capacity — otherwise). Never affects results, only wall-clock.
@@ -339,6 +354,7 @@ impl NativeNet {
             method,
             pattern,
             sparse: SparseCompute::default(),
+            data_sparse: DataSparse::default(),
             threads: 0,
             arena,
             exec: Exec {
@@ -349,6 +365,12 @@ impl NativeNet {
                 pack: gemm::PackedB::default(),
                 dw: Vec::new(),
                 db: Vec::new(),
+                occ: prescan::KBlockMap::default(),
+                carry: prescan::KBlockMap::default(),
+                carry_node: None,
+                node: 0,
+                gate: prescan::DataGate::default(),
+                topk_order: Vec::new(),
             },
         })
     }
@@ -432,13 +454,23 @@ impl NativeNet {
     fn forward(&mut self, x: &[f32], lr: f32) {
         self.exec.lr = lr;
         self.exec.sm = self.sm();
+        self.exec.gate.set_mode(self.data_sparse);
+        // a fresh pass: no ReLU carry can describe the engine input
+        self.exec.carry_node = None;
         let mut tape = std::mem::take(&mut self.tape);
         for (ni, op) in tape.iter_mut().enumerate() {
+            self.exec.node = ni;
             let (done, rest) = self.arena.split_at_mut(ni);
             let input: &[f32] = if ni == 0 { x } else { &done[ni - 1].a };
             op.forward_into(input, &self.params, &mut self.exec, &mut rest[0].a);
         }
         self.tape = tape;
+    }
+
+    /// The run's data-side sparsity summary (gate decisions, achieved
+    /// skip ratio, adaptive top-k row accounting).
+    pub fn data_report(&self) -> DataReport {
+        self.exec.gate.report()
     }
 
     /// One momentum-SGD training step over `(x, y)`; returns the loss.
@@ -510,6 +542,7 @@ pub fn train_spec(spec: &TrainSpec, opts: &TrainOptions) -> anyhow::Result<Train
         .ok_or_else(|| anyhow!("unknown model {:?}", spec.model))?;
     let mut net = NativeNet::build(&model, spec.method, spec.pattern, opts.seed)?;
     net.sparse = opts.sparse_compute;
+    net.data_sparse = opts.data_sparse;
     net.threads = opts.threads;
     let (ds, eval_ds) = dataset_for(family, 4096 + 1024, opts.seed).split_at(4096);
     ensure!(
@@ -525,6 +558,7 @@ pub fn train_spec(spec: &TrainSpec, opts: &TrainOptions) -> anyhow::Result<Train
         losses: Vec::with_capacity(opts.steps),
         evals: Vec::new(),
         wall_seconds: 0.0,
+        data_sparse: None,
     };
     let t0 = std::time::Instant::now();
     for step in 0..opts.steps {
@@ -544,6 +578,7 @@ pub fn train_spec(spec: &TrainSpec, opts: &TrainOptions) -> anyhow::Result<Train
         }
     }
     curve.wall_seconds = t0.elapsed().as_secs_f64();
+    curve.data_sparse = Some(net.data_report());
     Ok(curve)
 }
 
@@ -842,6 +877,82 @@ mod tests {
                 assert_eq!(w_on, w_off, "{method} {pattern} weights diverged");
             }
         }
+    }
+
+    #[test]
+    fn data_sparse_modes_never_change_the_trajectory() {
+        // the prescan path (with its ReLU-carried bitmaps) vs. the
+        // dense path vs. the benchmark gate: whole training
+        // trajectories must be byte-identical — the gate affects
+        // wall-clock only
+        let model = micro_model(&[8, 8, 4], 4);
+        let mut g = Gen::new(21);
+        let (x, y) = onehot_batch(&mut g, 4, 8, 4);
+        // dense FF stays on the gated masked-dense path (full prescan +
+        // ReLU-carry coverage); Bdwp mixes in the compact weight kernels
+        for method in [Method::Dense, Method::Bdwp] {
+            let run = |mode: DataSparse| -> (Vec<f32>, Vec<Vec<f32>>) {
+                let mut net = NativeNet::build(&model, method, P28, 5).unwrap();
+                net.data_sparse = mode;
+                let losses: Vec<f32> = (0..6).map(|_| net.train_step(&x, &y, 0.05)).collect();
+                let ws = net.params.iter().map(|p| p.w.clone()).collect();
+                (losses, ws)
+            };
+            let (l_off, w_off) = run(DataSparse::Off);
+            for mode in [DataSparse::On, DataSparse::Auto] {
+                let (l, w) = run(mode);
+                assert_eq!(l, l_off, "{method} {mode} losses diverged from off");
+                assert_eq!(w, w_off, "{method} {mode} weights diverged from off");
+            }
+        }
+    }
+
+    #[test]
+    fn auto_gate_declines_small_shapes_and_reports_it() {
+        // tiny_mlp's classifier head is 64·64·8 = 32768 MACs, below
+        // GATE_MIN_MACS — the "gate declined, dense retained" outcome
+        // must appear in the report deterministically
+        // dense method: every FF product takes the gated path
+        let model = zoo::tiny_mlp();
+        let mut net = NativeNet::build(&model, Method::Dense, P28, 7).unwrap();
+        let mut g = Gen::new(22);
+        let (x, y) = onehot_batch(&mut g, net.batch, net.sample_elems, net.classes);
+        net.train_step(&x, &y, 0.05);
+        net.train_step(&x, &y, 0.05);
+        let report = net.data_report();
+        assert!(!report.decisions.is_empty(), "auto mode must record decisions");
+        assert!(
+            report.decisions.iter().any(|d| d.contains("gate declined, dense retained")),
+            "small head shape must decline: {:?}",
+            report.decisions
+        );
+        assert!(report.gated_calls + report.dense_calls > 0);
+        // off mode records no decisions and gates nothing
+        let mut net = NativeNet::build(&model, Method::Dense, P28, 7).unwrap();
+        net.data_sparse = DataSparse::Off;
+        net.train_step(&x, &y, 0.05);
+        let report = net.data_report();
+        assert!(report.decisions.is_empty() || report.gated_calls == 0);
+        assert_eq!(report.skip_ratio, 0.0);
+    }
+
+    #[test]
+    fn adatopk_takes_finite_steps_and_reports_row_accounting() {
+        let model = micro_model(&[8, 8, 4], 4);
+        let mut g = Gen::new(23);
+        let (x, y) = onehot_batch(&mut g, 4, 8, 4);
+        let mut net = NativeNet::build(&model, Method::AdaTopk, P24, 5).unwrap();
+        let l0 = net.train_step(&x, &y, 0.05);
+        let l1 = net.train_step(&x, &y, 0.05);
+        assert!(l0.is_finite() && l1.is_finite());
+        let report = net.data_report();
+        assert!(report.topk_rows > 0, "adatopk must account BP rows");
+        assert!(report.topk_kept > 0 && report.topk_kept <= report.topk_rows);
+        assert!(report.topk_drop_ratio() >= 0.0 && report.topk_drop_ratio() < 1.0);
+        // deterministic: the same run reproduces byte-identically
+        let mut net2 = NativeNet::build(&model, Method::AdaTopk, P24, 5).unwrap();
+        assert_eq!(net2.train_step(&x, &y, 0.05), l0);
+        assert_eq!(net2.train_step(&x, &y, 0.05), l1);
     }
 
     #[test]

@@ -176,12 +176,14 @@ impl Op for Attention {
         debug_assert_eq!(x.len(), rows * d, "attention input shape mismatch");
         let sm = ex.sm;
         let [pq, pk, pv, po] = self.params;
-        // q/k/v projections — shared-helper weight matmuls + bias
-        sm.ff(&params[pq], x, rows, d, d, &mut ex.scratch, &mut ex.pack, &mut self.q);
+        // q/k/v projections — shared-helper weight matmuls + bias; an
+        // upstream ReLU carry (if any) serves all three row blocks,
+        // since they consume the same x
+        sm.ff(&params[pq], x, rows, d, d, ex, &mut self.q);
         tensor::add_bias(&mut self.q, &params[pq].b);
-        sm.ff(&params[pk], x, rows, d, d, &mut ex.scratch, &mut ex.pack, &mut self.k);
+        sm.ff(&params[pk], x, rows, d, d, ex, &mut self.k);
         tensor::add_bias(&mut self.k, &params[pk].b);
-        sm.ff(&params[pv], x, rows, d, d, &mut ex.scratch, &mut ex.pack, &mut self.v);
+        sm.ff(&params[pv], x, rows, d, d, ex, &mut self.v);
         tensor::add_bias(&mut self.v, &params[pv].b);
         // scores s = q·kᵀ/√d per sample (t × t blocks, data×data)
         let ks = simd::active();
@@ -205,8 +207,9 @@ impl Op for Attention {
             let cb = &mut self.c[b * t * d..(b + 1) * t * d];
             mm_sample(ks, pb, vb, t, t, d, &mut ex.pack, cb);
         }
-        // output projection
-        sm.ff(&params[po], &self.c, rows, d, d, &mut ex.scratch, &mut ex.pack, out);
+        // output projection (the context is dense data — no carry
+        // matches it, so the gate scans at consume if it gated d·d)
+        sm.ff(&params[po], &self.c, rows, d, d, ex, out);
         tensor::add_bias(out, &params[po].b);
     }
 
@@ -226,9 +229,9 @@ impl Op for Attention {
         let [pq, pk, pv, po] = self.params;
         // output projection: dwo = cᵀ·dy, then dc = dy·w̃oᵀ BEFORE the
         // wo update (bp must read this step's pre-update weights)
-        sm.wu(&self.c, dy, rows, d, d, &mut ex.pack, &mut ex.dw);
+        sm.wu(&self.c, dy, rows, d, d, ex);
         tensor::bias_grad_into(dy, d, &mut ex.db);
-        sm.bp(&params[po], dy, rows, d, d, &mut ex.scratch, &mut ex.pack, &mut self.dc);
+        sm.bp(&params[po], dy, rows, d, d, ex, &mut self.dc);
         sgd_update(&mut params[po], &mut ex.dw, &ex.db, ex.lr, sm.method, sm.pattern);
         // dp = dc·vᵀ and dv = pᵀ·dc, per sample
         let ks = simd::active();
@@ -257,24 +260,24 @@ impl Op for Attention {
         // dx = dq·w̃qᵀ + dk·w̃kᵀ + dv·w̃vᵀ, accumulated in q/k/v order
         // (before the q/k/v updates, same pre-update contract as wo)
         if need_dx {
-            sm.bp(&params[pq], &self.dq, rows, d, d, &mut ex.scratch, &mut ex.pack, dx);
-            sm.bp(&params[pk], &self.dk, rows, d, d, &mut ex.scratch, &mut ex.pack, &mut self.tmp);
+            sm.bp(&params[pq], &self.dq, rows, d, d, ex, dx);
+            sm.bp(&params[pk], &self.dk, rows, d, d, ex, &mut self.tmp);
             for (o, &g) in dx.iter_mut().zip(&self.tmp) {
                 *o += g;
             }
-            sm.bp(&params[pv], &self.dv, rows, d, d, &mut ex.scratch, &mut ex.pack, &mut self.tmp);
+            sm.bp(&params[pv], &self.dv, rows, d, d, ex, &mut self.tmp);
             for (o, &g) in dx.iter_mut().zip(&self.tmp) {
                 *o += g;
             }
         }
         // WU + update for the three input projections
-        sm.wu(x, &self.dq, rows, d, d, &mut ex.pack, &mut ex.dw);
+        sm.wu(x, &self.dq, rows, d, d, ex);
         tensor::bias_grad_into(&self.dq, d, &mut ex.db);
         sgd_update(&mut params[pq], &mut ex.dw, &ex.db, ex.lr, sm.method, sm.pattern);
-        sm.wu(x, &self.dk, rows, d, d, &mut ex.pack, &mut ex.dw);
+        sm.wu(x, &self.dk, rows, d, d, ex);
         tensor::bias_grad_into(&self.dk, d, &mut ex.db);
         sgd_update(&mut params[pk], &mut ex.dw, &ex.db, ex.lr, sm.method, sm.pattern);
-        sm.wu(x, &self.dv, rows, d, d, &mut ex.pack, &mut ex.dw);
+        sm.wu(x, &self.dv, rows, d, d, ex);
         tensor::bias_grad_into(&self.dv, d, &mut ex.db);
         sgd_update(&mut params[pv], &mut ex.dw, &ex.db, ex.lr, sm.method, sm.pattern);
     }

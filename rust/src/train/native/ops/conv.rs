@@ -53,9 +53,14 @@ impl Op for Conv {
         let (rows, k) = (self.geom.rows(ex.batch), self.geom.k());
         tensor::im2col_into(x, ex.batch, &self.geom, &mut self.cols);
         let sm = ex.sm;
-        sm.ff(p, &self.cols, rows, k, self.geom.co, &mut ex.scratch, &mut ex.pack, &mut self.z);
+        // the im2col matrix is a fresh geometry (image → patch rows),
+        // so no upstream carry can describe it — ff scans at consume
+        // when the gate picks the prescan path for this shape
+        sm.ff(p, &self.cols, rows, k, self.geom.co, ex, &mut self.z);
         tensor::add_bias(&mut self.z, &p.b);
         if self.relu {
+            // conv output is consumed as an image (via the next op's
+            // im2col), not row-major K-blocks — plain ReLU, no carry
             tensor::relu_into(&self.z, out);
         } else {
             out.clear();
@@ -78,19 +83,10 @@ impl Op for Conv {
         let (rows, k, co) = (self.geom.rows(ex.batch), self.geom.k(), self.geom.co);
         let sm = ex.sm;
         if need_dx {
-            sm.bp(
-                &params[self.param[0]],
-                dy,
-                rows,
-                k,
-                co,
-                &mut ex.scratch,
-                &mut ex.pack,
-                &mut self.dcols,
-            );
+            sm.bp(&params[self.param[0]], dy, rows, k, co, ex, &mut self.dcols);
             tensor::col2im_into(&self.dcols, ex.batch, &self.geom, dx);
         }
-        sm.wu(&self.cols, dy, rows, k, co, &mut ex.pack, &mut ex.dw);
+        sm.wu(&self.cols, dy, rows, k, co, ex);
         tensor::bias_grad_into(dy, co, &mut ex.db);
         sgd_update(&mut params[self.param[0]], &mut ex.dw, &ex.db, ex.lr, sm.method, sm.pattern);
     }

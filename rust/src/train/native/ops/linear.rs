@@ -1,6 +1,7 @@
 //! Fully-connected op (`fi → fo`, optionally over a token axis).
 
 use crate::models::{MatMulShape, Stage};
+use crate::train::native::prescan::DataSparse;
 
 use super::{sgd_update, tensor, Exec, Op, Param};
 
@@ -47,10 +48,18 @@ impl Op for Linear {
         let rows = self.rows(ex.batch);
         let p = &params[self.param[0]];
         let sm = ex.sm;
-        sm.ff(p, x, rows, self.fi, self.fo, &mut ex.scratch, &mut ex.pack, &mut self.z);
+        sm.ff(p, x, rows, self.fi, self.fo, ex, &mut self.z);
         tensor::add_bias(&mut self.z, &p.b);
         if self.relu {
-            tensor::relu_into(&self.z, out);
+            if ex.gate.mode == DataSparse::Off {
+                tensor::relu_into(&self.z, out);
+            } else {
+                // fused ReLU + prescan: the activation write emits the
+                // K-block occupancy bitmap for free; the next op's FF
+                // product consumes it as the carry (no second scan)
+                tensor::relu_into_blocks(&self.z, rows, self.fo, &mut ex.carry, out);
+                ex.carry_node = Some(ex.node);
+            }
         } else {
             out.clear();
             out.extend_from_slice(&self.z);
@@ -74,18 +83,9 @@ impl Op for Linear {
         if need_dx {
             // dx before the update: w̃_BP must come from this step's
             // pre-update weights (the pre-generation contract)
-            sm.bp(
-                &params[self.param[0]],
-                dy,
-                rows,
-                self.fi,
-                self.fo,
-                &mut ex.scratch,
-                &mut ex.pack,
-                dx,
-            );
+            sm.bp(&params[self.param[0]], dy, rows, self.fi, self.fo, ex, dx);
         }
-        sm.wu(x, dy, rows, self.fi, self.fo, &mut ex.pack, &mut ex.dw);
+        sm.wu(x, dy, rows, self.fi, self.fo, ex);
         tensor::bias_grad_into(dy, self.fo, &mut ex.db);
         sgd_update(&mut params[self.param[0]], &mut ex.dw, &ex.db, ex.lr, sm.method, sm.pattern);
     }

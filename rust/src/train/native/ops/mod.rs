@@ -54,6 +54,7 @@ use crate::util::Pcg32;
 
 use super::gemm::PackedB;
 use super::par;
+use super::prescan::{self, DataGate, KBlockMap};
 use super::{SparseCompute, MOMENTUM, SRSTE_LAMBDA, WEIGHT_DECAY};
 
 /// One weighted tensor (a projection matrix, conv filter bank, or a
@@ -167,8 +168,13 @@ impl SparseMatmul {
 
     /// FF product `out = input · w̃_FF` for one `(k × f)` weight tensor:
     /// packed compute-skipping kernel when active, packed masked-dense
-    /// GEMM otherwise.
-    #[allow(clippy::too_many_arguments)]
+    /// GEMM otherwise. The masked-dense path routes through the
+    /// data-side gate ([`prescan::gated_matmul_into`]): when the gate
+    /// picks the zero-block prescan for this shape, all-zero K-blocks
+    /// of the INPUT skip whole panel lines — reusing the previous op's
+    /// fused ReLU bitmap (the [`Exec::carry`]) when it describes
+    /// exactly this operand, scanning otherwise. Bit-identical either
+    /// way.
     pub fn ff(
         &self,
         p: &Param,
@@ -176,24 +182,32 @@ impl SparseMatmul {
         rows: usize,
         k: usize,
         f: usize,
-        scratch: &mut Vec<f32>,
-        pack: &mut PackedB,
+        ex: &mut Exec,
         out: &mut Vec<f32>,
     ) {
         let workers = self.workers((rows * k * f) as u64);
         if p.nm_ok && self.ff_compact() {
-            par::spmm_ff_into(input, &p.pk_ff, rows, k, f, workers, out);
-        } else {
-            let w = self.ff_w(p, scratch);
-            par::matmul_into(input, w, rows, k, f, workers, pack, out);
+            return par::spmm_ff_into(input, &p.pk_ff, rows, k, f, workers, out);
         }
+        let Exec { scratch, pack, occ, carry, carry_node, node, gate, .. } = ex;
+        let w = self.ff_w(p, scratch);
+        // The carry is valid iff it was emitted by the tape node
+        // directly upstream AND matches this operand's geometry — the
+        // node check stops a same-shaped bitmap from an earlier layer
+        // surviving past an intermediate op (e.g. a layer-norm) and
+        // silently describing the wrong tensor.
+        let carried =
+            *node > 0 && *carry_node == Some(*node - 1) && carry.rows == rows && carry.k == k;
+        let (map, scanned) = if carried { (carry, true) } else { (occ, false) };
+        prescan::gated_matmul_into(gate, map, scanned, input, w, rows, k, f, workers, pack, out);
     }
 
     /// BP-stage input gradient `out = dy · w̃ᵀ` with the method's
     /// backward sparsity (Fig. 3): w̃_BP for SDWP/BDWP (packed compact
-    /// kernel when active), pruned output gradients for SDGP, dense
-    /// otherwise. Always reads the CURRENT weights — ops must call this
-    /// before updating `p`.
+    /// kernel when active), pruned output gradients for SDGP, adaptive
+    /// top-k row selection for AdaTopk (dropped rows skipped via the
+    /// prescan bitmap), dense otherwise. Always reads the CURRENT
+    /// weights — ops must call this before updating `p`.
     #[allow(clippy::too_many_arguments)]
     pub fn bp(
         &self,
@@ -202,11 +216,29 @@ impl SparseMatmul {
         rows: usize,
         k: usize,
         f: usize,
-        scratch: &mut Vec<f32>,
-        pack: &mut PackedB,
+        ex: &mut Exec,
         out: &mut Vec<f32>,
     ) {
         let workers = self.workers((rows * k * f) as u64);
+        let Exec { scratch, pack, occ, gate, topk_order, .. } = ex;
+        if self.method == Method::AdaTopk {
+            // TinyProp-style adaptive top-k backward: keep the smallest
+            // row set covering ADATOPK_ENERGY of the gradient energy
+            // (per layer, per step), zero the rest, and let the whole
+            // dropped rows compute-skip block-wise. Applies to every
+            // param's BP product — the method's defining semantics, not
+            // an N:M mask, so `nm_ok` does not gate it.
+            let kept =
+                prescan::adatopk_select(dy, rows, f, prescan::ADATOPK_ENERGY, topk_order, scratch);
+            gate.topk_rows += rows as u64;
+            gate.topk_kept += kept as u64;
+            occ.scan(scratch, rows, f);
+            let (empty, total) = occ.count_empty();
+            gate.zero_cells += empty;
+            gate.cells += total;
+            gate.gated_calls += 1;
+            return par::matmul_bt_blocks_into(scratch, occ, &p.w, rows, f, k, workers, pack, out);
+        }
         if p.nm_ok {
             match self.method {
                 Method::Sdwp | Method::Bdwp if self.bp_compact() => {
@@ -226,20 +258,11 @@ impl SparseMatmul {
         par::matmul_bt_into(dy, &p.w, rows, f, k, workers, pack, out)
     }
 
-    /// WU product `out = inputᵀ · dy` — dense for every method
+    /// WU product `ex.dw = inputᵀ · dy` — dense for every method
     /// (Algorithm 1 line 9), on the packed pool driver.
-    pub fn wu(
-        &self,
-        input: &[f32],
-        dy: &[f32],
-        rows: usize,
-        k: usize,
-        f: usize,
-        pack: &mut PackedB,
-        out: &mut Vec<f32>,
-    ) {
+    pub fn wu(&self, input: &[f32], dy: &[f32], rows: usize, k: usize, f: usize, ex: &mut Exec) {
         let workers = self.workers((rows * k * f) as u64);
-        par::matmul_at_into(input, dy, rows, k, f, workers, pack, out);
+        par::matmul_at_into(input, dy, rows, k, f, workers, &mut ex.pack, &mut ex.dw);
     }
 }
 
@@ -287,6 +310,20 @@ pub struct Exec {
     /// Weight/bias gradient scratch, reused across ops and steps.
     pub dw: Vec<f32>,
     pub db: Vec<f32>,
+    /// Data-side zero-block prescan state (PR 10). `occ` is the
+    /// scan-at-consume bitmap scratch; `carry` is the bitmap the
+    /// previous op's fused ReLU emitted for free, valid only when
+    /// `carry_node == Some(node - 1)` (see [`SparseMatmul::ff`]).
+    pub occ: KBlockMap,
+    pub carry: KBlockMap,
+    pub carry_node: Option<usize>,
+    /// Tape index of the op currently executing (set by the engine's
+    /// forward loop; backward reuses scan-at-consume only).
+    pub node: usize,
+    /// The benchmark-driven `--data-sparse` gate + skip counters.
+    pub gate: DataGate,
+    /// Row-order scratch of the adaptive top-k backward.
+    pub topk_order: Vec<u32>,
 }
 
 /// One node of the lowered compute graph.

@@ -8,6 +8,8 @@
 //! counts and opt levels (the same contract the sweep engine gives its
 //! cycle reports).
 
+use crate::train::native::prescan::KBlockMap;
+
 /// Row block of `x (rows × k) @ w (k × cols)`: computes output rows
 /// `row0 ..` for as many rows as `out` holds (`out.len() / cols`),
 /// reading the full `x`/`w`, ACCUMULATING into `out` (callers zero it).
@@ -148,6 +150,43 @@ pub fn relu(z: &[f32]) -> Vec<f32> {
 pub fn relu_into(z: &[f32], out: &mut Vec<f32>) {
     out.clear();
     out.extend(z.iter().map(|&v| if v > 0.0 { v } else { 0.0 }));
+}
+
+/// [`relu_into`] fused with the zero-block prescan: the same single
+/// pass that writes the activation also records, per (row, 8-element
+/// K-block), whether any written value is nonzero — so the occupancy
+/// bitmap the data-sparse GEMM path skips by comes for free with the
+/// activation write, no second scan over the tensor. The bitmap is
+/// bit-for-bit what [`KBlockMap::scan`] of `out` would produce
+/// (unit-tested below), and `out` is bit-for-bit [`relu_into`].
+pub fn relu_into_blocks(
+    z: &[f32],
+    rows: usize,
+    k: usize,
+    occ: &mut KBlockMap,
+    out: &mut Vec<f32>,
+) {
+    debug_assert_eq!(z.len(), rows * k, "z shape mismatch");
+    occ.reset(rows, k);
+    out.clear();
+    out.reserve(z.len());
+    for r in 0..rows {
+        let zr = &z[r * k..(r + 1) * k];
+        for (b8, chunk) in zr.chunks(8).enumerate() {
+            let mut any = false;
+            for &v in chunk {
+                if v > 0.0 {
+                    out.push(v);
+                    any = true;
+                } else {
+                    out.push(0.0);
+                }
+            }
+            if any {
+                occ.set(r, b8);
+            }
+        }
+    }
 }
 
 /// In-place ReLU backward: `dz[i] = 0` wherever `z[i] <= 0`.
@@ -576,6 +615,33 @@ mod tests {
         relu_backward(&mut dz, &z);
         assert_eq!(dz, vec![1.0, 0.0, 1.0, 0.0]);
         assert_eq!(bias_grad(&[1.0, 2.0, 3.0, 4.0], 2), vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn relu_into_blocks_matches_relu_and_a_reference_scan() {
+        use crate::util::testkit::Gen;
+        let mut g = Gen::new(77);
+        // k crosses a block edge (20 = 2 full 8-blocks + ragged 4)
+        for (rows, k) in [(1usize, 8usize), (5, 20), (9, 33)] {
+            let z = g.vec_normal(rows * k);
+            let mut want = Vec::new();
+            relu_into(&z, &mut want);
+            let (mut occ, mut got) = (KBlockMap::default(), Vec::new());
+            relu_into_blocks(&z, rows, k, &mut occ, &mut got);
+            assert_eq!(got, want, "activation must be bit-for-bit relu_into");
+            let mut reference = KBlockMap::default();
+            reference.scan(&want, rows, k);
+            assert_eq!((occ.rows, occ.k, occ.nb8, occ.step), (rows, k, reference.nb8, 1));
+            for r in 0..rows {
+                for b in 0..occ.nb8 {
+                    assert_eq!(
+                        occ.occupied(r, b),
+                        reference.occupied(r, b),
+                        "rows={rows} k={k} r={r} b={b}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -34,6 +34,7 @@
 
 use super::gemm::{self, PackedB};
 use super::pool::{self, TileGrid};
+use super::prescan::KBlockMap;
 use super::simd::{self, KernelSet};
 use crate::nm::PackedNm;
 
@@ -113,6 +114,101 @@ pub fn matmul_into_with(
     gemm::pack_b_into(w, k, cols, pack);
     let (pack, grid) = (&*pack, TileGrid::new(rows, cols, TILE_ROWS, TILE_COLS));
     pool::run_tiles(out, &grid, workers, |tile| (ks.gemm_rm_skip)(x, k, pack, tile));
+}
+
+/// [`matmul_into`] through the zero-block prescan: `occ` is the
+/// A operand's K-block occupancy bitmap ([`KBlockMap::scan`] of `x`, or
+/// the ReLU-emitted carry) at the caller's chosen effective
+/// [`KBlockMap::step`]. Bit-identical to [`matmul_into`] — the kernels
+/// skip only all-zero blocks of a zero-skipping accumulation — so the
+/// gate is free to flip paths per shape without touching results.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_blocks_into(
+    x: &[f32],
+    occ: &KBlockMap,
+    w: &[f32],
+    rows: usize,
+    k: usize,
+    cols: usize,
+    workers: usize,
+    pack: &mut PackedB,
+    out: &mut Vec<f32>,
+) {
+    matmul_blocks_into_with(simd::active(), x, occ, w, rows, k, cols, workers, pack, out)
+}
+
+/// [`matmul_blocks_into`] on an explicit kernel set.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_blocks_into_with(
+    ks: &KernelSet,
+    x: &[f32],
+    occ: &KBlockMap,
+    w: &[f32],
+    rows: usize,
+    k: usize,
+    cols: usize,
+    workers: usize,
+    pack: &mut PackedB,
+    out: &mut Vec<f32>,
+) {
+    assert_eq!(x.len(), rows * k, "x shape mismatch");
+    assert_eq!(w.len(), k * cols, "w shape mismatch");
+    assert!(occ.rows >= rows && occ.k == k, "prescan bitmap shape mismatch");
+    resize(out, rows * cols);
+    gemm::pack_b_into(w, k, cols, pack);
+    let (pack, grid) = (&*pack, TileGrid::new(rows, cols, TILE_ROWS, TILE_COLS));
+    pool::run_tiles(out, &grid, workers, |tile| {
+        (ks.gemm_rm_skip_blocks)(x, k, occ, pack, tile)
+    });
+}
+
+/// `dy (rows × f) @ w (k × f)ᵀ` through the zero-block prescan — the
+/// adaptive top-k backward product, where whole dropped gradient rows
+/// are all-zero and skip block-wise. NOTE this uses the SKIP-semantics
+/// kernel where [`matmul_bt_into`] deliberately has none: the adaptive
+/// method defines its own (still deterministic) arithmetic — equal to
+/// [`matmul_bt_into`] on the masked operand whenever both operands are
+/// finite, and bit-identical across kernel sets and worker counts like
+/// every other driver here. The default BP path never routes through
+/// this.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_bt_blocks_into(
+    dy: &[f32],
+    occ: &KBlockMap,
+    w: &[f32],
+    rows: usize,
+    f: usize,
+    k: usize,
+    workers: usize,
+    pack: &mut PackedB,
+    out: &mut Vec<f32>,
+) {
+    matmul_bt_blocks_into_with(simd::active(), dy, occ, w, rows, f, k, workers, pack, out)
+}
+
+/// [`matmul_bt_blocks_into`] on an explicit kernel set.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_bt_blocks_into_with(
+    ks: &KernelSet,
+    dy: &[f32],
+    occ: &KBlockMap,
+    w: &[f32],
+    rows: usize,
+    f: usize,
+    k: usize,
+    workers: usize,
+    pack: &mut PackedB,
+    out: &mut Vec<f32>,
+) {
+    assert_eq!(dy.len(), rows * f, "dy shape mismatch");
+    assert_eq!(w.len(), k * f, "w shape mismatch");
+    assert!(occ.rows >= rows && occ.k == f, "prescan bitmap shape mismatch");
+    resize(out, rows * k);
+    gemm::pack_bt_into(w, k, f, pack);
+    let (pack, grid) = (&*pack, TileGrid::new(rows, k, TILE_ROWS, TILE_COLS));
+    pool::run_tiles(out, &grid, workers, |tile| {
+        (ks.gemm_rm_skip_blocks)(dy, f, occ, pack, tile)
+    });
 }
 
 /// Packed `dy (rows × f) @ w (k × f)ᵀ` into a reusable buffer —
@@ -328,6 +424,41 @@ mod tests {
             assert_eq!(buf, want_bt, "matmul_bt workers={workers}");
             matmul_at_into(&x, &dy, rows, k, f, workers, &mut pack, &mut buf);
             assert_eq!(buf, want_at, "matmul_at workers={workers}");
+        }
+    }
+
+    #[test]
+    fn blocks_drivers_match_dense_across_workers() {
+        let mut g = Gen::new(23);
+        let (rows, k, f) = (70, 40, 131); // crosses grid/row-tile/panel edges
+        let mut x = g.vec_normal(rows * k);
+        let mut dy = g.vec_normal(rows * f);
+        // block-structured zeros in x; whole dropped rows in dy (the
+        // adaptive top-k shape)
+        for (i, v) in x.iter_mut().enumerate() {
+            if ((i % k) / 8 + i / k) % 2 == 0 {
+                *v = 0.0;
+            }
+        }
+        for r in (0..rows).step_by(3) {
+            dy[r * f..(r + 1) * f].fill(0.0);
+        }
+        let w = g.vec_normal(k * f);
+        let want_mm = crate::train::native::ops::matmul(&x, &w, rows, k, f);
+        let want_bt = crate::train::native::ops::matmul_bt(&dy, &w, rows, f, k);
+        let (mut buf, mut pack) = (Vec::new(), PackedB::default());
+        let (mut occ_x, mut occ_dy) = (KBlockMap::default(), KBlockMap::default());
+        occ_x.scan(&x, rows, k);
+        occ_dy.scan(&dy, rows, f);
+        for step in [1usize, 2, 4] {
+            occ_x.step = step;
+            occ_dy.step = step;
+            for workers in [1usize, 2, 4, 16] {
+                matmul_blocks_into(&x, &occ_x, &w, rows, k, f, workers, &mut pack, &mut buf);
+                assert_eq!(buf, want_mm, "blocks step={step} workers={workers}");
+                matmul_bt_blocks_into(&dy, &occ_dy, &w, rows, f, k, workers, &mut pack, &mut buf);
+                assert_eq!(buf, want_bt, "bt_blocks step={step} workers={workers}");
+            }
         }
     }
 

@@ -1,0 +1,611 @@
+//! Data-side dynamic sparsity: the zero-block prescan and its
+//! benchmark-driven gate.
+//!
+//! Weight-side N:M sparsity is fully compute-skipped ([`super::sparse_ops`]),
+//! but the DATA side of the packed GEMMs — post-ReLU activations in FF
+//! products, im2col matrices, adaptively-dropped gradient rows — still
+//! streamed dense with only the seed kernels' element-wise zero test.
+//! This module adds SparseFlow's two-stage design in software:
+//!
+//! 1. **Prescan** ([`KBlockMap`]): one pass over the A operand records,
+//!    per `(row, 8-element K-block)`, whether the block holds any
+//!    nonzero. The bitmap is canonical at the packed panel's K-step
+//!    granularity (8 = [`crate::train::native::gemm::NR`]); an
+//!    effective skip block of 8/16/32 elements is expressed as
+//!    [`KBlockMap::step`] ∈ {1, 2, 4} canonical blocks, so one scan
+//!    serves every gate choice. Where the activation is written by the
+//!    engine itself the scan is free:
+//!    [`super::ops::tensor::relu_into_blocks`] emits the bitmap during
+//!    the activation write and the next op reuses it (the carry in
+//!    [`super::ops::Exec`]).
+//! 2. **Compute**: the `gemm_rm_skip_blocks` tile kernels (scalar /
+//!    avx2 / neon) walk kept blocks only, in ascending K order, with
+//!    the seed element-wise zero-skip intact inside kept blocks — so a
+//!    skipped block removes only zero contributions and the result is
+//!    bit-exact `==` the dense skip kernel (and therefore `==` the seed
+//!    `ops::matmul` oracle) on the same inputs.
+//!
+//! **The gate** ([`DataGate`]) is SparseFlow's benchmark-driven
+//! selector: in `auto` mode the first encounter of a `(rows, k, f)`
+//! shape times the dense path against the prescan path at every block
+//! size and caches the winner — with "don't replace" (dense retained)
+//! as a first-class outcome, forced without benchmarking for shapes too
+//! small to amortize a scan. Because every candidate computes identical
+//! bits into the same output buffer, the benchmark IS the real call:
+//! timing is the only nondeterminism and it never touches results, so
+//! train trajectories stay byte-identical across `--data-sparse`
+//! modes, kernel sets and worker counts.
+//!
+//! On the same machinery, [`adatopk_select`] implements TinyProp-style
+//! adaptive top-k backward: per layer and per step, keep the smallest
+//! set of output-gradient rows covering [`ADATOPK_ENERGY`] of the
+//! gradient energy and zero the rest; the dropped rows then skip
+//! through the prescan bitmap in the BP product.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::str::FromStr;
+use std::time::Instant;
+
+use super::gemm::PackedB;
+use super::par;
+
+/// Canonical K-block width in elements (one packed panel K-step).
+pub const BLOCK_ELEMS: usize = 8;
+
+/// Fixed effective block for `--data-sparse on` (2 × 8 = 16 elements),
+/// the middle of the gate's {8, 16, 32} menu.
+pub const DEFAULT_STEP: usize = 2;
+
+/// MAC floor below which the auto gate declines without benchmarking:
+/// a prescan pass cannot amortize on shapes this small (the same
+/// "don't replace" outcome SparseFlow's selector reserves for them).
+pub const GATE_MIN_MACS: u64 = 1 << 16;
+
+/// Fraction of total gradient energy the adaptive top-k backward keeps
+/// (the per-layer, per-step row count adapts around this target).
+pub const ADATOPK_ENERGY: f32 = 0.9;
+
+/// Per-row K-block occupancy bitmap of one GEMM A operand.
+///
+/// Bit `(row, b8)` is SET iff 8-element K-block `b8` of `row` holds a
+/// nonzero. [`step`](Self::step) selects the effective skip block the
+/// kernels test (1/2/4 canonical blocks → 8/16/32 elements) without
+/// rescanning.
+#[derive(Default)]
+pub struct KBlockMap {
+    pub rows: usize,
+    pub k: usize,
+    /// Canonical 8-element K-blocks per row.
+    pub nb8: usize,
+    /// Effective skip block in canonical blocks (1 | 2 | 4).
+    pub step: usize,
+    /// u64 words per row.
+    wpr: usize,
+    bits: Vec<u64>,
+}
+
+impl KBlockMap {
+    /// Re-geometry the map for a `(rows × k)` operand, all bits clear,
+    /// `step` reset to 1. Buffers are reused across calls.
+    pub fn reset(&mut self, rows: usize, k: usize) {
+        self.rows = rows;
+        self.k = k;
+        self.nb8 = (k + BLOCK_ELEMS - 1) / BLOCK_ELEMS;
+        self.wpr = (self.nb8 + 63) / 64;
+        self.step = 1;
+        self.bits.clear();
+        self.bits.resize(rows * self.wpr, 0);
+    }
+
+    /// Mark canonical block `b8` of `row` occupied.
+    #[inline]
+    pub fn set(&mut self, row: usize, b8: usize) {
+        self.bits[row * self.wpr + b8 / 64] |= 1u64 << (b8 % 64);
+    }
+
+    /// Whether canonical block `b8` of `row` holds a nonzero.
+    #[inline]
+    pub fn occupied(&self, row: usize, b8: usize) -> bool {
+        self.bits[row * self.wpr + b8 / 64] & (1u64 << (b8 % 64)) != 0
+    }
+
+    /// Whether ANY of rows `row0 .. row0+nrows` is occupied anywhere in
+    /// canonical blocks `b8 .. b8+take` — the tile kernels' skip test
+    /// for one effective block under an `nrows`-row register tile.
+    #[inline]
+    pub fn group_occupied(&self, row0: usize, nrows: usize, b8: usize, take: usize) -> bool {
+        for t in 0..nrows {
+            let base = (row0 + t) * self.wpr;
+            for b in b8..b8 + take {
+                if self.bits[base + b / 64] & (1u64 << (b % 64)) != 0 {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Reference prescan: one pass over a row-major `(rows × k)`
+    /// operand. The fused producers (e.g.
+    /// [`super::ops::tensor::relu_into_blocks`]) must match this
+    /// bit-for-bit — unit-tested there.
+    pub fn scan(&mut self, a: &[f32], rows: usize, k: usize) {
+        debug_assert_eq!(a.len(), rows * k, "operand shape mismatch");
+        self.reset(rows, k);
+        for r in 0..rows {
+            let row = &a[r * k..(r + 1) * k];
+            for (b8, chunk) in row.chunks(BLOCK_ELEMS).enumerate() {
+                if chunk.iter().any(|&v| v != 0.0) {
+                    self.set(r, b8);
+                }
+            }
+        }
+    }
+
+    /// `(empty, total)` effective-block counts at the current `step`,
+    /// over all rows — the measured data-side skip ratio of one call.
+    pub fn count_empty(&self) -> (u64, u64) {
+        let groups = (self.nb8 + self.step - 1) / self.step;
+        let mut empty = 0u64;
+        for r in 0..self.rows {
+            let mut b8 = 0usize;
+            while b8 < self.nb8 {
+                let take = self.step.min(self.nb8 - b8);
+                if !self.group_occupied(r, 1, b8, take) {
+                    empty += 1;
+                }
+                b8 += take;
+            }
+        }
+        (empty, (self.rows * groups) as u64)
+    }
+}
+
+/// `--data-sparse` knob: whether data-product GEMMs run through the
+/// zero-block prescan path. Results are bit-identical either way (the
+/// prescan skips only all-zero blocks of skip-semantics kernels); the
+/// knob trades a scan pass against skipped panel work.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum DataSparse {
+    /// Benchmark-driven per-shape gate ([`DataGate`]); small shapes and
+    /// shapes where dense measured faster keep the dense path. The
+    /// default.
+    #[default]
+    Auto,
+    /// Prescan every gated data product at the fixed
+    /// [`DEFAULT_STEP`] block (16 elements), no benchmarking.
+    On,
+    /// Always the dense path — the zero-overhead escape hatch.
+    Off,
+}
+
+impl DataSparse {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DataSparse::Auto => "auto",
+            DataSparse::On => "on",
+            DataSparse::Off => "off",
+        }
+    }
+}
+
+impl fmt::Display for DataSparse {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for DataSparse {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<DataSparse, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(DataSparse::Auto),
+            "on" => Ok(DataSparse::On),
+            "off" => Ok(DataSparse::Off),
+            other => Err(format!("unknown data-sparse mode {other:?} (auto|on|off)")),
+        }
+    }
+}
+
+/// One cached gate outcome for a `(rows, k, f)` shape.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum GateDecision {
+    /// Prescan path at `step` canonical blocks per skip block.
+    Blocks { step: usize },
+    /// Dense retained; `why` names the reason for the report.
+    Dense { why: &'static str },
+}
+
+/// The per-net gate state: cached per-shape decisions plus the
+/// data-side skip counters the train report surfaces. Decisions affect
+/// wall-clock only, never bits, so caching them per net (not per
+/// process) keeps every run self-contained.
+#[derive(Default)]
+pub struct DataGate {
+    pub mode: DataSparse,
+    decisions: HashMap<(usize, usize, usize), GateDecision>,
+    /// Calls routed through the prescan path / kept dense.
+    pub gated_calls: u64,
+    pub dense_calls: u64,
+    /// Effective-block cells seen / skipped on the prescan path.
+    pub cells: u64,
+    pub zero_cells: u64,
+    /// Adaptive top-k backward: total / kept output-gradient rows.
+    pub topk_rows: u64,
+    pub topk_kept: u64,
+}
+
+impl DataGate {
+    /// Switch modes, dropping cached decisions (a mode flip invalidates
+    /// them); counters keep accumulating across the run.
+    pub fn set_mode(&mut self, mode: DataSparse) {
+        if self.mode != mode {
+            self.mode = mode;
+            self.decisions.clear();
+        }
+    }
+
+    fn count_blocks_call(&mut self, map: &KBlockMap) {
+        let (empty, total) = map.count_empty();
+        self.zero_cells += empty;
+        self.cells += total;
+        self.gated_calls += 1;
+    }
+
+    /// Summarize the run for train/compare metadata.
+    pub fn report(&self) -> DataReport {
+        let mut keys: Vec<_> = self.decisions.iter().map(|(&k, &d)| (k, d)).collect();
+        keys.sort_by_key(|&(k, _)| k);
+        let decisions = keys
+            .into_iter()
+            .map(|((r, k, f), d)| match d {
+                GateDecision::Blocks { step } => {
+                    format!("{r}x{k}x{f}: block {}", step * BLOCK_ELEMS)
+                }
+                GateDecision::Dense { why } => {
+                    format!("{r}x{k}x{f}: gate declined, dense retained ({why})")
+                }
+            })
+            .collect();
+        DataReport {
+            skip_ratio: if self.cells == 0 {
+                0.0
+            } else {
+                self.zero_cells as f64 / self.cells as f64
+            },
+            gated_calls: self.gated_calls,
+            dense_calls: self.dense_calls,
+            topk_rows: self.topk_rows,
+            topk_kept: self.topk_kept,
+            decisions,
+        }
+    }
+}
+
+/// The measured data-side summary of one training run, reported in
+/// train/compare metadata. Gate decisions are wall-clock dependent, so
+/// this never enters byte-voted machine documents (`sat serve` /
+/// `sat shard` strip it); the CLI prints it.
+#[derive(Clone, Debug, Default)]
+pub struct DataReport {
+    /// Fraction of effective (row, K-block) cells skipped on the
+    /// prescan path — the achieved data-side compute skip.
+    pub skip_ratio: f64,
+    pub gated_calls: u64,
+    pub dense_calls: u64,
+    /// Adaptive top-k backward row accounting (0 unless adatopk ran).
+    pub topk_rows: u64,
+    pub topk_kept: u64,
+    /// One line per gated shape, sorted: chosen block size or
+    /// "gate declined, dense retained (why)".
+    pub decisions: Vec<String>,
+}
+
+impl DataReport {
+    /// Fraction of gradient rows the adaptive top-k backward dropped.
+    pub fn topk_drop_ratio(&self) -> f64 {
+        if self.topk_rows == 0 {
+            0.0
+        } else {
+            1.0 - self.topk_kept as f64 / self.topk_rows as f64
+        }
+    }
+}
+
+/// Gate-routed `x (rows × k) @ w (k × f)`: bit-identical to
+/// [`par::matmul_into`] for every decision (the prescan skips only
+/// all-zero blocks of a skip-semantics kernel). `map` is the caller's
+/// bitmap buffer; `scanned` says it already describes `x` (the ReLU
+/// carry), so the prescan pass is skipped. First encounters in `auto`
+/// mode run the in-situ micro-benchmark; because every candidate
+/// writes the same bits into `out`, the benchmark doubles as the call.
+#[allow(clippy::too_many_arguments)]
+pub fn gated_matmul_into(
+    gate: &mut DataGate,
+    map: &mut KBlockMap,
+    scanned: bool,
+    x: &[f32],
+    w: &[f32],
+    rows: usize,
+    k: usize,
+    f: usize,
+    workers: usize,
+    pack: &mut PackedB,
+    out: &mut Vec<f32>,
+) {
+    let key = (rows, k, f);
+    let decision = match gate.decisions.get(&key) {
+        Some(&d) => d,
+        None => {
+            let d = match gate.mode {
+                DataSparse::Off => GateDecision::Dense { why: "data-sparse off" },
+                DataSparse::On => GateDecision::Blocks { step: DEFAULT_STEP },
+                DataSparse::Auto if ((rows * k * f) as u64) < GATE_MIN_MACS => {
+                    GateDecision::Dense { why: "small shape" }
+                }
+                DataSparse::Auto => {
+                    let d = bench_decide(map, scanned, x, w, rows, k, f, workers, pack, out);
+                    gate.decisions.insert(key, d);
+                    // The benchmark already left the (identical) product
+                    // in `out`; just account the call and return.
+                    match d {
+                        GateDecision::Blocks { step } => {
+                            map.step = step;
+                            gate.count_blocks_call(map);
+                        }
+                        GateDecision::Dense { .. } => gate.dense_calls += 1,
+                    }
+                    return;
+                }
+            };
+            gate.decisions.insert(key, d);
+            d
+        }
+    };
+    match decision {
+        GateDecision::Dense { .. } => {
+            gate.dense_calls += 1;
+            par::matmul_into(x, w, rows, k, f, workers, pack, out);
+        }
+        GateDecision::Blocks { step } => {
+            if !scanned {
+                map.scan(x, rows, k);
+            }
+            map.step = step;
+            gate.count_blocks_call(map);
+            par::matmul_blocks_into(x, map, w, rows, k, f, workers, pack, out);
+        }
+    }
+}
+
+/// First-encounter micro-benchmark (SparseFlow's selector): time the
+/// dense path and the prescan path at every block size on the REAL
+/// operands, pick the fastest, and retain dense unless a prescan
+/// candidate measured strictly faster. The scan cost is charged to the
+/// candidates (it is re-run per candidate only here; steady state scans
+/// once or reuses the ReLU carry).
+#[allow(clippy::too_many_arguments)]
+fn bench_decide(
+    map: &mut KBlockMap,
+    scanned: bool,
+    x: &[f32],
+    w: &[f32],
+    rows: usize,
+    k: usize,
+    f: usize,
+    workers: usize,
+    pack: &mut PackedB,
+    out: &mut Vec<f32>,
+) -> GateDecision {
+    let t0 = Instant::now();
+    par::matmul_into(x, w, rows, k, f, workers, pack, out);
+    let dense = t0.elapsed();
+    let mut best: Option<(usize, std::time::Duration)> = None;
+    for step in [1usize, 2, 4] {
+        let t0 = Instant::now();
+        if !scanned {
+            map.scan(x, rows, k);
+        }
+        map.step = step;
+        par::matmul_blocks_into(x, map, w, rows, k, f, workers, pack, out);
+        let t = t0.elapsed();
+        if best.map_or(true, |(_, bt)| t < bt) {
+            best = Some((step, t));
+        }
+    }
+    let (step, t) = best.expect("three candidates ran");
+    if t < dense {
+        GateDecision::Blocks { step }
+    } else {
+        GateDecision::Dense { why: "benchmark preferred dense" }
+    }
+}
+
+/// TinyProp-style adaptive top-k row selection for the backward pass:
+/// rank the `rows` output-gradient rows of `dy (rows × f)` by energy
+/// (squared L2, ascending-index f32 accumulation — deterministic),
+/// keep the smallest prefix covering `energy` of the total, and write
+/// the masked gradient (dropped rows zeroed) into `masked`. Returns the
+/// kept-row count — the per-layer, per-step "k" the method adapts.
+pub fn adatopk_select(
+    dy: &[f32],
+    rows: usize,
+    f: usize,
+    energy: f32,
+    order: &mut Vec<u32>,
+    masked: &mut Vec<f32>,
+) -> usize {
+    debug_assert_eq!(dy.len(), rows * f, "dy shape mismatch");
+    let mut norms = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let mut acc = 0.0f32;
+        for &v in &dy[r * f..(r + 1) * f] {
+            acc += v * v;
+        }
+        norms.push(acc);
+    }
+    let mut total = 0.0f32;
+    for &n in &norms {
+        total += n;
+    }
+    order.clear();
+    order.extend(0..rows as u32);
+    // descending energy, ascending index on ties — fully deterministic
+    order.sort_unstable_by(|&a, &b| {
+        norms[b as usize].total_cmp(&norms[a as usize]).then(a.cmp(&b))
+    });
+    masked.clear();
+    masked.resize(rows * f, 0.0);
+    let target = energy * total;
+    let (mut kept, mut acc) = (0usize, 0.0f32);
+    for &r in order.iter() {
+        let r = r as usize;
+        masked[r * f..(r + 1) * f].copy_from_slice(&dy[r * f..(r + 1) * f]);
+        kept += 1;
+        acc += norms[r];
+        if acc >= target {
+            break;
+        }
+    }
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::Gen;
+
+    #[test]
+    fn scan_marks_exactly_the_nonzero_blocks() {
+        let (rows, k) = (3usize, 20usize); // 3 blocks per row, last ragged
+        let mut a = vec![0.0f32; rows * k];
+        a[k + 9] = 1.5; // row 1, block 1
+        a[2 * k + 17] = -2.0; // row 2, block 2 (the ragged tail)
+        let mut m = KBlockMap::default();
+        m.scan(&a, rows, k);
+        assert_eq!((m.rows, m.k, m.nb8, m.step), (rows, k, 3, 1));
+        for b in 0..3 {
+            assert!(!m.occupied(0, b), "row 0 is all zero");
+        }
+        assert!(!m.occupied(1, 0) && m.occupied(1, 1) && !m.occupied(1, 2));
+        assert!(m.occupied(2, 2) && !m.occupied(2, 0));
+        // group test spans rows and effective blocks
+        assert!(m.group_occupied(0, 2, 1, 1), "row 1 block 1 inside the group");
+        assert!(!m.group_occupied(0, 1, 0, 3), "row 0 empty everywhere");
+        let (empty, total) = m.count_empty();
+        assert_eq!((empty, total), (7, 9));
+        m.step = 2; // effective 16-element blocks: groups {0,1}, {2}
+        let (empty, total) = m.count_empty();
+        assert_eq!((empty, total), (3, 6));
+    }
+
+    #[test]
+    fn scan_handles_wide_rows_across_word_boundaries() {
+        let (rows, k) = (2usize, 8 * 70); // 70 blocks > one u64 word
+        let mut a = vec![0.0f32; rows * k];
+        a[65 * 8] = 1.0; // row 0, block 65 (second word)
+        let mut m = KBlockMap::default();
+        m.scan(&a, rows, k);
+        assert!(m.occupied(0, 65) && !m.occupied(0, 64) && !m.occupied(1, 65));
+        assert!(m.group_occupied(0, 2, 64, 4), "group crossing the word edge");
+    }
+
+    #[test]
+    fn data_sparse_parses_and_prints() {
+        assert_eq!("ON".parse::<DataSparse>().unwrap(), DataSparse::On);
+        assert_eq!("auto".parse::<DataSparse>().unwrap(), DataSparse::Auto);
+        assert_eq!("off".parse::<DataSparse>().unwrap(), DataSparse::Off);
+        assert!("fast".parse::<DataSparse>().is_err());
+        assert_eq!(DataSparse::default(), DataSparse::Auto);
+        assert_eq!(DataSparse::On.to_string(), "on");
+    }
+
+    #[test]
+    fn gate_modes_decide_without_benchmarking() {
+        let mut g = Gen::new(31);
+        let (rows, k, f) = (6usize, 16usize, 8usize); // small shape
+        let x = g.vec_normal(rows * k);
+        let w = g.vec_normal(k * f);
+        let (mut pack, mut out, mut map) = (PackedB::default(), Vec::new(), KBlockMap::default());
+        let want = crate::train::native::ops::matmul(&x, &w, rows, k, f);
+        for (mode, gated) in [(DataSparse::Off, false), (DataSparse::On, true)] {
+            let mut gate = DataGate::default();
+            gate.set_mode(mode);
+            gated_matmul_into(
+                &mut gate, &mut map, false, &x, &w, rows, k, f, 1, &mut pack, &mut out,
+            );
+            assert_eq!(out, want, "{mode}");
+            assert_eq!(gate.gated_calls > 0, gated, "{mode}");
+        }
+        // auto declines small shapes without timing anything
+        let mut gate = DataGate::default();
+        gated_matmul_into(&mut gate, &mut map, false, &x, &w, rows, k, f, 1, &mut pack, &mut out);
+        assert_eq!(out, want);
+        assert_eq!((gate.gated_calls, gate.dense_calls), (0, 1));
+        let report = gate.report();
+        assert_eq!(report.decisions.len(), 1);
+        assert!(
+            report.decisions[0].contains("gate declined, dense retained (small shape)"),
+            "{:?}",
+            report.decisions
+        );
+    }
+
+    #[test]
+    fn auto_benchmark_is_bit_exact_and_caches_its_decision() {
+        let mut g = Gen::new(32);
+        // big enough to clear GATE_MIN_MACS: 64*128*16 = 131072 MACs
+        let (rows, k, f) = (64usize, 128usize, 16usize);
+        let mut x = g.vec_normal(rows * k);
+        for v in x.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0; // post-ReLU style data
+            }
+        }
+        let w = g.vec_normal(k * f);
+        let want = crate::train::native::ops::matmul(&x, &w, rows, k, f);
+        let (mut pack, mut out, mut map) = (PackedB::default(), Vec::new(), KBlockMap::default());
+        let mut gate = DataGate::default();
+        for _ in 0..3 {
+            gated_matmul_into(
+                &mut gate, &mut map, false, &x, &w, rows, k, f, 1, &mut pack, &mut out,
+            );
+            assert_eq!(out, want, "gate path must stay bit-exact");
+        }
+        // one decision, reused on the two later calls
+        assert_eq!(gate.report().decisions.len(), 1);
+        assert_eq!(gate.gated_calls + gate.dense_calls, 3);
+    }
+
+    #[test]
+    fn adatopk_keeps_the_smallest_covering_prefix() {
+        let (rows, f) = (4usize, 2usize);
+        // row energies: 100, 1, 64, 4 → order 0, 2, 3, 1
+        let dy = vec![10.0, 0.0, 1.0, 0.0, 8.0, 0.0, 2.0, 0.0];
+        let (mut order, mut masked) = (Vec::new(), Vec::new());
+        let kept = adatopk_select(&dy, rows, f, 0.9, &mut order, &mut masked);
+        // 100 + 64 = 164 ≥ 0.9 * 169 = 152.1 → keep rows 0 and 2
+        assert_eq!(kept, 2);
+        assert_eq!(masked, vec![10.0, 0.0, 0.0, 0.0, 8.0, 0.0, 0.0, 0.0]);
+        // energy 1.0 keeps everything
+        let kept = adatopk_select(&dy, rows, f, 1.0, &mut order, &mut masked);
+        assert_eq!(kept, rows);
+        assert_eq!(masked, dy);
+    }
+
+    #[test]
+    fn adatopk_is_deterministic_on_ties_and_zero_gradients() {
+        let (rows, f) = (3usize, 2usize);
+        let dy = vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0]; // all rows tie
+        let (mut order, mut masked) = (Vec::new(), Vec::new());
+        let kept = adatopk_select(&dy, rows, f, 0.5, &mut order, &mut masked);
+        assert_eq!(kept, 2, "ties break by ascending index");
+        assert_eq!(masked, vec![1.0, 0.0, 1.0, 0.0, 0.0, 0.0]);
+        let zeros = vec![0.0f32; rows * f];
+        let kept = adatopk_select(&zeros, rows, f, 0.9, &mut order, &mut masked);
+        assert_eq!(kept, 1, "zero gradient keeps one row and stays zero");
+        assert_eq!(masked, zeros);
+    }
+}

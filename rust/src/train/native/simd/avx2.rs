@@ -26,6 +26,7 @@ use std::arch::x86_64::*;
 use crate::nm::PackedNm;
 use crate::train::native::gemm::{store, PackedB, NR};
 use crate::train::native::pool::TileOut;
+use crate::train::native::prescan::KBlockMap;
 use crate::train::native::sparse_ops;
 
 /// `R × NR` dense microkernel (mirror of `gemm::mk_rm`): broadcast the
@@ -51,6 +52,45 @@ unsafe fn mk_rm<const R: usize, const SKIP: bool>(
             }
             acc[t] = _mm256_add_ps(acc[t], _mm256_mul_ps(_mm256_set1_ps(xv), b));
         }
+    }
+    spill(&acc)
+}
+
+/// `R × NR` zero-block prescan microkernel (mirror of
+/// `gemm::mk_rm_blocks`): whole all-zero effective K-blocks skip via
+/// the occupancy bitmap; kept blocks run the [`mk_rm`] element-skip
+/// inner loop in ascending `kk` order.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn mk_rm_blocks<const R: usize>(
+    a: &[f32],
+    red: usize,
+    panel: &[f32],
+    arow0: usize,
+    occ: &KBlockMap,
+) -> [[f32; NR]; R] {
+    let rows: [&[f32]; R] =
+        core::array::from_fn(|t| &a[(arow0 + t) * red..(arow0 + t + 1) * red]);
+    let mut acc = [_mm256_setzero_ps(); R];
+    let mut b8 = 0usize;
+    while b8 < occ.nb8 {
+        let take = occ.step.min(occ.nb8 - b8);
+        if occ.group_occupied(arow0, R, b8, take) {
+            let kk1 = ((b8 + take) * 8).min(red);
+            for kk in b8 * 8..kk1 {
+                // SAFETY: kk < red and the panel holds red lines of NR
+                // contiguous f32s (packing invariant)
+                let b = _mm256_loadu_ps(panel.as_ptr().add(kk * NR));
+                for t in 0..R {
+                    let xv = rows[t][kk];
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    acc[t] = _mm256_add_ps(acc[t], _mm256_mul_ps(_mm256_set1_ps(xv), b));
+                }
+            }
+        }
+        b8 += take;
     }
     spill(&acc)
 }
@@ -121,6 +161,44 @@ unsafe fn rm_tile<const SKIP: bool>(a: &[f32], red: usize, pb: &PackedB, mut out
         } else {
             for p in p0..p1 {
                 let acc = mk_rm::<1, SKIP>(a, red, pb.panel(p), r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 1;
+        }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn blocks_tile(
+    a: &[f32],
+    red: usize,
+    occ: &KBlockMap,
+    pb: &PackedB,
+    mut out: TileOut<'_>,
+) {
+    debug_assert_eq!(pb.k, red, "packed reduction mismatch");
+    debug_assert_eq!(occ.k, red, "prescan reduction mismatch");
+    let (r1, c0, c1) = (out.rows().end, out.cols().start, out.cols().end);
+    debug_assert!(c0 % NR == 0, "tile columns must start on a panel boundary");
+    let (p0, p1) = (c0 / NR, (c1 + NR - 1) / NR);
+    let mut r = out.rows().start;
+    while r < r1 {
+        let left = r1 - r;
+        if left >= 8 {
+            for p in p0..p1 {
+                let acc = mk_rm_blocks::<8>(a, red, pb.panel(p), r, occ);
+                store(&mut out, r, p, &acc);
+            }
+            r += 8;
+        } else if left >= 4 {
+            for p in p0..p1 {
+                let acc = mk_rm_blocks::<4>(a, red, pb.panel(p), r, occ);
+                store(&mut out, r, p, &acc);
+            }
+            r += 4;
+        } else {
+            for p in p0..p1 {
+                let acc = mk_rm_blocks::<1>(a, red, pb.panel(p), r, occ);
                 store(&mut out, r, p, &acc);
             }
             r += 1;
@@ -262,6 +340,17 @@ pub(super) fn gemm_at(x: &[f32], ktot: usize, red: usize, pb: &PackedB, out: Til
     unsafe { at_tile(x, ktot, red, pb, out) }
 }
 
+pub(super) fn gemm_rm_skip_blocks(
+    a: &[f32],
+    red: usize,
+    occ: &KBlockMap,
+    pb: &PackedB,
+    out: TileOut<'_>,
+) {
+    debug_assert!(super::dispatch::have_avx2());
+    unsafe { blocks_tile(a, red, occ, pb, out) }
+}
+
 /// Monomorphized per (N, M) like the scalar kernel; patterns outside
 /// the set (non-power-of-two M) fall back to the scalar generic path —
 /// same results by the parity contract, no gather to vectorize.
@@ -332,6 +421,36 @@ mod tests {
             gemm::pack_b_into(&dy, rows, cols, &mut pb);
             let got = drive(k, cols, |t| super::gemm_at(&x, k, rows, &pb, t));
             assert_eq!(got, ops::matmul_at(&x, &dy, rows, k, cols), "at {rows}x{k}x{cols}");
+        }
+    }
+
+    #[test]
+    fn avx2_prescan_blocks_kernel_equals_scalar_bit_for_bit() {
+        if !dispatch::have_avx2() {
+            eprintln!("skipping: host has no AVX2");
+            return;
+        }
+        let mut g = Gen::new(64);
+        for (rows, k, cols) in [(7usize, 12usize, 9usize), (13, 21, 17), (33, 40, 8)] {
+            let mut x = g.vec_normal(rows * k);
+            // block-structured zeros plus element zeros in kept blocks
+            for (i, v) in x.iter_mut().enumerate() {
+                let b8 = (i % k) / 8;
+                if (i / k + b8) % 2 == 0 || *v < -0.5 {
+                    *v = 0.0;
+                }
+            }
+            let w = g.vec_normal(k * cols);
+            let mut pb = PackedB::default();
+            gemm::pack_b_into(&w, k, cols, &mut pb);
+            let mut occ = crate::train::native::prescan::KBlockMap::default();
+            occ.scan(&x, rows, k);
+            let want = drive(rows, cols, |t| super::gemm_rm_skip(&x, k, &pb, t));
+            for step in [1usize, 2, 4] {
+                occ.step = step;
+                let got = drive(rows, cols, |t| super::gemm_rm_skip_blocks(&x, k, &occ, &pb, t));
+                assert_eq!(got, want, "blocks {rows}x{k}x{cols} step={step}");
+            }
         }
     }
 

@@ -13,6 +13,7 @@ use std::sync::OnceLock;
 use crate::nm::PackedNm;
 use crate::train::native::gemm::{self, PackedB};
 use crate::train::native::pool::TileOut;
+use crate::train::native::prescan::KBlockMap;
 use crate::train::native::sparse_ops;
 
 /// Packed row-major GEMM tile kernel (`gemm_rm_tile` shape):
@@ -26,6 +27,10 @@ pub type GemmAtFn = fn(&[f32], usize, usize, &PackedB, TileOut<'_>);
 /// Panel spmm tile kernel (`spmm_panel_tile` shape):
 /// `(a, p_dim, packed_nm, out_tile)`.
 pub type SpmmPanelFn = fn(&[f32], usize, &PackedNm, TileOut<'_>);
+
+/// Zero-block prescan GEMM tile kernel (`gemm_rm_blocks_tile` shape):
+/// `(a, red, occ, packed_b, out_tile)`.
+pub type GemmRmBlocksFn = fn(&[f32], usize, &KBlockMap, &PackedB, TileOut<'_>);
 
 /// One complete set of tile kernels for the native backend's hot
 /// products. All sets compute bit-identical results (the module-level
@@ -43,6 +48,10 @@ pub struct KernelSet {
     pub gemm_at: GemmAtFn,
     /// N:M compute-skipping panel spmm over [`PackedNm`].
     pub spmm_panel: SpmmPanelFn,
+    /// `gemm_rm_skip` with the zero-block prescan: whole all-zero
+    /// K-blocks of the A operand are skipped via a [`KBlockMap`],
+    /// bit-exact `==` `gemm_rm_skip` on the same inputs.
+    pub gemm_rm_skip_blocks: GemmRmBlocksFn,
 }
 
 fn scalar_rm_skip(a: &[f32], red: usize, pb: &PackedB, out: TileOut<'_>) {
@@ -63,6 +72,7 @@ pub static SCALAR: KernelSet = KernelSet {
     gemm_rm_noskip: scalar_rm_noskip,
     gemm_at: gemm::gemm_at_tile,
     spmm_panel: sparse_ops::spmm_panel_tile,
+    gemm_rm_skip_blocks: gemm::gemm_rm_blocks_tile,
 };
 
 #[cfg(target_arch = "x86_64")]
@@ -72,6 +82,7 @@ pub static AVX2: KernelSet = KernelSet {
     gemm_rm_noskip: super::avx2::gemm_rm_noskip,
     gemm_at: super::avx2::gemm_at,
     spmm_panel: super::avx2::spmm_panel,
+    gemm_rm_skip_blocks: super::avx2::gemm_rm_skip_blocks,
 };
 
 #[cfg(target_arch = "aarch64")]
@@ -81,6 +92,7 @@ pub static NEON: KernelSet = KernelSet {
     gemm_rm_noskip: super::neon::gemm_rm_noskip,
     gemm_at: super::neon::gemm_at,
     spmm_panel: super::neon::spmm_panel,
+    gemm_rm_skip_blocks: super::neon::gemm_rm_skip_blocks,
 };
 
 /// Runtime AVX2 detection (false off `x86_64`).

@@ -23,6 +23,7 @@
 //! | packed dense GEMM (`rm`, skip on/off) | [`super::gemm::gemm_rm_tile`] | broadcast the A value over the NR=8 panel lanes; separate mul + add | exact `==` |
 //! | packed dense GEMM (`at`, WU) | [`super::gemm::gemm_at_tile`] | same, A reads contiguous across the row tile | exact `==` |
 //! | panel spmm (N:M compute-skip) | [`super::sparse_ops::spmm_panel_tile`] | 8-lane masked index gather per kept slot | exact `==` |
+//! | zero-block prescan GEMM (`rm_skip_blocks`) | [`super::gemm::gemm_rm_blocks_tile`] | same as `rm` skip, plus whole all-zero K-blocks skipped via [`super::prescan::KBlockMap`] | exact `==` (also `==` `rm` skip on the same inputs) |
 //! | attention score/context | `ops::tensor::matmul*_block` | routed through the packed tiles above | exact `==` |
 //!
 //! No kernel in this module takes a tolerance-banded path. Every SIMD

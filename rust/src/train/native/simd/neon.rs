@@ -20,6 +20,7 @@ use std::arch::aarch64::*;
 use crate::nm::PackedNm;
 use crate::train::native::gemm::{store, PackedB, NR};
 use crate::train::native::pool::TileOut;
+use crate::train::native::prescan::KBlockMap;
 use crate::train::native::sparse_ops;
 
 /// `R × NR` dense microkernel (mirror of `gemm::mk_rm`), NR = 2×4 lanes.
@@ -48,6 +49,48 @@ unsafe fn mk_rm<const R: usize, const SKIP: bool>(
             lo[t] = vaddq_f32(lo[t], vmulq_f32(xvv, b_lo));
             hi[t] = vaddq_f32(hi[t], vmulq_f32(xvv, b_hi));
         }
+    }
+    spill(&lo, &hi)
+}
+
+/// `R × NR` zero-block prescan microkernel (mirror of
+/// `gemm::mk_rm_blocks`): all-zero effective K-blocks skip via the
+/// occupancy bitmap; kept blocks run the [`mk_rm`] inner loop.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn mk_rm_blocks<const R: usize>(
+    a: &[f32],
+    red: usize,
+    panel: &[f32],
+    arow0: usize,
+    occ: &KBlockMap,
+) -> [[f32; NR]; R] {
+    let rows: [&[f32]; R] =
+        core::array::from_fn(|t| &a[(arow0 + t) * red..(arow0 + t + 1) * red]);
+    let mut lo = [vdupq_n_f32(0.0); R];
+    let mut hi = [vdupq_n_f32(0.0); R];
+    let mut b8 = 0usize;
+    while b8 < occ.nb8 {
+        let take = occ.step.min(occ.nb8 - b8);
+        if occ.group_occupied(arow0, R, b8, take) {
+            let kk1 = ((b8 + take) * 8).min(red);
+            for kk in b8 * 8..kk1 {
+                // SAFETY: kk < red and the panel holds red lines of NR
+                // contiguous f32s (packing invariant)
+                let b_lo = vld1q_f32(panel.as_ptr().add(kk * NR));
+                let b_hi = vld1q_f32(panel.as_ptr().add(kk * NR + 4));
+                for t in 0..R {
+                    let xv = rows[t][kk];
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let xvv = vdupq_n_f32(xv);
+                    lo[t] = vaddq_f32(lo[t], vmulq_f32(xvv, b_lo));
+                    hi[t] = vaddq_f32(hi[t], vmulq_f32(xvv, b_hi));
+                }
+            }
+        }
+        b8 += take;
     }
     spill(&lo, &hi)
 }
@@ -118,6 +161,44 @@ unsafe fn rm_tile<const SKIP: bool>(a: &[f32], red: usize, pb: &PackedB, mut out
         } else {
             for p in p0..p1 {
                 let acc = mk_rm::<1, SKIP>(a, red, pb.panel(p), r);
+                store(&mut out, r, p, &acc);
+            }
+            r += 1;
+        }
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn blocks_tile(
+    a: &[f32],
+    red: usize,
+    occ: &KBlockMap,
+    pb: &PackedB,
+    mut out: TileOut<'_>,
+) {
+    debug_assert_eq!(pb.k, red, "packed reduction mismatch");
+    debug_assert_eq!(occ.k, red, "prescan reduction mismatch");
+    let (r1, c0, c1) = (out.rows().end, out.cols().start, out.cols().end);
+    debug_assert!(c0 % NR == 0, "tile columns must start on a panel boundary");
+    let (p0, p1) = (c0 / NR, (c1 + NR - 1) / NR);
+    let mut r = out.rows().start;
+    while r < r1 {
+        let left = r1 - r;
+        if left >= 8 {
+            for p in p0..p1 {
+                let acc = mk_rm_blocks::<8>(a, red, pb.panel(p), r, occ);
+                store(&mut out, r, p, &acc);
+            }
+            r += 8;
+        } else if left >= 4 {
+            for p in p0..p1 {
+                let acc = mk_rm_blocks::<4>(a, red, pb.panel(p), r, occ);
+                store(&mut out, r, p, &acc);
+            }
+            r += 4;
+        } else {
+            for p in p0..p1 {
+                let acc = mk_rm_blocks::<1>(a, red, pb.panel(p), r, occ);
                 store(&mut out, r, p, &acc);
             }
             r += 1;
@@ -256,6 +337,17 @@ pub(super) fn gemm_rm_noskip(a: &[f32], red: usize, pb: &PackedB, out: TileOut<'
 pub(super) fn gemm_at(x: &[f32], ktot: usize, red: usize, pb: &PackedB, out: TileOut<'_>) {
     debug_assert!(super::dispatch::have_neon());
     unsafe { at_tile(x, ktot, red, pb, out) }
+}
+
+pub(super) fn gemm_rm_skip_blocks(
+    a: &[f32],
+    red: usize,
+    occ: &KBlockMap,
+    pb: &PackedB,
+    out: TileOut<'_>,
+) {
+    debug_assert!(super::dispatch::have_neon());
+    unsafe { blocks_tile(a, red, occ, pb, out) }
 }
 
 /// Monomorphized per (N, M); exotic patterns fall back to the scalar

@@ -94,6 +94,7 @@ mod tests {
             losses,
             evals: vec![],
             wall_seconds: 0.0,
+            data_sparse: None,
         }
     }
 

@@ -12,6 +12,7 @@ use sat::sched::{rwg_schedule, words};
 use sat::sim::engine::simulate_method;
 use sat::sim::memory::MemConfig;
 use sat::train::native::gemm::{self, PackedB};
+use sat::train::native::prescan::KBlockMap;
 use sat::train::native::{ops, par, simd, sparse_ops};
 use sat::util::testkit::{check, Gen};
 
@@ -36,6 +37,7 @@ fn sparse_methods_never_slower_than_dense() {
         let mem = MemConfig {
             bandwidth_gbs: *g.pick(&[12.8, 25.6, 102.4]),
             overlap: g.bool(),
+            ..MemConfig::paper_default()
         };
         let dense =
             simulate_method(&model, Method::Dense, cfg.pattern, &cfg, &mem);
@@ -244,6 +246,58 @@ fn kernel_sets_bit_identical_across_patterns_and_workers() {
 }
 
 #[test]
+fn prescan_gemm_bit_identical_across_blocks_kernels_and_workers() {
+    // The PR 10 tentpole contract: the zero-block prescan drivers are
+    // `==`-exact with the dense drivers for N:M-structured data
+    // operands × every effective block size (8/16/32 elements = step
+    // 1/2/4) × every detected kernel set × 1/2/4 workers. The kernels
+    // skip only blocks the bitmap proves all-zero, inside the same
+    // ascending-K accumulation, so exact equality is the contract.
+    check("prescan == dense x blocks x kernel sets x workers", 25, |g| {
+        let (n, m) = *g.pick(&[(1usize, 4usize), (2, 4), (2, 8), (4, 8)]);
+        let p = NmPattern::new(n, m);
+        let rows = g.usize_in(1, 21); // crosses the 8/4/1 row-tile edges
+        let k = g.usize_in(1, 4) * m;
+        let f = g.usize_in(1, 3) * m;
+        // N:M-mask the DATA operands along their inner dimension — the
+        // data-side sparsity the prescan is built to exploit
+        let x = prune_values(&g.vec_normal(rows * k), rows, k, p, PruneAxis::Cols);
+        let dy = prune_values(&g.vec_normal(rows * f), rows, f, p, PruneAxis::Cols);
+        let w = g.vec_normal(k * f);
+        let want_mm = ops::matmul(&x, &w, rows, k, f);
+        let want_bt = ops::matmul_bt(&dy, &w, rows, f, k);
+        let (mut occ_x, mut occ_dy) = (KBlockMap::default(), KBlockMap::default());
+        occ_x.scan(&x, rows, k);
+        occ_dy.scan(&dy, rows, f);
+        let (mut got, mut pack) = (Vec::new(), PackedB::default());
+        for step in [1usize, 2, 4] {
+            occ_x.step = step;
+            occ_dy.step = step;
+            for ks in simd::available_sets() {
+                for workers in [1usize, 2, 4] {
+                    let tag =
+                        format!("{} {p} {rows}x{k}x{f} step={step} workers={workers}", ks.name);
+                    par::matmul_blocks_into_with(
+                        ks, &x, &occ_x, &w, rows, k, f, workers, &mut pack, &mut got,
+                    );
+                    assert_eq!(got, want_mm, "matmul_blocks {tag}");
+                    par::matmul_bt_blocks_into_with(
+                        ks, &dy, &occ_dy, &w, rows, f, k, workers, &mut pack, &mut got,
+                    );
+                    assert_eq!(got, want_bt, "matmul_bt_blocks {tag}");
+                }
+            }
+        }
+        // sanity: at 1:4 and 2:8 with k >= 2 blocks the mask leaves
+        // whole empty blocks often enough that the ratio is measurable;
+        // never assert a floor (randomness), only the accounting shape
+        let (empty, total) = occ_x.count_empty();
+        assert!(total >= rows as u64, "at least one block group per row");
+        assert!(empty <= total);
+    });
+}
+
+#[test]
 fn compact_roundtrips_under_fp16_quantization() {
     check("compact fp16 idempotence", 30, |g| {
         let (n, m) = g.nm_pattern();
@@ -358,7 +412,11 @@ fn stage_totals_sum_to_total_cycles() {
     check("report self-consistency", 20, |g| {
         let model = zoo::model_by_name(*g.pick(&["resnet9", "tiny_cnn"])).unwrap();
         let cfg = random_cfg(g);
-        let mem = MemConfig { bandwidth_gbs: 25.6, overlap: g.bool() };
+        let mem = MemConfig {
+            bandwidth_gbs: 25.6,
+            overlap: g.bool(),
+            ..MemConfig::paper_default()
+        };
         let method = *g.pick(&Method::ALL);
         let r = simulate_method(&model, method, cfg.pattern, &cfg, &mem);
         let (ff, bp, wu, other) = r.stage_totals();
@@ -380,6 +438,7 @@ fn random_sweep_spec(g: &mut Gen) -> SweepSpec {
         patterns: [NmPattern::P2_4, NmPattern::P2_8][..g.usize_in(1, 2)].to_vec(),
         arrays: (0..g.usize_in(1, 2)).map(|i| (16 << i, 16)).collect(),
         bandwidths: [12.8, 25.6, 102.4][..g.usize_in(1, 3)].to_vec(),
+        act_sparsities: [0.0, 0.5][..g.usize_in(1, 2)].to_vec(),
         ..SweepSpec::default()
     }
 }
